@@ -1,0 +1,38 @@
+//! Table 1 bench: wall-clock of each gradient normalization vs dim.
+//!
+//!   cargo bench --bench bench_norms
+//!
+//! Paper (A40 GPU, d=1024/2048/4096): sign < row ~ col << NS << exact SVD.
+//! Here (1-core CPU PJRT, manifest dims): the same ordering must hold;
+//! exact SVD is unavailable (LAPACK custom-calls) — NS is the paper's
+//! production path anyway.
+
+use scale_llm::harness::tables::table1;
+use scale_llm::optim::colnorm;
+use scale_llm::runtime::Engine;
+use scale_llm::util::bench::{black_box, Bencher};
+use scale_llm::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new("artifacts")?;
+    println!("{}", table1(&engine, 2.0)?);
+
+    // native-Rust reference normalizations at the same dims, to separate
+    // PJRT dispatch overhead from the arithmetic itself
+    println!("== native Rust normalization (no PJRT dispatch) ==");
+    let mut b = Bencher::with_budget(1.0);
+    for &d in &engine.manifest.norm_bench_dims {
+        let mut rng = Pcg::new(3);
+        let g: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
+        b.bench(&format!("native col d={d}"), || {
+            black_box(colnorm::colnorm(&g, d, d));
+        });
+        b.bench(&format!("native row d={d}"), || {
+            black_box(colnorm::rownorm(&g, d, d));
+        });
+        b.bench(&format!("native sign d={d}"), || {
+            black_box(colnorm::sign(&g));
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! L3 coordinator substrate bench: the non-PJRT parts of the hot loop —
+//! corpus generation, BPE encoding, batching, tensor<->literal
+//! conversion, tree all-reduce. The perf target (DESIGN.md §9) is that
+//! these stay well under the PJRT execute time, i.e. the coordinator is
+//! not the bottleneck (the paper's optimizer IS the cheap part).
+//!
+//!   cargo bench --bench bench_runtime
+
+use scale_llm::coordinator::ddp::tree_all_reduce;
+use scale_llm::data::{pipeline, Batcher};
+use scale_llm::runtime::{Engine, Tensor};
+use scale_llm::util::bench::{black_box, Bencher};
+use scale_llm::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::with_budget(1.5);
+
+    println!("== data pipeline ==");
+    let (corpus, tok) = pipeline(1024, 0);
+    b.bench("corpus.text 8KiB", || {
+        black_box(corpus.text(8192, 1));
+    });
+    let text = corpus.text(8192, 2);
+    b.bench("bpe encode 8KiB", || {
+        black_box(tok.encode(&text));
+    });
+    let mut batcher = Batcher::new(&corpus, &tok, 1024, 4);
+    b.bench_throughput("batcher [B=4,S=64]", 4.0 * 64.0, || {
+        black_box(batcher.next_batch(0, 4, 64));
+    });
+
+    println!("\n== gradient plumbing (s130m-sized tensor set) ==");
+    let engine = Engine::new("artifacts")?;
+    let info = engine.manifest.size("s130m")?.clone();
+    let mut rng = Pcg::new(5);
+    let grads: Vec<Tensor> = info
+        .params
+        .iter()
+        .map(|p| {
+            Tensor::from_f32(
+                &p.shape,
+                (0..p.numel()).map(|_| rng.normal() as f32).collect(),
+            )
+        })
+        .collect();
+    let total_mb = 4.0 * info.param_count as f64 / 1e6;
+    b.bench(&format!("tree all-reduce x4 ({total_mb:.1} MB)"), || {
+        let shards = vec![grads.clone(), grads.clone(), grads.clone(), grads.clone()];
+        black_box(tree_all_reduce(shards));
+    });
+    b.bench("tensor -> literal (full param set)", || {
+        for g in &grads {
+            black_box(g.to_literal().unwrap());
+        }
+    });
+
+    println!("\n== PJRT dispatch floor ==");
+    let d = engine.manifest.norm_bench_dims[0];
+    let exe = engine.load(&format!("norm_sign_{d}"))?;
+    let x = Tensor::zeros(&[d, d]);
+    b.bench(&format!("execute norm_sign_{d} (dispatch floor)"), || {
+        engine.run_exe(&exe, std::slice::from_ref(&x)).unwrap();
+    });
+
+    println!("\ncoordinator overhead target: each row above << one fwd_bwd step (see bench_throughput)");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Table 7 bench: end-to-end training throughput (tokens/sec) per
+//! optimizer.
+//!
+//!   cargo bench --bench bench_throughput
+//!
+//! Paper (LLaMA 1B, 4xH100): SCALE ~ Adam ~ APOLLO ~ Stable-SPAM;
+//! NS-based methods (Muon/SWAN) ~18.5% slower; GaLore/Fira ~8% slower.
+//! The measured column must reproduce that *shape*: NS methods pay the
+//! orthogonalization tax, SCALE stays within a few % of Adam.
+
+use scale_llm::harness::tables::table7;
+use scale_llm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new("artifacts")?;
+    // ~20 steps per optimizer is enough for a stable tokens/sec estimate
+    println!("{}", table7(&engine, "s130m", 20)?);
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Optimizer-update latency bench: the cost of ONE `update_<opt>_<size>`
+//! execution, isolated from fwd/bwd — the paper's Table 1 extended to
+//! whole-optimizer updates (ablation bench from DESIGN.md §5).
+//!
+//!   cargo bench --bench bench_update_latency
+//!
+//! Expected shape: stateless/colnorm updates cheapest; Adam ~ elementwise
+//! x3 state; Muon/SWAN pay the NS matmul tax; GaLore amortizes its
+//! projector refresh (1/PROJ_REFRESH of steps).
+
+use scale_llm::runtime::{Engine, Tensor};
+use scale_llm::util::bench::Bencher;
+use scale_llm::util::rng::Pcg;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new("artifacts")?;
+    let size = "s130m";
+    let info = engine.manifest.size(size)?.clone();
+    let mut bench = Bencher::with_budget(2.0);
+    println!("== update-step latency, {size} ({:.2}M params) ==", info.param_count as f64 / 1e6);
+
+    let mut results = Vec::new();
+    for opt in engine.manifest.optimizers_for(size) {
+        let exe = engine.load(&format!("update_{opt}_{size}"))?;
+        // params from init, zero state, random grads, fixed lr/step
+        let params = engine.run(&format!("init_{size}"), &[Tensor::scalar_i32(0)])?;
+        let state: Vec<Tensor> = engine
+            .manifest
+            .state_spec(&opt, size)?
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+        let mut rng = Pcg::new(1);
+        let grads: Vec<Tensor> = info
+            .params
+            .iter()
+            .map(|p| {
+                Tensor::from_f32(
+                    &p.shape,
+                    (0..p.numel()).map(|_| 0.01 * rng.normal() as f32).collect(),
+                )
+            })
+            .collect();
+        let mut inputs = params.clone();
+        inputs.extend(state);
+        inputs.extend(grads);
+        inputs.push(Tensor::scalar_f32(1e-3));
+        inputs.push(Tensor::scalar_f32(2.0)); // non-refresh step for GaLore
+        let stats = bench.bench(&format!("update {opt}"), || {
+            engine.run_exe(&exe, &inputs).unwrap();
+        });
+        results.push((opt, stats.mean_ms()));
+    }
+
+    results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    println!("\nranking (fastest first):");
+    for (opt, ms) in results {
+        println!("  {opt:<24} {ms:>8.3} ms");
+    }
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Optimizer faceoff: the paper's Table 5 / Figure 1 shape on one size.
+//!
+//! Trains the full memory-efficient zoo on s130m and prints the
+//! perplexity-vs-memory comparison (paper-scale memory from the
+//! Appendix-B estimator, measured perplexity from the tiny runs).
+//!
+//!   cargo run --release --example optimizer_faceoff [steps]
+
+use scale_llm::analysis::tables::{opt_label, Table};
+use scale_llm::harness::{run_zoo, ppl_cell};
+use scale_llm::memory::estimator::{measured_state_bytes, MemoryModel};
+use scale_llm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let engine = Engine::new("artifacts")?;
+    let size = "s130m";
+    let opts = [
+        "adam", "stable_spam", "muon", "galore", "fira", "apollo",
+        "apollo_mini", "swan", "scale",
+    ];
+    println!("faceoff on {size}, {steps} steps each ({} optimizers)...", opts.len());
+    let outs = run_zoo(&engine, &opts, size, steps, false)?;
+
+    let mm = MemoryModel::new(engine.manifest.paper_dims["1B"]);
+    let mut t = Table::new(
+        "Optimizer faceoff — measured ppl vs memory",
+        &["method", "measured ppl", "tiny state KiB", "1B-scale mem (GB)", "tok/s"],
+    );
+    for r in &outs {
+        let rank = if r.spec.optimizer == "apollo_mini" { 1 } else { 256 };
+        let mem = mm.method(&r.spec.optimizer, rank).total_gb();
+        let kib = measured_state_bytes(&engine.manifest, &r.spec.optimizer, size)? / 1024;
+        t.row(vec![
+            opt_label(&r.spec.optimizer).to_string(),
+            ppl_cell(r.final_ppl),
+            format!("{kib}"),
+            format!("{mem:.2}"),
+            format!("{:.0}", r.tokens_per_sec),
+        ]);
+    }
+    t.footnote("paper shape: SCALE on the Pareto frontier — lowest memory at competitive ppl");
+    println!("{}", t.render());
+    Ok(())
+}

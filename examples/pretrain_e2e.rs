@@ -1,0 +1,84 @@
+//! End-to-end driver (DESIGN.md deliverable): the full system on a real
+//! small workload, proving all layers compose.
+//!
+//!   corpus generator -> BPE tokenizer -> shard batcher -> 4-way DDP
+//!   gradient computation (L2 fwd/bwd artifact, which embeds the L1
+//!   Pallas kernels) -> tree all-reduce -> SCALE update artifact ->
+//!   periodic eval + checkpoint -> loss-curve CSV.
+//!
+//! Trains the `e2e` config (the largest in the tiny family) with SCALE
+//! and with Adam as the reference, logging both loss curves. Recorded in
+//! EXPERIMENTS.md §E2E.
+//!
+//!   cargo run --release --example pretrain_e2e [steps] [size]
+
+use scale_llm::coordinator::metrics::ascii_curve;
+use scale_llm::coordinator::{TrainOptions, Trainer};
+use scale_llm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let size = args.get(2).cloned().unwrap_or_else(|| "e2e".to_string());
+
+    let engine = Engine::new("artifacts")?;
+    let info = engine.manifest.size(&size)?.clone();
+    println!(
+        "end-to-end pretraining: {size} ({:.2}M params, vocab {}, seq {}), {} steps, 4-way DDP, platform {}",
+        info.param_count as f64 / 1e6,
+        info.vocab,
+        info.seq_len,
+        steps,
+        engine.platform()
+    );
+
+    std::fs::create_dir_all("plots").ok();
+    let mut results = Vec::new();
+    for (opt, lr) in [("scale", 1e-2), ("adam", 2e-3)] {
+        println!("\n=== {opt} (lr {lr}) ===");
+        let t0 = std::time::Instant::now();
+        let opts = TrainOptions {
+            size: size.clone(),
+            optimizer: opt.into(),
+            steps,
+            base_lr: lr,
+            shards: 4,
+            eval_every: (steps / 6).max(1),
+            eval_batches: 8,
+            log_every: (steps / 12).max(1),
+            ..TrainOptions::default()
+        };
+        let mut tr = Trainer::new(&engine, opts)?;
+        let ppl = tr.train()?;
+        let wall = t0.elapsed().as_secs_f64();
+
+        // checkpoint round-trip as part of the e2e proof
+        let ckpt_path = format!("plots/e2e_{opt}.ckpt");
+        tr.checkpoint()?.save(&ckpt_path)?;
+        let restored = scale_llm::coordinator::Checkpoint::load(&ckpt_path)?;
+        assert_eq!(restored.step as usize, tr.step);
+
+        let csv = format!("plots/e2e_{opt}.csv");
+        tr.metrics.write_csv(&csv)?;
+        println!("\ntraining-loss curve ({opt}):");
+        println!("{}", ascii_curve(&tr.metrics.smoothed_losses(10), 64, 12));
+        println!(
+            "{opt}: final ppl {ppl:.2} | {:.0} tok/s | state {} KiB | {wall:.0}s wall | curve -> {csv} | ckpt -> {ckpt_path}",
+            tr.metrics.tokens_per_sec(),
+            tr.state_bytes() / 1024
+        );
+        results.push((opt, ppl, tr.state_bytes(), tr.metrics.tokens_per_sec()));
+    }
+
+    println!("\n=== summary ===");
+    for (opt, ppl, state, tps) in &results {
+        println!("  {opt:<6} ppl {ppl:>7.2}   state {:>8} KiB   {tps:>6.0} tok/s", state / 1024);
+    }
+    let (sp, ap) = (results[0].1, results[1].1);
+    println!(
+        "\nSCALE matches Adam within {:.1}% perplexity using {:.1}% of its optimizer state",
+        100.0 * (sp - ap).abs() / ap,
+        100.0 * results[0].2 as f64 / results[1].2 as f64
+    );
+    Ok(())
+}

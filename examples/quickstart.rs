@@ -1,0 +1,37 @@
+//! Quickstart: train a tiny LLaMA with SCALE for 60 steps.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the minimal API surface: Engine (PJRT runtime) +
+//! TrainOptions + Trainer.
+
+use scale_llm::coordinator::{TrainOptions, Trainer};
+use scale_llm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new("artifacts")?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let opts = TrainOptions {
+        size: "s60m".into(),
+        optimizer: "scale".into(),
+        steps: 60,
+        base_lr: 1e-2,
+        log_every: 10,
+        ..TrainOptions::default()
+    };
+    println!(
+        "training {} with SCALE (column-norm everywhere, momentum on the LM head only)",
+        opts.size
+    );
+    let mut tr = Trainer::new(&engine, opts)?;
+    let ppl = tr.train()?;
+
+    println!("\nfinal eval perplexity: {ppl:.2}");
+    println!(
+        "optimizer state: {} KiB vs {} KiB of parameters — the SGD-like footprint the paper claims",
+        tr.state_bytes() / 1024,
+        4 * engine.manifest.size("s60m")?.param_count / 1024,
+    );
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! Figure 4 reproduction: per-layer gradient variance during training,
+//! without and with last-layer momentum.
+//!
+//!   cargo run --release --example variance_probe [steps]
+//!
+//! Expected shape (paper Fig. 4): the lm_head variance dominates under
+//! plain column-normalized SGD (a); adding last-layer momentum (SCALE)
+//! collapses the head's update-direction variance (b).
+
+use scale_llm::harness::figures::figure4;
+use scale_llm::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let engine = Engine::new("artifacts")?;
+    println!("(a) SGD-col-norm — no momentum anywhere");
+    println!("{}", figure4(&engine, "s130m", steps, "sgd_colnorm")?);
+    println!("(b) SCALE — momentum on the lm_head only");
+    println!("{}", figure4(&engine, "s130m", steps, "scale")?);
+    println!("see also: `scale ablate-momentum` for the Theorem 2.1 testbed");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path (L1 kernels + L2 model/optimizers + AOT lowering).
+
+Python in this package runs ONCE, at `make artifacts`; the Rust
+coordinator loads the resulting HLO-text artifacts and never imports it.
+"""

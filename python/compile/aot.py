@@ -1,0 +1,227 @@
+"""AOT lowering: every L2 computation -> artifacts/*.hlo.txt + manifest.json.
+
+Run once by `make artifacts`; Python never appears on the training path.
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifact inventory (DESIGN.md §2/§5):
+  init_<size>        (seed:i32)                        -> (params...)
+  fwd_bwd_<size>     (params..., batch[MB,S+1]:i32)    -> (loss, grads...)
+  eval_<size>        (params..., batch[MB,S+1]:i32)    -> (loss,)
+  update_<opt>_<size>(params..., state..., grads..., lr:f32, step:f32)
+                                                       -> (params..., state...)
+  varprobe_<size>    (params..., small[MB], big[4*MB]) -> (per-param var...)
+  norm_<op>_<d>      (x[d,d]:f32)                      -> (y[d,d],)
+All outputs are lowered with return_tuple=True; the Rust runtime unwraps
+the tuple generically.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, optimizers
+from .kernels import colnorm, rownorm, sign
+from .newton_schulz import ns_orth
+
+MICROBATCH = 4           # sequences per fwd_bwd execution (DDP shard size)
+VARPROBE_BIG_FACTOR = 4  # big batch = 4x microbatch (paper footnote 3)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+class Builder:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.artifacts = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, in_specs, meta):
+        """Lower fn at in_specs, write <name>.hlo.txt, record manifest entry.
+
+        keep_unused=True: the executable's input signature must match the
+        manifest exactly even when an optimizer ignores an input (e.g.
+        SGD ignores `step`) — jit would otherwise prune it.
+        """
+        lowered = jax.jit(fn, keep_unused=True).lower(
+            *[_spec(s, d) for _, s, d in in_specs]
+        )
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = lowered.out_info
+        out_meta = [
+            _io(f"out{i}", o.shape, str(o.dtype)) for i, o in enumerate(outs)
+        ]
+        entry = {
+            "file": fname,
+            "inputs": [_io(n, s, "int32" if d == I32 else "float32")
+                       for n, s, d in in_specs],
+            "outputs": out_meta,
+        }
+        entry.update(meta)
+        self.artifacts[name] = entry
+        print(f"  {name}: {len(text)/1024:.0f} KiB, "
+              f"{len(in_specs)} in / {len(out_meta)} out", flush=True)
+
+
+def _layer_of(pname):
+    """Variance-analysis grouping label (Fig. 4): embed / blockN / lm_head."""
+    head = pname.split(".")[0]
+    return head if head.startswith("block") or head in ("embed", "lm_head", "pos_embed") else head
+
+
+def build(out_dir, sizes, quick=False):
+    b = Builder(out_dir)
+    manifest = {
+        "version": 1,
+        "microbatch": MICROBATCH,
+        "varprobe_big_factor": VARPROBE_BIG_FACTOR,
+        "sizes": {},
+        "state_specs": {},
+        "optim_hparams": {
+            "beta": optimizers.BETA,
+            "adam_b1": optimizers.ADAM_B1,
+            "adam_b2": optimizers.ADAM_B2,
+            "adam_eps": optimizers.ADAM_EPS,
+            "proj_refresh": optimizers.PROJ_REFRESH,
+            "spam_reset": optimizers.SPAM_RESET,
+        },
+        "paper_dims": configs.PAPER_DIMS,
+        "norm_bench_dims": list(configs.NORM_BENCH_DIMS),
+    }
+
+    # ---- per-size model artifacts ---------------------------------------
+    for sname in sizes:
+        cfg = configs.SIZES[sname]
+        specs = model.param_specs(cfg)
+        pins = [(n, shp, F32) for n, _, shp in specs]
+        batch = ("batch", (MICROBATCH, cfg.seq_len + 1), I32)
+        big = ("big_batch", (MICROBATCH * VARPROBE_BIG_FACTOR, cfg.seq_len + 1), I32)
+
+        manifest["sizes"][sname] = {
+            **cfg.to_dict(),
+            "params": [
+                {"name": n, "kind": k, "shape": list(shp), "layer": _layer_of(n)}
+                for n, k, shp in specs
+            ],
+        }
+
+        print(f"[size {sname}] ({cfg.param_count()/1e6:.2f}M params)", flush=True)
+        b.emit(f"init_{sname}",
+               lambda seed, cfg=cfg: tuple(model.init_params(cfg, seed)),
+               [("seed", (), I32)], {"kind": "init", "size": sname})
+        b.emit(f"fwd_bwd_{sname}",
+               lambda *a, cfg=cfg, n=len(specs): model.fwd_bwd(cfg, a[:n], a[n]),
+               pins + [batch], {"kind": "fwd_bwd", "size": sname})
+        b.emit(f"eval_{sname}",
+               lambda *a, cfg=cfg, n=len(specs): (model.eval_step(cfg, a[:n], a[n]),),
+               pins + [batch], {"kind": "eval", "size": sname})
+        b.emit(f"varprobe_{sname}",
+               lambda *a, cfg=cfg, n=len(specs): model.grad_variance_probe(
+                   cfg, a[:n], a[n], a[n + 1]),
+               pins + [batch, big], {"kind": "varprobe", "size": sname})
+
+        # ---- optimizer update artifacts ----------------------------------
+        if quick:
+            opt_names = ["scale", "adam"]
+        elif sname == "s130m":
+            opt_names = (optimizers.CORE_SET + optimizers.NORM_SET
+                         + optimizers.ABLATION_SET)
+        elif sname in ("e2e", "gpt2s"):
+            opt_names = optimizers.CORE_SET
+        else:
+            opt_names = optimizers.CORE_SET + optimizers.NORM_SET
+        for oname in opt_names:
+            opt = optimizers.REGISTRY[oname]
+            st_specs = opt.state_specs(cfg)
+            key = f"{oname}_{sname}"
+            manifest["state_specs"][key] = [
+                {"name": n, "shape": list(shp)} for n, shp in st_specs
+            ]
+            np_, ns_ = len(specs), len(st_specs)
+            sins = [(n, shp, F32) for n, shp in st_specs]
+            gins = [(f"grad.{n}", shp, F32) for n, _, shp in specs]
+
+            def upd(*a, opt=opt, cfg=cfg, np_=np_, ns_=ns_):
+                params = list(a[:np_])
+                state = list(a[np_: np_ + ns_])
+                grads = list(a[np_ + ns_: np_ + ns_ + np_])
+                lr, step = a[-2], a[-1]
+                pn, sn = opt.update(cfg, params, state, grads, lr, step)
+                return tuple(pn) + tuple(sn)
+
+            b.emit(f"update_{key}", upd,
+                   pins + sins + gins + [("lr", (), F32), ("step", (), F32)],
+                   {"kind": "update", "size": sname, "optimizer": oname})
+
+    # ---- normalization micro-artifacts (Table 1 / parity tests) ----------
+    # tile=whole-matrix: under interpret=True a multi-step grid lowers to
+    # an HLO while-loop whose per-step dispatch dominates the elementwise
+    # work (§Perf L1-1: sign d=512 was 24ms with 128-wide stripes, the
+    # grid loop, not the arithmetic). On real TPU the stripe width would
+    # instead be set by VMEM (DESIGN.md §7).
+    norm_ops = {
+        "col": lambda x: (colnorm(x, tile=x.shape[1]),),
+        "row": lambda x: (rownorm(x, tile=x.shape[0]),),
+        "sign": lambda x: (sign(x, tile=x.shape[1]),),
+        "ns": lambda x: (ns_orth(x, optimizers.NS_STEPS),),
+    }
+    dims = configs.NORM_BENCH_DIMS if not quick else (128,)
+    print("[norm micro-artifacts]", flush=True)
+    for d in dims:
+        for op, fn in norm_ops.items():
+            b.emit(f"norm_{op}_{d}", fn, [("x", (d, d), F32)],
+                   {"kind": "norm", "op": op, "dim": d})
+
+    manifest["artifacts"] = b.artifacts
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(b.artifacts)} artifacts + manifest.json to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--sizes", default="s60m,s130m,s350m,gpt2s,e2e",
+                    help="comma-separated size tags (see configs.SIZES)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny artifact set for CI smoke")
+    args = ap.parse_args()
+    sizes = [s for s in args.sizes.split(",") if s]
+    for s in sizes:
+        if s not in configs.SIZES:
+            sys.exit(f"unknown size {s!r}; have {sorted(configs.SIZES)}")
+    build(args.out, sizes, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model-size table: the tiny-LLaMA simulation family and paper-scale dims.
+
+The paper trains LLaMA 60M/130M/350M/1B/7B on C4 with 8xH200. This repo
+runs on a single CPU core (repro band 0/5), so each paper size maps to a
+scaled-down config with the *same layer inventory* — embedding, L
+transformer blocks (RMSNorm + RoPE attention + SwiGLU), final norm,
+untied LM head — and vocab >> d_model, preserving the LM-head column
+structure the paper's analysis (Fig. 3/10, App. M) depends on.
+
+``PAPER_DIMS`` carries the *real* LLaMA dims used by the memory
+estimator (Appendix B) — those numbers reproduce exactly because memory
+accounting is pure arithmetic.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str          # our tag, e.g. "s60m"
+    paper_size: str    # the paper row this config simulates
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int          # SwiGLU hidden dim
+    seq_len: int
+    batch: int         # global batch (sequences) used by the trainer
+    arch: str = "llama"  # "llama" | "gpt2" (App. F generality check)
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def param_count(self):
+        """Total trainable parameters (matches model.init_params)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        per_block = 4 * d * d + 3 * d * f + 2 * d  # attn + swiglu + 2 norms
+        if self.arch == "gpt2":
+            # learned pos-emb, 2-matrix GELU MLP (d_ff used as hidden)
+            per_block = 4 * d * d + 2 * d * f + 2 * d
+            return v * d + self.seq_len * d + self.n_layers * per_block + d + d * v
+        return v * d + self.n_layers * per_block + d + d * v
+
+    def to_dict(self):
+        d = asdict(self)
+        d["head_dim"] = self.head_dim
+        d["param_count"] = self.param_count()
+        return d
+
+
+# Tiny simulation family. vocab/d_model ratios kept LLaMA-like
+# (vocab >> d) so last-layer dominance of small models carries over.
+SIZES = {
+    "s60m": ModelConfig("s60m", "60M", vocab=512, d_model=64, n_layers=2,
+                        n_heads=2, d_ff=176, seq_len=64, batch=16),
+    "s130m": ModelConfig("s130m", "130M", vocab=1024, d_model=96, n_layers=3,
+                         n_heads=3, d_ff=256, seq_len=64, batch=16),
+    "s350m": ModelConfig("s350m", "350M", vocab=2048, d_model=128, n_layers=4,
+                         n_heads=4, d_ff=344, seq_len=96, batch=16),
+    # e2e driver size (stands in for the 1B/7B rows)
+    "e2e": ModelConfig("e2e", "1B/7B", vocab=4096, d_model=192, n_layers=4,
+                       n_heads=4, d_ff=512, seq_len=128, batch=16),
+    # App. F generality check (GPT2-style block)
+    "gpt2s": ModelConfig("gpt2s", "GPT2-M", vocab=1024, d_model=96, n_layers=3,
+                         n_heads=3, d_ff=384, seq_len=64, batch=16, arch="gpt2"),
+}
+
+# Real LLaMA dims for Appendix-B memory accounting (2-byte bf16 units).
+# (vocab, d_model, n_layers, d_ff) per HF llama configs / the paper.
+PAPER_DIMS = {
+    "60M": dict(vocab=32000, d_model=512, n_layers=8, d_ff=1376),
+    "130M": dict(vocab=32000, d_model=768, n_layers=12, d_ff=2048),
+    "350M": dict(vocab=32000, d_model=1024, n_layers=24, d_ff=2736),
+    "1B": dict(vocab=32000, d_model=2048, n_layers=24, d_ff=5461),
+    "7B": dict(vocab=32000, d_model=4096, n_layers=32, d_ff=11008),
+}
+
+# Dims for the Table-1 normalization micro-benchmarks (paper: 1024/2048/
+# 4096 on an A40; scaled to CPU but spanning the same 4x range).
+NORM_BENCH_DIMS = (128, 256, 512)

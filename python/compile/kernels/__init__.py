@@ -1,0 +1,14 @@
+"""L1: Pallas kernels for the SCALE optimizer hot path.
+
+Public surface (all interpret=True; see module docstrings):
+  colnorm, rownorm, sign          — normalization family (eq. 6)
+  scale_update_momentum/plain     — fused Algorithm 1 inner step
+  adam_update                     — fused Adam baseline (eq. 3)
+"""
+
+from .colnorm import colnorm, rownorm, sign  # noqa: F401
+from .fused_update import (  # noqa: F401
+    adam_update,
+    scale_update_momentum,
+    scale_update_plain,
+)

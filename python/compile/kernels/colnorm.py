@@ -1,0 +1,102 @@
+"""L1 Pallas kernels: the gradient-normalization family of eq. (6).
+
+TPU-shaped schedule (see DESIGN.md §7): column-wise normalization reduces
+along ``d_in`` (axis 0), so the BlockSpec tiles the *output* dimension —
+every grid step sees a full ``(d_in, TILE)`` column stripe resident in
+VMEM, computes the per-column L2 norms with a single sublane reduction,
+and rescales in place. No cross-block accumulation, no second pass over
+HBM. Row-wise normalization is the transpose schedule.
+
+All kernels are launched with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers to plain
+HLO that AOT-exports cleanly (aot_recipe). Correctness against
+``ref.py`` is enforced by ``python/tests/test_kernels.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-30
+
+# Default column-stripe width. For the tiny models in this repo whole
+# matrices fit in one block; the tile path is exercised whenever
+# d_out > TILE (e.g. LM heads, vocab-sized axes) and by the unit tests.
+DEFAULT_TILE = 128
+
+
+def _pick_tile(dim, tile):
+    """Largest divisor of ``dim`` that is <= tile (pallas needs an exact grid)."""
+    t = min(tile, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _colnorm_kernel(g_ref, o_ref):
+    g = g_ref[...]
+    norms = jnp.sqrt(jnp.sum(g * g, axis=0, keepdims=True))
+    o_ref[...] = g / jnp.maximum(norms, EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def colnorm(g, tile=DEFAULT_TILE):
+    """Column-wise normalization C(G) as a Pallas kernel.
+
+    Grid: one step per column stripe of width ``tile`` (full rows in
+    VMEM so the axis-0 reduction stays on-chip).
+    """
+    d_in, d_out = g.shape
+    t = _pick_tile(d_out, tile)
+    return pl.pallas_call(
+        _colnorm_kernel,
+        grid=(d_out // t,),
+        in_specs=[pl.BlockSpec((d_in, t), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((d_in, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=True,
+    )(g)
+
+
+def _rownorm_kernel(g_ref, o_ref):
+    g = g_ref[...]
+    norms = jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True))
+    o_ref[...] = g / jnp.maximum(norms, EPS)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def rownorm(g, tile=DEFAULT_TILE):
+    """Row-wise normalization as a Pallas kernel (transpose schedule)."""
+    d_in, d_out = g.shape
+    t = _pick_tile(d_in, tile)
+    return pl.pallas_call(
+        _rownorm_kernel,
+        grid=(d_in // t,),
+        in_specs=[pl.BlockSpec((t, d_out), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((t, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=True,
+    )(g)
+
+
+def _sign_kernel(g_ref, o_ref):
+    o_ref[...] = jnp.sign(g_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def sign(g, tile=DEFAULT_TILE):
+    """Sign normalization (eq. 4) as a Pallas kernel; pure elementwise,
+    tiled along columns only so arbitrarily wide matrices stream through
+    VMEM."""
+    d_in, d_out = g.shape
+    t = _pick_tile(d_out, tile)
+    return pl.pallas_call(
+        _sign_kernel,
+        grid=(d_out // t,),
+        in_specs=[pl.BlockSpec((d_in, t), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((d_in, t), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=True,
+    )(g)

@@ -1,0 +1,129 @@
+"""L1 Pallas kernels: fused optimizer updates (the training hot path).
+
+``scale_update`` fuses Algorithm 1's inner body for one weight matrix —
+EMA (last layer only), column-wise normalization, and the parameter
+apply — into a single kernel: one HBM read of (p, m, g) and one write of
+(p', m') per column stripe, instead of three separate elementwise passes
+(3x the arithmetic intensity; see DESIGN.md §7 and EXPERIMENTS.md §Perf).
+
+``adam_update`` is the fused Adam baseline (eq. 3) used for vector
+parameters in every optimizer and for the Adam/Stable-SPAM baselines.
+
+Both run under ``interpret=True`` (CPU PJRT cannot run Mosaic); they are
+called from L2 (optimizers.py) so they lower into the same AOT HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .colnorm import EPS, _pick_tile, DEFAULT_TILE
+
+
+def _scale_mmt_kernel(p_ref, m_ref, g_ref, lr_ref, beta_ref, po_ref, mo_ref):
+    """Momentum path (last layer): m' = beta*m + (1-beta)*g; p -= lr*C(m')."""
+    g = g_ref[...]
+    beta = beta_ref[0]
+    m_new = beta * m_ref[...] + (1.0 - beta) * g
+    norms = jnp.sqrt(jnp.sum(m_new * m_new, axis=0, keepdims=True))
+    po_ref[...] = p_ref[...] - lr_ref[0] * (m_new / jnp.maximum(norms, EPS))
+    mo_ref[...] = m_new
+
+
+def _scale_plain_kernel(p_ref, g_ref, lr_ref, po_ref):
+    """Stateless path (all other layers): p -= lr*C(g)."""
+    g = g_ref[...]
+    norms = jnp.sqrt(jnp.sum(g * g, axis=0, keepdims=True))
+    po_ref[...] = p_ref[...] - lr_ref[0] * (g / jnp.maximum(norms, EPS))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def scale_update_momentum(p, m, g, lr, beta, tile=DEFAULT_TILE):
+    """Fused SCALE step with momentum (LM head). Returns (p', m').
+
+    ``lr`` and ``beta`` are traced scalars, passed as (1,)-shaped
+    operands so a single compiled artifact serves the whole LR schedule.
+    """
+    d_in, d_out = p.shape
+    t = _pick_tile(d_out, tile)
+    stripe = pl.BlockSpec((d_in, t), lambda j: (0, j))
+    scalar = pl.BlockSpec((1,), lambda j: (0,))
+    return pl.pallas_call(
+        _scale_mmt_kernel,
+        grid=(d_out // t,),
+        in_specs=[stripe, stripe, stripe, scalar, scalar],
+        out_specs=[stripe, stripe],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(m.shape, m.dtype),
+        ],
+        interpret=True,
+    )(p, m, g, jnp.reshape(lr, (1,)), jnp.reshape(beta, (1,)))
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def scale_update_plain(p, g, lr, tile=DEFAULT_TILE):
+    """Fused stateless SCALE step (column-normalized SGD). Returns p'."""
+    d_in, d_out = p.shape
+    t = _pick_tile(d_out, tile)
+    stripe = pl.BlockSpec((d_in, t), lambda j: (0, j))
+    scalar = pl.BlockSpec((1,), lambda j: (0,))
+    return pl.pallas_call(
+        _scale_plain_kernel,
+        grid=(d_out // t,),
+        in_specs=[stripe, stripe, scalar],
+        out_specs=stripe,
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+        interpret=True,
+    )(p, g, jnp.reshape(lr, (1,)))
+
+
+def _adam_kernel(p_ref, m_ref, v_ref, g_ref, s_ref, po_ref, mo_ref, vo_ref):
+    g = g_ref[...]
+    lr, beta1, beta2, eps, step = (s_ref[0], s_ref[1], s_ref[2], s_ref[3], s_ref[4])
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v_new = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1**step)
+    v_hat = v_new / (1.0 - beta2**step)
+    po_ref[...] = p_ref[...] - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def adam_update(p, m, v, g, lr, beta1, beta2, eps, step, tile=DEFAULT_TILE):
+    """Fused bias-corrected Adam step (eq. 3). Returns (p', m', v').
+
+    Scalars travel as one packed (5,) vector: [lr, b1, b2, eps, step].
+    Works on matrices and (reshaped) vectors alike.
+    """
+    p2 = p if p.ndim == 2 else p.reshape(1, -1)
+    m2, v2, g2 = (x if x.ndim == 2 else x.reshape(1, -1) for x in (m, v, g))
+    d_in, d_out = p2.shape
+    t = _pick_tile(d_out, tile)
+    stripe = pl.BlockSpec((d_in, t), lambda j: (0, j))
+    scal = pl.BlockSpec((5,), lambda j: (0,))
+    packed = jnp.stack(
+        [
+            jnp.asarray(lr, p2.dtype),
+            jnp.asarray(beta1, p2.dtype),
+            jnp.asarray(beta2, p2.dtype),
+            jnp.asarray(eps, p2.dtype),
+            jnp.asarray(step, p2.dtype),
+        ]
+    )
+    po, mo, vo = pl.pallas_call(
+        _adam_kernel,
+        grid=(d_out // t,),
+        in_specs=[stripe, stripe, stripe, stripe, scal],
+        out_specs=[stripe, stripe, stripe],
+        out_shape=[
+            jax.ShapeDtypeStruct(p2.shape, p2.dtype),
+            jax.ShapeDtypeStruct(m2.shape, m2.dtype),
+            jax.ShapeDtypeStruct(v2.shape, v2.dtype),
+        ],
+        interpret=True,
+    )(p2, m2, v2, g2, packed)
+    return po.reshape(p.shape), mo.reshape(m.shape), vo.reshape(v.shape)

@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth that pytest/hypothesis checks the kernels
+against, and they double as the *specification* of each operation as it
+appears in the paper:
+
+- ``colnorm_ref``  — eq. (6), "Column-wise normalization": each column of
+  the ``d_in x d_out`` gradient is scaled to unit L2 norm (normalizing
+  along the *output* dimension).
+- ``rownorm_ref``  — eq. (6), "Row-wise normalization".
+- ``sign_ref``     — eq. (6), "Sign normalization" (sign-SGD, eq. (4)).
+- ``scale_update_ref`` — Algorithm 1 inner step for one weight matrix:
+  optional EMA ``m = beta*m + (1-beta)*g`` followed by
+  ``theta <- theta - lr * C(m)``.
+- ``adam_update_ref``  — eq. (3) with bias correction, the Adam baseline.
+"""
+
+import jax.numpy as jnp
+
+# Matches the paper's epsilon-free definition; we guard zero columns the
+# same way every implementation here does: ||col|| -> max(||col||, EPS).
+EPS = 1e-30
+
+
+def colnorm_ref(g):
+    """Column-wise normalization C(G): unit L2 norm along axis 0.
+
+    G has shape (d_in, d_out); column j is G[:, j] (the weights feeding
+    output unit j). Zero columns map to zero.
+    """
+    norms = jnp.sqrt(jnp.sum(g * g, axis=0, keepdims=True))
+    return g / jnp.maximum(norms, EPS)
+
+
+def rownorm_ref(g):
+    """Row-wise normalization: unit L2 norm along axis 1."""
+    norms = jnp.sqrt(jnp.sum(g * g, axis=1, keepdims=True))
+    return g / jnp.maximum(norms, EPS)
+
+
+def sign_ref(g):
+    """Sign normalization sign(G) (eq. 4)."""
+    return jnp.sign(g)
+
+
+def scale_update_ref(p, m, g, lr, beta, use_momentum):
+    """One SCALE step for a single weight matrix (Algorithm 1 body).
+
+    If ``use_momentum`` (last layer): m' = beta*m + (1-beta)*g, direction
+    C(m'). Otherwise m' = g (recorded directly) and direction C(g).
+    Returns (p', m').
+    """
+    m_new = jnp.where(use_momentum, beta * m + (1.0 - beta) * g, g)
+    p_new = p - lr * colnorm_ref(m_new)
+    return p_new, m_new
+
+
+def adam_update_ref(p, m, v, g, lr, beta1, beta2, eps, step):
+    """Bias-corrected Adam (eq. 3). ``step`` is 1-based."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1 ** step)
+    v_hat = v_new / (1.0 - beta2 ** step)
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new

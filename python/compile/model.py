@@ -1,0 +1,203 @@
+"""L2: the JAX model — a LLaMA-style decoder-only transformer.
+
+Matches the paper's experimental substrate (Section 4 / Appendix C):
+RMSNorm, rotary position embeddings, causal attention, SwiGLU MLP,
+untied LM head, next-token cross-entropy. A GPT2-style variant (learned
+positional embeddings + GELU MLP) backs the Appendix-F generality check.
+
+Parameters are a *flat ordered list*; ``param_specs(cfg)`` is the single
+source of truth for that order and for each parameter's role:
+
+  kind = "embed"   — the first layer (paper: momentum ablation, App. E)
+       | "matrix"  — hidden weight matrices, stored (d_in, d_out) so that
+                     column j holds the weights feeding output unit j
+                     (the orientation eq. (6) normalizes over)
+       | "head"    — the LM head (d_model, |V|): the "last layer" whose
+                     columns correspond to vocabulary tokens (App. M)
+       | "vector"  — norm gains; every optimizer gives these Adam (App. C)
+
+The same spec list is serialized into artifacts/manifest.json so the
+Rust coordinator can allocate, checkpoint and route buffers generically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# Parameter specs
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig):
+    """[(name, kind, shape)] in canonical artifact order."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs = [("embed", "embed", (v, d))]
+    if cfg.arch == "gpt2":
+        specs.append(("pos_embed", "matrix", (cfg.seq_len, d)))
+    for i in range(cfg.n_layers):
+        p = f"block{i}."
+        specs += [
+            (p + "attn_norm", "vector", (d,)),
+            (p + "wq", "matrix", (d, d)),
+            (p + "wk", "matrix", (d, d)),
+            (p + "wv", "matrix", (d, d)),
+            (p + "wo", "matrix", (d, d)),
+            (p + "mlp_norm", "vector", (d,)),
+        ]
+        if cfg.arch == "gpt2":
+            specs += [(p + "w_up", "matrix", (d, f)), (p + "w_down", "matrix", (f, d))]
+        else:
+            specs += [
+                (p + "w_gate", "matrix", (d, f)),
+                (p + "w_up", "matrix", (d, f)),
+                (p + "w_down", "matrix", (f, d)),
+            ]
+    specs += [("final_norm", "vector", (d,)), ("lm_head", "head", (d, v))]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed):
+    """Deterministic init from an int32 seed (exported as init_<size>).
+
+    Truncated-normal-free scheme: scaled normal, 1/sqrt(d_in) fan-in for
+    matrices, N(0, 0.02) embeddings, ones for norm gains — the GPT/LLaMA
+    convention.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, kind, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if kind == "vector":
+            params.append(jnp.ones(shape, jnp.float32))
+        elif kind == "embed" or name == "pos_embed":
+            params.append(0.02 * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            scale = 1.0 / jnp.sqrt(shape[0])
+            params.append(scale * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def as_dict(cfg, params):
+    return {name: p for (name, _, _), p in zip(param_specs(cfg), params)}
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, gain, eps=1e-6):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def _rope(x, base=10000.0):
+    """Rotary embedding over the last dim of x: (B, H, S, Dh)."""
+    b, h, s, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (base ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = jnp.einsum("s,d->sd", t, freqs)  # (S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg, h, wq, wk, wv, wo, use_rope=True):
+    b, s, d = h.shape
+    nh, dh = cfg.n_heads, cfg.head_dim
+
+    def split(x):
+        return x.reshape(b, s, nh, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(h @ wq), split(h @ wk), split(h @ wv)
+    if use_rope:
+        q, k = _rope(q), _rope(k)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(mask, att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d) @ wo
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    """tokens: (B, S) int32 -> logits (B, S, |V|)."""
+    p = as_dict(cfg, params)
+    h = p["embed"][tokens]
+    if cfg.arch == "gpt2":
+        h = h + p["pos_embed"][None, : tokens.shape[1], :]
+    for i in range(cfg.n_layers):
+        blk = f"block{i}."
+        x = _rmsnorm(h, p[blk + "attn_norm"])
+        h = h + _attention(
+            cfg, x, p[blk + "wq"], p[blk + "wk"], p[blk + "wv"], p[blk + "wo"],
+            use_rope=(cfg.arch != "gpt2"),
+        )
+        x = _rmsnorm(h, p[blk + "mlp_norm"])
+        if cfg.arch == "gpt2":
+            h = h + jax.nn.gelu(x @ p[blk + "w_up"]) @ p[blk + "w_down"]
+        else:
+            h = h + (jax.nn.silu(x @ p[blk + "w_gate"]) * (x @ p[blk + "w_up"])) @ p[blk + "w_down"]
+    h = _rmsnorm(h, p["final_norm"])
+    return h @ p["lm_head"]
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """batch: (B, S+1) int32. Mean next-token cross entropy (nats)."""
+    inputs, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(cfg, params, inputs)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# --------------------------------------------------------------------------
+# Exported computations (lowered by aot.py)
+# --------------------------------------------------------------------------
+
+def fwd_bwd(cfg: ModelConfig, params, batch):
+    """(params..., batch) -> (loss, grads...). The per-step gradient
+    computation the coordinator runs on every microbatch/shard."""
+    loss, grads = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, batch))(list(params))
+    return (loss, *grads)
+
+
+def eval_step(cfg: ModelConfig, params, batch):
+    """(params..., batch) -> loss. Perplexity = exp(loss)."""
+    return loss_fn(cfg, params, batch)
+
+
+def grad_variance_probe(cfg: ModelConfig, params, small_batch, big_batch):
+    """Per-layer variance estimator backing Fig. 4/6/7.
+
+    Returns ||g_small_l - g_big_l||^2 / numel_l per parameter, where the
+    big batch stands in for the true gradient (paper §2.2, footnote 3).
+    """
+    _, g_small = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, small_batch))(list(params))
+    _, g_big = jax.value_and_grad(lambda ps: loss_fn(cfg, ps, big_batch))(list(params))
+    outs = [jnp.sum((a - b) ** 2) / a.size for a, b in zip(g_small, g_big)]
+    return tuple(outs)
+
+
+def make_jitted(cfg: ModelConfig):
+    """Convenience jitted closures for the pytest suite."""
+    n = len(param_specs(cfg))
+
+    @jax.jit
+    def _fwd_bwd(*args):
+        return fwd_bwd(cfg, args[:n], args[n])
+
+    @jax.jit
+    def _eval(*args):
+        return eval_step(cfg, args[:n], args[n])
+
+    return _fwd_bwd, _eval
+
+
+@functools.lru_cache(maxsize=None)
+def _specs_cached(cfg):
+    return param_specs(cfg)

@@ -1,0 +1,47 @@
+"""Newton–Schulz orthogonalization — "singular-value normalization" (eq. 6).
+
+The paper's Table 1/2 "singular-value (NS)" rows use the quintic
+Newton–Schulz iteration popularized by Muon (Jordan et al., 2024): for
+G = U Σ Vᵀ it converges to (approximately) U Vᵀ using only matmuls — no
+SVD/LAPACK custom-calls, which the xla_extension 0.5.1 CPU runtime could
+not execute anyway (DESIGN.md §3 substitution table).
+
+Also the whitening step of our SWAN reconstruction: (GGᵀ)^{-1/2} G *is*
+the orthogonal polar factor, i.e. exactly what NS computes.
+"""
+
+import jax.numpy as jnp
+
+# Quintic iteration coefficients from Jordan et al. (2024).
+_A, _B, _C = 3.4445, -4.7750, 2.0315
+
+
+def ns_orth(g, steps: int = 5):
+    """Approximate U Vᵀ of g via `steps` quintic NS iterations.
+
+    Handles non-square matrices by operating on the short side (the
+    iteration needs spectral norm <= 1, ensured by Frobenius prescale).
+    """
+    x = g.astype(jnp.float32)
+    transpose = x.shape[0] > x.shape[1]
+    if transpose:
+        x = x.T
+    x = x / (jnp.sqrt(jnp.sum(x * x)) + 1e-7)
+    for _ in range(steps):
+        a = x @ x.T
+        b = _B * a + _C * (a @ a)
+        x = _A * x + b @ x
+    if transpose:
+        x = x.T
+    return x
+
+
+def ns_range_finder(g, omega, steps: int = 5):
+    """Randomized range finder with NS orthonormalization.
+
+    Stand-in for GaLore's SVD projector (DESIGN.md §3): `g @ omega`
+    sketches the dominant column space of g; NS orthonormalizes the
+    (d_in, r) sketch so P has near-orthonormal columns. Matmuls only.
+    """
+    sketch = g @ omega  # (d_in, r)
+    return ns_orth(sketch, steps=steps)

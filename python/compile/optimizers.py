@@ -1,0 +1,394 @@
+"""L2: the full optimizer zoo of the paper's evaluation section.
+
+Every optimizer is expressed in one shared per-parameter framework:
+
+  plan(cfg)   -> for each model parameter, a *strategy tag* plus the
+                 auxiliary state slots (name, shape) that tag needs;
+  update(...) -> walks parameters in canonical order, slices the flat
+                 state list, applies the per-parameter rule, reassembles.
+
+The flat, deterministic state layout is what aot.py serializes into
+artifacts/manifest.json so the Rust coordinator can allocate and thread
+optimizer state buffers without knowing any optimizer's internals.
+
+Paper fidelity notes
+--------------------
+* Vector parameters (norm gains) always get Adam — Appendix C, "for all
+  vector parameters we employ the Adam optimizer". Exceptions: the pure
+  `sgd`/`sgd_momentum` baselines (they are the thing being shown to fail).
+* GaLore / Fira / APOLLO(-Mini) / SWAN run full Adam on the first and
+  last layers (Section 4, "worth noticing").
+* SCALE  = column-wise normalization everywhere + first-order momentum
+  *only on the LM head* (Algorithm 1). The matrix hot path calls the L1
+  Pallas kernels (fused_update.py).
+* Substitutions (documented in DESIGN.md §3): exact-SVD -> Newton-Schulz;
+  GaLore's SVD projector -> NS randomized range finder refreshed every
+  PROJ_REFRESH steps; Stable-SPAM -> Adam + spike-aware clipping +
+  periodic momentum reset.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    adam_update,
+    scale_update_momentum,
+    scale_update_plain,
+)
+from .kernels.ref import colnorm_ref, rownorm_ref
+from .model import param_specs
+from .newton_schulz import ns_orth
+
+# Shared hyperparameters (paper Appendix C and the methods' defaults).
+BETA = 0.9            # first-order momentum (SCALE last layer, Muon, SGD-M)
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+PROJ_REFRESH = 50     # GaLore/Fira/APOLLO projector refresh cadence (steps)
+SPAM_RESET = 500      # Stable-SPAM momentum reset cadence
+SPAM_THETA = 2.0      # Stable-SPAM spike threshold multiplier
+NS_STEPS = 5
+_PROJ_KEY = 0xA90110  # seed root for random projections
+
+
+def _rank_for(shape):
+    """Low-rank r for GaLore/Fira/APOLLO on a (d_in, d_out) matrix."""
+    return max(1, min(shape) // 16)
+
+
+# --------------------------------------------------------------------------
+# Per-parameter primitive rules
+# --------------------------------------------------------------------------
+
+def _adam(p, sts, g, lr, step):
+    m, v = sts
+    pn, mn, vn = adam_update(p, m, v, g, lr, ADAM_B1, ADAM_B2, ADAM_EPS, step)
+    return pn, [mn, vn]
+
+
+def _adam_jnp(p, sts, g, lr, step):
+    """Plain-jnp Adam used inside lax.cond-free compositions (Stable-SPAM)."""
+    m, v = sts
+    mn = ADAM_B1 * m + (1 - ADAM_B1) * g
+    vn = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    mh = mn / (1 - ADAM_B1**step)
+    vh = vn / (1 - ADAM_B2**step)
+    return p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS), [mn, vn]
+
+
+def _spam(p, sts, g, lr, step):
+    """Stable-SPAM reconstruction: spike-aware clip + periodic mmt reset.
+
+    AdaClip is modeled as a decaying per-element running max of |g|;
+    entries jumping past SPAM_THETA x that history are clipped (at step 1
+    the history is |g| itself, so nothing clips). Momentum resets every
+    SPAM_RESET steps with bias correction restarted from the reset.
+    """
+    m, v, gmax = sts
+    gmax_n = jnp.maximum(0.999 * gmax, jnp.abs(g))
+    thresh = SPAM_THETA * gmax_n + 1e-12
+    g_c = jnp.clip(g, -thresh, thresh)
+    reset = jnp.asarray(step % SPAM_RESET == 0, g.dtype)
+    m = m * (1 - reset)
+    v = v * (1 - reset)
+    # steps since the last reset, counting this one (1-based):
+    #   step < R: step;  step = kR: 1;  else: step mod R + 1
+    r = jnp.mod(step, float(SPAM_RESET))
+    eff = jnp.where(step < SPAM_RESET, step, jnp.where(r == 0.0, 1.0, r + 1.0))
+    mn = ADAM_B1 * m + (1 - ADAM_B1) * g_c
+    vn = ADAM_B2 * v + (1 - ADAM_B2) * g_c * g_c
+    mh = mn / (1 - ADAM_B1**eff)
+    vh = vn / (1 - ADAM_B2**eff)
+    return p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS), [mn, vn, gmax_n]
+
+
+def _sgd(p, sts, g, lr, step):
+    return p - lr * g, []
+
+
+def _sgd_m(p, sts, g, lr, step):
+    (m,) = sts
+    mn = BETA * m + (1 - BETA) * g
+    return p - lr * mn, [mn]
+
+
+def _norm_plain(norm):
+    def rule(p, sts, g, lr, step):
+        return p - lr * norm(g), []
+
+    return rule
+
+
+def _scale_head(p, sts, g, lr, step):
+    """SCALE last-layer rule — the fused L1 Pallas kernel (momentum path)."""
+    (m,) = sts
+    pn, mn = scale_update_momentum(p, m, g, lr, jnp.float32(BETA))
+    return pn, [mn]
+
+
+def _scale_plain(p, sts, g, lr, step):
+    """SCALE stateless rule — the fused L1 Pallas kernel (plain path)."""
+    return scale_update_plain(p, g, lr), []
+
+
+def _mmt_norm(norm):
+    """Momentum + arbitrary normalization (Table 13 variants, Muon core)."""
+
+    def rule(p, sts, g, lr, step):
+        (m,) = sts
+        mn = BETA * m + (1 - BETA) * g
+        return p - lr * norm(mn), [mn]
+
+    return rule
+
+
+def _muon_matrix(p, sts, g, lr, step):
+    (m,) = sts
+    mn = BETA * m + (1 - BETA) * g
+    d = ns_orth(mn, NS_STEPS)
+    # Moonlight-style RMS matching so one global LR serves all shapes.
+    scale = 0.2 * jnp.sqrt(jnp.float32(max(p.shape)))
+    return p - lr * scale * d, [mn]
+
+
+def _swan_matrix(p, sts, g, lr, step):
+    """SWAN hidden-matrix rule: row-norm then NS whitening (polar factor)."""
+    gw = ns_orth(rownorm_ref(g), NS_STEPS)
+    scale = 0.2 * jnp.sqrt(jnp.float32(max(p.shape)))
+    return p - lr * scale * gw, []
+
+
+def _proj_omega(shape, r, step, idx):
+    """Deterministic pseudo-random sketch matrix, refreshed with the epoch.
+
+    `step` is a traced f32 (1-based); the epoch counter folds into a fixed
+    root key so projections are reproducible across runs and processes.
+    """
+    epoch = jnp.asarray((step - 1.0) // PROJ_REFRESH, jnp.int32)
+    key = jax.random.fold_in(jax.random.PRNGKey(_PROJ_KEY), epoch * 4096 + idx)
+    return jax.random.normal(key, (shape[1], r), jnp.float32) / jnp.sqrt(r)
+
+
+def _galore_rule(idx, with_residual):
+    """GaLore (and Fira when with_residual): low-rank Adam on Pᵀg."""
+
+    def rule(p, sts, g, lr, step):
+        P, m, v = sts
+        r = P.shape[1]
+        # Refresh at steps 1, 1+T, 1+2T, ... (step is 1-based). lax.cond
+        # skips the NS work on the other PROJ_REFRESH-1 steps.
+        P = jax.lax.cond(
+            jnp.mod(step - 1.0, float(PROJ_REFRESH)) == 0.0,
+            lambda: ns_orth(g @ _proj_omega(g.shape, r, step, idx), NS_STEPS),
+            lambda: P,
+        )
+        g_lo = P.T @ g                                  # (r, d_out)
+        mn = ADAM_B1 * m + (1 - ADAM_B1) * g_lo
+        vn = ADAM_B2 * v + (1 - ADAM_B2) * g_lo * g_lo
+        mh = mn / (1 - ADAM_B1**step)
+        vh = vn / (1 - ADAM_B2**step)
+        d_lo = mh / (jnp.sqrt(vh) + ADAM_EPS)
+        d = P @ d_lo
+        if with_residual:
+            # Fira: re-introduce the full-rank residual, scaled by the
+            # low-rank adaptivity ratio phi = ||d_lo|| / ||g_lo||.
+            resid = g - P @ g_lo
+            phi = jnp.sqrt(jnp.sum(d_lo * d_lo)) / (
+                jnp.sqrt(jnp.sum(g_lo * g_lo)) + 1e-12
+            )
+            d = d + phi * resid
+        return p - lr * d, [P, mn, vn]
+
+    return rule
+
+
+def _apollo_rule(idx, rank1):
+    """APOLLO: channel-wise gradient scaling estimated in a random
+    low-dimensional space; APOLLO-Mini (rank1) uses tensor-wise scaling."""
+
+    def rule(p, sts, g, lr, step):
+        m, v = sts
+        r = m.shape[0]
+        omega = _proj_omega((g.shape[1], g.shape[0]), r, step, idx)  # (d_in, r)
+        g_lo = omega.T @ g                                # (r, d_out)
+        mn = ADAM_B1 * m + (1 - ADAM_B1) * g_lo
+        vn = ADAM_B2 * v + (1 - ADAM_B2) * g_lo * g_lo
+        mh = mn / (1 - ADAM_B1**step)
+        vh = vn / (1 - ADAM_B2**step)
+        d_lo = mh / (jnp.sqrt(vh) + ADAM_EPS)
+        if rank1:
+            s = jnp.sqrt(jnp.sum(d_lo * d_lo)) / (
+                jnp.sqrt(jnp.sum(g_lo * g_lo)) + 1e-12
+            )
+            d = s * g
+        else:
+            num = jnp.sqrt(jnp.sum(d_lo * d_lo, axis=0))  # per column
+            den = jnp.sqrt(jnp.sum(g_lo * g_lo, axis=0)) + 1e-12
+            d = g * (num / den)[None, :]
+        return p - lr * d, [mn, vn]
+
+    return rule
+
+
+def _norm_larger_dim(g):
+    """Table 13 row 4: normalize along whichever dimension is larger."""
+    return colnorm_ref(g) if g.shape[0] >= g.shape[1] else rownorm_ref(g)
+
+
+# --------------------------------------------------------------------------
+# Optimizer definitions
+# --------------------------------------------------------------------------
+
+class Optimizer:
+    """A named plan: param spec -> (rule, [(state suffix, shape)])."""
+
+    def __init__(self, name, plan_fn):
+        self.name = name
+        self._plan_fn = plan_fn
+
+    def plan(self, cfg):
+        """[(rule, [(state_name, shape)])] aligned with param_specs(cfg)."""
+        out = []
+        for idx, (name, kind, shape) in enumerate(param_specs(cfg)):
+            rule, slots = self._plan_fn(idx, name, kind, shape)
+            out.append((rule, [(f"{name}.{suf}", shp) for suf, shp in slots]))
+        return out
+
+    def state_specs(self, cfg):
+        return [slot for _, slots in self.plan(cfg) for slot in slots]
+
+    def init_state(self, cfg):
+        """Zeros for every slot except GaLore projectors (identity-ish init
+        is irrelevant: they are refreshed at step 1 since 1 % T != 0 -> we
+        force refresh at step 1 via zero-P detection being unnecessary —
+        projectors refresh when step % PROJ_REFRESH == 0 and step counting
+        starts at 0 for the first update's refresh)."""
+        return [jnp.zeros(shp, jnp.float32) for _, shp in self.state_specs(cfg)]
+
+    def update(self, cfg, params, state, grads, lr, step):
+        """Apply one optimizer step. `lr` f32 scalar, `step` f32 scalar
+        (1-based). Returns (new_params, new_state) as flat lists."""
+        plan = self.plan(cfg)
+        new_params, new_state, cursor = [], [], 0
+        for (rule, slots), p, g in zip(plan, params, grads):
+            sts = state[cursor : cursor + len(slots)]
+            cursor += len(slots)
+            pn, stn = rule(p, sts, g, lr, step)
+            new_params.append(pn)
+            new_state.extend(stn)
+        assert cursor == len(state)
+        return new_params, new_state
+
+
+def _mk(name, matrix_rule_fn, head_rule_fn=None, embed_rule_fn=None,
+        vector_adam=True, matrix_slots=None, head_slots=None,
+        embed_slots=None):
+    """Build an Optimizer from per-kind rules.
+
+    *_rule_fn: (idx, shape) -> rule; *_slots: shape -> [(suffix, shp)].
+    head/embed default to the matrix treatment.
+    """
+    matrix_slots = matrix_slots or (lambda shape: [])
+    head_rule_fn = head_rule_fn or matrix_rule_fn
+    embed_rule_fn = embed_rule_fn or matrix_rule_fn
+    head_slots = head_slots if head_slots is not None else matrix_slots
+    embed_slots = embed_slots if embed_slots is not None else matrix_slots
+
+    def plan_fn(idx, pname, kind, shape):
+        if kind == "vector":
+            if vector_adam:
+                return _adam, [("m", shape), ("v", shape)]
+            return _sgd, []
+        if kind == "head":
+            return head_rule_fn(idx, shape), head_slots(shape)
+        if kind == "embed":
+            return embed_rule_fn(idx, shape), embed_slots(shape)
+        return matrix_rule_fn(idx, shape), matrix_slots(shape)
+
+    return Optimizer(name, plan_fn)
+
+
+_adam_slots = lambda shape: [("m", shape), ("v", shape)]
+_mmt_slots = lambda shape: [("m", shape)]
+_spam_slots = lambda shape: [("m", shape), ("v", shape), ("gmax", shape)]
+_galore_slots = lambda shape: [
+    ("P", (shape[0], _rank_for(shape))),
+    ("m", (_rank_for(shape), shape[1])),
+    ("v", (_rank_for(shape), shape[1])),
+]
+_apollo_slots = lambda shape: [
+    ("m", (_rank_for(shape), shape[1])),
+    ("v", (_rank_for(shape), shape[1])),
+]
+_apollo1_slots = lambda shape: [("m", (1, shape[1])), ("v", (1, shape[1]))]
+
+
+def _registry():
+    const = lambda rule: (lambda idx, shape: rule)
+    opts = [
+        # --- plain baselines -------------------------------------------------
+        _mk("sgd", const(_sgd), vector_adam=False),
+        _mk("sgd_momentum", const(_sgd_m), vector_adam=False,
+            matrix_slots=_mmt_slots),
+        _mk("adam", const(_adam), matrix_slots=_adam_slots),
+        _mk("stable_spam", const(_spam), matrix_slots=_spam_slots),
+        # --- pure normalization ablations (Table 2) --------------------------
+        _mk("sign_sgd", const(_norm_plain(jnp.sign))),
+        _mk("sgd_colnorm", const(_scale_plain)),
+        _mk("sgd_rownorm", const(_norm_plain(rownorm_ref))),
+        _mk("sgd_ns", const(_norm_plain(lambda g: ns_orth(g, NS_STEPS)))),
+        # --- SCALE (ours) and ablations (Alg. 1, Tables 3/8) -----------------
+        _mk("scale", const(_scale_plain),
+            head_rule_fn=const(_scale_head), head_slots=_mmt_slots),
+        _mk("scale_first_last", const(_scale_plain),
+            head_rule_fn=const(_scale_head), head_slots=_mmt_slots,
+            embed_rule_fn=const(_scale_head), embed_slots=_mmt_slots),
+        _mk("ns_mmt_last", const(_norm_plain(lambda g: ns_orth(g, NS_STEPS))),
+            head_rule_fn=const(_mmt_norm(lambda g: ns_orth(g, NS_STEPS))),
+            head_slots=_mmt_slots),
+        # --- SOTA memory-efficient baselines ---------------------------------
+        _mk("muon", const(_muon_matrix), matrix_slots=_mmt_slots,
+            head_rule_fn=const(_adam), head_slots=_adam_slots,
+            embed_rule_fn=const(_adam), embed_slots=_adam_slots),
+        _mk("galore", lambda idx, shape: _galore_rule(idx, False),
+            matrix_slots=_galore_slots,
+            head_rule_fn=const(_adam), head_slots=_adam_slots,
+            embed_rule_fn=const(_adam), embed_slots=_adam_slots),
+        _mk("fira", lambda idx, shape: _galore_rule(idx, True),
+            matrix_slots=_galore_slots,
+            head_rule_fn=const(_adam), head_slots=_adam_slots,
+            embed_rule_fn=const(_adam), embed_slots=_adam_slots),
+        _mk("apollo", lambda idx, shape: _apollo_rule(idx, False),
+            matrix_slots=_apollo_slots,
+            head_rule_fn=const(_adam), head_slots=_adam_slots,
+            embed_rule_fn=const(_adam), embed_slots=_adam_slots),
+        _mk("apollo_mini", lambda idx, shape: _apollo_rule(idx, True),
+            matrix_slots=_apollo1_slots,
+            head_rule_fn=const(_adam), head_slots=_adam_slots,
+            embed_rule_fn=const(_adam), embed_slots=_adam_slots),
+        _mk("swan", const(_swan_matrix),
+            head_rule_fn=const(_adam), head_slots=_adam_slots,
+            embed_rule_fn=const(_adam), embed_slots=_adam_slots),
+        # --- Table 13 mixed-normalization ablations (all mmt-last) -----------
+        _mk("mix_col_last_row_rest", const(_norm_plain(rownorm_ref)),
+            head_rule_fn=const(_mmt_norm(colnorm_ref)), head_slots=_mmt_slots),
+        _mk("mix_row_first_col_rest", const(_scale_plain),
+            head_rule_fn=const(_scale_head), head_slots=_mmt_slots,
+            embed_rule_fn=const(_norm_plain(rownorm_ref))),
+        _mk("mix_larger_dim", const(_norm_plain(_norm_larger_dim)),
+            head_rule_fn=const(_mmt_norm(_norm_larger_dim)),
+            head_slots=_mmt_slots),
+        _mk("mix_row_last_col_rest", const(_scale_plain),
+            head_rule_fn=const(_mmt_norm(rownorm_ref)), head_slots=_mmt_slots),
+    ]
+    return {o.name: o for o in opts}
+
+
+REGISTRY = _registry()
+
+# Subsets used by aot.py to bound artifact count (DESIGN.md §5).
+CORE_SET = ["sgd", "sgd_momentum", "adam", "stable_spam", "muon", "galore",
+            "fira", "apollo", "apollo_mini", "swan", "scale"]
+NORM_SET = ["sign_sgd", "sgd_colnorm", "sgd_rownorm", "sgd_ns",
+            "ns_mmt_last"]
+ABLATION_SET = ["scale_first_last", "mix_col_last_row_rest",
+                "mix_row_first_col_rest", "mix_larger_dim",
+                "mix_row_last_col_rest"]

@@ -1,0 +1,112 @@
+"""AOT pipeline tests: manifest consistency and HLO-text artifact hygiene.
+
+Runs the quick builder into a temp dir (fast) and, when the full
+artifact tree exists at ../artifacts, validates it too.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, configs, model, optimizers
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def quick_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("art")
+    aot.build(str(out), ["s60m"], quick=True)
+    return str(out)
+
+
+def _load_manifest(d):
+    with open(os.path.join(d, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_written(quick_dir):
+    m = _load_manifest(quick_dir)
+    assert m["version"] == 1
+    assert "s60m" in m["sizes"]
+    assert "update_scale_s60m" in m["artifacts"]
+
+
+def test_every_artifact_file_exists(quick_dir):
+    m = _load_manifest(quick_dir)
+    for name, entry in m["artifacts"].items():
+        path = os.path.join(quick_dir, entry["file"])
+        assert os.path.exists(path), name
+        head = open(path).read(200)
+        assert "HloModule" in head, name
+
+
+def test_update_io_layout(quick_dir):
+    """update artifact I/O = params + state (+grads, lr, step) -> params + state."""
+    m = _load_manifest(quick_dir)
+    cfg = configs.SIZES["s60m"]
+    n_params = len(model.param_specs(cfg))
+    for oname in ("scale", "adam"):
+        entry = m["artifacts"][f"update_{oname}_s60m"]
+        n_state = len(m["state_specs"][f"{oname}_s60m"])
+        assert len(entry["inputs"]) == 2 * n_params + n_state + 2
+        assert len(entry["outputs"]) == n_params + n_state
+        # outputs mirror param shapes then state shapes
+        for spec, out in zip(model.param_specs(cfg), entry["outputs"]):
+            assert list(spec[2]) == out["shape"]
+
+
+def test_fwd_bwd_io_layout(quick_dir):
+    m = _load_manifest(quick_dir)
+    cfg = configs.SIZES["s60m"]
+    entry = m["artifacts"]["fwd_bwd_s60m"]
+    n = len(model.param_specs(cfg))
+    assert len(entry["inputs"]) == n + 1
+    assert entry["inputs"][-1]["dtype"] == "int32"
+    assert entry["inputs"][-1]["shape"] == [m["microbatch"], cfg.seq_len + 1]
+    assert len(entry["outputs"]) == n + 1  # loss + grads
+    assert entry["outputs"][0]["shape"] == []
+
+
+def test_state_specs_match_registry(quick_dir):
+    m = _load_manifest(quick_dir)
+    cfg = configs.SIZES["s60m"]
+    for oname in ("scale", "adam"):
+        want = optimizers.REGISTRY[oname].state_specs(cfg)
+        got = m["state_specs"][f"{oname}_s60m"]
+        assert [(e["name"], tuple(e["shape"])) for e in got] == [
+            (n, tuple(s)) for n, s in want
+        ]
+
+
+def test_param_layers_labelled(quick_dir):
+    m = _load_manifest(quick_dir)
+    layers = {p["layer"] for p in m["sizes"]["s60m"]["params"]}
+    assert {"embed", "lm_head", "block0", "block1"} <= layers
+
+
+def test_paper_dims_embedded(quick_dir):
+    m = _load_manifest(quick_dir)
+    assert m["paper_dims"]["7B"]["d_model"] == 4096
+    assert m["paper_dims"]["1B"]["vocab"] == 32000
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="full artifact tree not built")
+def test_full_tree_consistent():
+    m = _load_manifest(ART)
+    # every referenced file exists; every size has model artifacts
+    for name, entry in m["artifacts"].items():
+        assert os.path.exists(os.path.join(ART, entry["file"])), name
+    for sname in m["sizes"]:
+        for kind in ("init", "fwd_bwd", "eval", "varprobe"):
+            assert f"{kind}_{sname}" in m["artifacts"], (kind, sname)
+    # the full zoo exists for the ablation size
+    for oname in optimizers.CORE_SET + optimizers.NORM_SET + optimizers.ABLATION_SET:
+        assert f"update_{oname}_s130m" in m["artifacts"], oname
+    # norm micro-artifacts for every bench dim
+    for d in m["norm_bench_dims"]:
+        for op in ("col", "row", "sign", "ns"):
+            assert f"norm_{op}_{d}" in m["artifacts"]

@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes (prime/odd dims exercise the tile-divisor
+search) and value regimes (tiny, huge, zero columns); the oracles are
+the spec, so any mismatch is a kernel bug by definition.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adam_update,
+    colnorm,
+    rownorm,
+    scale_update_momentum,
+    scale_update_plain,
+    sign,
+)
+from compile.kernels import ref
+from compile.kernels.colnorm import _pick_tile
+
+DIMS = st.integers(min_value=1, max_value=97)
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mat(seed, d_in, d_out, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.normal(size=(d_in, d_out)).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# Normalization kernels
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, DIMS, SEEDS)
+def test_colnorm_matches_ref(d_in, d_out, seed):
+    g = _mat(seed, d_in, d_out)
+    np.testing.assert_allclose(colnorm(g), ref.colnorm_ref(g), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, DIMS, SEEDS)
+def test_rownorm_matches_ref(d_in, d_out, seed):
+    g = _mat(seed, d_in, d_out)
+    np.testing.assert_allclose(rownorm(g), ref.rownorm_ref(g), atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(DIMS, DIMS, SEEDS)
+def test_sign_matches_ref(d_in, d_out, seed):
+    g = _mat(seed, d_in, d_out)
+    np.testing.assert_array_equal(sign(g), ref.sign_ref(g))
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, DIMS, SEEDS)
+def test_colnorm_unit_columns(d_in, d_out, seed):
+    """Every nonzero column of C(G) has unit L2 norm — the paper's invariant."""
+    g = _mat(seed, d_in, d_out)
+    out = np.asarray(colnorm(g))
+    norms = np.linalg.norm(out, axis=0)
+    np.testing.assert_allclose(norms, np.ones_like(norms), atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, DIMS, SEEDS, st.floats(min_value=0.01, max_value=100.0))
+def test_colnorm_scale_invariant(d_in, d_out, seed, alpha):
+    """C(alpha * G) == C(G) for alpha > 0 — normalization kills magnitude."""
+    g = _mat(seed, d_in, d_out)
+    np.testing.assert_allclose(
+        colnorm(jnp.float32(alpha) * g), colnorm(g), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_colnorm_zero_column_is_zero():
+    g = jnp.zeros((8, 5), jnp.float32).at[:, 2].set(1.0)
+    out = np.asarray(colnorm(g))
+    assert np.all(out[:, 0] == 0.0) and np.all(out[:, 1] == 0.0)
+    np.testing.assert_allclose(np.linalg.norm(out[:, 2]), 1.0, atol=1e-6)
+
+
+def test_colnorm_idempotent():
+    g = _mat(3, 16, 24)
+    once = colnorm(g)
+    np.testing.assert_allclose(colnorm(once), once, atol=1e-5)
+
+
+@pytest.mark.parametrize("dim,tile", [(1, 128), (97, 128), (128, 128), (130, 64)])
+def test_pick_tile_divides(dim, tile):
+    t = _pick_tile(dim, tile)
+    assert 1 <= t <= min(tile, dim) and dim % t == 0
+
+
+# --------------------------------------------------------------------------
+# Fused update kernels
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, DIMS, SEEDS,
+       st.floats(min_value=1e-5, max_value=1.0),
+       st.floats(min_value=0.0, max_value=0.999))
+def test_scale_update_momentum_matches_ref(d_in, d_out, seed, lr, beta):
+    p, m, g = _mat(seed, d_in, d_out), _mat(seed + 1, d_in, d_out), _mat(seed + 2, d_in, d_out)
+    pn, mn = scale_update_momentum(p, m, g, jnp.float32(lr), jnp.float32(beta))
+    pr, mr = ref.scale_update_ref(p, m, g, lr, beta, True)
+    np.testing.assert_allclose(mn, mr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(pn, pr, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, DIMS, SEEDS, st.floats(min_value=1e-5, max_value=1.0))
+def test_scale_update_plain_matches_ref(d_in, d_out, seed, lr):
+    p, g = _mat(seed, d_in, d_out), _mat(seed + 1, d_in, d_out)
+    pn = scale_update_plain(p, g, jnp.float32(lr))
+    pr, _ = ref.scale_update_ref(p, jnp.zeros_like(p), g, lr, 0.0, False)
+    np.testing.assert_allclose(pn, pr, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(DIMS, DIMS, SEEDS, st.integers(min_value=1, max_value=1000))
+def test_adam_update_matches_ref(d_in, d_out, seed, step):
+    p, g = _mat(seed, d_in, d_out), _mat(seed + 1, d_in, d_out)
+    m, v = 0.1 * _mat(seed + 2, d_in, d_out), jnp.abs(0.1 * _mat(seed + 3, d_in, d_out))
+    pn, mn, vn = adam_update(p, m, v, g, 1e-3, 0.9, 0.999, 1e-8, float(step))
+    pr, mr, vr = ref.adam_update_ref(p, m, v, g, 1e-3, 0.9, 0.999, 1e-8, float(step))
+    np.testing.assert_allclose(mn, mr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(vn, vr, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(pn, pr, atol=1e-5, rtol=1e-4)
+
+
+def test_adam_update_vector_param():
+    """Vectors route through the same kernel via (1, n) reshape."""
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.normal(size=(33,)).astype(np.float32))
+    m = v = jnp.zeros_like(p)
+    g = jnp.asarray(rng.normal(size=(33,)).astype(np.float32))
+    pn, mn, vn = adam_update(p, m, v, g, 1e-3, 0.9, 0.999, 1e-8, 1.0)
+    pr, mr, vr = ref.adam_update_ref(p, m, v, g, 1e-3, 0.9, 0.999, 1e-8, 1.0)
+    assert pn.shape == (33,)
+    np.testing.assert_allclose(pn, pr, atol=1e-6)
+
+
+def test_scale_momentum_huge_gradients_stable():
+    """Column normalization bounds the update regardless of gradient scale
+    (the Fig. 3 stability argument)."""
+    p = jnp.zeros((16, 8), jnp.float32)
+    m = jnp.zeros_like(p)
+    g = jnp.full((16, 8), 1e20, jnp.float32)
+    pn, _ = scale_update_momentum(p, m, g, jnp.float32(0.1), jnp.float32(0.9))
+    assert np.all(np.isfinite(np.asarray(pn)))
+    assert np.abs(np.asarray(pn)).max() <= 0.1 + 1e-6

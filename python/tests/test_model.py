@@ -1,0 +1,147 @@
+"""L2 model invariants: shapes, causality, trainability, architecture variants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, optimizers
+
+CFG = configs.SIZES["s60m"]
+
+
+def _batch(cfg, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, cfg.seq_len + 1)).astype(np.int32))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 0)
+
+
+def test_param_specs_match_init(params):
+    specs = model.param_specs(CFG)
+    assert len(specs) == len(params)
+    for (name, kind, shape), p in zip(specs, params):
+        assert p.shape == tuple(shape), name
+        assert p.dtype == jnp.float32, name
+
+
+def test_param_count_formula():
+    for cfg in configs.SIZES.values():
+        params = model.init_params(cfg, 0)
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == cfg.param_count(), cfg.name
+
+
+def test_init_deterministic_and_seed_sensitive():
+    a = model.init_params(CFG, 42)
+    b = model.init_params(CFG, 42)
+    c = model.init_params(CFG, 43)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(a, c))
+
+
+def test_forward_shapes(params):
+    tok = _batch(CFG)[:, :-1]
+    logits = model.forward(CFG, params, tok)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_initial_loss_near_uniform(params):
+    """Fresh model ≈ uniform predictor: loss ≈ log |V|."""
+    loss = model.loss_fn(CFG, params, _batch(CFG, b=4))
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_causality(params):
+    """Perturbing future tokens must not change earlier logits."""
+    tok = np.asarray(_batch(CFG))[:, :-1].copy()
+    logits_a = np.asarray(model.forward(CFG, params, jnp.asarray(tok)))
+    tok_b = tok.copy()
+    tok_b[:, -1] = (tok_b[:, -1] + 1) % CFG.vocab
+    logits_b = np.asarray(model.forward(CFG, params, jnp.asarray(tok_b)))
+    np.testing.assert_allclose(logits_a[:, :-1], logits_b[:, :-1], atol=1e-5)
+    assert not np.allclose(logits_a[:, -1], logits_b[:, -1])
+
+
+def test_grads_cover_all_params(params):
+    out = model.fwd_bwd(CFG, params, _batch(CFG, b=4))
+    grads = out[1:]
+    assert len(grads) == len(params)
+    for g, p in zip(grads, params):
+        assert g.shape == p.shape
+        assert float(jnp.sum(jnp.abs(g))) > 0.0  # every param receives signal
+
+
+def test_fwd_bwd_loss_matches_eval(params):
+    b = _batch(CFG, b=4)
+    loss_fb = model.fwd_bwd(CFG, params, b)[0]
+    loss_ev = model.eval_step(CFG, params, b)
+    np.testing.assert_allclose(float(loss_fb), float(loss_ev), rtol=1e-6)
+
+
+def test_few_steps_of_scale_reduce_loss(params):
+    """Integration: Algorithm 1 actually trains the model (structured data)."""
+    cfg = CFG
+    opt = optimizers.REGISTRY["scale"]
+    rng = np.random.default_rng(0)
+    # a learnable distribution: token t+1 = (t + 1) mod 64
+    start = rng.integers(0, 64, size=(8, 1))
+    seq = (start + np.arange(cfg.seq_len + 1)) % 64
+    batch = jnp.asarray(seq.astype(np.int32))
+    ps = list(params)
+    st = opt.init_state(cfg)
+    losses = []
+    for step in range(1, 16):
+        out = model.fwd_bwd(cfg, ps, batch)
+        losses.append(float(out[0]))
+        ps, st = opt.update(cfg, ps, st, list(out[1:]), jnp.float32(3e-3), jnp.float32(step))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_gpt2_variant_runs():
+    cfg = configs.SIZES["gpt2s"]
+    params = model.init_params(cfg, 0)
+    out = model.fwd_bwd(cfg, params, _batch(cfg, b=2))
+    assert np.isfinite(float(out[0]))
+    names = [n for n, _, _ in model.param_specs(cfg)]
+    assert "pos_embed" in names and "block0.w_gate" not in names
+
+
+def test_variance_probe_shapes(params):
+    small = _batch(CFG, b=4, seed=1)
+    big = _batch(CFG, b=16, seed=2)
+    out = model.grad_variance_probe(CFG, params, small, big)
+    assert len(out) == len(params)
+    assert all(float(v) >= 0 for v in out)
+
+
+def _zipf_batch(cfg, b, seed):
+    """Zipf-distributed tokens — the skewed frequency regime (App. M) in
+    which the paper measures per-layer variance (Fig. 4)."""
+    rng = np.random.default_rng(seed)
+    tok = rng.zipf(1.3, size=(b, cfg.seq_len + 1)) - 1
+    return jnp.asarray(np.minimum(tok, cfg.vocab - 1).astype(np.int32))
+
+
+def test_lm_head_variance_is_large(params):
+    """Fig. 4 premise: after a little training on skewed data, the LM head's
+    total gradient variance dominates the hidden layers'."""
+    cfg = CFG
+    opt = optimizers.REGISTRY["sgd_colnorm"]
+    ps, st = list(params), opt.init_state(cfg)
+    for step in range(1, 21):
+        out = model.fwd_bwd(cfg, ps, _zipf_batch(cfg, 4, step))
+        ps, st = opt.update(cfg, ps, st, list(out[1:]), jnp.float32(1e-3), jnp.float32(step))
+    small = _zipf_batch(cfg, 4, 1003)
+    big = _zipf_batch(cfg, 16, 1004)
+    out = model.grad_variance_probe(cfg, ps, small, big)
+    specs = model.param_specs(cfg)
+    totals = {n: float(v) * int(np.prod(s)) for (n, _, s), v in zip(specs, out)}
+    head = totals["lm_head"]
+    hidden = [v for n, v in totals.items() if n.startswith("block") and "norm" not in n]
+    assert head > np.median(hidden), totals

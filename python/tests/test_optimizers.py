@@ -1,0 +1,211 @@
+"""L2 optimizer-zoo semantics tests.
+
+Checks each optimizer's update against hand-written numpy math for small
+shapes, plus the structural invariants the paper's design depends on:
+SCALE keeps momentum ONLY for the LM head; GaLore/Fira/APOLLO/SWAN use
+full Adam on first/last layers; state layouts match their manifests.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, optimizers
+from compile.kernels import ref
+
+CFG = configs.SIZES["s60m"]
+SPECS = model.param_specs(CFG)
+
+
+def _rand_like(shapes, seed=0, scale=0.1):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(scale * rng.normal(size=s).astype(np.float32)) for s in shapes]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, 7)
+
+
+@pytest.fixture(scope="module")
+def grads():
+    return _rand_like([s for _, _, s in SPECS], seed=1)
+
+
+# --------------------------------------------------------------------------
+# Structural invariants
+# --------------------------------------------------------------------------
+
+def test_registry_complete():
+    expected = set(optimizers.CORE_SET + optimizers.NORM_SET + optimizers.ABLATION_SET)
+    expected.add("ns_mmt_last")
+    assert expected <= set(optimizers.REGISTRY)
+
+
+def test_scale_state_is_head_momentum_plus_vector_adam():
+    st = optimizers.REGISTRY["scale"].state_specs(CFG)
+    names = [n for n, _ in st]
+    # exactly one momentum matrix: the LM head
+    mats = [n for n in names if n.endswith(".m") and n.startswith("lm_head")]
+    assert mats == ["lm_head.m"]
+    # nothing for embed or hidden matrices
+    assert not any(n.startswith(("embed.", "block")) and not n.endswith((".m", ".v"))
+                   for n in names)
+    for n, _, _ in SPECS:
+        pass
+    hidden_states = [n for n in names
+                     if n.split(".")[0].startswith("block") and ".w" in n]
+    assert hidden_states == []
+
+
+def test_scale_memory_is_sgd_like():
+    """SCALE state elems ≈ head + vectors only — the paper's memory claim."""
+    total_params = sum(int(np.prod(s)) for _, _, s in SPECS)
+    st = optimizers.REGISTRY["scale"].state_specs(CFG)
+    st_elems = sum(int(np.prod(s)) for _, s in st)
+    adam_elems = sum(
+        int(np.prod(s)) for _, s in optimizers.REGISTRY["adam"].state_specs(CFG)
+    )
+    assert adam_elems == 2 * total_params
+    # far below Adam; head dominates (vvocab*d) for tiny models
+    assert st_elems < 0.5 * adam_elems
+
+
+@pytest.mark.parametrize("name", ["galore", "fira", "apollo", "apollo_mini", "swan", "muon"])
+def test_first_last_layer_full_adam(name):
+    st_names = [n for n, _ in optimizers.REGISTRY[name].state_specs(CFG)]
+    assert "embed.m" in st_names and "embed.v" in st_names
+    assert "lm_head.m" in st_names and "lm_head.v" in st_names
+
+
+def test_galore_states_are_low_rank():
+    for n, s in optimizers.REGISTRY["galore"].state_specs(CFG):
+        # hidden weight-matrix momenta only (vector params carry Adam)
+        if n.startswith("block") and ".w" in n and n.endswith(".m"):
+            d_in, d_out = s
+            assert d_in <= 12  # rank << min dim
+
+
+def test_state_update_preserves_layout(params, grads):
+    for name, opt in optimizers.REGISTRY.items():
+        st = opt.init_state(CFG)
+        pn, sn = opt.update(CFG, params, st, grads, jnp.float32(1e-3), jnp.float32(1.0))
+        assert len(pn) == len(params), name
+        assert len(sn) == len(st), name
+        for a, b in zip(sn, st):
+            assert a.shape == b.shape, name
+        for a, b in zip(pn, params):
+            assert a.shape == b.shape, name
+            assert np.all(np.isfinite(np.asarray(a))), name
+
+
+# --------------------------------------------------------------------------
+# Numeric semantics vs hand math
+# --------------------------------------------------------------------------
+
+def _param_index(name):
+    return [i for i, (n, _, _) in enumerate(SPECS) if n == name][0]
+
+
+def test_sgd_is_plain_descent(params, grads):
+    opt = optimizers.REGISTRY["sgd"]
+    pn, _ = opt.update(CFG, params, [], grads, jnp.float32(0.5), jnp.float32(1.0))
+    for p, g, p2 in zip(params, grads, pn):
+        np.testing.assert_allclose(p2, p - 0.5 * g, atol=1e-6)
+
+
+def test_scale_matches_algorithm1(params, grads):
+    """Hidden matrices: p -= lr*C(g). Head: EMA then p -= lr*C(m)."""
+    opt = optimizers.REGISTRY["scale"]
+    st = opt.init_state(CFG)
+    lr, beta = 0.01, optimizers.BETA
+    pn, sn = opt.update(CFG, params, st, grads, jnp.float32(lr), jnp.float32(1.0))
+
+    i = _param_index("block0.wq")
+    expect = params[i] - lr * ref.colnorm_ref(grads[i])
+    np.testing.assert_allclose(pn[i], expect, atol=1e-5)
+
+    h = _param_index("lm_head")
+    m1 = (1 - beta) * grads[h]
+    expect_head = params[h] - lr * ref.colnorm_ref(m1)
+    np.testing.assert_allclose(pn[h], expect_head, atol=1e-5)
+
+    # second step uses the carried momentum
+    pn2, sn2 = opt.update(CFG, pn, sn, grads, jnp.float32(lr), jnp.float32(2.0))
+    m2 = beta * m1 + (1 - beta) * grads[h]
+    st_names = [n for n, _ in opt.state_specs(CFG)]
+    np.testing.assert_allclose(
+        sn2[st_names.index("lm_head.m")], m2, atol=1e-5
+    )
+
+
+def test_adam_matches_ref_everywhere(params, grads):
+    opt = optimizers.REGISTRY["adam"]
+    st = opt.init_state(CFG)
+    pn, _ = opt.update(CFG, params, st, grads, jnp.float32(1e-3), jnp.float32(1.0))
+    i = _param_index("block0.wv")
+    expect, _, _ = ref.adam_update_ref(
+        params[i], jnp.zeros_like(params[i]), jnp.zeros_like(params[i]),
+        grads[i], 1e-3, optimizers.ADAM_B1, optimizers.ADAM_B2,
+        optimizers.ADAM_EPS, 1.0)
+    np.testing.assert_allclose(pn[i], expect, atol=1e-6)
+
+
+def test_sign_sgd(params, grads):
+    opt = optimizers.REGISTRY["sign_sgd"]
+    st = opt.init_state(CFG)
+    pn, _ = opt.update(CFG, params, st, grads, jnp.float32(0.01), jnp.float32(1.0))
+    i = _param_index("block1.wo")
+    np.testing.assert_allclose(pn[i], params[i] - 0.01 * jnp.sign(grads[i]), atol=1e-6)
+
+
+def test_muon_direction_is_orthogonalized(params, grads):
+    """After one Muon step the hidden update direction ~ orthogonal matrix."""
+    opt = optimizers.REGISTRY["muon"]
+    st = opt.init_state(CFG)
+    pn, _ = opt.update(CFG, params, st, grads, jnp.float32(1.0), jnp.float32(1.0))
+    i = _param_index("block0.wq")
+    scale = 0.2 * np.sqrt(max(params[i].shape))
+    d = np.asarray((params[i] - pn[i])) / scale  # lr=1
+    gram = d.T @ d
+    # NS(5) gives approximately orthonormal columns (singular values ~1)
+    sv = np.linalg.svd(gram, compute_uv=False)
+    assert 0.5 < np.median(sv) < 1.5
+
+
+def test_stable_spam_reset_zeroes_momentum(params, grads):
+    opt = optimizers.REGISTRY["stable_spam"]
+    st = opt.init_state(CFG)
+    # warm up one step, then hit the reset step
+    _, st1 = opt.update(CFG, params, st, grads, jnp.float32(1e-3), jnp.float32(1.0))
+    reset_step = float(optimizers.SPAM_RESET)
+    _, st2 = opt.update(CFG, params, st1, grads, jnp.float32(1e-3), jnp.float32(reset_step))
+    names = [n for n, _ in opt.state_specs(CFG)]
+    m_idx = names.index("block0.wq.m")
+    beta1 = optimizers.ADAM_B1
+    # after reset, m == (1-beta1) * g_clipped exactly (previous m erased)
+    m_new = np.asarray(st2[m_idx])
+    g = np.asarray(grads[_param_index("block0.wq")])
+    # gradient was not clipped in this regime (gmax grew past |g|)
+    np.testing.assert_allclose(m_new, (1 - beta1) * g, rtol=1e-4, atol=1e-6)
+
+
+def test_apollo_mini_scales_raw_gradient(params, grads):
+    """APOLLO-Mini's direction is s * g — colinear with the gradient."""
+    opt = optimizers.REGISTRY["apollo_mini"]
+    st = opt.init_state(CFG)
+    pn, _ = opt.update(CFG, params, st, grads, jnp.float32(1e-3), jnp.float32(1.0))
+    i = _param_index("block0.w_up")
+    d = np.asarray(params[i] - pn[i]).ravel()
+    g = np.asarray(grads[i]).ravel()
+    cos = d @ g / (np.linalg.norm(d) * np.linalg.norm(g) + 1e-12)
+    np.testing.assert_allclose(cos, 1.0, atol=1e-5)
+
+
+def test_update_is_deterministic(params, grads):
+    opt = optimizers.REGISTRY["galore"]
+    st = opt.init_state(CFG)
+    a, _ = opt.update(CFG, params, st, grads, jnp.float32(1e-3), jnp.float32(1.0))
+    b, _ = opt.update(CFG, params, st, grads, jnp.float32(1e-3), jnp.float32(1.0))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

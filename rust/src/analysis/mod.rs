@@ -1,0 +1,12 @@
+//! Analysis: the measurement machinery behind the paper's figures —
+//! per-layer gradient variance (Fig. 4), LM-head gradient histograms and
+//! column norms (Figs. 3/10), and the table renderer for the bench
+//! harness output.
+
+pub mod histogram;
+pub mod tables;
+pub mod variance;
+
+pub use histogram::{head_column_norms, head_grad_histograms, Histogram};
+pub use tables::Table;
+pub use variance::{run_probed_training, VarianceSeries};

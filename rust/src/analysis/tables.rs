@@ -1,0 +1,152 @@
+//! Table renderer: fixed-width terminal tables with the "paper vs
+//! measured" layout every `scale table <n>` command prints.
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub footnotes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            footnotes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn footnote(&mut self, note: &str) -> &mut Self {
+        self.footnotes.push(note.to_string());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * (ncols - 1);
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} ==\n", self.title));
+        let line = |out: &mut String| {
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        };
+        line(&mut out);
+        for (i, h) in self.headers.iter().enumerate() {
+            if i > 0 {
+                out.push_str(" | ");
+            }
+            out.push_str(&format!("{:<w$}", h, w = widths[i]));
+        }
+        out.push('\n');
+        line(&mut out);
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(" | ");
+                }
+                // right-align numeric-ish cells
+                if c.chars().next().map(|ch| ch.is_ascii_digit() || ch == '-').unwrap_or(false)
+                {
+                    out.push_str(&format!("{:>w$}", c, w = widths[i]));
+                } else {
+                    out.push_str(&format!("{:<w$}", c, w = widths[i]));
+                }
+            }
+            out.push('\n');
+        }
+        line(&mut out);
+        for n in &self.footnotes {
+            out.push_str(&format!("  * {n}\n"));
+        }
+        out
+    }
+}
+
+/// Format helpers used across the bench harness.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn gb(x: f64) -> String {
+    format!("{x:.2}G")
+}
+
+pub fn opt_label(name: &str) -> &str {
+    match name {
+        "scale" => "SCALE (ours)",
+        "stable_spam" => "Adam (Stable-SPAM)",
+        "adam" => "Adam",
+        "muon" => "Muon",
+        "galore" => "GaLore",
+        "fira" => "Fira",
+        "apollo" => "APOLLO",
+        "apollo_mini" => "APOLLO-Mini",
+        "swan" => "SWAN (reconstr.)",
+        "sgd" => "SGD",
+        "sgd_momentum" => "SGD-M",
+        "sgd_colnorm" => "column-wise",
+        "sgd_rownorm" => "row-wise",
+        "sign_sgd" => "sign",
+        "sgd_ns" => "singular-value (NS)",
+        "ns_mmt_last" => "Singular-val (NS) + mmt-last",
+        "scale_first_last" => "SGD col mmt-(first+last)",
+        "mix_col_last_row_rest" => "column-last, row-rest",
+        "mix_row_first_col_rest" => "row-first, column-rest",
+        "mix_larger_dim" => "norm along larger dim",
+        "mix_row_last_col_rest" => "row-last, column-rest",
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Demo", &["Method", "PPL", "Mem"]);
+        t.row(vec!["SCALE (ours)".into(), "16.32".into(), "0.80G".into()]);
+        t.row(vec!["Adam".into(), "18.77".into(), "2.21G".into()]);
+        t.footnote("paper values");
+        let s = t.render();
+        assert!(s.contains("SCALE (ours)"));
+        assert!(s.contains("Method"));
+        assert!(s.contains("* paper values"));
+        // column alignment: both data rows have the separator at the same col
+        let lines: Vec<&str> = s.lines().filter(|l| l.contains(" | ")).collect();
+        let idx: Vec<usize> = lines.iter().map(|l| l.find(" | ").unwrap()).collect();
+        assert!(idx.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(opt_label("scale"), "SCALE (ours)");
+        assert_eq!(opt_label("unknown_thing"), "unknown_thing");
+    }
+}

@@ -1,0 +1,135 @@
+//! Per-layer gradient-variance analysis — Fig. 4 (and App. J Figs. 6/7).
+//!
+//! The paper estimates per-layer gradient variance by comparing the
+//! small-batch stochastic gradient against a large-batch estimate of the
+//! true gradient (footnote 3). The `varprobe_<size>` artifact returns
+//! per-parameter mean-squared deviations; this module aggregates them by
+//! layer label (embed / blockN / lm_head) into the Fig.-4 series.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Trainer;
+use crate::runtime::Tensor;
+
+#[derive(Debug, Clone)]
+pub struct VarianceSeries {
+    /// layer label -> variance estimate per probe step
+    pub by_layer: BTreeMap<String, Vec<f64>>,
+    pub probe_steps: Vec<usize>,
+}
+
+impl VarianceSeries {
+    /// Mean variance per layer over the collected probes.
+    pub fn means(&self) -> BTreeMap<String, f64> {
+        self.by_layer
+            .iter()
+            .map(|(k, v)| (k.clone(), v.iter().sum::<f64>() / v.len().max(1) as f64))
+            .collect()
+    }
+
+    /// The paper's headline check: the lm_head variance dominates.
+    pub fn head_dominates(&self) -> bool {
+        let means = self.means();
+        let head = means.get("lm_head").copied().unwrap_or(0.0);
+        means
+            .iter()
+            .filter(|(k, _)| k.starts_with("block"))
+            .all(|(_, &v)| head > v)
+    }
+}
+
+/// Probe the trainer's current parameters every `every` steps while
+/// training for `steps` steps; returns the per-layer series.
+pub fn run_probed_training(
+    tr: &mut Trainer,
+    steps: usize,
+    every: usize,
+) -> anyhow::Result<VarianceSeries> {
+    let probe_name = format!("varprobe_{}", tr.opts.size);
+    let size = tr.engine.manifest.size(&tr.opts.size)?.clone();
+    let big_factor = tr.engine.manifest.varprobe_big_factor;
+    let mut series = VarianceSeries {
+        by_layer: BTreeMap::new(),
+        probe_steps: Vec::new(),
+    };
+
+    for _ in 0..steps {
+        tr.train_step()?;
+        if tr.step % every.max(1) != 0 {
+            continue;
+        }
+        // draw small + big probe batches from a dedicated stream
+        let small = probe_batch(tr, tr.microbatch, 0x9a)?;
+        let big = probe_batch(tr, tr.microbatch * big_factor, 0x9b)?;
+        let mut inputs = tr.params.clone();
+        inputs.push(small);
+        inputs.push(big);
+        let out = tr.engine.run(&probe_name, &inputs)?;
+        // aggregate per-element variances into per-layer totals
+        let mut by_layer: BTreeMap<String, f64> = BTreeMap::new();
+        for (p, v) in size.params.iter().zip(&out) {
+            // v = ||g_small - g_big||^2 / numel; total = v * numel
+            let total = v.item_f32() as f64 * p.numel() as f64;
+            *by_layer.entry(layer_group(&p.name, &p.kind)).or_insert(0.0) += total;
+        }
+        for (k, v) in by_layer {
+            series.by_layer.entry(k).or_default().push(v);
+        }
+        series.probe_steps.push(tr.step);
+    }
+    Ok(series)
+}
+
+/// Fig. 4 grouping: embed / blockN / lm_head; vectors fold into "norms".
+fn layer_group(name: &str, kind: &str) -> String {
+    if kind == "vector" {
+        return "norms".to_string();
+    }
+    name.split('.').next().unwrap_or(name).to_string()
+}
+
+fn probe_batch(tr: &Trainer, b: usize, stream: u64) -> anyhow::Result<Tensor> {
+    let w = tr.seq_len + 1;
+    let need = b * w;
+    let text = tr
+        .corpus()
+        .text(need * 8 + 1024, (stream << 40) | tr.step as u64);
+    let mut ids: Vec<i32> = tr
+        .tokenizer()
+        .encode(&text)
+        .into_iter()
+        .map(|x| x as i32)
+        .collect();
+    ids.truncate(need);
+    while ids.len() < need {
+        ids.push(0);
+    }
+    Ok(Tensor::from_i32(&[b, w], ids))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_grouping() {
+        assert_eq!(layer_group("block3.wq", "matrix"), "block3");
+        assert_eq!(layer_group("lm_head", "head"), "lm_head");
+        assert_eq!(layer_group("embed", "embed"), "embed");
+        assert_eq!(layer_group("block0.attn_norm", "vector"), "norms");
+    }
+
+    #[test]
+    fn series_means_and_dominance() {
+        let mut s = VarianceSeries {
+            by_layer: BTreeMap::new(),
+            probe_steps: vec![10, 20],
+        };
+        s.by_layer.insert("lm_head".into(), vec![10.0, 12.0]);
+        s.by_layer.insert("block0".into(), vec![1.0, 2.0]);
+        assert!((s.means()["lm_head"] - 11.0).abs() < 1e-12);
+        assert!(s.head_dominates());
+        s.by_layer.insert("block1".into(), vec![20.0, 20.0]);
+        assert!(!s.head_dominates());
+    }
+}

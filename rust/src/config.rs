@@ -1,0 +1,103 @@
+//! Run configuration: JSON config files + CLI overrides -> TrainOptions.
+//!
+//! `configs/*.json` hold named experiment presets (the launcher's unit of
+//! reproducibility); every field can be overridden on the command line.
+
+use std::path::Path;
+
+use crate::coordinator::TrainOptions;
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Load a preset from a JSON file. Unknown keys are rejected.
+pub fn load_preset(path: impl AsRef<Path>) -> anyhow::Result<TrainOptions> {
+    let text = std::fs::read_to_string(&path)?;
+    let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    from_json(&j)
+}
+
+pub fn from_json(j: &Json) -> anyhow::Result<TrainOptions> {
+    let mut o = TrainOptions::default();
+    let obj = j
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("config must be an object"))?;
+    for (k, v) in obj {
+        match k.as_str() {
+            "size" => o.size = v.as_str().unwrap_or(&o.size).to_string(),
+            "optimizer" => o.optimizer = v.as_str().unwrap_or(&o.optimizer).to_string(),
+            "steps" => o.steps = v.as_usize().unwrap_or(o.steps),
+            "lr" => o.base_lr = v.as_f64().unwrap_or(o.base_lr),
+            "shards" => o.shards = v.as_usize().unwrap_or(o.shards),
+            "seed" => o.seed = v.as_f64().unwrap_or(0.0) as u64,
+            "eval_every" => o.eval_every = v.as_usize().unwrap_or(0),
+            "eval_batches" => o.eval_batches = v.as_usize().unwrap_or(o.eval_batches),
+            "log_every" => o.log_every = v.as_usize().unwrap_or(o.log_every),
+            "quiet" => o.quiet = v.as_bool().unwrap_or(false),
+            "comment" => {}
+            other => anyhow::bail!("unknown config key {other:?}"),
+        }
+    }
+    Ok(o)
+}
+
+/// Apply CLI overrides on top of a preset (or the defaults).
+pub fn apply_cli(mut o: TrainOptions, args: &mut Args) -> anyhow::Result<TrainOptions> {
+    if let Some(s) = args.get("size") {
+        o.size = s.to_string();
+    }
+    if let Some(s) = args.get("optimizer") {
+        o.optimizer = s.to_string();
+    }
+    o.steps = args.get_usize("steps", o.steps)?;
+    o.base_lr = args.get_f64("lr", o.base_lr)?;
+    o.shards = args.get_usize("shards", o.shards)?;
+    o.seed = args.get_usize("seed", o.seed as usize)? as u64;
+    o.eval_every = args.get_usize("eval-every", o.eval_every)?;
+    o.eval_batches = args.get_usize("eval-batches", o.eval_batches)?;
+    o.log_every = args.get_usize("log-every", o.log_every)?;
+    if args.flag("quiet") {
+        o.quiet = true;
+    }
+    Ok(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let j = json::parse(
+            r#"{"size":"s130m","optimizer":"adam","steps":50,"lr":0.0005,
+                "shards":2,"seed":3,"eval_every":10,"comment":"x"}"#,
+        )
+        .unwrap();
+        let o = from_json(&j).unwrap();
+        assert_eq!(o.size, "s130m");
+        assert_eq!(o.optimizer, "adam");
+        assert_eq!(o.steps, 50);
+        assert_eq!(o.base_lr, 5e-4);
+        assert_eq!(o.shards, 2);
+        assert_eq!(o.seed, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let j = json::parse(r#"{"sizee":"s130m"}"#).unwrap();
+        assert!(from_json(&j).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut args = crate::util::cli::Args::parse(&[
+            "train".into(),
+            "--optimizer".into(),
+            "muon".into(),
+            "--steps=7".into(),
+        ])
+        .unwrap();
+        let o = apply_cli(TrainOptions::default(), &mut args).unwrap();
+        assert_eq!(o.optimizer, "muon");
+        assert_eq!(o.steps, 7);
+    }
+}

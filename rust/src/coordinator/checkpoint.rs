@@ -1,0 +1,165 @@
+//! Binary checkpointing: params + optimizer state + run position.
+//!
+//! Format (little-endian):
+//!   magic "SCLK" | u32 version | str size | str optimizer | u64 step |
+//!   u32 n_tensors | n x ( str name | u32 ndims | u64 dims... | f32 data... )
+//!
+//! Strings are u32-length-prefixed UTF-8. Resume must be bit-exact: the
+//! integration suite checks train(2k) == train(k) + resume(k).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::Tensor;
+
+const MAGIC: &[u8; 4] = b"SCLK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub size: String,
+    pub optimizer: String,
+    pub step: u64,
+    /// params then state, in manifest order, with names
+    pub tensors: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        write_str(&mut w, &self.size)?;
+        write_str(&mut w, &self.optimizer)?;
+        w.write_all(&self.step.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            write_str(&mut w, name)?;
+            let shape = t.shape();
+            w.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in t.f32s() {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a SCALE checkpoint");
+        let version = read_u32(&mut r)?;
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let size = read_str(&mut r)?;
+        let optimizer = read_str(&mut r)?;
+        let mut step8 = [0u8; 8];
+        r.read_exact(&mut step8)?;
+        let step = u64::from_le_bytes(step8);
+        let n = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(n);
+        for _ in 0..n {
+            let name = read_str(&mut r)?;
+            let ndims = read_u32(&mut r)? as usize;
+            let mut shape = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                let mut d8 = [0u8; 8];
+                r.read_exact(&mut d8)?;
+                shape.push(u64::from_le_bytes(d8) as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0f32; numel];
+            let mut buf = vec![0u8; numel * 4];
+            r.read_exact(&mut buf)?;
+            for (i, c) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            tensors.push((name, Tensor::from_f32(&shape, data)));
+        }
+        Ok(Checkpoint {
+            size,
+            optimizer,
+            step,
+            tensors,
+        })
+    }
+}
+
+fn write_str<W: Write>(w: &mut W, s: &str) -> std::io::Result<()> {
+    w.write_all(&(s.len() as u32).to_le_bytes())?;
+    w.write_all(s.as_bytes())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_str<R: Read>(r: &mut R) -> anyhow::Result<String> {
+    let len = read_u32(r)? as usize;
+    anyhow::ensure!(len < 1 << 20, "absurd string length {len}");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("scale_ckpt_{name}_{}", std::process::id()))
+    }
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            size: "s60m".into(),
+            optimizer: "scale".into(),
+            step: 123,
+            tensors: vec![
+                ("embed".into(), Tensor::from_f32(&[2, 3], vec![1., -2., 3., 4., 5., 6.5])),
+                ("lm_head.m".into(), Tensor::from_f32(&[3], vec![0.1, 0.2, 0.3])),
+                ("scalar".into(), Tensor::from_f32(&[], vec![9.0])),
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let p = tmp("rt");
+        let c = sample();
+        c.save(&p).unwrap();
+        let back = Checkpoint::load(&p).unwrap();
+        assert_eq!(back.size, c.size);
+        assert_eq!(back.optimizer, c.optimizer);
+        assert_eq!(back.step, c.step);
+        assert_eq!(back.tensors.len(), c.tensors.len());
+        for ((an, at), (bn, bt)) in c.tensors.iter().zip(&back.tensors) {
+            assert_eq!(an, bn);
+            assert_eq!(at, bt);
+        }
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let p = tmp("trunc");
+        sample().save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,112 @@
+//! Simulated data-parallel gradient reduction.
+//!
+//! The paper's 7B runs use 8-16 GPU DDP; here the coordinator shards the
+//! global batch into `n` microbatch gradients and combines them with a
+//! binary-tree all-reduce — the same reduction topology a ring/tree
+//! collective implements, executed deterministically on host tensors.
+//! Determinism matters: pairwise tree addition gives the *same* float
+//! rounding every run (unlike a data-race reduction), which is what makes
+//! the DDP(1-shard, accumulated) == DDP(n-shard) integration test exact
+//! up to associativity-reordering tolerance.
+
+use crate::runtime::Tensor;
+
+/// Mean-reduce `shards[k][p]` over k (shards) for every parameter p,
+/// using pairwise tree combination. Consumes the shard gradients.
+pub fn tree_all_reduce(mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    assert!(!shards.is_empty());
+    let n = shards.len();
+    // tree rounds: combine stride-separated partners
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (left, right) = shards.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (d, s) in dst.iter_mut().zip(src.iter()) {
+                d.add_assign(s);
+            }
+            i += 2 * stride;
+        }
+        // drop the consumed partners' storage eagerly
+        stride *= 2;
+    }
+    let mut out = shards.swap_remove(0);
+    let inv = 1.0 / n as f32;
+    for t in out.iter_mut() {
+        t.scale(inv);
+    }
+    out
+}
+
+/// Sequential baseline (reference semantics for tests).
+pub fn sequential_mean(shards: &[Vec<Tensor>]) -> Vec<Tensor> {
+    let n = shards.len();
+    let mut out = shards[0].clone();
+    for s in &shards[1..] {
+        for (d, x) in out.iter_mut().zip(s.iter()) {
+            d.add_assign(x);
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for t in out.iter_mut() {
+        t.scale(inv);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn shard(rng: &mut crate::util::rng::Pcg, shapes: &[Vec<usize>]) -> Vec<Tensor> {
+        shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                Tensor::from_f32(s, (0..n).map(|_| rng.normal() as f32).collect())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_sequential_mean() {
+        prop::check("tree-allreduce-mean", 32, |rng| {
+            let k = prop::usize_in(rng, 1, 9);
+            let shapes = vec![vec![3, 4], vec![7], vec![2, 2, 2]];
+            let shards: Vec<Vec<Tensor>> = (0..k).map(|_| shard(rng, &shapes)).collect();
+            let want = sequential_mean(&shards);
+            let got = tree_all_reduce(shards);
+            for (w, g) in want.iter().zip(&got) {
+                prop::slices_close(g.f32s(), w.f32s(), 1e-5)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let t = vec![Tensor::from_f32(&[2], vec![1.0, -2.0])];
+        let out = tree_all_reduce(vec![t.clone()]);
+        assert_eq!(out[0].f32s(), t[0].f32s());
+    }
+
+    #[test]
+    fn constant_shards_average_to_constant() {
+        let mk = |v: f32| vec![Tensor::from_f32(&[3], vec![v; 3])];
+        let out = tree_all_reduce(vec![mk(1.0), mk(2.0), mk(3.0), mk(6.0)]);
+        assert_eq!(out[0].f32s(), &[3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = crate::util::rng::Pcg::new(4);
+        let shapes = vec![vec![5, 5]];
+        let shards: Vec<Vec<Tensor>> = (0..7).map(|_| shard(&mut rng, &shapes)).collect();
+        let a = tree_all_reduce(shards.clone());
+        let b = tree_all_reduce(shards);
+        assert_eq!(a[0].f32s(), b[0].f32s());
+    }
+}

@@ -1,0 +1,189 @@
+//! Training metrics: loss/perplexity tracking, EMA smoothing, throughput
+//! meters, and CSV emission for the figure-generating benches.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub tokens: u64,
+    pub elapsed_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalRecord {
+    pub step: usize,
+    pub loss: f64,
+    pub ppl: f64,
+}
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub steps: Vec<StepRecord>,
+    pub evals: Vec<EvalRecord>,
+    pub ema_loss: Option<f64>,
+    ema_alpha: f64,
+    start: Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            steps: Vec::new(),
+            evals: Vec::new(),
+            ema_loss: None,
+            ema_alpha: 0.05,
+            start: Instant::now(),
+        }
+    }
+
+    pub fn record_step(&mut self, step: usize, loss: f64, lr: f64, tokens: u64) {
+        self.ema_loss = Some(match self.ema_loss {
+            None => loss,
+            Some(e) => (1.0 - self.ema_alpha) * e + self.ema_alpha * loss,
+        });
+        self.steps.push(StepRecord {
+            step,
+            loss,
+            lr,
+            tokens,
+            elapsed_s: self.start.elapsed().as_secs_f64(),
+        });
+    }
+
+    pub fn record_eval(&mut self, step: usize, loss: f64) {
+        self.evals.push(EvalRecord {
+            step,
+            loss,
+            ppl: loss.exp(),
+        });
+    }
+
+    pub fn final_ppl(&self) -> Option<f64> {
+        self.evals.last().map(|e| e.ppl)
+    }
+
+    /// Mean training tokens/second over the run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        match self.steps.last() {
+            Some(last) if last.elapsed_s > 0.0 => last.tokens as f64 / last.elapsed_s,
+            _ => 0.0,
+        }
+    }
+
+    /// Smoothed loss curve, `window`-step moving average (the paper
+    /// smooths Fig. 4 with a 50-iteration window).
+    pub fn smoothed_losses(&self, window: usize) -> Vec<(usize, f64)> {
+        let w = window.max(1);
+        self.steps
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let lo = i.saturating_sub(w - 1);
+                let mean = self.steps[lo..=i].iter().map(|r| r.loss).sum::<f64>()
+                    / (i - lo + 1) as f64;
+                (s.step, mean)
+            })
+            .collect()
+    }
+
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "step,loss,lr,tokens,elapsed_s")?;
+        for s in &self.steps {
+            writeln!(f, "{},{},{},{},{}", s.step, s.loss, s.lr, s.tokens, s.elapsed_s)?;
+        }
+        writeln!(f)?;
+        writeln!(f, "eval_step,eval_loss,eval_ppl")?;
+        for e in &self.evals {
+            writeln!(f, "{},{},{}", e.step, e.loss, e.ppl)?;
+        }
+        Ok(())
+    }
+}
+
+/// Render a sparkline-ish ASCII curve for terminal output.
+pub fn ascii_curve(points: &[(usize, f64)], width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::new();
+    }
+    let min = points.iter().map(|p| p.1).fold(f64::INFINITY, f64::min);
+    let max = points.iter().map(|p| p.1).fold(f64::NEG_INFINITY, f64::max);
+    let span = (max - min).max(1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    for (i, &(_, v)) in points.iter().enumerate() {
+        let x = i * (width - 1) / (points.len() - 1).max(1);
+        let y = ((max - v) / span * (height - 1) as f64).round() as usize;
+        grid[y.min(height - 1)][x] = b'*';
+    }
+    let mut out = String::new();
+    out.push_str(&format!("{max:>10.4} ┐\n"));
+    for row in grid {
+        out.push_str("           │");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("{min:>10.4} ┴{}\n", "─".repeat(width)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_smooths() {
+        let mut m = Metrics::new();
+        m.record_step(1, 10.0, 1e-3, 100);
+        m.record_step(2, 0.0, 1e-3, 200);
+        let e = m.ema_loss.unwrap();
+        assert!(e > 5.0 && e < 10.0);
+    }
+
+    #[test]
+    fn ppl_is_exp_loss() {
+        let mut m = Metrics::new();
+        m.record_eval(10, 2.0);
+        assert!((m.final_ppl().unwrap() - 2.0f64.exp()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let mut m = Metrics::new();
+        for i in 1..=10 {
+            m.record_step(i, i as f64, 1e-3, 0);
+        }
+        let s = m.smoothed_losses(5);
+        assert_eq!(s.len(), 10);
+        assert!((s[9].1 - 8.0).abs() < 1e-9); // mean of 6..=10
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = Metrics::new();
+        m.record_step(1, 5.0, 1e-3, 128);
+        m.record_eval(1, 4.5);
+        let dir = std::env::temp_dir().join("scale_metrics_test.csv");
+        m.write_csv(&dir).unwrap();
+        let text = std::fs::read_to_string(&dir).unwrap();
+        assert!(text.contains("step,loss") && text.contains("eval_ppl"));
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn ascii_curve_renders() {
+        let pts: Vec<(usize, f64)> = (0..50).map(|i| (i, (50 - i) as f64)).collect();
+        let s = ascii_curve(&pts, 40, 8);
+        assert!(s.contains('*'));
+    }
+}

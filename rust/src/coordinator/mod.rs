@@ -1,0 +1,14 @@
+//! L3 coordinator: the training runtime that composes AOT artifacts into
+//! the paper's pretraining pipeline — schedules, DDP reduction, metrics,
+//! checkpoints, sweeps.
+
+pub mod checkpoint;
+pub mod ddp;
+pub mod metrics;
+pub mod schedule;
+pub mod sweep;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use schedule::Schedule;
+pub use trainer::{TrainOptions, Trainer};

@@ -1,0 +1,122 @@
+//! Learning-rate schedules. The paper (App. C) uses cosine decay with
+//! linear warmup over the first 10% of iterations; constant and linear
+//! variants exist for ablations and the LR-sensitivity sweep.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    /// Linear warmup to `base` over `warmup` steps, then cosine decay to
+    /// `base * min_ratio` at `total` steps.
+    CosineWarmup {
+        base: f64,
+        warmup: usize,
+        total: usize,
+        min_ratio: f64,
+    },
+    Constant { base: f64 },
+    /// Linear warmup then linear decay to zero.
+    LinearWarmup { base: f64, warmup: usize, total: usize },
+}
+
+impl Schedule {
+    /// The paper's default: 10% warmup, cosine to 10% of peak.
+    pub fn paper_default(base: f64, total: usize) -> Schedule {
+        Schedule::CosineWarmup {
+            base,
+            warmup: (total / 10).max(1),
+            total,
+            min_ratio: 0.1,
+        }
+    }
+
+    /// LR at 1-based step `t`.
+    pub fn lr(&self, t: usize) -> f64 {
+        match *self {
+            Schedule::Constant { base } => base,
+            Schedule::CosineWarmup {
+                base,
+                warmup,
+                total,
+                min_ratio,
+            } => {
+                if t <= warmup {
+                    base * t as f64 / warmup as f64
+                } else {
+                    let p = (t - warmup) as f64 / (total - warmup).max(1) as f64;
+                    let p = p.min(1.0);
+                    let cos = 0.5 * (1.0 + (std::f64::consts::PI * p).cos());
+                    base * (min_ratio + (1.0 - min_ratio) * cos)
+                }
+            }
+            Schedule::LinearWarmup { base, warmup, total } => {
+                if t <= warmup {
+                    base * t as f64 / warmup as f64
+                } else {
+                    let p = (t - warmup) as f64 / (total - warmup).max(1) as f64;
+                    base * (1.0 - p.min(1.0))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure};
+
+    #[test]
+    fn warmup_reaches_base() {
+        let s = Schedule::paper_default(1e-3, 100);
+        assert!((s.lr(10) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_ends_at_min_ratio() {
+        let s = Schedule::paper_default(1e-3, 100);
+        assert!((s.lr(100) - 1e-4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn bounds_and_shape_property() {
+        prop::quick("schedule-bounds", |rng| {
+            let total = prop::usize_in(rng, 10, 5000);
+            let base = prop::f32_in(rng, 1e-5, 1.0) as f64;
+            let s = Schedule::paper_default(base, total);
+            for t in 1..=total {
+                let lr = s.lr(t);
+                ensure(lr > 0.0 && lr <= base * (1.0 + 1e-9), format!("lr {lr} at {t}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        prop::quick("schedule-monotone-decay", |rng| {
+            let total = prop::usize_in(rng, 50, 2000);
+            let s = Schedule::paper_default(1e-3, total);
+            let warmup = total / 10;
+            let mut prev = f64::INFINITY;
+            for t in (warmup + 1)..=total {
+                let lr = s.lr(t);
+                ensure(lr <= prev + 1e-15, format!("not decaying at {t}"))?;
+                prev = lr;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { base: 0.5 };
+        assert_eq!(s.lr(1), 0.5);
+        assert_eq!(s.lr(10_000), 0.5);
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let s = Schedule::LinearWarmup { base: 1.0, warmup: 10, total: 110 };
+        assert!(s.lr(110) < 1e-9);
+        assert!((s.lr(60) - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,60 @@
+//! Sweep driver: run the trainer across a hyperparameter grid.
+//!
+//! Backs the paper's wandb sweeps (App. C) and the LR-sensitivity study
+//! (Fig. 8). Each point is an independent deterministic run.
+
+use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::runtime::Engine;
+
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub lr: f64,
+    pub ppl: f64,
+    pub final_loss_ema: f64,
+    pub diverged: bool,
+}
+
+/// Train `base` once per learning rate; returns one point per LR.
+pub fn lr_sweep(
+    engine: &Engine,
+    base: &TrainOptions,
+    lrs: &[f64],
+) -> anyhow::Result<Vec<SweepPoint>> {
+    let mut out = Vec::with_capacity(lrs.len());
+    for &lr in lrs {
+        let mut opts = base.clone();
+        opts.base_lr = lr;
+        opts.schedule = None; // rebuild the cosine schedule at this peak
+        opts.quiet = true;
+        let mut tr = Trainer::new(engine, opts)?;
+        let ppl = match tr.train() {
+            Ok(p) if p.is_finite() => p,
+            _ => f64::INFINITY,
+        };
+        let ema = tr.metrics.ema_loss.unwrap_or(f64::INFINITY);
+        out.push(SweepPoint {
+            lr,
+            ppl,
+            final_loss_ema: ema,
+            diverged: !ppl.is_finite() || ppl > 1e6,
+        });
+    }
+    Ok(out)
+}
+
+/// The paper's App. C learning-rate grid.
+pub fn paper_lr_grid() -> Vec<f64> {
+    vec![5e-5, 1e-4, 3e-4, 5e-4, 1e-3, 3e-3, 5e-3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_sorted_positive() {
+        let g = paper_lr_grid();
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!(g.iter().all(|&x| x > 0.0));
+    }
+}

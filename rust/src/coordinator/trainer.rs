@@ -1,0 +1,346 @@
+//! The training coordinator: composes the AOT artifacts into the paper's
+//! pretraining loop.
+//!
+//! Per step:
+//!   1. each DDP shard draws its microbatch and runs `fwd_bwd_<size>`
+//!      (loss + per-parameter gradients);
+//!   2. shard gradients are tree-all-reduced to the global mean;
+//!   3. `update_<opt>_<size>` applies one optimizer step
+//!      (params, state, grads, lr, step) -> (params', state').
+//!
+//! Python never runs here; the loop is pure Rust + PJRT executions.
+
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::ddp;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::schedule::Schedule;
+use crate::data::{self, Corpus, Tokenizer};
+#[allow(unused_imports)]
+use crate::data::Batcher;
+use crate::runtime::{Engine, Executable, Tensor};
+
+use std::rc::Rc;
+
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub size: String,
+    pub optimizer: String,
+    pub steps: usize,
+    pub base_lr: f64,
+    /// None -> the paper's cosine+warmup over `steps`
+    pub schedule: Option<Schedule>,
+    /// DDP shards; global batch = shards * manifest.microbatch sequences
+    pub shards: usize,
+    pub seed: u64,
+    /// 0 = evaluate only at the end
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub quiet: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            size: "s60m".into(),
+            optimizer: "scale".into(),
+            steps: 100,
+            base_lr: 1e-3,
+            schedule: None,
+            shards: 4,
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 20,
+            quiet: false,
+        }
+    }
+}
+
+/// Shard id offset reserved for the held-out eval stream.
+const EVAL_SHARD: usize = 1 << 20;
+
+/// Native parameter init mirroring model.init_params' scheme (ones for
+/// norm gains, N(0, 0.02) embeddings, 1/sqrt(d_in) fan-in matrices).
+/// Seeds are independent per parameter; exact agreement with the jax
+/// init artifact is not required (both are valid draws of the same
+/// scheme), only determinism per (size, seed).
+fn native_init(size: &crate::runtime::artifact::SizeInfo, seed: u64) -> Vec<Tensor> {
+    use crate::util::rng::Pcg;
+    size.params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let n = p.numel();
+            let mut rng = Pcg::with_stream(seed.wrapping_add(1), i as u64);
+            let data: Vec<f32> = match (p.kind.as_str(), p.name.as_str()) {
+                ("vector", _) => vec![1.0; n],
+                ("embed", _) | (_, "pos_embed") => {
+                    (0..n).map(|_| 0.02 * rng.normal() as f32).collect()
+                }
+                _ => {
+                    let scale = 1.0 / (p.shape[0] as f32).sqrt();
+                    (0..n).map(|_| scale * rng.normal() as f32).collect()
+                }
+            };
+            Tensor::from_f32(&p.shape, data)
+        })
+        .collect()
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub opts: TrainOptions,
+    pub schedule: Schedule,
+    fwd: Rc<Executable>,
+    upd: Rc<Executable>,
+    evl: Rc<Executable>,
+    pub params: Vec<Tensor>,
+    pub state: Vec<Tensor>,
+    pub step: usize,
+    pub metrics: Metrics,
+    corpus: std::sync::Arc<Corpus>,
+    tokenizer: std::sync::Arc<Tokenizer>,
+    n_params: usize,
+    pub seq_len: usize,
+    pub microbatch: usize,
+    shard_positions: Vec<usize>,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(engine: &'e Engine, opts: TrainOptions) -> anyhow::Result<Trainer<'e>> {
+        let size = engine.manifest.size(&opts.size)?.clone();
+        let fwd = engine.load(&format!("fwd_bwd_{}", opts.size))?;
+        let upd = engine.load(&format!("update_{}_{}", opts.optimizer, opts.size))?;
+        let evl = engine.load(&format!("eval_{}", opts.size))?;
+
+        // init params natively (seeded), zero state from the manifest spec.
+        // The init_<size> artifact exists for parity tests, but compiling
+        // it costs 8-28s of PJRT time per process — native init removes it
+        // from every run (EXPERIMENTS.md §Perf L3-2).
+        let params = native_init(&size, opts.seed);
+        let state: Vec<Tensor> = engine
+            .manifest
+            .state_spec(&opts.optimizer, &opts.size)?
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+
+        let (corpus, tokenizer) = data::pipeline(size.vocab, opts.seed);
+        let schedule = opts
+            .schedule
+            .unwrap_or_else(|| Schedule::paper_default(opts.base_lr, opts.steps));
+
+        Ok(Trainer {
+            engine,
+            schedule,
+            fwd,
+            upd,
+            evl,
+            n_params: params.len(),
+            params,
+            state,
+            step: 0,
+            metrics: Metrics::new(),
+            corpus,
+            tokenizer,
+            seq_len: size.seq_len,
+            microbatch: engine.manifest.microbatch,
+            shard_positions: vec![0; opts.shards.max(1)],
+            opts,
+        })
+    }
+
+    /// Draw the next microbatch for a (possibly virtual) shard id.
+    /// Stream position is tracked per shard so the Trainer owns all
+    /// mutability (see [`Batcher`] for the standalone pipeline form).
+    fn next_batch(&mut self, shard: usize) -> Tensor {
+        let b = self.microbatch;
+        let w = self.seq_len + 1;
+        let need_tokens = b * w;
+        // generate enough characters: ~4 chars/token for BPE-compressed text
+        let chunk = need_tokens * 8 + 1024;
+        let stream_pos = if shard >= EVAL_SHARD {
+            self.step // eval batches keyed by current step
+        } else {
+            self.shard_positions[shard]
+        };
+        let sub = ((shard as u64) << 24) | stream_pos as u64;
+        let text = self.corpus.text(chunk, sub);
+        let mut ids: Vec<i32> = self
+            .tokenizer
+            .encode(&text)
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        ids.truncate(need_tokens);
+        while ids.len() < need_tokens {
+            ids.push(0);
+        }
+        if shard < EVAL_SHARD {
+            self.shard_positions[shard] += 1;
+        }
+        Tensor::from_i32(&[b, w], ids)
+    }
+
+    /// One fwd/bwd on a given batch: (loss, grads).
+    pub fn grad_step(&self, batch: &Tensor) -> anyhow::Result<(f64, Vec<Tensor>)> {
+        let mut inputs = self.params.clone();
+        inputs.push(batch.clone());
+        let mut out = self.engine.run_exe(&self.fwd, &inputs)?;
+        let loss = out.remove(0).item_f32() as f64;
+        Ok((loss, out))
+    }
+
+    /// One full coordinated training step (fwd/bwd per shard, all-reduce,
+    /// optimizer update). Returns the mean shard loss.
+    pub fn train_step(&mut self) -> anyhow::Result<f64> {
+        self.step += 1;
+        let shards = self.opts.shards.max(1);
+        let mut shard_grads = Vec::with_capacity(shards);
+        let mut loss_sum = 0.0;
+        for s in 0..shards {
+            let batch = self.next_batch(s);
+            let (loss, grads) = self.grad_step(&batch)?;
+            loss_sum += loss;
+            shard_grads.push(grads);
+        }
+        let grads = ddp::tree_all_reduce(shard_grads);
+        let lr = self.schedule.lr(self.step);
+
+        let mut inputs =
+            Vec::with_capacity(self.n_params + self.state.len() + grads.len() + 2);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.state.iter().cloned());
+        inputs.extend(grads);
+        inputs.push(Tensor::scalar_f32(lr as f32));
+        inputs.push(Tensor::scalar_f32(self.step as f32));
+        let mut out = self.engine.run_exe(&self.upd, &inputs)?;
+        let rest = out.split_off(self.n_params);
+        self.params = out;
+        self.state = rest;
+
+        let loss = loss_sum / shards as f64;
+        let tokens = (self.step * shards * self.microbatch * self.seq_len) as u64;
+        self.metrics.record_step(self.step, loss, lr, tokens);
+        Ok(loss)
+    }
+
+    /// Evaluate mean loss over `n` held-out batches; records perplexity.
+    pub fn eval(&mut self) -> anyhow::Result<f64> {
+        let n = self.opts.eval_batches.max(1);
+        let mut sum = 0.0;
+        for i in 0..n {
+            let batch = {
+                // held-out stream: shard ids far beyond training shards,
+                // keyed by eval batch index (stable across calls)
+                let b = self.microbatch;
+                let w = self.seq_len + 1;
+                let need = b * w;
+                let text = self
+                    .corpus
+                    .text(need * 8 + 1024, ((EVAL_SHARD + i) as u64) << 24);
+                let mut ids: Vec<i32> = self
+                    .tokenizer
+                    .encode(&text)
+                    .into_iter()
+                    .map(|x| x as i32)
+                    .collect();
+                ids.truncate(need);
+                while ids.len() < need {
+                    ids.push(0);
+                }
+                Tensor::from_i32(&[b, w], ids)
+            };
+            let mut inputs = self.params.clone();
+            inputs.push(batch);
+            let out = self.engine.run_exe(&self.evl, &inputs)?;
+            sum += out[0].item_f32() as f64;
+        }
+        let loss = sum / n as f64;
+        self.metrics.record_eval(self.step, loss);
+        Ok(loss)
+    }
+
+    /// Run the full configured training loop; returns final eval ppl.
+    pub fn train(&mut self) -> anyhow::Result<f64> {
+        for _ in 0..self.opts.steps {
+            let loss = self.train_step()?;
+            if !self.opts.quiet
+                && self.opts.log_every > 0
+                && self.step % self.opts.log_every == 0
+            {
+                println!(
+                    "  step {:>5}/{:<5} loss {:.4} (ema {:.4}) lr {:.2e}",
+                    self.step,
+                    self.opts.steps,
+                    loss,
+                    self.metrics.ema_loss.unwrap_or(loss),
+                    self.schedule.lr(self.step)
+                );
+            }
+            if self.opts.eval_every > 0 && self.step % self.opts.eval_every == 0 {
+                let el = self.eval()?;
+                if !self.opts.quiet {
+                    println!(
+                        "  step {:>5} eval loss {:.4} ppl {:.2}",
+                        self.step,
+                        el,
+                        el.exp()
+                    );
+                }
+            }
+        }
+        let final_loss = self.eval()?;
+        Ok(final_loss.exp())
+    }
+
+    // ---- checkpointing -----------------------------------------------------
+
+    pub fn checkpoint(&self) -> anyhow::Result<Checkpoint> {
+        let m = &self.engine.manifest;
+        let size = m.size(&self.opts.size)?;
+        let st_spec = m.state_spec(&self.opts.optimizer, &self.opts.size)?;
+        let mut tensors = Vec::new();
+        for (p, s) in size.params.iter().zip(&self.params) {
+            tensors.push((p.name.clone(), s.clone()));
+        }
+        for (sp, s) in st_spec.iter().zip(&self.state) {
+            tensors.push((format!("state:{}", sp.name), s.clone()));
+        }
+        Ok(Checkpoint {
+            size: self.opts.size.clone(),
+            optimizer: self.opts.optimizer.clone(),
+            step: self.step as u64,
+            tensors,
+        })
+    }
+
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(ckpt.size == self.opts.size, "size mismatch");
+        anyhow::ensure!(ckpt.optimizer == self.opts.optimizer, "optimizer mismatch");
+        let n = self.n_params;
+        anyhow::ensure!(ckpt.tensors.len() == n + self.state.len(), "tensor count");
+        self.params = ckpt.tensors[..n].iter().map(|(_, t)| t.clone()).collect();
+        self.state = ckpt.tensors[n..].iter().map(|(_, t)| t.clone()).collect();
+        self.step = ckpt.step as usize;
+        // keep the data streams aligned with the restored step
+        for p in self.shard_positions.iter_mut() {
+            *p = self.step;
+        }
+        Ok(())
+    }
+
+    /// Measured optimizer-state footprint of this run (f32 bytes).
+    pub fn state_bytes(&self) -> usize {
+        self.state.iter().map(|t| 4 * t.numel()).sum()
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tokenizer
+    }
+
+    pub fn corpus(&self) -> &Corpus {
+        &self.corpus
+    }
+}

@@ -1,0 +1,128 @@
+//! Batcher: token stream -> `[B, S+1]` i32 batches for fwd_bwd/eval.
+//!
+//! Each DDP shard owns an independent (seeded) corpus stream; the
+//! batcher maintains a rolling token buffer per shard and cuts dense
+//! next-token-prediction windows from it (packing, no padding — the same
+//! convention as the paper's GaLore-derived training setup).
+
+use crate::data::corpus::Corpus;
+use crate::data::tokenizer::Tokenizer;
+use crate::runtime::Tensor;
+
+pub struct Batcher<'a> {
+    corpus: &'a Corpus,
+    tokenizer: &'a Tokenizer,
+    vocab_cap: u32,
+    /// rolling buffers, one per shard
+    buffers: Vec<Vec<u32>>,
+    /// chars generated so far per shard (stream position)
+    positions: Vec<usize>,
+    chunk_chars: usize,
+    pub tokens_served: u64,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(
+        corpus: &'a Corpus,
+        tokenizer: &'a Tokenizer,
+        vocab_cap: usize,
+        shards: usize,
+    ) -> Batcher<'a> {
+        Batcher {
+            corpus,
+            tokenizer,
+            vocab_cap: vocab_cap as u32,
+            buffers: vec![Vec::new(); shards],
+            positions: vec![0; shards],
+            chunk_chars: 8192,
+            tokens_served: 0,
+        }
+    }
+
+    fn refill(&mut self, shard: usize, need: usize) {
+        while self.buffers[shard].len() < need {
+            let pos = self.positions[shard];
+            // stream chunks from a shard-specific substream; the substream
+            // index advances with position so text never repeats
+            let sub = (shard as u64) << 32 | (pos / self.chunk_chars) as u64;
+            let text = self.corpus.text(self.chunk_chars, sub);
+            self.positions[shard] = pos + self.chunk_chars;
+            let ids = self.tokenizer.encode(&text);
+            self.buffers[shard]
+                .extend(ids.into_iter().map(|i| i.min(self.vocab_cap - 1)));
+        }
+    }
+
+    /// Next `[b, seq_len + 1]` batch for `shard`.
+    pub fn next_batch(&mut self, shard: usize, b: usize, seq_len: usize) -> Tensor {
+        let w = seq_len + 1;
+        self.refill(shard, b * w);
+        let buf = &mut self.buffers[shard];
+        let data: Vec<i32> = buf.drain(..b * w).map(|x| x as i32).collect();
+        self.tokens_served += (b * seq_len) as u64;
+        Tensor::from_i32(&[b, w], data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn setup() -> (Corpus, Tokenizer) {
+        let corpus = Corpus::new(CorpusConfig::default(), 1);
+        let tok = Tokenizer::train(&corpus.text(20_000, 0), 256);
+        (corpus, tok)
+    }
+
+    #[test]
+    fn batches_have_shape_and_range() {
+        let (corpus, tok) = setup();
+        let mut b = Batcher::new(&corpus, &tok, 256, 2);
+        let t = b.next_batch(0, 4, 32);
+        assert_eq!(t.shape(), &[4, 33]);
+        assert!(t.i32s().iter().all(|&x| (0..256).contains(&x)));
+    }
+
+    #[test]
+    fn shards_get_different_data() {
+        let (corpus, tok) = setup();
+        let mut b = Batcher::new(&corpus, &tok, 256, 2);
+        let a = b.next_batch(0, 2, 16);
+        let c = b.next_batch(1, 2, 16);
+        assert_ne!(a.i32s(), c.i32s());
+    }
+
+    #[test]
+    fn stream_does_not_repeat() {
+        let (corpus, tok) = setup();
+        let mut b = Batcher::new(&corpus, &tok, 256, 1);
+        let a = b.next_batch(0, 2, 16);
+        let c = b.next_batch(0, 2, 16);
+        assert_ne!(a.i32s(), c.i32s());
+    }
+
+    #[test]
+    fn deterministic_across_instances() {
+        let (corpus, tok) = setup();
+        let mut b1 = Batcher::new(&corpus, &tok, 256, 1);
+        let mut b2 = Batcher::new(&corpus, &tok, 256, 1);
+        assert_eq!(b1.next_batch(0, 2, 16).i32s(), b2.next_batch(0, 2, 16).i32s());
+    }
+
+    #[test]
+    fn vocab_cap_clamps() {
+        let (corpus, tok) = setup();
+        let mut b = Batcher::new(&corpus, &tok, 100, 1);
+        let t = b.next_batch(0, 4, 32);
+        assert!(t.i32s().iter().all(|&x| x < 100));
+    }
+
+    #[test]
+    fn counts_tokens() {
+        let (corpus, tok) = setup();
+        let mut b = Batcher::new(&corpus, &tok, 256, 1);
+        b.next_batch(0, 4, 32);
+        assert_eq!(b.tokens_served, 128);
+    }
+}

@@ -1,0 +1,47 @@
+//! Data pipeline: synthetic C4-sim corpus -> BPE tokenizer -> batcher.
+//!
+//! [`pipeline`] bundles the three for the trainer: it trains the
+//! tokenizer once per (corpus seed, vocab) pair and hands out shard-aware
+//! batches.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tokenizer;
+
+pub use batcher::Batcher;
+pub use corpus::{Corpus, CorpusConfig};
+pub use tokenizer::Tokenizer;
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Build the standard data pipeline for a model vocabulary size.
+/// The tokenizer is trained to ~vocab tokens on a held-out shard.
+///
+/// BPE training costs seconds, and experiment sweeps construct many
+/// Trainers over the same (vocab, seed) pair — results are memoized
+/// process-wide (EXPERIMENTS.md §Perf L3-1).
+pub fn pipeline(vocab: usize, seed: u64) -> (Arc<Corpus>, Arc<Tokenizer>) {
+    static CACHE: OnceLock<Mutex<HashMap<(usize, u64), (Arc<Corpus>, Arc<Tokenizer>)>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    if let Some(hit) = cache.lock().unwrap().get(&(vocab, seed)) {
+        return hit.clone();
+    }
+    let built = pipeline_uncached(vocab, seed);
+    let entry = (Arc::new(built.0), Arc::new(built.1));
+    cache
+        .lock()
+        .unwrap()
+        .insert((vocab, seed), entry.clone());
+    entry
+}
+
+/// The uncached construction (exposed for benchmarking the real cost).
+pub fn pipeline_uncached(vocab: usize, seed: u64) -> (Corpus, Tokenizer) {
+    let corpus = Corpus::new(CorpusConfig::default(), seed);
+    // train the tokenizer on a dedicated shard never used for batches
+    let sample = corpus.text(60_000, u64::MAX - 1);
+    let tokenizer = Tokenizer::train(&sample, vocab.min(2048));
+    (corpus, tokenizer)
+}

@@ -1,0 +1,209 @@
+//! BPE-lite tokenizer learned from the corpus (SentencePiece stand-in).
+//!
+//! Classic byte-pair encoding: start from the character alphabet of the
+//! training sample, repeatedly merge the most frequent adjacent pair
+//! until the target vocabulary size is reached. Ids are assigned by
+//! *descending frequency*, mirroring the SentencePiece property the
+//! paper uses in Fig. 10 ("lower token ids generally correspond to more
+//! frequent tokens") — that correspondence is what makes the LM-head
+//! column-norm plots comparable.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// token id -> string
+    pub vocab: Vec<String>,
+    /// string -> id
+    index: HashMap<String, u32>,
+    max_len: usize,
+}
+
+impl Tokenizer {
+    /// Learn a BPE vocabulary of `vocab_size` tokens from `text`.
+    pub fn train(text: &str, vocab_size: usize) -> Tokenizer {
+        // working sequence of token strings
+        let mut seq: Vec<String> = text.chars().map(|c| c.to_string()).collect();
+        let mut alphabet: Vec<String> = {
+            let mut set: Vec<String> = seq.clone();
+            set.sort();
+            set.dedup();
+            set
+        };
+        assert!(
+            vocab_size > alphabet.len(),
+            "vocab {} must exceed alphabet {}",
+            vocab_size,
+            alphabet.len()
+        );
+        let mut tokens: Vec<String> = alphabet.drain(..).collect();
+
+        while tokens.len() < vocab_size {
+            // count adjacent pairs
+            let mut counts: HashMap<(&str, &str), usize> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0].as_str(), w[1].as_str())).or_insert(0) += 1;
+            }
+            let Some((&(a, b), &n)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &n)| (n, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if n < 2 {
+                break; // nothing worth merging
+            }
+            let merged = format!("{a}{b}");
+            let (a, b) = (a.to_string(), b.to_string());
+            tokens.push(merged.clone());
+            // apply the merge in one pass
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && seq[i] == a && seq[i + 1] == b {
+                    out.push(merged.clone());
+                    i += 2;
+                } else {
+                    out.push(std::mem::take(&mut seq[i]));
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+
+        // frequency-ranked ids: retokenize the sample and count
+        let mut tok = Tokenizer::from_tokens(tokens);
+        let ids = tok.encode(text);
+        let mut counts = vec![0usize; tok.vocab.len()];
+        for &id in &ids {
+            counts[id as usize] += 1;
+        }
+        let mut order: Vec<usize> = (0..tok.vocab.len()).collect();
+        order.sort_by_key(|&i| std::cmp::Reverse(counts[i]));
+        let vocab: Vec<String> = order.iter().map(|&i| tok.vocab[i].clone()).collect();
+        tok = Tokenizer::from_tokens(vocab);
+        tok
+    }
+
+    fn from_tokens(vocab: Vec<String>) -> Tokenizer {
+        let max_len = vocab.iter().map(|t| t.len()).max().unwrap_or(1);
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        Tokenizer {
+            vocab,
+            index,
+            max_len,
+        }
+    }
+
+    /// Greedy longest-match encoding. Characters outside the alphabet are
+    /// skipped (the corpus generator never emits them).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let chars: Vec<char> = text.chars().collect();
+        let mut out = Vec::with_capacity(chars.len() / 2);
+        let mut i = 0;
+        while i < chars.len() {
+            let mut matched = None;
+            let end = (i + self.max_len).min(chars.len());
+            let mut candidate = String::new();
+            let mut lens = Vec::new();
+            for j in i..end {
+                candidate.push(chars[j]);
+                lens.push(candidate.len());
+                if let Some(&id) = self.index.get(&candidate) {
+                    matched = Some((id, j + 1));
+                }
+            }
+            match matched {
+                Some((id, next)) => {
+                    out.push(id);
+                    i = next;
+                }
+                None => {
+                    i += 1; // unknown char: skip
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.vocab[i as usize].as_str())
+            .collect()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+    use crate::util::prop;
+
+    fn sample() -> String {
+        Corpus::new(CorpusConfig::default(), 1).text(30_000, 0)
+    }
+
+    #[test]
+    fn trains_to_target_vocab() {
+        let t = Tokenizer::train(&sample(), 300);
+        assert_eq!(t.vocab_size(), 300);
+    }
+
+    #[test]
+    fn roundtrip_on_corpus_text() {
+        let text = sample();
+        let t = Tokenizer::train(&text, 300);
+        let held_out = Corpus::new(CorpusConfig::default(), 1).text(5_000, 7);
+        let ids = t.encode(&held_out);
+        assert_eq!(t.decode(&ids), held_out);
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        let text = sample();
+        let t = Tokenizer::train(&text, 256);
+        let corpus = Corpus::new(CorpusConfig::default(), 1);
+        prop::check("tokenizer-roundtrip", 16, |rng| {
+            let shard = rng.next_u32() as u64 % 100;
+            let n = prop::usize_in(rng, 10, 2000);
+            let s = corpus.text(n, shard);
+            prop::ensure(t.decode(&t.encode(&s)) == s, "roundtrip mismatch")
+        });
+    }
+
+    #[test]
+    fn compresses_relative_to_chars() {
+        let text = sample();
+        let t = Tokenizer::train(&text, 400);
+        let ids = t.encode(&text);
+        assert!(
+            ids.len() * 2 < text.chars().count(),
+            "BPE should compress >=2x: {} ids for {} chars",
+            ids.len(),
+            text.len()
+        );
+    }
+
+    #[test]
+    fn ids_are_frequency_ranked() {
+        let text = sample();
+        let t = Tokenizer::train(&text, 300);
+        let ids = t.encode(&text);
+        let mut counts = vec![0usize; 300];
+        for &i in &ids {
+            counts[i as usize] += 1;
+        }
+        // head ids should be (weakly) more frequent than tail ids
+        let head: usize = counts[..30].iter().sum();
+        let tail: usize = counts[270..].iter().sum();
+        assert!(head > 10 * tail.max(1), "head {head} tail {tail}");
+    }
+}

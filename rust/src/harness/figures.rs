@@ -1,0 +1,333 @@
+//! Figure regenerators: `scale figure <n>` → ASCII series + CSV files.
+//!
+//! Figures are rendered as terminal plots and, where useful, written as
+//! CSV next to the working directory (plots/fig<N>_*.csv) so they can be
+//! re-plotted with any tool.
+
+use std::fmt::Write as _;
+
+use crate::analysis::histogram::{head_column_norms, head_grad_histograms};
+use crate::analysis::tables::{opt_label, Table};
+use crate::analysis::variance::run_probed_training;
+use crate::coordinator::metrics::ascii_curve;
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::harness::{default_lr, ppl_cell, train_once, RunSpec};
+use crate::memory::estimator::MemoryModel;
+use crate::runtime::Engine;
+
+fn plots_dir() -> std::path::PathBuf {
+    let d = std::path::PathBuf::from("plots");
+    std::fs::create_dir_all(&d).ok();
+    d
+}
+
+/// Fig. 1: perplexity vs memory Pareto scatter.
+pub fn figure1(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<String> {
+    let opts = ["adam", "stable_spam", "muon", "galore", "fira", "apollo", "apollo_mini", "scale"];
+    let mm = MemoryModel::new(engine.manifest.paper_dims["1B"]);
+    let mut out = String::new();
+    let mut pts = Vec::new();
+    for opt in opts {
+        let r = train_once(engine, &RunSpec::new(opt, size, steps))?;
+        let rank = if opt == "apollo_mini" { 1 } else { 256 };
+        let mem = mm.method(opt, rank).total_gb();
+        println!("  [{opt}] ppl {:.2} mem(1B-scale) {mem:.2}G", r.final_ppl);
+        pts.push((opt, mem, r.final_ppl));
+    }
+    writeln!(out, "\n== Figure 1 — perplexity vs memory (x: 1B-scale GB, y: measured ppl) ==")?;
+    // simple 2D ascii scatter
+    let (xmin, xmax) = (2.0f64, 9.0f64);
+    let ymin = pts.iter().map(|p| p.2).fold(f64::INFINITY, f64::min);
+    let ymax = pts.iter().map(|p| p.2).fold(0.0f64, f64::max);
+    let (w, h) = (64usize, 16usize);
+    let mut grid = vec![vec![' '; w + 14]; h];
+    for (i, &(opt, mem, ppl)) in pts.iter().enumerate() {
+        let x = (((mem - xmin) / (xmax - xmin)).clamp(0.0, 1.0) * (w - 1) as f64) as usize;
+        let y = (((ymax - ppl) / (ymax - ymin).max(1e-9)).clamp(0.0, 1.0) * (h - 1) as f64) as usize;
+        let label = (b'A' + i as u8) as char;
+        grid[y][x] = label;
+        writeln!(out, "  {label} = {:<18} mem {mem:.2}G  ppl {:.2}", opt_label(opt), ppl)?;
+    }
+    for row in grid {
+        writeln!(out, "    |{}", row.iter().collect::<String>())?;
+    }
+    writeln!(out, "    +{}-> memory (GB at 1B scale)", "-".repeat(w))?;
+    writeln!(out, "  paper shape: SCALE on the Pareto frontier (bottom-left)")?;
+    let mut csv = String::from("optimizer,mem_gb_1b,ppl\n");
+    for (opt, mem, ppl) in &pts {
+        writeln!(csv, "{opt},{mem},{ppl}")?;
+    }
+    std::fs::write(plots_dir().join("fig1_pareto.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 2: SGD vs Adam divergence-in-practice.
+pub fn figure2(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<String> {
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 2 — SGD vs Adam (training loss) ==")?;
+    let mut csv = String::from("optimizer,step,loss\n");
+    for (opt, lr) in [("sgd", 0.1), ("adam", 2e-3)] {
+        let mut spec = RunSpec::new(opt, size, steps);
+        spec.lr = Some(lr);
+        let r = train_once(engine, &spec)?;
+        writeln!(out, "  {} (lr {lr}):  final ppl {}", opt_label(opt), ppl_cell(r.final_ppl))?;
+        writeln!(out, "{}", ascii_curve(&r.curve, 60, 10))?;
+        for (s, l) in &r.curve {
+            writeln!(csv, "{opt},{s},{l}")?;
+        }
+    }
+    writeln!(out, "  paper shape: SGD stalls far above Adam at any stable LR")?;
+    std::fs::write(plots_dir().join("fig2_sgd_vs_adam.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 3: LM-head gradient histograms under row- vs column-norm.
+pub fn figure3(engine: &Engine, size: &str, warm_steps: usize) -> anyhow::Result<String> {
+    let opts = TrainOptions {
+        size: size.into(),
+        optimizer: "sgd_colnorm".into(),
+        steps: warm_steps,
+        base_lr: default_lr("sgd_colnorm"),
+        schedule: None,
+        shards: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 0,
+        quiet: true,
+    };
+    let mut tr = Trainer::new(engine, opts)?;
+    for _ in 0..warm_steps {
+        tr.train_step()?;
+    }
+    let sz = engine.manifest.size(size)?.clone();
+    // one more gradient evaluation to harvest the LM-head gradient
+    let (_, grads) = {
+        let batch = {
+            // reuse trainer's eval machinery via a train_step-free probe
+            let w = sz.seq_len + 1;
+            let need = engine.manifest.microbatch * w;
+            let text = tr.corpus().text(need * 8 + 1024, 0xF16_3);
+            let mut ids: Vec<i32> = tr.tokenizer().encode(&text).into_iter().map(|x| x as i32).collect();
+            ids.truncate(need);
+            while ids.len() < need {
+                ids.push(0);
+            }
+            crate::runtime::Tensor::from_i32(&[engine.manifest.microbatch, w], ids)
+        };
+        tr.grad_step(&batch)?
+    };
+    let head = grads.last().unwrap();
+    let (row_h, col_h) = head_grad_histograms(head.f32s(), sz.d_model, sz.vocab, 24);
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 3 — LM-head gradient after normalization (step {warm_steps}) ==")?;
+    writeln!(out, "-- (a) row-wise normalized: max |g| = {:.2} --", row_h.max_abs)?;
+    out.push_str(&row_h.render(48));
+    writeln!(out, "-- (b) column-wise normalized: max |g| = {:.2} --", col_h.max_abs)?;
+    out.push_str(&col_h.render(48));
+    writeln!(
+        out,
+        "  paper shape: row-wise produces extreme values (paper: up to ~150 at |V|=32k);\n  column-wise stays in an O(1) band"
+    )?;
+    Ok(out)
+}
+
+/// Fig. 4 (and 6/7): per-layer gradient variance during training.
+pub fn figure4(engine: &Engine, size: &str, steps: usize, optimizer: &str) -> anyhow::Result<String> {
+    let opts = TrainOptions {
+        size: size.into(),
+        optimizer: optimizer.into(),
+        steps,
+        base_lr: default_lr(optimizer),
+        schedule: None,
+        shards: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 0,
+        quiet: true,
+    };
+    let mut tr = Trainer::new(engine, opts)?;
+    let every = (steps / 8).max(1);
+    let series = run_probed_training(&mut tr, steps, every)?;
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 4 — per-layer gradient variance ({optimizer}, {size}) ==")?;
+    let mut t = Table::new("mean layer variance over probes", &["layer", "variance", "bar"]);
+    let means = series.means();
+    let max = means.values().cloned().fold(1e-30, f64::max);
+    for (layer, v) in &means {
+        t.row(vec![
+            layer.clone(),
+            format!("{v:.3e}"),
+            "#".repeat(((v / max) * 40.0).ceil() as usize),
+        ]);
+    }
+    out.push_str(&t.render());
+    writeln!(
+        out,
+        "  lm_head dominates: {} (paper Fig. 4a shape)",
+        series.head_dominates()
+    )?;
+    let mut csv = String::from("layer,step,variance\n");
+    for (layer, vals) in &series.by_layer {
+        for (s, v) in series.probe_steps.iter().zip(vals) {
+            writeln!(csv, "{layer},{s},{v}")?;
+        }
+    }
+    std::fs::write(plots_dir().join(format!("fig4_variance_{optimizer}.csv")), csv)?;
+    Ok(out)
+}
+
+/// Fig. 5: long-run stability (loss curve, no spikes) — e2e config.
+pub fn figure5(engine: &Engine, steps: usize) -> anyhow::Result<String> {
+    let mut spec = RunSpec::new("scale", "e2e", steps);
+    spec.eval_every = (steps / 8).max(1);
+    let r = train_once(engine, &spec)?;
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 5 — extended run stability (SCALE, e2e config) ==")?;
+    out.push_str(&ascii_curve(&r.curve, 64, 12));
+    writeln!(out, "  final eval ppl: {}", ppl_cell(r.final_ppl))?;
+    // spike check: no training-loss step increases by > 20% of its level
+    let spikes = r
+        .curve
+        .windows(2)
+        .filter(|w| w[1].1 > w[0].1 * 1.2 && w[0].1 < 6.0)
+        .count();
+    writeln!(out, "  loss spikes (>20% jumps): {spikes} (paper: none)")?;
+    let mut csv = String::from("step,loss\n");
+    for (s, l) in &r.curve {
+        writeln!(csv, "{s},{l}")?;
+    }
+    std::fs::write(plots_dir().join("fig5_stability.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 8: LR sensitivity of SCALE vs Stable-SPAM.
+pub fn figure8(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<String> {
+    use crate::coordinator::sweep::{lr_sweep, paper_lr_grid};
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 8 — LR sensitivity ({size}, {steps} steps) ==")?;
+    let mut t = Table::new("final ppl per peak LR", &["lr", "SCALE", "Adam (Stable-SPAM)"]);
+    let grid = paper_lr_grid();
+    let base = TrainOptions {
+        size: size.into(),
+        optimizer: "scale".into(),
+        steps,
+        base_lr: 0.0,
+        schedule: None,
+        shards: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 8,
+        log_every: 0,
+        quiet: true,
+    };
+    let scale_pts = lr_sweep(engine, &base, &grid)?;
+    let mut spam_base = base.clone();
+    spam_base.optimizer = "stable_spam".into();
+    let spam_pts = lr_sweep(engine, &spam_base, &grid)?;
+    let mut csv = String::from("lr,scale_ppl,spam_ppl\n");
+    for (a, b) in scale_pts.iter().zip(&spam_pts) {
+        t.row(vec![
+            format!("{:.0e}", a.lr),
+            ppl_cell(a.ppl),
+            ppl_cell(b.ppl),
+        ]);
+        writeln!(csv, "{},{},{}", a.lr, a.ppl, b.ppl)?;
+    }
+    out.push_str(&t.render());
+    writeln!(out, "  paper shape: both flat across a wide LR band, diverging only at extremes")?;
+    std::fs::write(plots_dir().join("fig8_lr_sensitivity.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 9: eval-perplexity curves for the core optimizers.
+pub fn figure9(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<String> {
+    let opts = ["muon", "stable_spam", "apollo_mini", "scale"];
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 9 — eval perplexity vs iteration ({size}) ==")?;
+    let mut csv = String::from("optimizer,step,ppl\n");
+    for opt in opts {
+        let mut spec = RunSpec::new(opt, size, steps);
+        spec.eval_every = (steps / 10).max(1);
+        let r = train_once(engine, &spec)?;
+        let pts: Vec<(usize, f64)> = r.eval_curve.clone();
+        writeln!(out, "  {} -> final {}", opt_label(opt), ppl_cell(r.final_ppl))?;
+        out.push_str(&ascii_curve(&pts, 60, 8));
+        for (s, p) in &pts {
+            writeln!(csv, "{opt},{s},{p}")?;
+        }
+    }
+    writeln!(out, "  paper shape: Muon fastest early; SCALE/Stable-SPAM/APOLLO-Mini catch up late")?;
+    std::fs::write(plots_dir().join("fig9_curves.csv"), csv)?;
+    Ok(out)
+}
+
+/// Fig. 10: LM-head column norms vs token id, early and late in training.
+pub fn figure10(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<String> {
+    let opts = TrainOptions {
+        size: size.into(),
+        optimizer: "sgd_colnorm".into(),
+        steps,
+        base_lr: default_lr("sgd_colnorm"),
+        schedule: None,
+        shards: 4,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 4,
+        log_every: 0,
+        quiet: true,
+    };
+    let sz = engine.manifest.size(size)?.clone();
+    let mut tr = Trainer::new(engine, opts)?;
+    let mut out = String::new();
+    writeln!(out, "\n== Figure 10 — LM-head column norms by token id ({size}) ==")?;
+    let mut csv = String::from("phase,token_id,col_norm\n");
+    for (phase, upto) in [("early", steps / 4), ("late", steps)] {
+        while tr.step < upto {
+            tr.train_step()?;
+        }
+        let w = sz.seq_len + 1;
+        let need = engine.manifest.microbatch * w;
+        let text = tr.corpus().text(need * 8 + 1024, 0xF16_10);
+        let mut ids: Vec<i32> = tr.tokenizer().encode(&text).into_iter().map(|x| x as i32).collect();
+        ids.truncate(need);
+        while ids.len() < need {
+            ids.push(0);
+        }
+        let batch = crate::runtime::Tensor::from_i32(&[engine.manifest.microbatch, w], ids);
+        let (_, grads) = tr.grad_step(&batch)?;
+        let norms = head_column_norms(grads.last().unwrap().f32s(), sz.d_model, sz.vocab);
+        // bucket the first 512 token ids into 16 buckets of mean norms
+        let show = norms.len().min(512);
+        let buckets = 16;
+        writeln!(out, "-- {phase} (step {}) — mean column norm per token-id bucket --", tr.step)?;
+        let bmax = {
+            let mut vals = Vec::new();
+            for b in 0..buckets {
+                let lo = b * show / buckets;
+                let hi = ((b + 1) * show / buckets).max(lo + 1);
+                let mean: f32 = norms[lo..hi].iter().sum::<f32>() / (hi - lo) as f32;
+                vals.push(mean);
+            }
+            let m = vals.iter().cloned().fold(1e-30f32, f32::max);
+            for (b, v) in vals.iter().enumerate() {
+                let lo = b * show / buckets;
+                writeln!(
+                    out,
+                    "  ids {lo:>4}+ {:>10.3e} |{}",
+                    v,
+                    "#".repeat(((v / m) * 40.0).ceil() as usize)
+                )?;
+            }
+            m
+        };
+        let _ = bmax;
+        for (i, n) in norms.iter().take(show).enumerate() {
+            writeln!(csv, "{phase},{i},{n}")?;
+        }
+    }
+    writeln!(out, "  paper shape: low (frequent) token ids carry far larger column norms")?;
+    std::fs::write(plots_dir().join("fig10_col_norms.csv"), csv)?;
+    Ok(out)
+}

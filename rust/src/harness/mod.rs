@@ -1,0 +1,142 @@
+//! Experiment harness: one entry point per paper table/figure.
+//!
+//! Every exhibit from the paper's evaluation (DESIGN.md §5) has a
+//! function here that runs the corresponding workload on the tiny
+//! simulation family and renders a paper-vs-measured table. The `scale`
+//! CLI, the examples, and the benches are thin callers.
+//!
+//! Step budgets are parameters everywhere: absolute perplexities depend
+//! on budget, but the paper's *orderings and gaps* emerge within a few
+//! hundred steps (Fig. 9 shows orderings stable early).
+
+pub mod figures;
+pub mod paper;
+pub mod tables;
+
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::runtime::Engine;
+
+/// Default peak LR per optimizer family for the tiny models, found by a
+/// coarse sweep (EXPERIMENTS.md §Calibration). Overridable via --lr.
+pub fn default_lr(optimizer: &str) -> f64 {
+    match optimizer {
+        "sgd" => 0.2,
+        "sgd_momentum" => 0.2,
+        "adam" | "stable_spam" => 2e-3,
+        "galore" | "fira" | "apollo" | "apollo_mini" => 2e-3,
+        "muon" | "swan" => 2e-2,
+        // plain NS orthogonalization has per-entry magnitude ~1/sqrt(d)
+        // (no Muon RMS rescale), so it needs a ~sqrt(d) larger LR to move
+        // parameters at the same rate as the colnorm family
+        "sgd_ns" | "ns_mmt_last" => 1e-1,
+        "sign_sgd" => 1e-3,
+        // column/row/sign-normalized SGD family and SCALE
+        _ => 1e-2,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    pub optimizer: String,
+    pub size: String,
+    pub steps: usize,
+    /// None -> default_lr(optimizer)
+    pub lr: Option<f64>,
+    pub seed: u64,
+    pub shards: usize,
+    pub eval_every: usize,
+}
+
+impl RunSpec {
+    pub fn new(optimizer: &str, size: &str, steps: usize) -> RunSpec {
+        RunSpec {
+            optimizer: optimizer.into(),
+            size: size.into(),
+            steps,
+            lr: None,
+            seed: 0,
+            shards: 4,
+            eval_every: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunOutcome {
+    pub spec: RunSpec,
+    pub final_ppl: f64,
+    pub final_eval_loss: f64,
+    pub tokens_per_sec: f64,
+    pub state_bytes: usize,
+    pub param_bytes: usize,
+    /// (step, train loss)
+    pub curve: Vec<(usize, f64)>,
+    /// (step, eval ppl) — populated when eval_every > 0
+    pub eval_curve: Vec<(usize, f64)>,
+}
+
+/// Train one configuration to completion.
+pub fn train_once(engine: &Engine, spec: &RunSpec) -> anyhow::Result<RunOutcome> {
+    let opts = TrainOptions {
+        size: spec.size.clone(),
+        optimizer: spec.optimizer.clone(),
+        steps: spec.steps,
+        base_lr: spec.lr.unwrap_or_else(|| default_lr(&spec.optimizer)),
+        schedule: None,
+        shards: spec.shards,
+        seed: spec.seed,
+        eval_every: spec.eval_every,
+        eval_batches: 8,
+        log_every: 0,
+        quiet: true,
+    };
+    let mut tr = Trainer::new(engine, opts)?;
+    let ppl = tr.train()?;
+    let last_eval = tr.metrics.evals.last().map(|e| e.loss).unwrap_or(f64::NAN);
+    Ok(RunOutcome {
+        spec: spec.clone(),
+        final_ppl: ppl,
+        final_eval_loss: last_eval,
+        tokens_per_sec: tr.metrics.tokens_per_sec(),
+        state_bytes: tr.state_bytes(),
+        param_bytes: 4 * engine.manifest.size(&spec.size)?.param_count,
+        curve: tr.metrics.steps.iter().map(|s| (s.step, s.loss)).collect(),
+        eval_curve: tr.metrics.evals.iter().map(|e| (e.step, e.ppl)).collect(),
+    })
+}
+
+/// Train a set of optimizers on one size; logs progress lines.
+pub fn run_zoo(
+    engine: &Engine,
+    optimizers: &[&str],
+    size: &str,
+    steps: usize,
+    quiet: bool,
+) -> anyhow::Result<Vec<RunOutcome>> {
+    let mut out = Vec::new();
+    for opt in optimizers {
+        let spec = RunSpec::new(opt, size, steps);
+        let t0 = std::time::Instant::now();
+        let r = train_once(engine, &spec)?;
+        if !quiet {
+            println!(
+                "  [{size}/{opt}] ppl {:.2}  ({:.0} tok/s, state {} KiB, {:.1}s)",
+                r.final_ppl,
+                r.tokens_per_sec,
+                r.state_bytes / 1024,
+                t0.elapsed().as_secs_f64()
+            );
+        }
+        out.push(r);
+    }
+    Ok(out)
+}
+
+/// Format a perplexity safely (divergence -> "div").
+pub fn ppl_cell(ppl: f64) -> String {
+    if !ppl.is_finite() || ppl > 1e5 {
+        "div".to_string()
+    } else {
+        format!("{ppl:.2}")
+    }
+}

@@ -1,0 +1,386 @@
+//! Table regenerators: `scale table <n>` → paper-vs-measured output.
+
+use crate::analysis::tables::{opt_label, Table};
+use crate::harness::{paper, ppl_cell, run_zoo, train_once, RunSpec};
+use crate::memory::estimator::{measured_state_bytes, MemoryModel};
+use crate::runtime::{Engine, Tensor};
+use crate::util::bench::Bencher;
+use crate::util::rng::Pcg;
+
+/// Table 1: wall-clock of each normalization vs matrix dim.
+/// Paper: A40 GPU at d=1024..4096; here: CPU PJRT at the manifest's bench
+/// dims. Exact SVD is not reproducible (no LAPACK custom-calls in
+/// xla_extension 0.5.1) — the NS row stands in, as it does for all of the
+/// paper's actual training runs.
+pub fn table1(engine: &Engine, budget_secs: f64) -> anyhow::Result<String> {
+    let dims = engine.manifest.norm_bench_dims.clone();
+    let mut t = Table::new(
+        "Table 1 — normalization time (ms), measured on CPU PJRT",
+        &["method", "paper (A40, d=1024/2048/4096)", "measured (ms per dim)"],
+    );
+    let mut bench = Bencher::with_budget(budget_secs);
+    for op in ["ns", "col", "row", "sign"] {
+        let mut measured = Vec::new();
+        for &d in &dims {
+            let name = format!("norm_{op}_{d}");
+            let exe = engine.load(&name)?;
+            let mut rng = Pcg::new(7);
+            let x = Tensor::from_f32(
+                &[d, d],
+                (0..d * d).map(|_| rng.normal() as f32).collect(),
+            );
+            let stats = bench.bench(&format!("{op} d={d}"), || {
+                engine.run_exe(&exe, std::slice::from_ref(&x)).unwrap();
+            });
+            measured.push(format!("{:.3}", stats.mean_ms()));
+        }
+        let paper_row = paper::TABLE1
+            .iter()
+            .find(|(o, _)| *o == op)
+            .map(|(_, v)| format!("{:.2}/{:.2}/{:.2}", v[0], v[1], v[2]))
+            .unwrap_or_default();
+        t.row(vec![op.to_string(), paper_row, measured.join(" / ")]);
+    }
+    t.footnote("paper's exact-SVD row omitted: LAPACK custom-calls unsupported here (DESIGN.md §3)");
+    t.footnote(&format!("measured dims: {dims:?} (CPU, f32, interpret-lowered kernels)"));
+    Ok(t.render())
+}
+
+/// Shared engine for the 3-size perplexity tables (Tables 2/3/8).
+fn size3_table(
+    engine: &Engine,
+    title: &str,
+    rows: &[&str],
+    paper_rows: &[(&str, [f64; 3])],
+    sizes: &[String],
+    steps: usize,
+) -> anyhow::Result<String> {
+    let mut t = Table::new(title, &["method", "size", "paper ppl", "measured ppl"]);
+    for (si, size) in sizes.iter().enumerate() {
+        let outs = run_zoo(engine, rows, size, steps, false)?;
+        for r in &outs {
+            let paper_v = paper::lookup3(paper_rows, &r.spec.optimizer)
+                .map(|v| {
+                    let idx = paper::SIZE3.iter().position(|s| s == size).unwrap_or(si);
+                    let x = v[idx.min(2)];
+                    if x.is_nan() {
+                        "-".to_string()
+                    } else {
+                        format!("{x:.2}")
+                    }
+                })
+                .unwrap_or_else(|| "-".to_string());
+            t.row(vec![
+                opt_label(&r.spec.optimizer).to_string(),
+                size.clone(),
+                paper_v,
+                ppl_cell(r.final_ppl),
+            ]);
+        }
+    }
+    t.footnote(&format!(
+        "measured: tiny-LLaMA family, {steps} steps, synthetic c4sim corpus — compare orderings, not magnitudes"
+    ));
+    Ok(t.render())
+}
+
+/// Table 2: SGD + one normalization, across sizes.
+pub fn table2(engine: &Engine, sizes: &[String], steps: usize) -> anyhow::Result<String> {
+    size3_table(
+        engine,
+        "Table 2 — gradient normalizations (perplexity)",
+        &["adam", "stable_spam", "sgd_ns", "sgd_colnorm", "sgd_rownorm", "sign_sgd"],
+        paper::TABLE2,
+        sizes,
+        steps,
+    )
+}
+
+/// Table 3: normalization + last-layer momentum vs Adam.
+pub fn table3(engine: &Engine, sizes: &[String], steps: usize) -> anyhow::Result<String> {
+    size3_table(
+        engine,
+        "Table 3 — normalization + mmt-last vs Adam (perplexity)",
+        &["adam", "stable_spam", "ns_mmt_last", "scale"],
+        paper::TABLE3,
+        sizes,
+        steps,
+    )
+}
+
+/// Table 4 + Appendix B: exact memory accounting at paper scale.
+pub fn table4(engine: &Engine) -> anyhow::Result<String> {
+    let mut t = Table::new(
+        "Table 4 / Appendix B — memory (GB, bf16) at paper scale",
+        &["method", "1B total", "7B total", "7B paper", "components"],
+    );
+    let m1 = MemoryModel::new(engine.manifest.paper_dims["1B"]);
+    let m7 = MemoryModel::new(engine.manifest.paper_dims["7B"]);
+    let rows: &[(&str, usize, f64, &str)] = &[
+        ("sgd", 0, 13.48, "weights only"),
+        ("adam", 0, 40.43, "1st+2nd EMA"),
+        ("muon", 0, 26.95, "singular-val + 1st EMA"),
+        ("swan", 0, 14.52, "row+sv norm, Adam first/last"),
+        ("apollo", 256, 16.14, "rank-256 EMAs, Adam first/last"),
+        ("apollo_mini", 1, 14.53, "rank-1 EMAs, Adam first/last"),
+        ("scale", 0, 13.74, "col-wise + last-layer EMA"),
+    ];
+    for &(method, rank, paper7, components) in rows {
+        t.row(vec![
+            opt_label(method).to_string(),
+            format!("{:.2}", m1.method(method, rank).total_gb()),
+            format!("{:.2}", m7.method(method, rank).total_gb()),
+            format!("{paper7:.2}"),
+            components.to_string(),
+        ]);
+    }
+    t.footnote("analytic reproduction of Appendix B — matches the paper exactly");
+    Ok(t.render())
+}
+
+/// Table 5: main results. Perplexity measured at tiny scale; memory from
+/// the paper-scale estimator AND measured state bytes of the tiny runs.
+pub fn table5(engine: &Engine, sizes: &[String], steps: usize) -> anyhow::Result<String> {
+    let opts = [
+        "adam", "stable_spam", "muon", "galore", "fira", "swan",
+        "apollo", "apollo_mini", "scale",
+    ];
+    let mut t = Table::new(
+        "Table 5 — main results (perplexity & memory)",
+        &["method", "size", "paper ppl", "measured ppl", "paper mem", "state KiB (measured)"],
+    );
+    for size in sizes {
+        let outs = run_zoo(engine, &opts, size, steps, false)?;
+        for r in &outs {
+            let idx = paper::SIZE3.iter().position(|s| s == size).unwrap_or(3);
+            let prow = paper::TABLE5.iter().find(|x| x.0 == r.spec.optimizer);
+            let (pppl, pmem) = prow
+                .map(|(_, p, m)| (p[idx.min(3)], m[idx.min(3)]))
+                .unwrap_or((f64::NAN, f64::NAN));
+            let kib = measured_state_bytes(&engine.manifest, &r.spec.optimizer, size)? / 1024;
+            t.row(vec![
+                opt_label(&r.spec.optimizer).to_string(),
+                size.clone(),
+                if pppl.is_nan() { "-".into() } else { format!("{pppl:.2}") },
+                ppl_cell(r.final_ppl),
+                if pmem.is_nan() { "-".into() } else { format!("{pmem:.2}G") },
+                format!("{kib}"),
+            ]);
+        }
+    }
+    t.footnote("paper mem column: real-LLaMA bf16; measured state: f32 optimizer state of the tiny run");
+    Ok(t.render())
+}
+
+/// Table 6: the 7B run — substituted by the `e2e` config with
+/// intermediate perplexities at 25/50/75/100% of the budget.
+pub fn table6(engine: &Engine, steps: usize) -> anyhow::Result<String> {
+    let opts = ["apollo", "apollo_mini", "muon", "scale"];
+    let mut t = Table::new(
+        "Table 6 — large-model run (e2e config stands in for 7B)",
+        &["method", "paper mem", "paper final ppl", "measured ppl @25/50/75/100%"],
+    );
+    for opt in opts {
+        let mut spec = RunSpec::new(opt, "e2e", steps);
+        spec.eval_every = (steps / 4).max(1);
+        let r = train_once(engine, &spec)?;
+        let marks: Vec<String> = r.eval_curve.iter().map(|(_, p)| format!("{p:.2}")).collect();
+        let paper_row = paper::TABLE6.iter().find(|x| x.0 == opt);
+        let (pmem, pfinal) = paper_row
+            .map(|(_, m, v)| (*m, v[3]))
+            .unwrap_or((f64::NAN, f64::NAN));
+        println!("  [e2e/{opt}] final ppl {:.2}", r.final_ppl);
+        t.row(vec![
+            opt_label(opt).to_string(),
+            format!("{pmem:.2}G"),
+            format!("{pfinal:.2}"),
+            marks.join(" / "),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 7: training throughput per optimizer.
+pub fn table7(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<String> {
+    let opts = [
+        "adam", "stable_spam", "muon", "galore", "fira", "apollo",
+        "apollo_mini", "scale",
+    ];
+    let mut t = Table::new(
+        "Table 7 — training throughput (tokens/sec)",
+        &["method", "paper (1B, 4xH100)", "measured (tiny, 1-core CPU)", "rel. to Adam"],
+    );
+    let mut rows = Vec::new();
+    for opt in opts {
+        let r = train_once(engine, &RunSpec::new(opt, size, steps))?;
+        println!("  [{size}/{opt}] {:.0} tok/s", r.tokens_per_sec);
+        rows.push((opt, r.tokens_per_sec));
+    }
+    let adam_thr = rows.iter().find(|(o, _)| *o == "adam").map(|(_, t)| *t).unwrap_or(1.0);
+    for (opt, thr) in rows {
+        let paper_thr = paper::TABLE7
+            .iter()
+            .find(|(o, _)| *o == opt)
+            .map(|(_, v)| format!("{v:.0}"))
+            .unwrap_or_default();
+        t.row(vec![
+            opt_label(opt).to_string(),
+            paper_thr,
+            format!("{thr:.0}"),
+            format!("{:.2}x", thr / adam_thr),
+        ]);
+    }
+    t.footnote("paper's headline: NS-based methods ~18.5% slower; SCALE ~ Adam ~ APOLLO");
+    Ok(t.render())
+}
+
+/// Table 8: adding momentum to the first (embedding) layer.
+pub fn table8(engine: &Engine, sizes: &[String], steps: usize) -> anyhow::Result<String> {
+    size3_table(
+        engine,
+        "Table 8 — momentum placement ablation (App. E)",
+        &["sgd_colnorm", "scale", "scale_first_last"],
+        paper::TABLE8,
+        sizes,
+        steps,
+    )
+}
+
+/// Table 9 (App. F): architecture generality — GPT2-style block.
+pub fn table9(engine: &Engine, steps: usize) -> anyhow::Result<String> {
+    let opts = ["adam", "stable_spam", "muon", "galore", "fira", "apollo", "apollo_mini", "scale"];
+    let outs = run_zoo(engine, &opts, "gpt2s", steps, false)?;
+    let mut t = Table::new(
+        "Table 9 — GPT2-style architecture (App. F)",
+        &["method", "paper ppl (GPT2-M)", "measured ppl (gpt2s)"],
+    );
+    for r in &outs {
+        let p = paper::TABLE9_GPT2
+            .iter()
+            .find(|(o, _)| *o == r.spec.optimizer)
+            .map(|(_, v)| format!("{v:.2}"))
+            .unwrap_or_default();
+        t.row(vec![
+            opt_label(&r.spec.optimizer).to_string(),
+            p,
+            ppl_cell(r.final_ppl),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 11 (App. H): overtraining at 1x/2x/4x the base budget.
+pub fn table11(engine: &Engine, size: &str, base_steps: usize) -> anyhow::Result<String> {
+    let opts = ["adam", "stable_spam", "muon", "fira", "apollo", "apollo_mini", "scale"];
+    let mut t = Table::new(
+        "Table 11 — overtraining (App. H)",
+        &["method", "paper 1x/2x/4x", "measured 1x", "2x", "4x"],
+    );
+    let mut measured: Vec<(&str, Vec<f64>)> = opts.iter().map(|o| (*o, Vec::new())).collect();
+    for mult in [1usize, 2, 4] {
+        let outs = run_zoo(engine, &opts, size, base_steps * mult, false)?;
+        for (slot, r) in measured.iter_mut().zip(outs) {
+            slot.1.push(r.final_ppl);
+        }
+    }
+    for (opt, ppls) in measured {
+        let p = paper::TABLE11
+            .iter()
+            .find(|(o, _)| *o == opt)
+            .map(|(_, v)| format!("{:.2}/{:.2}/{:.2}", v[0], v[1], v[2]))
+            .unwrap_or_default();
+        t.row(vec![
+            opt_label(opt).to_string(),
+            p,
+            ppl_cell(ppls[0]),
+            ppl_cell(ppls[1]),
+            ppl_cell(ppls[2]),
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Table 12 (App. I): finetuning. Substitution: domain-transfer
+/// finetuning — continue training a pretrained model on a *shifted*
+/// corpus (different generator seed = new word inventory/states) at a
+/// low LR, comparing Adam vs SCALE transfer quality.
+pub fn table12(engine: &Engine, size: &str, pretrain_steps: usize, ft_steps: usize) -> anyhow::Result<String> {
+    use crate::coordinator::{TrainOptions, Trainer};
+    let mut t = Table::new(
+        "Table 12 — finetuning stand-in (domain transfer; App. I)",
+        &["method", "paper GLUE avg", "pretrain ppl", "transfer ppl (new domain)"],
+    );
+    for (opt, paper_avg) in [("adam", 85.68), ("scale", 85.51)] {
+        // pretrain on corpus domain seed 0
+        let pre_opts = TrainOptions {
+            size: size.into(),
+            optimizer: opt.into(),
+            steps: pretrain_steps,
+            base_lr: super::default_lr(opt),
+            schedule: None,
+            shards: 4,
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 0,
+            quiet: true,
+        };
+        let mut pre_run = Trainer::new(engine, pre_opts)?;
+        let pre_ppl = pre_run.train()?;
+        // finetune the pretrained weights on domain seed 1 (new word
+        // inventory + transition structure) at a 10x lower LR — fresh
+        // optimizer state, warm-started parameters.
+        let ft_opts = TrainOptions {
+            size: size.into(),
+            optimizer: opt.into(),
+            steps: ft_steps,
+            base_lr: super::default_lr(opt) * 0.1,
+            schedule: None,
+            shards: 4,
+            seed: 1,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 0,
+            quiet: true,
+        };
+        let mut tr = Trainer::new(engine, ft_opts)?;
+        tr.params = pre_run.params.clone();
+        let ft_ppl = tr.train()?;
+        println!("  [{size}/{opt}] pretrain ppl {pre_ppl:.2} -> transfer ppl {ft_ppl:.2}");
+        t.row(vec![
+            opt_label(opt).to_string(),
+            format!("{paper_avg:.2}"),
+            ppl_cell(pre_ppl),
+            ppl_cell(ft_ppl),
+        ]);
+    }
+    t.footnote("GLUE unavailable offline; substitution per DESIGN.md §3 (transfer to shifted c4sim domain)");
+    Ok(t.render())
+}
+
+/// Table 13 (App. M): mixed-normalization ablations on s130m.
+pub fn table13(engine: &Engine, steps: usize) -> anyhow::Result<String> {
+    let opts = [
+        "scale", "mix_col_last_row_rest", "mix_row_first_col_rest",
+        "mix_larger_dim", "mix_row_last_col_rest",
+    ];
+    let outs = run_zoo(engine, &opts, "s130m", steps, false)?;
+    let mut t = Table::new(
+        "Table 13 — mixed normalization schemes (App. M)",
+        &["method", "paper ppl", "measured ppl"],
+    );
+    for r in &outs {
+        let p = paper::TABLE13
+            .iter()
+            .find(|(o, _)| *o == r.spec.optimizer)
+            .map(|(_, v)| format!("{v:.2}"))
+            .unwrap_or_default();
+        t.row(vec![
+            opt_label(&r.spec.optimizer).to_string(),
+            p,
+            ppl_cell(r.final_ppl),
+        ]);
+    }
+    t.footnote("paper's key finding: row-last degrades sharply; all-column (SCALE) is best");
+    Ok(t.render())
+}

@@ -1,0 +1,22 @@
+//! SCALE-LLM: reproduction of "Memory-Efficient LLM Pretraining via
+//! Minimalist Optimizer Design" (SCALE), built as a three-layer
+//! Rust + JAX + Pallas stack (AOT via XLA/PJRT).
+//!
+//! Layers:
+//! - L1 (build-time Python): Pallas kernels for the optimizer hot path
+//!   (column-wise normalization, fused SCALE/Adam updates).
+//! - L2 (build-time Python): JAX LLaMA-style model fwd/bwd and the full
+//!   optimizer zoo, lowered once to HLO text artifacts.
+//! - L3 (this crate): the training coordinator — data pipeline, DDP
+//!   simulation, scheduler, checkpointing, metrics, memory accounting,
+//!   and the benchmark harness that regenerates the paper's tables.
+
+pub mod analysis;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod memory;
+pub mod optim;
+pub mod runtime;
+pub mod util;

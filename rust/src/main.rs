@@ -1,0 +1,333 @@
+//! `scale` — the launcher CLI for the SCALE reproduction.
+//!
+//! Subcommands:
+//!   train            train one configuration (preset file + overrides)
+//!   eval             evaluate a checkpoint's perplexity
+//!   table <n>        regenerate paper table n (1-13)
+//!   figure <n>       regenerate paper figure n (1-10)
+//!   memory-report    Appendix-B memory accounting (exact)
+//!   variance         Fig.-4 style per-layer variance probe
+//!   sweep-lr         LR sweep for one optimizer
+//!   ablate-momentum  Theorem 2.1 noisy-quadratic placement study
+//!   list             show available sizes/optimizers/artifacts
+//!
+//! All experiment commands accept --steps/--size to trade fidelity for
+//! time; defaults are small (minutes, not hours) on a 1-core CPU.
+
+use scale_llm::analysis::tables::Table;
+use scale_llm::config;
+use scale_llm::coordinator::{Checkpoint, TrainOptions, Trainer};
+use scale_llm::harness::{self, figures, tables};
+use scale_llm::memory::estimator::measured_state_bytes;
+use scale_llm::optim::sim;
+use scale_llm::runtime::Engine;
+use scale_llm::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_dir(args: &mut Args) -> String {
+    args.get_or("artifacts", "artifacts")
+}
+
+fn run() -> anyhow::Result<()> {
+    let mut args = Args::from_env()?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "train" => cmd_train(&mut args),
+        "eval" => cmd_eval(&mut args),
+        "table" => cmd_table(&mut args),
+        "figure" => cmd_figure(&mut args),
+        "memory-report" => cmd_memory(&mut args),
+        "variance" => cmd_variance(&mut args),
+        "sweep-lr" => cmd_sweep(&mut args),
+        "ablate-momentum" => cmd_ablate(&mut args),
+        "list" => cmd_list(&mut args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand {other:?}\n{HELP}"),
+    }
+}
+
+const HELP: &str = "scale — SCALE optimizer reproduction (Rust + JAX + Pallas via PJRT)
+
+usage: scale <subcommand> [options]
+
+  train           --size s130m --optimizer scale --steps 200 --lr 1e-2
+                  [--preset configs/x.json] [--save ckpt.bin] [--resume ckpt.bin]
+  eval            --load ckpt.bin [--eval-batches 16]
+  table <1..13>   regenerate a paper table  [--steps N] [--sizes s60m,s130m]
+  figure <1..10>  regenerate a paper figure [--steps N] [--size s130m]
+  memory-report   Appendix-B accounting (exact paper numbers)
+  variance        per-layer gradient variance probe [--optimizer ...]
+  sweep-lr        --optimizer scale --size s130m --steps 100
+  ablate-momentum Theorem 2.1 noisy-quadratic placement study
+  list            artifacts / sizes / optimizers available
+
+common: --artifacts DIR (default ./artifacts), --quiet";
+
+fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let preset = args.get("preset").map(|s| s.to_string());
+    let save = args.get("save").map(|s| s.to_string());
+    let resume = args.get("resume").map(|s| s.to_string());
+    let base = match preset {
+        Some(p) => config::load_preset(p)?,
+        None => TrainOptions::default(),
+    };
+    let opts = config::apply_cli(base, args)?;
+    args.finish()?;
+
+    let engine = Engine::new(&dir)?;
+    println!(
+        "platform: {} | size {} | optimizer {} | {} steps | lr {:.1e} | {} shards",
+        engine.platform(),
+        opts.size,
+        opts.optimizer,
+        opts.steps,
+        opts.base_lr,
+        opts.shards
+    );
+    let mut tr = Trainer::new(&engine, opts)?;
+    if let Some(r) = resume {
+        let ckpt = Checkpoint::load(&r)?;
+        tr.restore(&ckpt)?;
+        println!("resumed from {r} at step {}", tr.step);
+    }
+    let ppl = tr.train()?;
+    println!(
+        "final eval ppl {ppl:.3} | {:.0} tok/s | optimizer state {} KiB",
+        tr.metrics.tokens_per_sec(),
+        tr.state_bytes() / 1024
+    );
+    if let Some(s) = save {
+        tr.checkpoint()?.save(&s)?;
+        println!("checkpoint written to {s}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let load = args
+        .get("load")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("eval requires --load <ckpt>"))?;
+    let eval_batches = args.get_usize("eval-batches", 16)?;
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    let ckpt = Checkpoint::load(&load)?;
+    let opts = TrainOptions {
+        size: ckpt.size.clone(),
+        optimizer: ckpt.optimizer.clone(),
+        eval_batches,
+        quiet: true,
+        ..TrainOptions::default()
+    };
+    let mut tr = Trainer::new(&engine, opts)?;
+    tr.restore(&ckpt)?;
+    let loss = tr.eval()?;
+    println!(
+        "checkpoint {load}: step {} eval loss {loss:.4} ppl {:.3}",
+        tr.step,
+        loss.exp()
+    );
+    Ok(())
+}
+
+fn sizes_arg(args: &mut Args, default: &str) -> Vec<String> {
+    args.get_or("sizes", default)
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect()
+}
+
+fn cmd_table(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let n: usize = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("table requires a number (1-13)"))?
+        .parse()?;
+    let steps = args.get_usize("steps", 150)?;
+    let sizes = sizes_arg(args, "s60m,s130m,s350m");
+    let size = args.get_or("size", "s130m");
+    let bench_secs = args.get_f64("bench-secs", 2.0)?;
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    let out = match n {
+        1 => tables::table1(&engine, bench_secs)?,
+        2 => tables::table2(&engine, &sizes, steps)?,
+        3 => tables::table3(&engine, &sizes, steps)?,
+        4 => tables::table4(&engine)?,
+        5 => tables::table5(&engine, &sizes, steps)?,
+        6 => tables::table6(&engine, steps)?,
+        7 => tables::table7(&engine, &size, steps.min(30))?,
+        8 => tables::table8(&engine, &sizes, steps)?,
+        9 => tables::table9(&engine, steps)?,
+        11 => tables::table11(&engine, &size, steps)?,
+        12 => tables::table12(&engine, &size, steps, steps / 2)?,
+        13 => tables::table13(&engine, steps)?,
+        10 => anyhow::bail!(
+            "table 10 is Gemma-2B (resource-gated even in the paper); \
+             see `scale table 9` for the architecture-generality check"
+        ),
+        _ => anyhow::bail!("unknown table {n}"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_figure(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let n: usize = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow::anyhow!("figure requires a number (1-10)"))?
+        .parse()?;
+    let steps = args.get_usize("steps", 150)?;
+    let size = args.get_or("size", "s130m");
+    let optimizer = args.get_or("optimizer", "sgd_colnorm");
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    let out = match n {
+        1 => figures::figure1(&engine, &size, steps)?,
+        2 => figures::figure2(&engine, &size, steps)?,
+        3 => figures::figure3(&engine, &size, steps)?,
+        4 | 6 | 7 => figures::figure4(&engine, &size, steps, &optimizer)?,
+        5 => figures::figure5(&engine, steps)?,
+        8 => figures::figure8(&engine, &size, steps)?,
+        9 => figures::figure9(&engine, &size, steps)?,
+        10 => figures::figure10(&engine, &size, steps)?,
+        _ => anyhow::bail!("unknown figure {n}"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_memory(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    println!("{}", tables::table4(&engine)?);
+    // measured footprints of the tiny runs
+    let mut t = Table::new(
+        "Measured optimizer-state footprint (this repo's tiny runs, f32)",
+        &["size", "params KiB", "sgd", "scale", "muon", "apollo_mini", "adam"],
+    );
+    for (name, info) in &engine.manifest.sizes {
+        let cell = |o: &str| -> String {
+            measured_state_bytes(&engine.manifest, o, name)
+                .map(|b| format!("{} KiB", b / 1024))
+                .unwrap_or_else(|_| "-".into())
+        };
+        t.row(vec![
+            name.clone(),
+            format!("{}", 4 * info.param_count / 1024),
+            cell("sgd"),
+            cell("scale"),
+            cell("muon"),
+            cell("apollo_mini"),
+            cell("adam"),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_variance(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    let size = args.get_or("size", "s130m");
+    let steps = args.get_usize("steps", 120)?;
+    let optimizer = args.get_or("optimizer", "sgd_colnorm");
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    println!("{}", figures::figure4(&engine, &size, steps, &optimizer)?);
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::coordinator::sweep::{lr_sweep, paper_lr_grid};
+    let dir = artifact_dir(args);
+    let size = args.get_or("size", "s130m");
+    let optimizer = args.get_or("optimizer", "scale");
+    let steps = args.get_usize("steps", 100)?;
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    let base = TrainOptions {
+        size,
+        optimizer: optimizer.clone(),
+        steps,
+        quiet: true,
+        ..TrainOptions::default()
+    };
+    let pts = lr_sweep(&engine, &base, &paper_lr_grid())?;
+    let mut t = Table::new(
+        &format!("LR sweep — {optimizer} ({steps} steps)"),
+        &["lr", "final ppl", "diverged"],
+    );
+    for p in pts {
+        t.row(vec![
+            format!("{:.0e}", p.lr),
+            harness::ppl_cell(p.ppl),
+            if p.diverged { "yes".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_ablate(args: &mut Args) -> anyhow::Result<()> {
+    let seeds = args.get_usize("seeds", 5)? as u64;
+    args.finish()?;
+    let (none, on_noisy, on_quiet) = sim::momentum_placement_study(seeds);
+    let mut t = Table::new(
+        "Theorem 2.1 — momentum placement on the noisy-quadratic testbed",
+        &["placement", "sum of layer tracking errors", "state cost"],
+    );
+    t.row(vec!["no momentum".into(), format!("{none:.4}"), "0".into()]);
+    t.row(vec![
+        "momentum on noisy (last) layer".into(),
+        format!("{on_noisy:.4}"),
+        "1 layer".into(),
+    ]);
+    t.row(vec![
+        "momentum on quiet layers".into(),
+        format!("{on_quiet:.4}"),
+        "3 layers".into(),
+    ]);
+    t.footnote("the Theorem 2.1 shape: the noisy layer is where momentum pays");
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_list(args: &mut Args) -> anyhow::Result<()> {
+    let dir = artifact_dir(args);
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    let m = &engine.manifest;
+    println!("platform: {}", engine.platform());
+    println!("\nsizes:");
+    for (name, s) in &m.sizes {
+        println!(
+            "  {name:<7} ~{} ({:.2}M params, vocab {}, d {}, {} layers, seq {})",
+            s.paper_size,
+            s.param_count as f64 / 1e6,
+            s.vocab,
+            s.d_model,
+            s.n_layers,
+            s.seq_len
+        );
+        let opts = m.optimizers_for(name);
+        println!("          optimizers: {}", opts.join(", "));
+    }
+    println!("\nartifacts: {} total in {}", m.artifacts.len(), m.dir.display());
+    Ok(())
+}

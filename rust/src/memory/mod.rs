@@ -1,0 +1,7 @@
+//! Memory accounting — the paper's Appendix B / Table 4, reproduced
+//! exactly (it is pure arithmetic over real LLaMA dimensions), plus
+//! measured optimizer-state accounting for this repo's tiny runs.
+
+pub mod estimator;
+
+pub use estimator::{MemoryModel, MethodMemory};

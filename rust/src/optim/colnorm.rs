@@ -1,0 +1,167 @@
+//! Native Rust mirror of the column-wise normalization kernel (eq. 6).
+//!
+//! Used three ways: (1) cross-layer parity tests against the L1 Pallas
+//! kernel's HLO artifact, (2) the noisy-quadratic theory simulator
+//! ([`super::sim`]), (3) property tests of the normalization invariants.
+//! Matrices are row-major `(d_in, d_out)`, matching the JAX layout.
+
+pub const EPS: f32 = 1e-30;
+
+/// Column-wise normalization: each column (stride `d_out`) scaled to unit
+/// L2 norm; zero columns stay zero.
+pub fn colnorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+    assert_eq!(g.len(), d_in * d_out);
+    let mut norms = vec![0.0f32; d_out];
+    for r in 0..d_in {
+        let row = &g[r * d_out..(r + 1) * d_out];
+        for (n, &x) in norms.iter_mut().zip(row) {
+            *n += x * x;
+        }
+    }
+    for n in norms.iter_mut() {
+        *n = n.sqrt().max(EPS);
+    }
+    let mut out = vec![0.0f32; g.len()];
+    for r in 0..d_in {
+        for c in 0..d_out {
+            out[r * d_out + c] = g[r * d_out + c] / norms[c];
+        }
+    }
+    out
+}
+
+/// Row-wise normalization (unit L2 rows).
+pub fn rownorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+    assert_eq!(g.len(), d_in * d_out);
+    let mut out = vec![0.0f32; g.len()];
+    for r in 0..d_in {
+        let row = &g[r * d_out..(r + 1) * d_out];
+        let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(EPS);
+        for (o, &x) in out[r * d_out..(r + 1) * d_out].iter_mut().zip(row) {
+            *o = x / norm;
+        }
+    }
+    out
+}
+
+/// Sign normalization (eq. 4).
+pub fn sign(g: &[f32]) -> Vec<f32> {
+    g.iter()
+        .map(|&x| {
+            if x > 0.0 {
+                1.0
+            } else if x < 0.0 {
+                -1.0
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Per-column L2 norms — the Fig. 10 statistic (LM-head column norms).
+pub fn column_norms(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut norms = vec![0.0f32; d_out];
+    for r in 0..d_in {
+        for c in 0..d_out {
+            let x = g[r * d_out + c];
+            norms[c] += x * x;
+        }
+    }
+    for n in norms.iter_mut() {
+        *n = n.sqrt();
+    }
+    norms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure};
+
+    #[test]
+    fn unit_columns() {
+        prop::quick("colnorm-unit-columns", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 30), prop::usize_in(rng, 1, 30));
+            let g = prop::matrix(rng, m, n, 1.0);
+            let out = colnorm(&g, m, n);
+            for (c, norm) in column_norms(&out, m, n).iter().enumerate() {
+                prop::ensure((norm - 1.0).abs() < 1e-3, format!("col {c}: {norm}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scale_invariance() {
+        prop::quick("colnorm-scale-invariant", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 20), prop::usize_in(rng, 1, 20));
+            let g = prop::matrix(rng, m, n, 1.0);
+            let alpha = prop::f32_in(rng, 0.01, 50.0);
+            let scaled: Vec<f32> = g.iter().map(|x| x * alpha).collect();
+            prop::slices_close(&colnorm(&scaled, m, n), &colnorm(&g, m, n), 1e-3)
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        prop::quick("colnorm-idempotent", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 20), prop::usize_in(rng, 1, 20));
+            let g = prop::matrix(rng, m, n, 1.0);
+            let once = colnorm(&g, m, n);
+            prop::slices_close(&colnorm(&once, m, n), &once, 1e-4)
+        });
+    }
+
+    #[test]
+    fn zero_column_stays_zero() {
+        let g = vec![0.0, 1.0, 0.0, 2.0]; // 2x2, column 0 is zero
+        let out = colnorm(&g, 2, 2);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[2], 0.0);
+        let n = (out[1] * out[1] + out[3] * out[3]).sqrt();
+        assert!((n - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rownorm_transposes_colnorm() {
+        prop::quick("rownorm-is-transposed-colnorm", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 15), prop::usize_in(rng, 1, 15));
+            let g = prop::matrix(rng, m, n, 1.0);
+            // transpose, colnorm, transpose back == rownorm
+            let mut gt = vec![0.0f32; g.len()];
+            for r in 0..m {
+                for c in 0..n {
+                    gt[c * m + r] = g[r * n + c];
+                }
+            }
+            let cn = colnorm(&gt, n, m);
+            let mut back = vec![0.0f32; g.len()];
+            for c in 0..n {
+                for r in 0..m {
+                    back[r * n + c] = cn[c * m + r];
+                }
+            }
+            prop::slices_close(&back, &rownorm(&g, m, n), 1e-4)
+        });
+    }
+
+    #[test]
+    fn sign_values() {
+        assert_eq!(sign(&[2.0, -3.0, 0.0]), vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn bounded_update_under_huge_gradients() {
+        // the Fig. 3 stability property: colnorm bounds every entry by 1
+        prop::quick("colnorm-bounded", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 10), prop::usize_in(rng, 1, 10));
+            let g: Vec<f32> = prop::matrix(rng, m, n, 1e18);
+            let out = colnorm(&g, m, n);
+            ensure(
+                out.iter().all(|x| x.is_finite() && x.abs() <= 1.0 + 1e-5),
+                "entry out of bounds",
+            )
+        });
+    }
+}

@@ -1,0 +1,7 @@
+//! Native Rust optimizer substrate: mirrors of the L1/L2 update math
+//! (parity oracles for the AOT artifacts) and the noisy-quadratic
+//! simulator that validates the Theorem 2.1 momentum-placement story.
+
+pub mod colnorm;
+pub mod rules;
+pub mod sim;

@@ -1,0 +1,168 @@
+//! Native Rust optimizer rules mirroring the L1/L2 update math.
+//!
+//! These power the noisy-quadratic theory simulator ([`super::sim`]) and
+//! serve as an independent second implementation for parity tests against
+//! the AOT artifacts — the same role ref.py plays for the Pallas kernels,
+//! one layer down.
+
+use super::colnorm::colnorm;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamHp {
+    pub b1: f32,
+    pub b2: f32,
+    pub eps: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        AdamHp {
+            b1: 0.9,
+            b2: 0.999,
+            eps: 1e-8,
+        }
+    }
+}
+
+/// SGD: `p -= lr * g`.
+pub fn sgd(p: &mut [f32], g: &[f32], lr: f32) {
+    for (pi, gi) in p.iter_mut().zip(g) {
+        *pi -= lr * gi;
+    }
+}
+
+/// SGD with EMA momentum (eq. 7): `m = beta*m + (1-beta)*g; p -= lr*m`.
+pub fn sgd_momentum(p: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, beta: f32) {
+    for ((pi, mi), gi) in p.iter_mut().zip(m.iter_mut()).zip(g) {
+        *mi = beta * *mi + (1.0 - beta) * gi;
+        *pi -= lr * *mi;
+    }
+}
+
+/// Bias-corrected Adam (eq. 3). `step` is 1-based.
+pub fn adam(
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    hp: AdamHp,
+    step: u32,
+) {
+    let bc1 = 1.0 - hp.b1.powi(step as i32);
+    let bc2 = 1.0 - hp.b2.powi(step as i32);
+    for (((pi, mi), vi), gi) in p.iter_mut().zip(m.iter_mut()).zip(v.iter_mut()).zip(g) {
+        *mi = hp.b1 * *mi + (1.0 - hp.b1) * gi;
+        *vi = hp.b2 * *vi + (1.0 - hp.b2) * gi * gi;
+        let mh = *mi / bc1;
+        let vh = *vi / bc2;
+        *pi -= lr * mh / (vh.sqrt() + hp.eps);
+    }
+}
+
+/// SCALE stateless rule: `p -= lr * C(g)` over a (d_in, d_out) matrix.
+pub fn scale_plain(p: &mut [f32], g: &[f32], d_in: usize, d_out: usize, lr: f32) {
+    let dir = colnorm(g, d_in, d_out);
+    for (pi, di) in p.iter_mut().zip(dir) {
+        *pi -= lr * di;
+    }
+}
+
+/// SCALE momentum rule (last layer): EMA then column-normalized apply.
+pub fn scale_momentum(
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    beta: f32,
+) {
+    for (mi, gi) in m.iter_mut().zip(g) {
+        *mi = beta * *mi + (1.0 - beta) * gi;
+    }
+    let dir = colnorm(m, d_in, d_out);
+    for (pi, di) in p.iter_mut().zip(dir) {
+        *pi -= lr * di;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure};
+
+    #[test]
+    fn sgd_descends_quadratic() {
+        // f(p) = 0.5 * ||p||^2, g = p -> iterates contract geometrically
+        let mut p = vec![1.0f32, -2.0, 3.0];
+        for _ in 0..100 {
+            let g = p.clone();
+            sgd(&mut p, &g, 0.1);
+        }
+        assert!(p.iter().all(|x| x.abs() < 1e-3), "{p:?}");
+    }
+
+    #[test]
+    fn momentum_matches_unrolled_ema() {
+        prop::quick("sgdm-ema", |rng| {
+            let n = prop::usize_in(rng, 1, 8);
+            let beta = prop::f32_in(rng, 0.0, 0.95);
+            let mut p = prop::matrix(rng, 1, n, 1.0);
+            let mut m = vec![0.0; n];
+            let g1 = prop::matrix(rng, 1, n, 1.0);
+            let g2 = prop::matrix(rng, 1, n, 1.0);
+            sgd_momentum(&mut p, &mut m, &g1, 0.0, beta);
+            sgd_momentum(&mut p, &mut m, &g2, 0.0, beta);
+            for i in 0..n {
+                let want = beta * (1.0 - beta) * g1[i] + (1.0 - beta) * g2[i];
+                ensure(
+                    prop::approx_eq(m[i], want, 1e-5),
+                    format!("m[{i}]={} want {want}", m[i]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adam_first_step_is_signlike() {
+        // step 1 with zero state: update = lr * g/(|g| + eps') ~ lr*sign(g)
+        let mut p = vec![0.0f32; 4];
+        let mut m = vec![0.0; 4];
+        let mut v = vec![0.0; 4];
+        let g = vec![0.5, -2.0, 10.0, -0.01];
+        adam(&mut p, &mut m, &mut v, &g, 0.1, AdamHp::default(), 1);
+        for (pi, gi) in p.iter().zip(&g) {
+            assert!((pi.abs() - 0.1).abs() < 1e-3, "{pi} for g={gi}");
+            assert_eq!(pi.signum(), -gi.signum());
+        }
+    }
+
+    #[test]
+    fn scale_update_norm_is_sqrt_cols() {
+        // ||C(g)||_F = sqrt(d_out) for generic g -> step size is fixed
+        prop::quick("scale-step-norm", |rng| {
+            let (m_, n) = (prop::usize_in(rng, 2, 12), prop::usize_in(rng, 2, 12));
+            let g = prop::matrix(rng, m_, n, 1.0);
+            let mut p = vec![0.0f32; m_ * n];
+            scale_plain(&mut p, &g, m_, n, 1.0);
+            let norm: f32 = p.iter().map(|x| x * x).sum::<f32>().sqrt();
+            ensure(
+                (norm - (n as f32).sqrt()).abs() < 1e-2,
+                format!("norm {norm} vs sqrt({n})"),
+            )
+        });
+    }
+
+    #[test]
+    fn scale_momentum_state_carries() {
+        let mut p = vec![0.0f32; 4];
+        let mut m = vec![0.0f32; 4];
+        let g = vec![1.0f32, 1.0, 1.0, 1.0];
+        scale_momentum(&mut p, &mut m, &g, 2, 2, 0.1, 0.9);
+        for mi in &m {
+            assert!((mi - 0.1).abs() < 1e-6);
+        }
+    }
+}

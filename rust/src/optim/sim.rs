@@ -1,0 +1,202 @@
+//! Noisy-quadratic multi-layer simulator: a fast, pure-Rust testbed for
+//! the paper's Theorem 2.1 story — *momentum helps most on the layers
+//! with the largest gradient variance*.
+//!
+//! Problem: L independent quadratic "layers" f_l(x) = 0.5 * h_l ||x_l||^2
+//! with stochastic gradients g_l = h_l x_l + sigma_l * noise. The statistic
+//! is the *update-direction tracking error* E||dir_l - grad f_l||^2 — the
+//! quantity Lemma N.1 bounds by ((1-beta)/(1+beta)) sigma_l^2 and the one
+//! Fig. 4(b) plots ("lm_head momentum" variance dropping to a low level).
+//! Theorem 2.1 aggregates exactly these per-layer error terms, so:
+//!   * adding momentum to the high-sigma layer should cut the total error
+//!     the most per byte of state,
+//!   * momentum on a near-zero-sigma layer should buy almost nothing.
+//! The `scale ablate-momentum` bench and the property tests below check
+//! exactly that shape.
+
+use crate::util::rng::Pcg;
+
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    pub dim: usize,
+    /// curvature h_l
+    pub curvature: f32,
+    /// gradient noise std sigma_l
+    pub sigma: f32,
+    /// momentum coefficient beta_l (0 disables momentum & its state)
+    pub beta: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// mean ||dir_l - grad f_l||^2 per layer over the averaging window —
+    /// the per-layer tracking error of Lemma N.1 / Fig. 4(b).
+    pub dir_err: Vec<f64>,
+    /// final loss value
+    pub loss: f64,
+    /// bytes of optimizer state used (4 bytes/f32)
+    pub state_bytes: usize,
+}
+
+pub struct QuadraticSim {
+    pub layers: Vec<LayerSpec>,
+    pub lr: f32,
+    pub steps: usize,
+    /// fraction of trailing steps to average stationarity over
+    pub tail: f64,
+}
+
+impl QuadraticSim {
+    pub fn run(&self, seed: u64) -> SimResult {
+        let mut rng = Pcg::new(seed);
+        let mut xs: Vec<Vec<f32>> = self
+            .layers
+            .iter()
+            .map(|l| (0..l.dim).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let mut ms: Vec<Vec<f32>> = self.layers.iter().map(|l| vec![0.0; l.dim]).collect();
+        let state_bytes: usize = self
+            .layers
+            .iter()
+            .map(|l| if l.beta > 0.0 { 4 * l.dim } else { 0 })
+            .sum();
+
+        let tail_start = ((1.0 - self.tail) * self.steps as f64) as usize;
+        let mut acc = vec![0.0f64; self.layers.len()];
+        let mut count = 0usize;
+
+        for t in 0..self.steps {
+            for (li, layer) in self.layers.iter().enumerate() {
+                let x = &mut xs[li];
+                let m = &mut ms[li];
+                let mut err = 0.0f64;
+                for i in 0..layer.dim {
+                    let true_g = layer.curvature * x[i];
+                    let g = true_g + layer.sigma * rng.normal() as f32;
+                    let dir = if layer.beta > 0.0 {
+                        m[i] = layer.beta * m[i] + (1.0 - layer.beta) * g;
+                        m[i]
+                    } else {
+                        g
+                    };
+                    let d = (dir - true_g) as f64;
+                    err += d * d;
+                    x[i] -= self.lr * dir;
+                }
+                if t >= tail_start {
+                    acc[li] += err;
+                }
+            }
+            if t >= tail_start {
+                count += 1;
+            }
+        }
+
+        let loss: f64 = self
+            .layers
+            .iter()
+            .zip(&xs)
+            .map(|(l, x)| {
+                0.5 * l.curvature as f64 * x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>()
+            })
+            .sum();
+        SimResult {
+            dir_err: acc.iter().map(|a| a / count.max(1) as f64).collect(),
+            loss,
+            state_bytes,
+        }
+    }
+}
+
+/// The Theorem 2.1 scenario: one high-noise "last layer" among quiet
+/// layers. Returns (no_momentum, momentum_on_noisy, momentum_on_quiet)
+/// tail stationarity, averaged over `seeds` runs.
+pub fn momentum_placement_study(seeds: u64) -> (f64, f64, f64) {
+    let base = |beta_noisy: f32, beta_quiet: f32| {
+        let mut layers = vec![
+            LayerSpec { dim: 64, curvature: 1.0, sigma: 0.05, beta: beta_quiet };
+            3
+        ];
+        layers.push(LayerSpec {
+            dim: 64,
+            curvature: 1.0,
+            sigma: 1.0, // the "lm_head": 20x the noise
+            beta: beta_noisy,
+        });
+        QuadraticSim {
+            layers,
+            lr: 0.05,
+            steps: 2000,
+            tail: 0.25,
+        }
+    };
+    let avg = |sim: QuadraticSim| -> f64 {
+        (0..seeds)
+            .map(|s| sim.run(1000 + s).dir_err.iter().sum::<f64>())
+            .sum::<f64>()
+            / seeds as f64
+    };
+    let none = avg(base(0.0, 0.0));
+    let on_noisy = avg(base(0.9, 0.0));
+    let on_quiet = avg(base(0.0, 0.9));
+    (none, on_noisy, on_quiet)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_without_noise() {
+        let sim = QuadraticSim {
+            layers: vec![LayerSpec { dim: 16, curvature: 1.0, sigma: 0.0, beta: 0.0 }],
+            lr: 0.1,
+            steps: 500,
+            tail: 0.1,
+        };
+        let r = sim.run(1);
+        assert!(r.loss < 1e-6, "loss {}", r.loss);
+    }
+
+    #[test]
+    fn momentum_on_noisy_layer_beats_none_and_quiet_placement() {
+        // The Theorem 2.1 shape: placing the single momentum buffer on the
+        // high-variance layer gives the best stationarity per state byte.
+        let (none, on_noisy, on_quiet) = momentum_placement_study(3);
+        assert!(
+            on_noisy < 0.5 * none,
+            "momentum on noisy layer should cut error: {on_noisy} vs {none}"
+        );
+        assert!(
+            on_noisy < on_quiet,
+            "noisy placement {on_noisy} should beat quiet placement {on_quiet}"
+        );
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        let sim = QuadraticSim {
+            layers: vec![
+                LayerSpec { dim: 10, curvature: 1.0, sigma: 0.1, beta: 0.9 },
+                LayerSpec { dim: 20, curvature: 1.0, sigma: 0.1, beta: 0.0 },
+            ],
+            lr: 0.01,
+            steps: 10,
+            tail: 0.5,
+        };
+        assert_eq!(sim.run(0).state_bytes, 40);
+    }
+
+    #[test]
+    fn higher_noise_raises_stationarity_error() {
+        let mk = |sigma: f32| QuadraticSim {
+            layers: vec![LayerSpec { dim: 32, curvature: 1.0, sigma, beta: 0.0 }],
+            lr: 0.05,
+            steps: 1500,
+            tail: 0.25,
+        };
+        let low = mk(0.1).run(7).dir_err[0];
+        let high = mk(1.0).run(7).dir_err[0];
+        assert!(high > 5.0 * low, "high {high} vs low {low}");
+    }
+}

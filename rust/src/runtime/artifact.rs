@@ -1,0 +1,312 @@
+//! Manifest model: the typed view of `artifacts/manifest.json`.
+//!
+//! aot.py is the producer; nothing about shapes, parameter inventories or
+//! optimizer-state layouts is hard-coded on the Rust side — the manifest
+//! is the contract between the build-time Python layers and the runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn from_str(s: &str) -> anyhow::Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: j.req("shape")?.as_shape()?,
+            dtype: DType::from_str(j.req("dtype")?.as_str().unwrap_or(""))?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub size: Option<String>,
+    pub optimizer: Option<String>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One model parameter as declared by model.param_specs.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    /// "embed" | "matrix" | "head" | "vector"
+    pub kind: String,
+    pub shape: Vec<usize>,
+    /// Variance-analysis grouping: "embed", "blockN", "lm_head", ...
+    pub layer: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SizeInfo {
+    pub name: String,
+    pub paper_size: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub arch: String,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StateSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub microbatch: usize,
+    pub varprobe_big_factor: usize,
+    pub sizes: BTreeMap<String, SizeInfo>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub state_specs: BTreeMap<String, Vec<StateSlot>>,
+    /// Real LLaMA dims for the Appendix-B memory estimator.
+    pub paper_dims: BTreeMap<String, PaperDims>,
+    pub norm_bench_dims: Vec<usize>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PaperDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!(
+                "cannot read {}/manifest.json ({e}); run `make artifacts` first",
+                dir.display()))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    fn from_json(dir: PathBuf, j: &Json) -> anyhow::Result<Manifest> {
+        let mut sizes = BTreeMap::new();
+        for (name, sj) in j.req("sizes")?.as_obj().unwrap() {
+            let params = sj
+                .req("params")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.req("name")?.as_str().unwrap().to_string(),
+                        kind: p.req("kind")?.as_str().unwrap().to_string(),
+                        shape: p.req("shape")?.as_shape()?,
+                        layer: p.req("layer")?.as_str().unwrap().to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let u = |k: &str| -> anyhow::Result<usize> {
+                Ok(sj.req(k)?.as_usize().unwrap_or(0))
+            };
+            sizes.insert(
+                name.clone(),
+                SizeInfo {
+                    name: name.clone(),
+                    paper_size: sj.req("paper_size")?.as_str().unwrap().to_string(),
+                    vocab: u("vocab")?,
+                    d_model: u("d_model")?,
+                    n_layers: u("n_layers")?,
+                    n_heads: u("n_heads")?,
+                    d_ff: u("d_ff")?,
+                    seq_len: u("seq_len")?,
+                    batch: u("batch")?,
+                    arch: sj.req("arch")?.as_str().unwrap().to_string(),
+                    param_count: u("param_count")?,
+                    params,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in j.req("artifacts")?.as_obj().unwrap() {
+            let tensors = |k: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                aj.req(k)?
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(TensorSpec::parse)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: aj.req("file")?.as_str().unwrap().to_string(),
+                    kind: aj.req("kind")?.as_str().unwrap().to_string(),
+                    size: aj.get("size").and_then(|x| x.as_str()).map(String::from),
+                    optimizer: aj
+                        .get("optimizer")
+                        .and_then(|x| x.as_str())
+                        .map(String::from),
+                    inputs: tensors("inputs")?,
+                    outputs: tensors("outputs")?,
+                },
+            );
+        }
+
+        let mut state_specs = BTreeMap::new();
+        for (key, slots) in j.req("state_specs")?.as_obj().unwrap() {
+            let v = slots
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|s| {
+                    Ok(StateSlot {
+                        name: s.req("name")?.as_str().unwrap().to_string(),
+                        shape: s.req("shape")?.as_shape()?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            state_specs.insert(key.clone(), v);
+        }
+
+        let mut paper_dims = BTreeMap::new();
+        for (name, dj) in j.req("paper_dims")?.as_obj().unwrap() {
+            paper_dims.insert(
+                name.clone(),
+                PaperDims {
+                    vocab: dj.req("vocab")?.as_usize().unwrap(),
+                    d_model: dj.req("d_model")?.as_usize().unwrap(),
+                    n_layers: dj.req("n_layers")?.as_usize().unwrap(),
+                    d_ff: dj.req("d_ff")?.as_usize().unwrap(),
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir,
+            microbatch: j.req("microbatch")?.as_usize().unwrap(),
+            varprobe_big_factor: j.req("varprobe_big_factor")?.as_usize().unwrap(),
+            sizes,
+            artifacts,
+            state_specs,
+            paper_dims,
+            norm_bench_dims: j.req("norm_bench_dims")?.as_shape()?,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> anyhow::Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn size(&self, name: &str) -> anyhow::Result<&SizeInfo> {
+        self.sizes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!(
+                "size {name:?} not in manifest (have: {:?})",
+                self.sizes.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn state_spec(&self, optimizer: &str, size: &str) -> anyhow::Result<&Vec<StateSlot>> {
+        let key = format!("{optimizer}_{size}");
+        self.state_specs
+            .get(&key)
+            .ok_or_else(|| anyhow::anyhow!("no state spec {key:?} (artifact not lowered?)"))
+    }
+
+    /// Optimizers with an update artifact for `size`.
+    pub fn optimizers_for(&self, size: &str) -> Vec<String> {
+        self.artifacts
+            .values()
+            .filter(|a| a.kind == "update" && a.size.as_deref() == Some(size))
+            .filter_map(|a| a.optimizer.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(art_dir()).expect("run `make artifacts` first");
+        assert!(m.microbatch >= 1);
+        let s = m.size("s60m").unwrap();
+        assert_eq!(s.params.last().unwrap().name, "lm_head");
+        assert_eq!(s.params[0].kind, "embed");
+        let total: usize = s.params.iter().map(|p| p.numel()).sum();
+        assert_eq!(total, s.param_count);
+    }
+
+    #[test]
+    fn update_artifact_io_consistent() {
+        let m = Manifest::load(art_dir()).unwrap();
+        let s = m.size("s60m").unwrap();
+        let a = m.artifact("update_scale_s60m").unwrap();
+        let st = m.state_spec("scale", "s60m").unwrap();
+        assert_eq!(a.inputs.len(), 2 * s.params.len() + st.len() + 2);
+        assert_eq!(a.outputs.len(), s.params.len() + st.len());
+        // state slot for the head momentum exists
+        assert!(st.iter().any(|x| x.name == "lm_head.m"));
+    }
+
+    #[test]
+    fn optimizers_for_ablation_size() {
+        let m = Manifest::load(art_dir()).unwrap();
+        let opts = m.optimizers_for("s130m");
+        for need in ["scale", "adam", "muon", "galore", "apollo_mini"] {
+            assert!(opts.iter().any(|o| o == need), "{need}");
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! PJRT engine: loads HLO-text artifacts, compiles them once, executes
+//! them from the training hot path.
+//!
+//! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
+//! 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos, while the text
+//! parser reassigns ids. Executables are cached per artifact name; all
+//! artifacts are lowered with `return_tuple=True`, so each execution
+//! yields a single tuple buffer that [`Executable::run`] untuples back
+//! into host [`Tensor`]s.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::tensor::Tensor;
+
+pub struct Engine {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    /// Cumulative execute-call wall time, for the perf report.
+    pub exec_time: RefCell<std::time::Duration>,
+    pub exec_count: RefCell<u64>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_time: RefCell::new(std::time::Duration::ZERO),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(&path)?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let compiled_in = t0.elapsed();
+        let e = Rc::new(Executable {
+            spec,
+            exe,
+            compiled_in,
+        });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Run an artifact end to end with host tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        self.run_exe(&exe, inputs)
+    }
+
+    pub fn run_exe(&self, exe: &Executable, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        exe.check_inputs(inputs)?;
+        let lits: Vec<Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<anyhow::Result<_>>()?;
+        let t0 = Instant::now();
+        let out = exe.exe.execute::<Literal>(&lits)?;
+        let tuple = out[0][0].to_literal_sync()?;
+        *self.exec_time.borrow_mut() += t0.elapsed();
+        *self.exec_count.borrow_mut() += 1;
+        untuple(tuple, exe.spec.outputs.len())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+    pub compiled_in: std::time::Duration,
+}
+
+impl Executable {
+    fn check_inputs(&self, inputs: &[Tensor]) -> anyhow::Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape() != s.shape.as_slice() {
+                anyhow::bail!(
+                    "{}: input {:?} shape {:?} != manifest {:?}",
+                    self.spec.name,
+                    s.name,
+                    t.shape(),
+                    s.shape
+                );
+            }
+            if t.dtype() != s.dtype {
+                anyhow::bail!("{}: input {:?} dtype mismatch", self.spec.name, s.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn untuple(mut tuple: Literal, expected: usize) -> anyhow::Result<Vec<Tensor>> {
+    let parts = tuple.decompose_tuple()?;
+    if parts.len() != expected {
+        anyhow::bail!("tuple arity {} != manifest {}", parts.len(), expected);
+    }
+    parts.iter().map(Tensor::from_literal).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Engine::new(dir).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn norm_col_artifact_runs_and_matches_native() {
+        let eng = engine();
+        let d = eng.manifest.norm_bench_dims[0];
+        let name = format!("norm_col_{d}");
+        let mut rng = crate::util::rng::Pcg::new(1);
+        let x: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
+        let out = eng
+            .run(&name, &[Tensor::from_f32(&[d, d], x.clone())])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let got = out[0].f32s();
+        let want = crate::optim::colnorm::colnorm(&x, d, d);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4, "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn init_artifact_matches_manifest_shapes() {
+        let eng = engine();
+        let out = eng.run("init_s60m", &[Tensor::scalar_i32(0)]).unwrap();
+        let size = eng.manifest.size("s60m").unwrap();
+        assert_eq!(out.len(), size.params.len());
+        for (t, p) in out.iter().zip(&size.params) {
+            assert_eq!(t.shape(), p.shape.as_slice(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_and_seeded() {
+        let eng = engine();
+        let a = eng.run("init_s60m", &[Tensor::scalar_i32(5)]).unwrap();
+        let b = eng.run("init_s60m", &[Tensor::scalar_i32(5)]).unwrap();
+        let c = eng.run("init_s60m", &[Tensor::scalar_i32(6)]).unwrap();
+        // params[0] is the embedding (random); vector params are all-ones
+        assert_eq!(a[0].f32s(), b[0].f32s());
+        assert_ne!(a[0].f32s(), c[0].f32s());
+    }
+
+    #[test]
+    fn shape_mismatch_is_rejected() {
+        let eng = engine();
+        let d = eng.manifest.norm_bench_dims[0];
+        let bad = Tensor::zeros(&[d, d + 1]);
+        assert!(eng.run(&format!("norm_col_{d}"), &[bad]).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime layer: PJRT client + manifest-driven artifact execution.
+//!
+//! The only place in the crate that touches the `xla` FFI. Everything
+//! above works in host [`tensor::Tensor`]s and artifact names.
+
+pub mod artifact;
+pub mod client;
+pub mod tensor;
+
+pub use artifact::Manifest;
+pub use client::{Engine, Executable};
+pub use tensor::Tensor;

@@ -1,0 +1,192 @@
+//! Host-side tensor: a shaped `Vec<f32>`/`Vec<i32>` with conversions to
+//! and from `xla::Literal`. This is the coordinator's working currency —
+//! gradients are all-reduced here, checkpoints serialize it, analysis
+//! reads it.
+
+use xla::Literal;
+
+use super::artifact::DType;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn f32s(&self) -> &[f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn f32s_mut(&mut self) -> &mut [f32] {
+        match self {
+            Tensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32s(&self) -> &[i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Scalar extraction (0-d or 1-element tensors).
+    pub fn item_f32(&self) -> f32 {
+        let d = self.f32s();
+        assert_eq!(d.len(), 1, "item() on non-scalar");
+        d[0]
+    }
+
+    // ---- Literal conversion ----------------------------------------------
+
+    pub fn to_literal(&self) -> anyhow::Result<Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => Literal::vec1(data),
+            Tensor::I32 { data, .. } => Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &Literal) -> anyhow::Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 {
+                shape: dims,
+                data: lit.to_vec::<f32>()?,
+            }),
+            xla::ElementType::S32 => Ok(Tensor::I32 {
+                shape: dims,
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => anyhow::bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    // ---- numerics used by the coordinator ---------------------------------
+
+    pub fn l2_norm(&self) -> f64 {
+        self.f32s().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// In-place `self += other` (gradient accumulation).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        let o = other.f32s().to_vec();
+        for (a, b) in self.f32s_mut().iter_mut().zip(o) {
+            *a += b;
+        }
+    }
+
+    /// In-place scale (all-reduce averaging).
+    pub fn scale(&mut self, s: f32) {
+        for a in self.f32s_mut() {
+            *a *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32_matrix() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_i32_batch() {
+        let t = Tensor::from_i32(&[2, 4], (0..8).collect());
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn roundtrip_scalar() {
+        let t = Tensor::scalar_f32(3.5);
+        let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(back.item_f32(), 3.5);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let mut a = Tensor::from_f32(&[3], vec![1., 2., 3.]);
+        let b = Tensor::from_f32(&[3], vec![10., 20., 30.]);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.f32s(), &[5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    fn l2() {
+        let t = Tensor::from_f32(&[2], vec![3., 4.]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,150 @@
+//! Mini benchmarking harness (criterion is unavailable offline).
+//!
+//! Usage mirrors criterion closely enough for `cargo bench` targets with
+//! `harness = false`: warm up, collect wall-clock samples, report
+//! mean / p50 / p95 / min plus a derived throughput line. Sample counts
+//! adapt to the per-iteration cost so slow end-to-end benches stay fast.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for Stats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} {:>10.3} ms mean   {:>10.3} ms p50   {:>10.3} ms p95   {:>10.3} ms min   ({} samples)",
+            self.name,
+            self.mean.as_secs_f64() * 1e3,
+            self.p50.as_secs_f64() * 1e3,
+            self.p95.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.samples,
+        )
+    }
+}
+
+pub struct Bencher {
+    /// Total time budget per benchmark (warmup + sampling).
+    pub budget: Duration,
+    pub max_samples: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            budget: Duration::from_secs(3),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn with_budget(secs: f64) -> Self {
+        Bencher {
+            budget: Duration::from_secs_f64(secs),
+            ..Default::default()
+        }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // Warmup: one call always; keep warming until 10% of budget.
+        let warm_budget = self.budget / 10;
+        let t0 = Instant::now();
+        f();
+        while t0.elapsed() < warm_budget {
+            f();
+        }
+
+        let sample_budget = self.budget - t0.elapsed().min(self.budget / 2);
+        let mut samples: Vec<Duration> = Vec::new();
+        let s0 = Instant::now();
+        while s0.elapsed() < sample_budget && samples.len() < self.max_samples {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        if samples.is_empty() {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let stats = Self::summarize(name, &mut samples);
+        println!("{stats}");
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Benchmark with a derived-throughput report (items per second).
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        items_per_iter: f64,
+        f: F,
+    ) -> (Stats, f64) {
+        let stats = self.bench(name, f);
+        let thr = items_per_iter / stats.mean.as_secs_f64();
+        println!("{:<40} {:>14.0} items/s", format!("{name} [throughput]"), thr);
+        (stats, thr)
+    }
+
+    fn summarize(name: &str, samples: &mut [Duration]) -> Stats {
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        Stats {
+            name: name.to_string(),
+            samples: n,
+            mean: total / n as u32,
+            p50: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+        }
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_samples_and_orders_percentiles() {
+        let mut b = Bencher::with_budget(0.05);
+        let s = b.bench("spin", || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.samples >= 1);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut b = Bencher::with_budget(0.05);
+        let (_, thr) = b.bench_throughput("t", 100.0, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(thr > 0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (no clap in this environment).
+//!
+//! Grammar: `scale <subcommand> [positional...] [--flag] [--key value]`.
+//! `--key=value` is also accepted. Unknown flags are an error so typos
+//! fail loudly. Note the one ambiguity of this grammar: a bare `--flag`
+//! immediately followed by a positional is parsed as `--flag <value>`;
+//! positionals therefore come before options (or use `--flag=`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    out.opts
+                        .insert(rest.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&mut self, key: &str) -> Option<&str> {
+        self.known.push(key.to_string());
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&mut self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&mut self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn get_usize(&mut self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after all get()/flag() lookups: errors on unrecognized input.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        for k in self.opts.keys() {
+            if !self.known.contains(k) {
+                anyhow::bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                anyhow::bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_opts() {
+        let mut a = Args::parse(&sv(&["train", "extra", "--size", "s60m", "--steps=100", "--quiet"]))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("size"), Some("s60m"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.positional, vec!["extra"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let mut a = Args::parse(&sv(&["train", "--oops", "1"])).unwrap();
+        let _ = a.get("size");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = Args::parse(&sv(&["x"])).unwrap();
+        assert_eq!(a.get_or("opt", "scale"), "scale");
+        assert_eq!(a.get_f64("lr", 1e-3).unwrap(), 1e-3);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let mut a = Args::parse(&sv(&["x", "--lr", "abc"])).unwrap();
+        assert!(a.get_f64("lr", 0.0).is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch substrates: JSON, CLI parsing, PRNG, benchmarking, and
+//! property testing. No third-party crates beyond `xla`/`anyhow` exist in
+//! this environment (DESIGN.md §3), so these are first-class modules with
+//! their own test suites rather than dependencies.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;

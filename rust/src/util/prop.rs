@@ -1,0 +1,114 @@
+//! Mini property-testing runner (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Pcg`]; the runner executes it
+//! across many derived seeds and, on failure, reports the offending seed
+//! so the case replays deterministically. Generators are free functions
+//! over the RNG — composition is ordinary Rust.
+
+use super::rng::Pcg;
+
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` derived seeds; panic (with the seed) on the
+/// first failure. `prop` returns `Err(msg)` or panics to signal failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000_0000 + case as u64;
+        let mut rng = Pcg::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at seed {seed:#x} (case {case}): {msg}");
+        }
+    }
+}
+
+/// `check` with the default case count.
+pub fn quick<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Pcg) -> Result<(), String>,
+{
+    check(name, DEFAULT_CASES, prop)
+}
+
+// ---- common generators -----------------------------------------------------
+
+pub fn usize_in(rng: &mut Pcg, lo: usize, hi: usize) -> usize {
+    lo + rng.below((hi - lo + 1) as u32) as usize
+}
+
+pub fn f32_in(rng: &mut Pcg, lo: f32, hi: f32) -> f32 {
+    lo + rng.next_f32() * (hi - lo)
+}
+
+/// Gaussian matrix of the given shape, flattened row-major.
+pub fn matrix(rng: &mut Pcg, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+    (0..rows * cols)
+        .map(|_| scale * rng.normal() as f32)
+        .collect()
+}
+
+/// Assert helper producing the Result shape `check` wants.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn approx_eq(a: f32, b: f32, tol: f32) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+pub fn slices_close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if !approx_eq(*x, *y, tol) {
+            return Err(format!("elem {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        quick("add-commutes", |rng| {
+            let a = rng.next_u32() as u64;
+            let b = rng.next_u32() as u64;
+            ensure(a + b == b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        quick("bounds", |rng| {
+            let n = usize_in(rng, 3, 9);
+            ensure((3..=9).contains(&n), format!("n={n}"))?;
+            let x = f32_in(rng, -1.0, 1.0);
+            ensure((-1.0..=1.0).contains(&x), format!("x={x}"))?;
+            let m = matrix(rng, 2, 3, 1.0);
+            ensure(m.len() == 6, "matrix len")
+        });
+    }
+
+    #[test]
+    fn slices_close_detects_mismatch() {
+        assert!(slices_close(&[1.0, 2.0], &[1.0, 2.0], 1e-6).is_ok());
+        assert!(slices_close(&[1.0], &[1.1], 1e-6).is_err());
+        assert!(slices_close(&[1.0], &[1.0, 2.0], 1e-6).is_err());
+    }
+}

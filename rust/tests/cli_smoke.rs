@@ -1,0 +1,100 @@
+//! CLI smoke tests: drive the `scale` binary end to end as a user would.
+
+use std::process::Command;
+
+fn scale_bin() -> std::path::PathBuf {
+    // target dir is shared with the test binary's location
+    let mut p = std::env::current_exe().unwrap();
+    p.pop(); // deps/
+    p.pop(); // release or debug
+    p.push("scale");
+    p
+}
+
+fn run(args: &[&str]) -> (bool, String) {
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let out = Command::new(scale_bin())
+        .args(args)
+        .current_dir(&root)
+        .output()
+        .expect("scale binary missing — build first");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["train", "table", "figure", "memory-report", "sweep-lr"] {
+        assert!(text.contains(cmd), "missing {cmd} in help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn unknown_flag_fails() {
+    let (ok, text) = run(&["train", "--does-not-exist", "1"]);
+    assert!(!ok, "{text}");
+    assert!(text.contains("unknown option"));
+}
+
+#[test]
+fn list_shows_sizes() {
+    let (ok, text) = run(&["list"]);
+    assert!(ok, "{text}");
+    for s in ["s60m", "s130m", "s350m", "e2e"] {
+        assert!(text.contains(s), "{text}");
+    }
+}
+
+#[test]
+fn memory_report_reproduces_paper() {
+    let (ok, text) = run(&["memory-report"]);
+    assert!(ok, "{text}");
+    // the Appendix-B 7B totals, printed to 2dp
+    for v in ["13.48", "40.43", "26.95", "13.74"] {
+        assert!(text.contains(v), "missing {v} in:\n{text}");
+    }
+}
+
+#[test]
+fn ablate_momentum_runs() {
+    let (ok, text) = run(&["ablate-momentum", "--seeds", "2"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("momentum on noisy"));
+}
+
+#[test]
+fn train_and_eval_checkpoint() {
+    let ckpt = std::env::temp_dir().join(format!("scale_cli_{}.ckpt", std::process::id()));
+    let ckpt_s = ckpt.to_str().unwrap();
+    let (ok, text) = run(&[
+        "train", "--size", "s60m", "--optimizer", "scale", "--steps", "5",
+        "--log-every", "0", "--save", ckpt_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("final eval ppl"));
+    let (ok2, text2) = run(&["eval", "--load", ckpt_s, "--eval-batches", "2"]);
+    assert!(ok2, "{text2}");
+    assert!(text2.contains("step 5"));
+    std::fs::remove_file(ckpt).ok();
+}
+
+#[test]
+fn table4_is_instant_and_correct() {
+    let (ok, text) = run(&["table", "4"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("memory"));
+    assert!(text.contains("SCALE"));
+}
