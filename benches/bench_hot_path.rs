@@ -1,0 +1,255 @@
+//! Hot-path bench: per-step latency and heap allocations of the native
+//! optimizer update (colnorm + last-layer momentum + tree all-reduce),
+//! allocating baseline vs zero-copy path, at d=1024/2048.
+//!
+//!   cargo bench --bench bench_hot_path
+//!
+//! The baseline reproduces the pre-zero-copy semantics faithfully: the
+//! per-step params/state clones the old `Trainer::train_step` performed,
+//! the `to_vec` copy the old `Tensor::add_assign` made per reduce leg,
+//! and the direction buffers the allocating `colnorm`/`scale_momentum`
+//! materialize. The zero-copy path is what the trainer runs today:
+//! in-place parallel `tree_all_reduce` + `scale_momentum_ws` through a
+//! reusable `NormWorkspace`.
+//!
+//! Acceptance gates printed at the end and recorded in
+//! `BENCH_hot_path.json`: the kernel inner loop performs ZERO heap
+//! allocations per iteration, and the zero-copy step is >= 2x faster
+//! than the allocating baseline.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use scale_llm::coordinator::ddp;
+use scale_llm::optim::colnorm::{colnorm, colnorm_into, rownorm_into, sign_into, NormWorkspace};
+use scale_llm::optim::rules::scale_momentum_ws;
+use scale_llm::runtime::Tensor;
+use scale_llm::util::bench::{black_box, Bencher};
+use scale_llm::util::json::Json;
+use scale_llm::util::rng::Pcg;
+
+/// Counting allocator: every heap allocation in the process bumps the
+/// counter, so "zero allocations in the kernel inner loop" is measured,
+/// not asserted by eyeball.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// The old `Tensor::add_assign` semantics: copy the source slice, then
+/// add — one full extra pass + allocation per reduce leg.
+fn copy_add_reduce(mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    let n = shards.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (left, right) = shards.split_at_mut(i + stride);
+            for (d, s) in left[i].iter_mut().zip(right[0].iter()) {
+                let copy = s.f32s().to_vec();
+                for (a, b) in d.f32s_mut().iter_mut().zip(copy) {
+                    *a += b;
+                }
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    let mut out = shards.swap_remove(0);
+    let inv = 1.0 / n as f32;
+    for t in out.iter_mut() {
+        t.scale(inv);
+    }
+    out
+}
+
+/// The pre-workspace `scale_momentum`: EMA pass, then an allocating
+/// colnorm (norm scratch + full direction buffer), then the apply.
+fn scale_momentum_alloc(
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    beta: f32,
+) {
+    for (mi, gi) in m.iter_mut().zip(g) {
+        *mi = beta * *mi + (1.0 - beta) * gi;
+    }
+    let dir = colnorm(m, d_in, d_out);
+    for (pi, di) in p.iter_mut().zip(dir) {
+        *pi -= lr * di;
+    }
+}
+
+struct DimOutcome {
+    d: usize,
+    baseline_ms: f64,
+    fast_ms: f64,
+    speedup: f64,
+    kernel_allocs: u64,
+    fast_step_allocs_per_iter: f64,
+}
+
+fn bench_dim(bench: &mut Bencher, d: usize, shards: usize) -> DimOutcome {
+    let mut rng = Pcg::new(11);
+    let n = d * d;
+    let gen = |rng: &mut Pcg| -> Vec<f32> { (0..n).map(|_| 0.1 * rng.normal() as f32).collect() };
+
+    // the "model": one lm_head-shaped matrix + momentum, plus per-shard
+    // gradients as the fwd/bwd legs would hand them over
+    let p0 = gen(&mut rng);
+    let m0 = vec![0.0f32; n];
+    let shard_grads: Vec<Vec<Tensor>> = (0..shards)
+        .map(|_| vec![Tensor::from_f32(&[d, d], gen(&mut rng))])
+        .collect();
+    let (lr, beta) = (1e-2f32, 0.9f32);
+
+    // ---- allocating baseline: old add_assign copies, old per-step
+    // params/state clones, allocating colnorm direction buffer
+    let mut p = p0.clone();
+    let mut m = m0.clone();
+    let base_stats = bench.bench(&format!("baseline alloc step d={d}"), || {
+        // the old grad_step cloned the full param set per shard just to
+        // assemble executable inputs
+        for _ in 0..shards {
+            black_box(p.clone());
+        }
+        let shards_in = shard_grads.clone();
+        let reduced = copy_add_reduce(shards_in);
+        let mut p_next = p.clone(); // the old trainer's params.clone()
+        let mut m_next = m.clone(); // ... and state.clone()
+        scale_momentum_alloc(&mut p_next, &mut m_next, reduced[0].f32s(), d, d, lr, beta);
+        p = p_next;
+        m = m_next;
+        black_box(p.len());
+    });
+
+    // ---- zero-copy path: in-place parallel reduce + workspace rule
+    let mut p = p0.clone();
+    let mut m = m0.clone();
+    let mut ws = NormWorkspace::with_capacity(d);
+    // warm the workspace so steady-state is measured
+    scale_momentum_ws(&mut p, &mut m, shard_grads[0][0].f32s(), d, d, 0.0, beta, &mut ws);
+    let before_fast = allocs();
+    let fast_stats = bench.bench(&format!("zero-copy step d={d}"), || {
+        let shards_in = shard_grads.clone(); // stands in for fresh fwd/bwd outputs
+        let reduced = ddp::tree_all_reduce(shards_in);
+        scale_momentum_ws(&mut p, &mut m, reduced[0].f32s(), d, d, lr, beta, &mut ws);
+        black_box(p.len());
+    });
+    let fast_iters = fast_stats.samples.max(1) as f64;
+    let fast_step_allocs_per_iter = (allocs() - before_fast) as f64 / fast_iters;
+
+    // ---- kernel-inner-loop allocation audit: with a warm workspace and
+    // caller-owned buffers, the normalization/update kernels must not
+    // touch the heap at all
+    let g = shard_grads[0][0].f32s();
+    let mut out = vec![0.0f32; n];
+    colnorm_into(g, d, d, &mut ws, &mut out); // warm `out`'s page table too
+    let before_kernel = allocs();
+    for _ in 0..10 {
+        colnorm_into(g, d, d, &mut ws, &mut out);
+        rownorm_into(g, d, d, &mut out);
+        sign_into(g, &mut out);
+        scale_momentum_ws(&mut p, &mut m, g, d, d, lr, beta, &mut ws);
+    }
+    let kernel_allocs = allocs() - before_kernel;
+    black_box(out.len());
+
+    let speedup = base_stats.mean.as_secs_f64() / fast_stats.mean.as_secs_f64().max(1e-12);
+    println!(
+        "d={d}: baseline {:.3} ms, zero-copy {:.3} ms -> {speedup:.2}x; \
+         kernel allocs over 10 iters: {kernel_allocs}",
+        base_stats.mean_ms(),
+        fast_stats.mean_ms(),
+    );
+    DimOutcome {
+        d,
+        baseline_ms: base_stats.mean_ms(),
+        fast_ms: fast_stats.mean_ms(),
+        speedup,
+        kernel_allocs,
+        fast_step_allocs_per_iter,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let shards = 4;
+    println!("== optimizer hot path: allocating baseline vs zero-copy ({shards} shards) ==");
+    let mut bench = Bencher::with_budget(2.0);
+    let outcomes: Vec<DimOutcome> = [1024usize, 2048]
+        .iter()
+        .map(|&d| bench_dim(&mut bench, d, shards))
+        .collect();
+
+    let mut extra: Vec<(&str, Json)> = Vec::new();
+    let mut dims = Vec::new();
+    for o in &outcomes {
+        dims.push(Json::obj(vec![
+            ("d", Json::num(o.d as f64)),
+            ("baseline_ms", Json::num(o.baseline_ms)),
+            ("zero_copy_ms", Json::num(o.fast_ms)),
+            ("speedup", Json::num(o.speedup)),
+            ("kernel_allocs_10_iters", Json::num(o.kernel_allocs as f64)),
+            (
+                "full_step_allocs_per_iter",
+                Json::num(o.fast_step_allocs_per_iter),
+            ),
+        ]));
+    }
+    extra.push(("dims", Json::Arr(dims)));
+    let min_speedup = outcomes.iter().map(|o| o.speedup).fold(f64::INFINITY, f64::min);
+    let kernel_alloc_total: u64 = outcomes.iter().map(|o| o.kernel_allocs).sum();
+    extra.push(("min_speedup", Json::num(min_speedup)));
+    extra.push(("kernel_allocs_total", Json::num(kernel_alloc_total as f64)));
+    bench.write_json("BENCH_hot_path.json", "hot_path", extra)?;
+
+    println!("\n== acceptance gates ==");
+    println!(
+        "  kernel inner loop allocation-free: {} (total {kernel_alloc_total})",
+        if kernel_alloc_total == 0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "  zero-copy >= 2x over allocating baseline: {} (min {min_speedup:.2}x)",
+        if min_speedup >= 2.0 { "PASS" } else { "FAIL" }
+    );
+    // the allocation gate is deterministic — enforce it with the exit
+    // code so a reintroduced per-iteration allocation fails loudly. The
+    // speedup gate is timing-dependent (CI machines vary), so it is
+    // recorded in BENCH_hot_path.json for trajectory review instead of
+    // failing the process on a noisy box.
+    anyhow::ensure!(
+        kernel_alloc_total == 0,
+        "kernel inner loop performed {kernel_alloc_total} heap allocations (expected 0)"
+    );
+    Ok(())
+}

@@ -6,33 +6,66 @@
 //! Here (1-core CPU PJRT, manifest dims): the same ordering must hold;
 //! exact SVD is unavailable (LAPACK custom-calls) — NS is the paper's
 //! production path anyway.
+//!
+//! The native section runs both API tiers — allocating wrappers and the
+//! zero-copy `_into` kernels — and always executes, even without the
+//! PJRT artifacts; results land in `BENCH_norms.json`.
 
 use scale_llm::harness::tables::table1;
-use scale_llm::optim::colnorm;
+use scale_llm::optim::colnorm::{self, NormWorkspace};
 use scale_llm::runtime::Engine;
 use scale_llm::util::bench::{black_box, Bencher};
 use scale_llm::util::rng::Pcg;
 
 fn main() -> anyhow::Result<()> {
-    let engine = Engine::new("artifacts")?;
-    println!("{}", table1(&engine, 2.0)?);
-
-    // native-Rust reference normalizations at the same dims, to separate
-    // PJRT dispatch overhead from the arithmetic itself
+    // native-Rust reference normalizations, to separate PJRT dispatch
+    // overhead from the arithmetic itself. Dims come from the manifest
+    // when artifacts exist so the native and PJRT sections compare at
+    // identical sizes; otherwise the paper's d=1024/2048.
+    let engine = Engine::new("artifacts").ok();
+    let dims: Vec<usize> = engine
+        .as_ref()
+        .map(|e| e.manifest.norm_bench_dims.clone())
+        .unwrap_or_else(|| vec![1024, 2048]);
     println!("== native Rust normalization (no PJRT dispatch) ==");
     let mut b = Bencher::with_budget(1.0);
-    for &d in &engine.manifest.norm_bench_dims {
+    for &d in &dims {
         let mut rng = Pcg::new(3);
         let g: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
         b.bench(&format!("native col d={d}"), || {
             black_box(colnorm::colnorm(&g, d, d));
         });
+        let mut ws = NormWorkspace::with_capacity(d);
+        let mut out = vec![0.0f32; d * d];
+        b.bench(&format!("native col_into d={d}"), || {
+            colnorm::colnorm_into(&g, d, d, &mut ws, &mut out);
+            black_box(out.len());
+        });
         b.bench(&format!("native row d={d}"), || {
             black_box(colnorm::rownorm(&g, d, d));
+        });
+        b.bench(&format!("native row_into d={d}"), || {
+            colnorm::rownorm_into(&g, d, d, &mut out);
+            black_box(out.len());
         });
         b.bench(&format!("native sign d={d}"), || {
             black_box(colnorm::sign(&g));
         });
+        b.bench(&format!("native sign_into d={d}"), || {
+            colnorm::sign_into(&g, &mut out);
+            black_box(out.len());
+        });
+    }
+    b.write_json("BENCH_norms.json", "norms", vec![])?;
+
+    // PJRT-lowered kernels (Table 1) — needs `make artifacts` + a real
+    // PJRT backend (--features xla)
+    match engine
+        .ok_or_else(|| anyhow::anyhow!("artifacts unavailable"))
+        .and_then(|engine| table1(&engine, 2.0))
+    {
+        Ok(t) => println!("{t}"),
+        Err(e) => println!("\nskipping PJRT Table 1 section: {e}"),
     }
     Ok(())
 }

@@ -29,21 +29,26 @@ fn main() -> anyhow::Result<()> {
         black_box(batcher.next_batch(0, 4, 64));
     });
 
-    println!("\n== gradient plumbing (s130m-sized tensor set) ==");
-    let engine = Engine::new("artifacts")?;
-    let info = engine.manifest.size("s130m")?.clone();
+    println!("\n== gradient plumbing (s130m-like tensor set) ==");
+    // shapes mirror the s130m family closely enough for plumbing costs;
+    // no manifest needed so this section always runs
+    let shapes: Vec<Vec<usize>> = vec![
+        vec![1024, 512],
+        vec![512, 512],
+        vec![512, 2048],
+        vec![2048, 512],
+        vec![512, 1024],
+        vec![512],
+    ];
     let mut rng = Pcg::new(5);
-    let grads: Vec<Tensor> = info
-        .params
+    let grads: Vec<Tensor> = shapes
         .iter()
-        .map(|p| {
-            Tensor::from_f32(
-                &p.shape,
-                (0..p.numel()).map(|_| rng.normal() as f32).collect(),
-            )
+        .map(|s| {
+            let n: usize = s.iter().product();
+            Tensor::from_f32(s, (0..n).map(|_| rng.normal() as f32).collect())
         })
         .collect();
-    let total_mb = 4.0 * info.param_count as f64 / 1e6;
+    let total_mb = 4.0 * grads.iter().map(|t| t.numel()).sum::<usize>() as f64 / 1e6;
     b.bench(&format!("tree all-reduce x4 ({total_mb:.1} MB)"), || {
         let shards = vec![grads.clone(), grads.clone(), grads.clone(), grads.clone()];
         black_box(tree_all_reduce(shards));
@@ -55,12 +60,18 @@ fn main() -> anyhow::Result<()> {
     });
 
     println!("\n== PJRT dispatch floor ==");
-    let d = engine.manifest.norm_bench_dims[0];
-    let exe = engine.load(&format!("norm_sign_{d}"))?;
-    let x = Tensor::zeros(&[d, d]);
-    b.bench(&format!("execute norm_sign_{d} (dispatch floor)"), || {
-        engine.run_exe(&exe, std::slice::from_ref(&x)).unwrap();
+    let floor = Engine::new("artifacts").and_then(|engine| {
+        let d = engine.manifest.norm_bench_dims[0];
+        let exe = engine.load(&format!("norm_sign_{d}"))?;
+        let x = Tensor::zeros(&[d, d]);
+        b.bench(&format!("execute norm_sign_{d} (dispatch floor)"), || {
+            engine.run_exe(&exe, std::slice::from_ref(&x)).unwrap();
+        });
+        Ok(())
     });
+    if let Err(e) = floor {
+        println!("skipping (artifacts/PJRT unavailable): {e}");
+    }
 
     println!("\ncoordinator overhead target: each row above << one fwd_bwd step (see bench_throughput)");
     Ok(())

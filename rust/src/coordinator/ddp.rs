@@ -8,15 +8,120 @@
 //! rounding every run (unlike a data-race reduction), which is what makes
 //! the DDP(1-shard, accumulated) == DDP(n-shard) integration test exact
 //! up to associativity-reordering tolerance.
+//!
+//! Parallelism: per *parameter*, not per tree round. Each parameter's
+//! shard column is an independent reduction, so columns are distributed
+//! over `std::thread::scope` workers (large tensors dominate, so columns
+//! are interleaved round-robin to balance). Within a column the pairwise
+//! tree order is exactly the sequential order — results are bit-identical
+//! to the single-threaded reduction regardless of thread count or
+//! scheduling, which the determinism tests below pin down.
 
 use crate::runtime::Tensor;
 
+/// Tensors smaller than this (total f32 elements per parameter column)
+/// reduce inline; threading tiny vectors costs more than it saves.
+const PAR_THRESHOLD: usize = 1 << 14;
+
+/// Reduce one parameter's shard column in place with pairwise tree
+/// combination; the mean lands in `col[0]`.
+fn tree_reduce_column(col: &mut [Tensor]) {
+    let n = col.len();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let (left, right) = col.split_at_mut(i + stride);
+            left[i].add_assign(&right[0]);
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    col[0].scale(1.0 / n as f32);
+}
+
 /// Mean-reduce `shards[k][p]` over k (shards) for every parameter p,
 /// using pairwise tree combination. Consumes the shard gradients.
-pub fn tree_all_reduce(mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+/// Large-parameter columns run concurrently across scoped threads.
+pub fn tree_all_reduce(shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    assert!(!shards.is_empty());
+    let n_shards = shards.len();
+    let n_params = shards[0].len();
+    for s in &shards {
+        assert_eq!(s.len(), n_params, "ragged shard gradient lists");
+    }
+
+    // transpose to per-parameter columns (moves, no tensor copies)
+    let mut columns: Vec<Vec<Tensor>> = (0..n_params)
+        .map(|_| Vec::with_capacity(n_shards))
+        .collect();
+    for shard in shards {
+        for (p, t) in shard.into_iter().enumerate() {
+            columns[p].push(t);
+        }
+    }
+
+    let big_elems: usize = columns
+        .iter()
+        .filter(|c| c[0].numel() >= PAR_THRESHOLD)
+        .map(|c| c[0].numel())
+        .sum();
+    let workers = if n_shards > 1 && big_elems >= PAR_THRESHOLD {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(n_params)
+    } else {
+        1
+    };
+
+    if workers > 1 {
+        // round-robin interleave so every worker gets a mix of large and
+        // small tensors (parameter lists are typically sorted by layer,
+        // with the huge embed/head tensors at the ends)
+        std::thread::scope(|scope| {
+            let mut slots: Vec<Vec<&mut Vec<Tensor>>> = (0..workers).map(|_| Vec::new()).collect();
+            for (p, col) in columns.iter_mut().enumerate() {
+                slots[p % workers].push(col);
+            }
+            for slot in slots {
+                scope.spawn(move || {
+                    for col in slot {
+                        tree_reduce_column(col);
+                    }
+                });
+            }
+        });
+    } else {
+        for col in columns.iter_mut() {
+            tree_reduce_column(col);
+        }
+    }
+
+    columns.into_iter().map(|mut c| c.swap_remove(0)).collect()
+}
+
+/// Sequential baseline (reference semantics for tests).
+pub fn sequential_mean(shards: &[Vec<Tensor>]) -> Vec<Tensor> {
+    let n = shards.len();
+    let mut out = shards[0].clone();
+    for s in &shards[1..] {
+        for (d, x) in out.iter_mut().zip(s.iter()) {
+            d.add_assign(x);
+        }
+    }
+    let inv = 1.0 / n as f32;
+    for t in out.iter_mut() {
+        t.scale(inv);
+    }
+    out
+}
+
+/// The original single-threaded tree reduction, kept as the bit-level
+/// reference the parallel implementation must reproduce exactly.
+pub fn tree_all_reduce_sequential(mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
     assert!(!shards.is_empty());
     let n = shards.len();
-    // tree rounds: combine stride-separated partners
     let mut stride = 1;
     while stride < n {
         let mut i = 0;
@@ -29,26 +134,9 @@ pub fn tree_all_reduce(mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
             }
             i += 2 * stride;
         }
-        // drop the consumed partners' storage eagerly
         stride *= 2;
     }
     let mut out = shards.swap_remove(0);
-    let inv = 1.0 / n as f32;
-    for t in out.iter_mut() {
-        t.scale(inv);
-    }
-    out
-}
-
-/// Sequential baseline (reference semantics for tests).
-pub fn sequential_mean(shards: &[Vec<Tensor>]) -> Vec<Tensor> {
-    let n = shards.len();
-    let mut out = shards[0].clone();
-    for s in &shards[1..] {
-        for (d, x) in out.iter_mut().zip(s.iter()) {
-            d.add_assign(x);
-        }
-    }
     let inv = 1.0 / n as f32;
     for t in out.iter_mut() {
         t.scale(inv);
@@ -87,6 +175,23 @@ mod tests {
     }
 
     #[test]
+    fn parallel_bit_identical_to_sequential_tree() {
+        // large tensors force the threaded path; results must match the
+        // single-threaded tree reduction bit for bit
+        prop::check("tree-allreduce-parallel-bits", 8, |rng| {
+            let k = prop::usize_in(rng, 2, 8);
+            let shapes = vec![vec![128, 150], vec![33], vec![64, 300], vec![5, 5]];
+            let shards: Vec<Vec<Tensor>> = (0..k).map(|_| shard(rng, &shapes)).collect();
+            let want = tree_all_reduce_sequential(shards.clone());
+            let got = tree_all_reduce(shards);
+            for (p, (w, g)) in want.iter().zip(&got).enumerate() {
+                prop::ensure(w.f32s() == g.f32s(), format!("param {p} differs"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn single_shard_is_identity() {
         let t = vec![Tensor::from_f32(&[2], vec![1.0, -2.0])];
         let out = tree_all_reduce(vec![t.clone()]);
@@ -103,7 +208,8 @@ mod tests {
     #[test]
     fn deterministic() {
         let mut rng = crate::util::rng::Pcg::new(4);
-        let shapes = vec![vec![5, 5]];
+        // above the parallel threshold so the threaded path is what's pinned
+        let shapes = vec![vec![130, 130]];
         let shards: Vec<Vec<Tensor>> = (0..7).map(|_| shard(&mut rng, &shapes)).collect();
         let a = tree_all_reduce(shards.clone());
         let b = tree_all_reduce(shards);

@@ -2,24 +2,28 @@
 //! pretraining loop.
 //!
 //! Per step:
-//!   1. each DDP shard draws its microbatch and runs `fwd_bwd_<size>`
-//!      (loss + per-parameter gradients);
-//!   2. shard gradients are tree-all-reduced to the global mean;
+//!   1. each DDP shard draws its microbatch from a pre-tokenized token
+//!      ring (BPE runs once per ring segment, not once per batch) and
+//!      runs `fwd_bwd_<size>` (loss + per-parameter gradients) — shards
+//!      run concurrently on scoped threads;
+//!   2. shard gradients are tree-all-reduced to the global mean
+//!      (parallel across parameters, bit-stable);
 //!   3. `update_<opt>_<size>` applies one optimizer step
 //!      (params, state, grads, lr, step) -> (params', state').
 //!
 //! Python never runs here; the loop is pure Rust + PJRT executions.
+//! The hot path is clone-free: executable inputs are assembled by
+//! reference (`Engine::run_exe_refs`), and the returned output tensors
+//! *become* the new params/state by move — nothing is copied per step.
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::ddp;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::schedule::Schedule;
 use crate::data::{self, Corpus, Tokenizer};
-#[allow(unused_imports)]
-use crate::data::Batcher;
 use crate::runtime::{Engine, Executable, Tensor};
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 #[derive(Debug, Clone)]
 pub struct TrainOptions {
@@ -60,6 +64,63 @@ impl Default for TrainOptions {
 /// Shard id offset reserved for the held-out eval stream.
 const EVAL_SHARD: usize = 1 << 20;
 
+/// Microbatches per token-ring segment: one corpus-chunk generation +
+/// BPE encode serves this many `next` calls.
+const RING_BATCHES: usize = 8;
+
+/// Pre-tokenized token ring for one DDP shard. Segment content is a pure
+/// function of (shard, segment index) — independent of call history — so
+/// checkpoint resume reproduces the exact byte stream and the DDP
+/// determinism tests stay bit-exact. (The standalone `data::Batcher`
+/// remains the pipeline form for external callers.)
+#[derive(Debug, Clone)]
+struct TokenRing {
+    tokens: Vec<i32>,
+    /// segment currently cached; `usize::MAX` = empty
+    segment: usize,
+}
+
+impl TokenRing {
+    fn new() -> TokenRing {
+        TokenRing {
+            tokens: Vec::new(),
+            segment: usize::MAX,
+        }
+    }
+
+    /// The `[b, w]` batch at `stream_pos` for `shard`, refilling the ring
+    /// (one corpus chunk + one BPE encode per RING_BATCHES batches).
+    fn batch(
+        &mut self,
+        corpus: &Corpus,
+        tokenizer: &Tokenizer,
+        shard: usize,
+        stream_pos: usize,
+        b: usize,
+        w: usize,
+    ) -> Tensor {
+        let need = b * w;
+        let seg = stream_pos / RING_BATCHES;
+        let seg_tokens = need * RING_BATCHES;
+        if self.segment != seg || self.tokens.len() != seg_tokens {
+            // generate enough characters: ~4 chars/token for BPE text
+            let chunk = seg_tokens * 8 + 1024;
+            let sub = ((shard as u64) << 24) | (seg * RING_BATCHES) as u64;
+            let text = corpus.text(chunk, sub);
+            self.tokens.clear();
+            self.tokens
+                .extend(tokenizer.encode(&text).into_iter().map(|x| x as i32));
+            self.tokens.truncate(seg_tokens);
+            while self.tokens.len() < seg_tokens {
+                self.tokens.push(0);
+            }
+            self.segment = seg;
+        }
+        let off = (stream_pos % RING_BATCHES) * need;
+        Tensor::from_i32(&[b, w], self.tokens[off..off + need].to_vec())
+    }
+}
+
 /// Native parameter init mirroring model.init_params' scheme (ones for
 /// norm gains, N(0, 0.02) embeddings, 1/sqrt(d_in) fan-in matrices).
 /// Seeds are independent per parameter; exact agreement with the jax
@@ -92,19 +153,20 @@ pub struct Trainer<'e> {
     pub engine: &'e Engine,
     pub opts: TrainOptions,
     pub schedule: Schedule,
-    fwd: Rc<Executable>,
-    upd: Rc<Executable>,
-    evl: Rc<Executable>,
+    fwd: Arc<Executable>,
+    upd: Arc<Executable>,
+    evl: Arc<Executable>,
     pub params: Vec<Tensor>,
     pub state: Vec<Tensor>,
     pub step: usize,
     pub metrics: Metrics,
-    corpus: std::sync::Arc<Corpus>,
-    tokenizer: std::sync::Arc<Tokenizer>,
+    corpus: Arc<Corpus>,
+    tokenizer: Arc<Tokenizer>,
     n_params: usize,
     pub seq_len: usize,
     pub microbatch: usize,
     shard_positions: Vec<usize>,
+    rings: Vec<TokenRing>,
 }
 
 impl<'e> Trainer<'e> {
@@ -130,6 +192,7 @@ impl<'e> Trainer<'e> {
         let schedule = opts
             .schedule
             .unwrap_or_else(|| Schedule::paper_default(opts.base_lr, opts.steps));
+        let shards = opts.shards.max(1);
 
         Ok(Trainer {
             engine,
@@ -146,76 +209,122 @@ impl<'e> Trainer<'e> {
             tokenizer,
             seq_len: size.seq_len,
             microbatch: engine.manifest.microbatch,
-            shard_positions: vec![0; opts.shards.max(1)],
+            shard_positions: vec![0; shards],
+            rings: (0..shards).map(|_| TokenRing::new()).collect(),
             opts,
         })
     }
 
-    /// Draw the next microbatch for a (possibly virtual) shard id.
-    /// Stream position is tracked per shard so the Trainer owns all
-    /// mutability (see [`Batcher`] for the standalone pipeline form).
-    fn next_batch(&mut self, shard: usize) -> Tensor {
-        let b = self.microbatch;
-        let w = self.seq_len + 1;
-        let need_tokens = b * w;
-        // generate enough characters: ~4 chars/token for BPE-compressed text
-        let chunk = need_tokens * 8 + 1024;
-        let stream_pos = if shard >= EVAL_SHARD {
-            self.step // eval batches keyed by current step
-        } else {
-            self.shard_positions[shard]
-        };
-        let sub = ((shard as u64) << 24) | stream_pos as u64;
-        let text = self.corpus.text(chunk, sub);
-        let mut ids: Vec<i32> = self
-            .tokenizer
-            .encode(&text)
-            .into_iter()
-            .map(|x| x as i32)
-            .collect();
-        ids.truncate(need_tokens);
-        while ids.len() < need_tokens {
-            ids.push(0);
-        }
-        if shard < EVAL_SHARD {
-            self.shard_positions[shard] += 1;
-        }
-        Tensor::from_i32(&[b, w], ids)
-    }
-
-    /// One fwd/bwd on a given batch: (loss, grads).
+    /// One fwd/bwd on a given batch: (loss, grads). Inputs are assembled
+    /// by reference — parameters are never cloned.
     pub fn grad_step(&self, batch: &Tensor) -> anyhow::Result<(f64, Vec<Tensor>)> {
-        let mut inputs = self.params.clone();
-        inputs.push(batch.clone());
-        let mut out = self.engine.run_exe(&self.fwd, &inputs)?;
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(batch);
+        let mut out = self.engine.run_exe_refs(&self.fwd, &inputs)?;
         let loss = out.remove(0).item_f32() as f64;
         Ok((loss, out))
     }
 
-    /// One full coordinated training step (fwd/bwd per shard, all-reduce,
-    /// optimizer update). Returns the mean shard loss.
+    /// One full coordinated training step (concurrent fwd/bwd per shard,
+    /// parallel all-reduce, optimizer update). Returns the mean shard
+    /// loss. Per-step heap traffic is limited to the executables' own
+    /// outputs — no parameter/state/gradient tensor is cloned.
     pub fn train_step(&mut self) -> anyhow::Result<f64> {
         self.step += 1;
-        let shards = self.opts.shards.max(1);
-        let mut shard_grads = Vec::with_capacity(shards);
-        let mut loss_sum = 0.0;
-        for s in 0..shards {
-            let batch = self.next_batch(s);
-            let (loss, grads) = self.grad_step(&batch)?;
-            loss_sum += loss;
-            shard_grads.push(grads);
+        // shard count is fixed at construction (rings + stream positions
+        // are sized then); opts.shards is pub, so don't silently trust a
+        // post-construction mutation
+        let shards = self.rings.len();
+        debug_assert_eq!(shards, self.opts.shards.max(1), "opts.shards changed after new()");
+
+        // 1) per-shard microbatches from the token rings. Threads are
+        //    spawned only when a ring actually needs a refill (the
+        //    BPE-encode leg); warm steps — RING_BATCHES-1 of every
+        //    RING_BATCHES — are slice copies where spawn overhead would
+        //    dominate
+        let batches: Vec<Tensor> = {
+            let corpus = &self.corpus;
+            let tokenizer = &self.tokenizer;
+            let positions = &self.shard_positions;
+            let rings = &mut self.rings;
+            let (b, w) = (self.microbatch, self.seq_len + 1);
+            let any_refill = rings
+                .iter()
+                .zip(positions.iter())
+                .any(|(r, &pos)| r.segment != pos / RING_BATCHES);
+            if shards > 1 && any_refill {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = rings
+                        .iter_mut()
+                        .take(shards)
+                        .enumerate()
+                        .map(|(s, ring)| {
+                            let pos = positions[s];
+                            scope.spawn(move || ring.batch(corpus, tokenizer, s, pos, b, w))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("batch thread panicked"))
+                        .collect()
+                })
+            } else {
+                rings
+                    .iter_mut()
+                    .take(shards)
+                    .enumerate()
+                    .map(|(s, ring)| ring.batch(corpus, tokenizer, s, positions[s], b, w))
+                    .collect()
+            }
+        };
+        for pos in self.shard_positions.iter_mut().take(shards) {
+            *pos += 1;
         }
+
+        // 2) concurrent fwd/bwd per shard; results land in shard order so
+        //    the downstream reduction is bit-stable across runs
+        let mut loss_sum = 0.0;
+        let shard_grads: Vec<Vec<Tensor>> = {
+            let this: &Trainer = &*self;
+            let results: Vec<anyhow::Result<(f64, Vec<Tensor>)>> = if shards > 1 {
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = batches
+                        .iter()
+                        .map(|batch| scope.spawn(move || this.grad_step(batch)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard thread panicked"))
+                        .collect()
+                })
+            } else {
+                vec![this.grad_step(&batches[0])]
+            };
+            let mut grads = Vec::with_capacity(shards);
+            for r in results {
+                let (loss, g) = r?;
+                loss_sum += loss;
+                grads.push(g);
+            }
+            grads
+        };
+
+        // 3) parallel tree all-reduce + optimizer update with borrowed
+        //    inputs; outputs become the new params/state by move
         let grads = ddp::tree_all_reduce(shard_grads);
         let lr = self.schedule.lr(self.step);
-
-        let mut inputs =
+        let lr_t = Tensor::scalar_f32(lr as f32);
+        let step_t = Tensor::scalar_f32(self.step as f32);
+        let mut inputs: Vec<&Tensor> =
             Vec::with_capacity(self.n_params + self.state.len() + grads.len() + 2);
-        inputs.extend(self.params.iter().cloned());
-        inputs.extend(self.state.iter().cloned());
-        inputs.extend(grads);
-        inputs.push(Tensor::scalar_f32(lr as f32));
-        inputs.push(Tensor::scalar_f32(self.step as f32));
-        let mut out = self.engine.run_exe(&self.upd, &inputs)?;
+        inputs.extend(self.params.iter());
+        inputs.extend(self.state.iter());
+        inputs.extend(grads.iter());
+        inputs.push(&lr_t);
+        inputs.push(&step_t);
+        let mut out = self.engine.run_exe_refs(&self.upd, &inputs)?;
+        drop(inputs);
         let rest = out.split_off(self.n_params);
         self.params = out;
         self.state = rest;
@@ -252,9 +361,10 @@ impl<'e> Trainer<'e> {
                 }
                 Tensor::from_i32(&[b, w], ids)
             };
-            let mut inputs = self.params.clone();
-            inputs.push(batch);
-            let out = self.engine.run_exe(&self.evl, &inputs)?;
+            let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 1);
+            inputs.extend(self.params.iter());
+            inputs.push(&batch);
+            let out = self.engine.run_exe_refs(&self.evl, &inputs)?;
             sum += out[0].item_f32() as f64;
         }
         let loss = sum / n as f64;
@@ -324,7 +434,9 @@ impl<'e> Trainer<'e> {
         self.params = ckpt.tensors[..n].iter().map(|(_, t)| t.clone()).collect();
         self.state = ckpt.tensors[n..].iter().map(|(_, t)| t.clone()).collect();
         self.step = ckpt.step as usize;
-        // keep the data streams aligned with the restored step
+        // keep the data streams aligned with the restored step; ring
+        // segments are pure functions of the stream position, so no
+        // invalidation is needed beyond the position itself
         for p in self.shard_positions.iter_mut() {
             *p = self.step;
         }

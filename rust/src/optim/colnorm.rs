@@ -4,14 +4,60 @@
 //! kernel's HLO artifact, (2) the noisy-quadratic theory simulator
 //! ([`super::sim`]), (3) property tests of the normalization invariants.
 //! Matrices are row-major `(d_in, d_out)`, matching the JAX layout.
+//!
+//! Two API tiers:
+//! * allocation-free `_into` / `_in_place` kernels over a caller-owned
+//!   [`NormWorkspace`] — the training hot path (see `optim::rules` and
+//!   `benches/bench_hot_path.rs`); every float operation is sequenced
+//!   identically to the allocating forms, so results are bit-identical;
+//! * the original allocating signatures (`colnorm`, `rownorm`, `sign`),
+//!   kept as thin wrappers for tests, analysis, and one-shot callers.
 
 pub const EPS: f32 = 1e-30;
 
-/// Column-wise normalization: each column (stride `d_out`) scaled to unit
-/// L2 norm; zero columns stay zero.
-pub fn colnorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+/// Reusable per-column norm scratch. One workspace per (thread, kernel
+/// call site); `d_out` may vary call to call — the buffer is resized
+/// (never reallocated once it has seen the largest `d_out`).
+#[derive(Debug, Clone, Default)]
+pub struct NormWorkspace {
+    norms: Vec<f32>,
+}
+
+impl NormWorkspace {
+    pub fn new() -> NormWorkspace {
+        NormWorkspace { norms: Vec::new() }
+    }
+
+    /// Pre-size for a known `d_out` so the first call is allocation-free.
+    pub fn with_capacity(d_out: usize) -> NormWorkspace {
+        NormWorkspace {
+            norms: Vec::with_capacity(d_out),
+        }
+    }
+
+    /// The norms computed by the last `col_norms_into` call.
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    fn reset(&mut self, d_out: usize) {
+        self.norms.clear();
+        self.norms.resize(d_out, 0.0);
+    }
+}
+
+/// Per-column L2 norms with the `EPS` floor (the kernel denominator of
+/// eq. 6), accumulated row-major into the workspace. Allocation-free
+/// once the workspace has capacity `d_out`.
+pub fn col_norms_into<'w>(
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    ws: &'w mut NormWorkspace,
+) -> &'w [f32] {
     assert_eq!(g.len(), d_in * d_out);
-    let mut norms = vec![0.0f32; d_out];
+    ws.reset(d_out);
+    let norms = &mut ws.norms;
     for r in 0..d_in {
         let row = &g[r * d_out..(r + 1) * d_out];
         for (n, &x) in norms.iter_mut().zip(row) {
@@ -21,19 +67,39 @@ pub fn colnorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
     for n in norms.iter_mut() {
         *n = n.sqrt().max(EPS);
     }
-    let mut out = vec![0.0f32; g.len()];
+    norms
+}
+
+/// Column-wise normalization into a caller-provided buffer. Two passes
+/// (per-column norms need the full column before any entry can be
+/// scaled), zero heap allocations.
+pub fn colnorm_into(g: &[f32], d_in: usize, d_out: usize, ws: &mut NormWorkspace, out: &mut [f32]) {
+    assert_eq!(out.len(), g.len());
+    col_norms_into(g, d_in, d_out, ws);
+    let norms = &ws.norms;
     for r in 0..d_in {
         for c in 0..d_out {
             out[r * d_out + c] = g[r * d_out + c] / norms[c];
         }
     }
-    out
 }
 
-/// Row-wise normalization (unit L2 rows).
-pub fn rownorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+/// Column-wise normalization of `g` in place.
+pub fn colnorm_in_place(g: &mut [f32], d_in: usize, d_out: usize, ws: &mut NormWorkspace) {
+    col_norms_into(g, d_in, d_out, ws);
+    let norms = &ws.norms;
+    for r in 0..d_in {
+        for c in 0..d_out {
+            g[r * d_out + c] /= norms[c];
+        }
+    }
+}
+
+/// Row-wise normalization into a caller-provided buffer: one fused
+/// streaming pass per row (norm, then scale), zero heap allocations.
+pub fn rownorm_into(g: &[f32], d_in: usize, d_out: usize, out: &mut [f32]) {
     assert_eq!(g.len(), d_in * d_out);
-    let mut out = vec![0.0f32; g.len()];
+    assert_eq!(out.len(), g.len());
     for r in 0..d_in {
         let row = &g[r * d_out..(r + 1) * d_out];
         let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt().max(EPS);
@@ -41,25 +107,50 @@ pub fn rownorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
             *o = x / norm;
         }
     }
+}
+
+/// Sign normalization (eq. 4) into a caller-provided buffer — single
+/// fused pass, zero heap allocations.
+pub fn sign_into(g: &[f32], out: &mut [f32]) {
+    assert_eq!(out.len(), g.len());
+    for (o, &x) in out.iter_mut().zip(g) {
+        *o = if x > 0.0 {
+            1.0
+        } else if x < 0.0 {
+            -1.0
+        } else {
+            0.0
+        };
+    }
+}
+
+/// Column-wise normalization: each column (stride `d_out`) scaled to unit
+/// L2 norm; zero columns stay zero. Allocating wrapper over
+/// [`colnorm_into`].
+pub fn colnorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut ws = NormWorkspace::with_capacity(d_out);
+    let mut out = vec![0.0f32; g.len()];
+    colnorm_into(g, d_in, d_out, &mut ws, &mut out);
     out
 }
 
-/// Sign normalization (eq. 4).
+/// Row-wise normalization (unit L2 rows). Allocating wrapper over
+/// [`rownorm_into`].
+pub fn rownorm(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.len()];
+    rownorm_into(g, d_in, d_out, &mut out);
+    out
+}
+
+/// Sign normalization (eq. 4). Allocating wrapper over [`sign_into`].
 pub fn sign(g: &[f32]) -> Vec<f32> {
-    g.iter()
-        .map(|&x| {
-            if x > 0.0 {
-                1.0
-            } else if x < 0.0 {
-                -1.0
-            } else {
-                0.0
-            }
-        })
-        .collect()
+    let mut out = vec![0.0f32; g.len()];
+    sign_into(g, &mut out);
+    out
 }
 
 /// Per-column L2 norms — the Fig. 10 statistic (LM-head column norms).
+/// No `EPS` floor: this is an observed statistic, not a denominator.
 pub fn column_norms(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
     let mut norms = vec![0.0f32; d_out];
     for r in 0..d_in {
@@ -78,6 +169,28 @@ pub fn column_norms(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
 mod tests {
     use super::*;
     use crate::util::prop::{self, ensure};
+
+    /// The original allocating algorithm, kept verbatim as the reference
+    /// the `_into` kernels must match bit for bit.
+    fn colnorm_reference(g: &[f32], d_in: usize, d_out: usize) -> Vec<f32> {
+        let mut norms = vec![0.0f32; d_out];
+        for r in 0..d_in {
+            let row = &g[r * d_out..(r + 1) * d_out];
+            for (n, &x) in norms.iter_mut().zip(row) {
+                *n += x * x;
+            }
+        }
+        for n in norms.iter_mut() {
+            *n = n.sqrt().max(EPS);
+        }
+        let mut out = vec![0.0f32; g.len()];
+        for r in 0..d_in {
+            for c in 0..d_out {
+                out[r * d_out + c] = g[r * d_out + c] / norms[c];
+            }
+        }
+        out
+    }
 
     #[test]
     fn unit_columns() {
@@ -163,5 +276,72 @@ mod tests {
                 "entry out of bounds",
             )
         });
+    }
+
+    // ---- in-place / workspace kernel parity ------------------------------
+
+    #[test]
+    fn into_kernels_bit_identical_to_reference() {
+        // One shared workspace across every case: reuse must not leak
+        // state between calls of different shapes.
+        let mut ws = NormWorkspace::new();
+        prop::quick("colnorm-into-bit-identical", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 24), prop::usize_in(rng, 1, 24));
+            let g = prop::matrix(rng, m, n, prop::f32_in(rng, 0.01, 10.0));
+            let want = colnorm_reference(&g, m, n);
+            let mut out = vec![0.0f32; g.len()];
+            colnorm_into(&g, m, n, &mut ws, &mut out);
+            ensure(out == want, "colnorm_into differs from reference")?;
+            let mut in_place = g.clone();
+            colnorm_in_place(&mut in_place, m, n, &mut ws);
+            ensure(in_place == want, "colnorm_in_place differs from reference")?;
+            let mut row_out = vec![0.0f32; g.len()];
+            rownorm_into(&g, m, n, &mut row_out);
+            ensure(row_out == rownorm(&g, m, n), "rownorm_into differs")?;
+            let mut sign_out = vec![0.0f32; g.len()];
+            sign_into(&g, &mut sign_out);
+            ensure(sign_out == sign(&g), "sign_into differs")
+        });
+    }
+
+    #[test]
+    fn into_kernel_edge_cases_match_reference() {
+        let mut ws = NormWorkspace::new();
+        // zero column
+        let g = vec![0.0, 1.0, 0.0, 2.0];
+        let mut out = vec![0.0f32; 4];
+        colnorm_into(&g, 2, 2, &mut ws, &mut out);
+        assert_eq!(out, colnorm_reference(&g, 2, 2));
+        assert_eq!(out[0], 0.0);
+        assert_eq!(out[2], 0.0);
+        // huge gradients stay bounded and match the reference bits
+        let huge = vec![1e18f32, -3e18, 2e18, 5e17, -1e18, 4e18];
+        let mut out = vec![0.0f32; 6];
+        colnorm_into(&huge, 2, 3, &mut ws, &mut out);
+        assert_eq!(out, colnorm_reference(&huge, 2, 3));
+        assert!(out.iter().all(|x| x.is_finite() && x.abs() <= 1.0 + 1e-5));
+        // all-zero matrix: EPS floor keeps everything finite zero
+        let z = vec![0.0f32; 6];
+        let mut out = vec![9.0f32; 6];
+        colnorm_into(&z, 3, 2, &mut ws, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn workspace_reuse_across_shapes() {
+        let mut ws = NormWorkspace::with_capacity(8);
+        let a = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out_a = vec![0.0f32; 6];
+        colnorm_into(&a, 2, 3, &mut ws, &mut out_a);
+        assert_eq!(ws.norms().len(), 3);
+        let b = vec![2.0f32, 0.0, 0.0, 2.0];
+        let mut out_b = vec![0.0f32; 4];
+        colnorm_into(&b, 2, 2, &mut ws, &mut out_b);
+        assert_eq!(ws.norms().len(), 2);
+        assert_eq!(out_b, colnorm_reference(&b, 2, 2));
+        // shrinking then growing again must not carry stale accumulators
+        let mut out_a2 = vec![0.0f32; 6];
+        colnorm_into(&a, 2, 3, &mut ws, &mut out_a2);
+        assert_eq!(out_a, out_a2);
     }
 }

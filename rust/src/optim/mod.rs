@@ -1,6 +1,36 @@
 //! Native Rust optimizer substrate: mirrors of the L1/L2 update math
 //! (parity oracles for the AOT artifacts) and the noisy-quadratic
 //! simulator that validates the Theorem 2.1 momentum-placement story.
+//!
+//! # Zero-copy hot path: buffer ownership
+//!
+//! The optimizer inner loop is allocation-free by construction. Ownership
+//! is layered so no buffer is ever created inside a per-step kernel:
+//!
+//! * **[`colnorm::NormWorkspace`]** owns the per-column norm scratch
+//!   (`d_out` floats). It lives with the *call site* — one per thread per
+//!   kernel user — and is resized, never reallocated, as shapes vary.
+//!   `colnorm::col_norms_into` / `colnorm_into` / `colnorm_in_place`
+//!   write through it; `rownorm_into` / `sign_into` are single-pass and
+//!   need no scratch at all.
+//! * **[`rules`]** fuses the normalization denominator into the parameter
+//!   update (`scale_plain_ws` / `scale_momentum_ws`): parameters and
+//!   momentum are mutated in place and *no direction buffer exists* —
+//!   the division happens inside the subtract. The slice primitives
+//!   `ema_` / `axpy_` are the shared in-place building blocks.
+//! * **[`sim`]** allocates its gradient scratch once per run (outside the
+//!   step loop) and drives the same `ema_`/`axpy_` kernels.
+//! * One level up, `coordinator::ddp::tree_all_reduce` reduces shard
+//!   gradients by mutating shard 0's buffers in place (parallel across
+//!   parameters), and `coordinator::Trainer` feeds executables by
+//!   reference (`Engine::run_exe_refs`) — the old per-step
+//!   params/state clones are gone.
+//!
+//! Every `_into`/`_ws` kernel sequences its float operations identically
+//! to the allocating wrapper it replaced, so results are bit-identical
+//! (property-tested in `colnorm::tests` and `rules::tests`), and
+//! `benches/bench_hot_path.rs` asserts the inner loop performs zero heap
+//! allocations per iteration.
 
 pub mod colnorm;
 pub mod rules;

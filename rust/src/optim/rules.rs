@@ -4,8 +4,15 @@
 //! serve as an independent second implementation for parity tests against
 //! the AOT artifacts — the same role ref.py plays for the Pallas kernels,
 //! one layer down.
+//!
+//! The SCALE rules come in two forms: `_ws` variants that fuse the
+//! column-norm denominator into the parameter update through a
+//! caller-owned [`NormWorkspace`] (zero heap allocations, no direction
+//! buffer at all — the division happens inside the subtract), and the
+//! original allocating signatures as thin wrappers. Both produce
+//! bit-identical results: the float operations are sequenced the same.
 
-use super::colnorm::colnorm;
+use super::colnorm::{col_norms_into, NormWorkspace};
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AdamHp {
@@ -21,6 +28,21 @@ impl Default for AdamHp {
             b2: 0.999,
             eps: 1e-8,
         }
+    }
+}
+
+/// In-place EMA over slices: `m = beta*m + (1-beta)*g`. Shared by the
+/// momentum rules and the noisy-quadratic simulator.
+pub fn ema_(m: &mut [f32], g: &[f32], beta: f32) {
+    for (mi, gi) in m.iter_mut().zip(g) {
+        *mi = beta * *mi + (1.0 - beta) * gi;
+    }
+}
+
+/// In-place axpy over slices: `y += alpha * x`.
+pub fn axpy_(y: &mut [f32], alpha: f32, x: &[f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
     }
 }
 
@@ -60,15 +82,62 @@ pub fn adam(
     }
 }
 
-/// SCALE stateless rule: `p -= lr * C(g)` over a (d_in, d_out) matrix.
-pub fn scale_plain(p: &mut [f32], g: &[f32], d_in: usize, d_out: usize, lr: f32) {
-    let dir = colnorm(g, d_in, d_out);
-    for (pi, di) in p.iter_mut().zip(dir) {
-        *pi -= lr * di;
+/// SCALE stateless rule, allocation-free: `p -= lr * C(g)` with the
+/// column norms held in `ws` and the normalize fused into the subtract —
+/// no direction buffer is ever materialized.
+pub fn scale_plain_ws(
+    p: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    ws: &mut NormWorkspace,
+) {
+    assert_eq!(p.len(), d_in * d_out);
+    col_norms_into(g, d_in, d_out, ws);
+    let norms = ws.norms();
+    for r in 0..d_in {
+        for c in 0..d_out {
+            let i = r * d_out + c;
+            p[i] -= lr * (g[i] / norms[c]);
+        }
     }
 }
 
+/// SCALE momentum rule, allocation-free: EMA into `m` in place, then the
+/// column-normalized apply fused against `m` through the workspace.
+pub fn scale_momentum_ws(
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    beta: f32,
+    ws: &mut NormWorkspace,
+) {
+    assert_eq!(p.len(), d_in * d_out);
+    assert_eq!(m.len(), d_in * d_out);
+    ema_(m, g, beta);
+    col_norms_into(m, d_in, d_out, ws);
+    let norms = ws.norms();
+    for r in 0..d_in {
+        for c in 0..d_out {
+            let i = r * d_out + c;
+            p[i] -= lr * (m[i] / norms[c]);
+        }
+    }
+}
+
+/// SCALE stateless rule: `p -= lr * C(g)` over a (d_in, d_out) matrix.
+/// Allocating wrapper over [`scale_plain_ws`].
+pub fn scale_plain(p: &mut [f32], g: &[f32], d_in: usize, d_out: usize, lr: f32) {
+    let mut ws = NormWorkspace::with_capacity(d_out);
+    scale_plain_ws(p, g, d_in, d_out, lr, &mut ws);
+}
+
 /// SCALE momentum rule (last layer): EMA then column-normalized apply.
+/// Allocating wrapper over [`scale_momentum_ws`].
 pub fn scale_momentum(
     p: &mut [f32],
     m: &mut [f32],
@@ -78,18 +147,14 @@ pub fn scale_momentum(
     lr: f32,
     beta: f32,
 ) {
-    for (mi, gi) in m.iter_mut().zip(g) {
-        *mi = beta * *mi + (1.0 - beta) * gi;
-    }
-    let dir = colnorm(m, d_in, d_out);
-    for (pi, di) in p.iter_mut().zip(dir) {
-        *pi -= lr * di;
-    }
+    let mut ws = NormWorkspace::with_capacity(d_out);
+    scale_momentum_ws(p, m, g, d_in, d_out, lr, beta, &mut ws);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::optim::colnorm::colnorm;
     use crate::util::prop::{self, ensure};
 
     #[test]
@@ -164,5 +229,70 @@ mod tests {
         for mi in &m {
             assert!((mi - 0.1).abs() < 1e-6);
         }
+    }
+
+    // ---- workspace-rule parity -------------------------------------------
+
+    /// Reference forms written against the allocating colnorm directly,
+    /// exactly as the pre-workspace implementation computed them.
+    fn scale_plain_reference(p: &mut [f32], g: &[f32], d_in: usize, d_out: usize, lr: f32) {
+        let dir = colnorm(g, d_in, d_out);
+        for (pi, di) in p.iter_mut().zip(dir) {
+            *pi -= lr * di;
+        }
+    }
+
+    fn scale_momentum_reference(
+        p: &mut [f32],
+        m: &mut [f32],
+        g: &[f32],
+        d_in: usize,
+        d_out: usize,
+        lr: f32,
+        beta: f32,
+    ) {
+        for (mi, gi) in m.iter_mut().zip(g) {
+            *mi = beta * *mi + (1.0 - beta) * gi;
+        }
+        let dir = colnorm(m, d_in, d_out);
+        for (pi, di) in p.iter_mut().zip(dir) {
+            *pi -= lr * di;
+        }
+    }
+
+    #[test]
+    fn ws_rules_bit_identical_to_reference() {
+        let mut ws = NormWorkspace::new();
+        prop::quick("scale-ws-bit-identical", |rng| {
+            let (di, dn) = (prop::usize_in(rng, 1, 16), prop::usize_in(rng, 1, 16));
+            let g = prop::matrix(rng, di, dn, prop::f32_in(rng, 0.1, 5.0));
+            let p0 = prop::matrix(rng, di, dn, 1.0);
+            let lr = prop::f32_in(rng, 1e-4, 0.5);
+            let beta = prop::f32_in(rng, 0.0, 0.99);
+
+            let mut p_ref = p0.clone();
+            scale_plain_reference(&mut p_ref, &g, di, dn, lr);
+            let mut p_ws = p0.clone();
+            scale_plain_ws(&mut p_ws, &g, di, dn, lr, &mut ws);
+            ensure(p_ws == p_ref, "scale_plain_ws differs from reference")?;
+
+            let m0 = prop::matrix(rng, di, dn, 0.3);
+            let (mut p_ref, mut m_ref) = (p0.clone(), m0.clone());
+            scale_momentum_reference(&mut p_ref, &mut m_ref, &g, di, dn, lr, beta);
+            let (mut p_ws, mut m_ws) = (p0.clone(), m0.clone());
+            scale_momentum_ws(&mut p_ws, &mut m_ws, &g, di, dn, lr, beta, &mut ws);
+            ensure(m_ws == m_ref, "momentum state differs")?;
+            ensure(p_ws == p_ref, "scale_momentum_ws differs from reference")
+        });
+    }
+
+    #[test]
+    fn slice_primitives() {
+        let mut m = vec![1.0f32, -2.0];
+        ema_(&mut m, &[3.0, 4.0], 0.5);
+        assert_eq!(m, vec![2.0, 1.0]);
+        let mut y = vec![1.0f32, 1.0];
+        axpy_(&mut y, 2.0, &[10.0, -10.0]);
+        assert_eq!(y, vec![21.0, -19.0]);
     }
 }

@@ -14,6 +14,7 @@
 //! The `scale ablate-momentum` bench and the property tests below check
 //! exactly that shape.
 
+use crate::optim::rules::{axpy_, ema_};
 use crate::util::rng::Pcg;
 
 #[derive(Debug, Clone)]
@@ -64,25 +65,31 @@ impl QuadraticSim {
         let tail_start = ((1.0 - self.tail) * self.steps as f64) as usize;
         let mut acc = vec![0.0f64; self.layers.len()];
         let mut count = 0usize;
+        // per-layer gradient scratch, allocated once and reused every step
+        // (the step loop below is allocation-free — same discipline as the
+        // optim::rules workspace kernels it shares ema_/axpy_ with)
+        let mut gbufs: Vec<Vec<f32>> = self.layers.iter().map(|l| vec![0.0; l.dim]).collect();
 
         for t in 0..self.steps {
             for (li, layer) in self.layers.iter().enumerate() {
                 let x = &mut xs[li];
                 let m = &mut ms[li];
+                let gb = &mut gbufs[li];
+                for i in 0..layer.dim {
+                    gb[i] = layer.curvature * x[i] + layer.sigma * rng.normal() as f32;
+                }
+                let dir: &[f32] = if layer.beta > 0.0 {
+                    ema_(m, gb, layer.beta);
+                    m
+                } else {
+                    gb
+                };
                 let mut err = 0.0f64;
                 for i in 0..layer.dim {
-                    let true_g = layer.curvature * x[i];
-                    let g = true_g + layer.sigma * rng.normal() as f32;
-                    let dir = if layer.beta > 0.0 {
-                        m[i] = layer.beta * m[i] + (1.0 - layer.beta) * g;
-                        m[i]
-                    } else {
-                        g
-                    };
-                    let d = (dir - true_g) as f64;
+                    let d = (dir[i] - layer.curvature * x[i]) as f64;
                     err += d * d;
-                    x[i] -= self.lr * dir;
                 }
+                axpy_(x, -self.lr, dir);
                 if t >= tail_start {
                     acc[li] += err;
                 }

@@ -1,0 +1,222 @@
+//! Backend facade: the one seam between the coordinator and the PJRT FFI.
+//!
+//! With the `xla` cargo feature, this re-exports the real `xla` crate
+//! (xla-rs); the rest of the runtime is written against exactly the
+//! symbols listed here. Without it (the default — this build environment
+//! is offline and cannot fetch the FFI crate), a native stub stands in:
+//! [`Literal`] is a fully functional host-side implementation (shape +
+//! typed storage, so tensor round-trips and every pure-Rust code path
+//! work), while compilation/execution entry points return a clear
+//! runtime error instructing the user to rebuild with `--features xla`.
+
+#[cfg(feature = "xla")]
+pub use xla::{
+    ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::fmt;
+    use std::path::Path;
+
+    /// Error type matching the `xla::Error` role: printable, `?`-friendly.
+    #[derive(Debug)]
+    pub struct BackendError(pub String);
+
+    impl fmt::Display for BackendError {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str(&self.0)
+        }
+    }
+
+    impl std::error::Error for BackendError {}
+
+    fn unavailable(what: &str) -> BackendError {
+        BackendError(format!(
+            "{what} requires the PJRT runtime; rebuild with `--features xla` \
+             (and the xla-rs dependency) to execute artifacts"
+        ))
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum ElementType {
+        F32,
+        S32,
+        Pred,
+    }
+
+    // `pub` only for trait-signature visibility; the module is private.
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Storage {
+        F32(Vec<f32>),
+        I32(Vec<i32>),
+        Tuple(Vec<Literal>),
+    }
+
+    /// Host-side literal: shaped, typed storage mirroring `xla::Literal`'s
+    /// API subset used by [`crate::runtime::tensor::Tensor`].
+    #[derive(Debug, Clone, PartialEq)]
+    pub struct Literal {
+        dims: Vec<i64>,
+        storage: Storage,
+    }
+
+    /// Shape view mirroring `xla::ArrayShape`.
+    #[derive(Debug, Clone)]
+    pub struct ArrayShape {
+        dims: Vec<i64>,
+        ty: ElementType,
+    }
+
+    impl ArrayShape {
+        pub fn dims(&self) -> &[i64] {
+            &self.dims
+        }
+
+        pub fn ty(&self) -> ElementType {
+            self.ty
+        }
+    }
+
+    /// Sealed helper for the generic `vec1`/`to_vec` entry points.
+    pub trait NativeType: Copy + Sized {
+        fn make(v: &[Self]) -> Storage;
+        fn extract(lit: &Literal) -> Result<Vec<Self>, BackendError>;
+    }
+
+    impl NativeType for f32 {
+        fn make(v: &[f32]) -> Storage {
+            Storage::F32(v.to_vec())
+        }
+
+        fn extract(lit: &Literal) -> Result<Vec<f32>, BackendError> {
+            match &lit.storage {
+                Storage::F32(d) => Ok(d.clone()),
+                _ => Err(BackendError("literal is not f32".into())),
+            }
+        }
+    }
+
+    impl NativeType for i32 {
+        fn make(v: &[i32]) -> Storage {
+            Storage::I32(v.to_vec())
+        }
+
+        fn extract(lit: &Literal) -> Result<Vec<i32>, BackendError> {
+            match &lit.storage {
+                Storage::I32(d) => Ok(d.clone()),
+                _ => Err(BackendError("literal is not i32".into())),
+            }
+        }
+    }
+
+    impl Literal {
+        pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+            Literal {
+                dims: vec![v.len() as i64],
+                storage: T::make(v),
+            }
+        }
+
+        pub fn reshape(&self, dims: &[i64]) -> Result<Literal, BackendError> {
+            let numel: i64 = dims.iter().product();
+            let have: i64 = self.dims.iter().product();
+            if numel != have {
+                return Err(BackendError(format!(
+                    "reshape {:?} -> {dims:?} changes element count",
+                    self.dims
+                )));
+            }
+            Ok(Literal {
+                dims: dims.to_vec(),
+                storage: self.storage.clone(),
+            })
+        }
+
+        pub fn array_shape(&self) -> Result<ArrayShape, BackendError> {
+            let ty = match &self.storage {
+                Storage::F32(_) => ElementType::F32,
+                Storage::I32(_) => ElementType::S32,
+                Storage::Tuple(_) => {
+                    return Err(BackendError("tuple literal has no array shape".into()))
+                }
+            };
+            Ok(ArrayShape {
+                dims: self.dims.clone(),
+                ty,
+            })
+        }
+
+        pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, BackendError> {
+            T::extract(self)
+        }
+
+        pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>, BackendError> {
+            match std::mem::replace(&mut self.storage, Storage::Tuple(Vec::new())) {
+                Storage::Tuple(parts) => Ok(parts),
+                other => {
+                    self.storage = other;
+                    Err(BackendError("literal is not a tuple".into()))
+                }
+            }
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto, BackendError> {
+            Err(unavailable("parsing HLO text"))
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+            XlaComputation
+        }
+    }
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<PjRtClient, BackendError> {
+            Err(unavailable("creating a PJRT client"))
+        }
+
+        pub fn compile(
+            &self,
+            _comp: &XlaComputation,
+        ) -> Result<PjRtLoadedExecutable, BackendError> {
+            Err(unavailable("compiling an artifact"))
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub".to_string()
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, BackendError> {
+            Err(unavailable("executing an artifact"))
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, BackendError> {
+            Err(unavailable("device-to-host transfer"))
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{
+    ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};

@@ -4,6 +4,7 @@
 //! above works in host [`tensor::Tensor`]s and artifact names.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod tensor;
 

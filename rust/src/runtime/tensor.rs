@@ -3,7 +3,7 @@
 //! gradients are all-reduced here, checkpoints serialize it, analysis
 //! reads it.
 
-use xla::Literal;
+use super::backend::{ElementType, Literal};
 
 use super::artifact::DType;
 
@@ -114,11 +114,11 @@ impl Tensor {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         match shape.ty() {
-            xla::ElementType::F32 => Ok(Tensor::F32 {
+            ElementType::F32 => Ok(Tensor::F32 {
                 shape: dims,
                 data: lit.to_vec::<f32>()?,
             }),
-            xla::ElementType::S32 => Ok(Tensor::I32 {
+            ElementType::S32 => Ok(Tensor::I32 {
                 shape: dims,
                 data: lit.to_vec::<i32>()?,
             }),
@@ -132,11 +132,16 @@ impl Tensor {
         self.f32s().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
-    /// In-place `self += other` (gradient accumulation).
+    /// In-place `self += other` (gradient accumulation). Borrows the
+    /// source slice directly — no intermediate copy (this runs once per
+    /// parameter per tree-reduce round, so the copy was pure waste).
     pub fn add_assign(&mut self, other: &Tensor) {
         assert_eq!(self.shape(), other.shape());
-        let o = other.f32s().to_vec();
-        for (a, b) in self.f32s_mut().iter_mut().zip(o) {
+        let (dst, src) = match (self, other) {
+            (Tensor::F32 { data: a, .. }, Tensor::F32 { data: b, .. }) => (a, b),
+            _ => panic!("add_assign on non-f32 tensors"),
+        };
+        for (a, b) in dst.iter_mut().zip(src) {
             *a += b;
         }
     }
@@ -145,6 +150,42 @@ impl Tensor {
     pub fn scale(&mut self, s: f32) {
         for a in self.f32s_mut() {
             *a *= s;
+        }
+    }
+
+    /// In-place `self += alpha * x` (the BLAS axpy).
+    pub fn axpy(&mut self, alpha: f32, x: &Tensor) {
+        assert_eq!(self.shape(), x.shape());
+        let (dst, src) = match (self, x) {
+            (Tensor::F32 { data: a, .. }, Tensor::F32 { data: b, .. }) => (a, b),
+            _ => panic!("axpy on non-f32 tensors"),
+        };
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a += alpha * b;
+        }
+    }
+
+    /// In-place EMA: `self = beta*self + (1-beta)*x` (eq. 7 momentum).
+    pub fn ema(&mut self, beta: f32, x: &Tensor) {
+        assert_eq!(self.shape(), x.shape());
+        let (dst, src) = match (self, x) {
+            (Tensor::F32 { data: a, .. }, Tensor::F32 { data: b, .. }) => (a, b),
+            _ => panic!("ema on non-f32 tensors"),
+        };
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a = beta * *a + (1.0 - beta) * b;
+        }
+    }
+
+    /// In-place `self = scale*self + other` (fused scale-and-accumulate).
+    pub fn mul_add(&mut self, scale: f32, other: &Tensor) {
+        assert_eq!(self.shape(), other.shape());
+        let (dst, src) = match (self, other) {
+            (Tensor::F32 { data: a, .. }, Tensor::F32 { data: b, .. }) => (a, b),
+            _ => panic!("mul_add on non-f32 tensors"),
+        };
+        for (a, b) in dst.iter_mut().zip(src) {
+            *a = scale * *a + b;
         }
     }
 }
@@ -188,5 +229,32 @@ mod tests {
     fn l2() {
         let t = Tensor::from_f32(&[2], vec![3., 4.]);
         assert!((t.l2_norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn axpy_matches_manual() {
+        let mut a = Tensor::from_f32(&[3], vec![1., 2., 3.]);
+        let x = Tensor::from_f32(&[3], vec![10., 20., 30.]);
+        a.axpy(0.5, &x);
+        assert_eq!(a.f32s(), &[6.0, 12.0, 18.0]);
+    }
+
+    #[test]
+    fn ema_matches_manual() {
+        let mut m = Tensor::from_f32(&[2], vec![1.0, -1.0]);
+        let g = Tensor::from_f32(&[2], vec![3.0, 5.0]);
+        m.ema(0.9, &g);
+        let want = [0.9 * 1.0 + 0.1 * 3.0, 0.9 * -1.0 + 0.1 * 5.0];
+        for (a, b) in m.f32s().iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mul_add_matches_manual() {
+        let mut a = Tensor::from_f32(&[2], vec![2.0, 4.0]);
+        let b = Tensor::from_f32(&[2], vec![1.0, 1.0]);
+        a.mul_add(0.25, &b);
+        assert_eq!(a.f32s(), &[1.5, 2.0]);
     }
 }

@@ -4,8 +4,14 @@
 //! `harness = false`: warm up, collect wall-clock samples, report
 //! mean / p50 / p95 / min plus a derived throughput line. Sample counts
 //! adapt to the per-iteration cost so slow end-to-end benches stay fast.
+//!
+//! Besides the human tables, results serialize to JSON
+//! ([`Bencher::write_json`] -> `BENCH_<name>.json`) so the perf
+//! trajectory is machine-diffable across PRs.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -20,6 +26,17 @@ pub struct Stats {
 impl Stats {
     pub fn mean_ms(&self) -> f64 {
         self.mean.as_secs_f64() * 1e3
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("samples", Json::num(self.samples as f64)),
+            ("mean_ms", Json::num(self.mean.as_secs_f64() * 1e3)),
+            ("p50_ms", Json::num(self.p50.as_secs_f64() * 1e3)),
+            ("p95_ms", Json::num(self.p95.as_secs_f64() * 1e3)),
+            ("min_ms", Json::num(self.min.as_secs_f64() * 1e3)),
+        ])
     }
 }
 
@@ -105,6 +122,34 @@ impl Bencher {
         (stats, thr)
     }
 
+    /// All collected results as a JSON document: `{"bench": <label>,
+    /// "results": [...], "extra": {...}}`. `extra` carries bench-specific
+    /// scalars (speedups, allocation counts) alongside the timing rows.
+    pub fn to_json(&self, label: &str, extra: Vec<(&str, Json)>) -> Json {
+        Json::obj(vec![
+            ("bench", Json::str(label)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|s| s.to_json()).collect()),
+            ),
+            ("extra", Json::obj(extra)),
+        ])
+    }
+
+    /// Write the JSON document next to the human tables; path convention
+    /// is `BENCH_<name>.json` in the working directory.
+    pub fn write_json(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        label: &str,
+        extra: Vec<(&str, Json)>,
+    ) -> anyhow::Result<()> {
+        let doc = self.to_json(label, extra);
+        std::fs::write(&path, doc.to_string())?;
+        println!("bench json -> {}", path.as_ref().display());
+        Ok(())
+    }
+
     fn summarize(name: &str, samples: &mut [Duration]) -> Stats {
         samples.sort();
         let n = samples.len();
@@ -146,5 +191,38 @@ mod tests {
             black_box((0..100).sum::<u64>());
         });
         assert!(thr > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrips_results() {
+        let mut b = Bencher::with_budget(0.05);
+        b.bench("spin", || {
+            black_box((0..100).sum::<u64>());
+        });
+        let doc = b.to_json("unit", vec![("speedup", crate::util::json::Json::num(2.0))]);
+        let text = doc.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str(), Some("unit"));
+        let results = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("spin"));
+        assert!(results[0].get("mean_ms").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            back.get("extra").unwrap().get("speedup").unwrap().as_f64(),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn write_json_creates_file() {
+        let mut b = Bencher::with_budget(0.05);
+        b.bench("w", || {
+            black_box(1 + 1);
+        });
+        let p = std::env::temp_dir().join(format!("BENCH_test_{}.json", std::process::id()));
+        b.write_json(&p, "unit", vec![]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert!(crate::util::json::parse(&text).is_ok());
+        std::fs::remove_file(p).ok();
     }
 }

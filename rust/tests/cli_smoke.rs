@@ -26,6 +26,30 @@ fn run(args: &[&str]) -> (bool, String) {
     (out.status.success(), text)
 }
 
+/// Manifest-only subcommands (`list`, `memory-report`, `table 4`) need
+/// `make artifacts` but no PJRT backend — the Engine degrades to a
+/// manifest-only view when the client is unavailable.
+fn artifacts_available() -> bool {
+    let ok = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping CLI smoke test (needs `make artifacts`)");
+    }
+    ok
+}
+
+/// Training additionally executes artifacts, which needs the real PJRT
+/// runtime (`--features xla`).
+fn runtime_available() -> bool {
+    let ok = artifacts_available() && cfg!(feature = "xla");
+    if !ok {
+        eprintln!("skipping CLI smoke test (needs `make artifacts` + --features xla)");
+    }
+    ok
+}
+
 #[test]
 fn help_lists_subcommands() {
     let (ok, text) = run(&["help"]);
@@ -51,6 +75,9 @@ fn unknown_flag_fails() {
 
 #[test]
 fn list_shows_sizes() {
+    if !artifacts_available() {
+        return;
+    }
     let (ok, text) = run(&["list"]);
     assert!(ok, "{text}");
     for s in ["s60m", "s130m", "s350m", "e2e"] {
@@ -60,6 +87,9 @@ fn list_shows_sizes() {
 
 #[test]
 fn memory_report_reproduces_paper() {
+    if !artifacts_available() {
+        return;
+    }
     let (ok, text) = run(&["memory-report"]);
     assert!(ok, "{text}");
     // the Appendix-B 7B totals, printed to 2dp
@@ -77,6 +107,9 @@ fn ablate_momentum_runs() {
 
 #[test]
 fn train_and_eval_checkpoint() {
+    if !runtime_available() {
+        return;
+    }
     let ckpt = std::env::temp_dir().join(format!("scale_cli_{}.ckpt", std::process::id()));
     let ckpt_s = ckpt.to_str().unwrap();
     let (ok, text) = run(&[
@@ -93,6 +126,9 @@ fn train_and_eval_checkpoint() {
 
 #[test]
 fn table4_is_instant_and_correct() {
+    if !artifacts_available() {
+        return;
+    }
     let (ok, text) = run(&["table", "4"]);
     assert!(ok, "{text}");
     assert!(text.contains("memory"));
