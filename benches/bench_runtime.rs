@@ -58,6 +58,13 @@ fn main() -> anyhow::Result<()> {
             black_box(g.to_literal().unwrap());
         }
     });
+    b.bench("tensor -> literal view (borrowed)", || {
+        // the run_exe_refs input path: on the stub backend this aliases
+        // the tensor storage instead of copying it
+        for g in &grads {
+            black_box(g.as_literal_ref().unwrap());
+        }
+    });
 
     println!("\n== PJRT dispatch floor ==");
     let floor = Engine::new("artifacts").and_then(|engine| {
@@ -73,6 +80,8 @@ fn main() -> anyhow::Result<()> {
         println!("skipping (artifacts/PJRT unavailable): {e}");
     }
 
-    println!("\ncoordinator overhead target: each row above << one fwd_bwd step (see bench_throughput)");
+    println!(
+        "\ncoordinator overhead target: each row above << one fwd_bwd step (see bench_throughput)"
+    );
     Ok(())
 }

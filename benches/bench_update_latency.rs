@@ -40,13 +40,18 @@ fn run(engine: &Engine) -> anyhow::Result<()> {
                 )
             })
             .collect();
-        let mut inputs = params.clone();
-        inputs.extend(state);
-        inputs.extend(grads);
-        inputs.push(Tensor::scalar_f32(1e-3));
-        inputs.push(Tensor::scalar_f32(2.0)); // non-refresh step for GaLore
+        // assemble the update inputs by reference, exactly as the
+        // trainer's hot path does — nothing is cloned per iteration
+        let lr_t = Tensor::scalar_f32(1e-3);
+        let step_t = Tensor::scalar_f32(2.0); // non-refresh step for GaLore
+        let mut inputs: Vec<&Tensor> = Vec::new();
+        inputs.extend(params.iter());
+        inputs.extend(state.iter());
+        inputs.extend(grads.iter());
+        inputs.push(&lr_t);
+        inputs.push(&step_t);
         let stats = bench.bench(&format!("update {opt}"), || {
-            engine.run_exe(&exe, &inputs).unwrap();
+            engine.run_exe_refs(&exe, &inputs).unwrap();
         });
         results.push((opt, stats.mean_ms()));
     }

@@ -7,7 +7,7 @@
 //!   cargo run --release --example optimizer_faceoff [steps]
 
 use scale_llm::analysis::tables::{opt_label, Table};
-use scale_llm::harness::{run_zoo, ppl_cell};
+use scale_llm::harness::{ppl_cell, run_zoo};
 use scale_llm::memory::estimator::{measured_state_bytes, MemoryModel};
 use scale_llm::runtime::Engine;
 

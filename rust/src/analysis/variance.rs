@@ -40,12 +40,16 @@ impl VarianceSeries {
 
 /// Probe the trainer's current parameters every `every` steps while
 /// training for `steps` steps; returns the per-layer series.
+///
+/// Probe executions assemble their inputs by reference
+/// (`Engine::run_exe_refs`) — the parameter set is never cloned per
+/// probe, matching the trainer's own hot path.
 pub fn run_probed_training(
     tr: &mut Trainer,
     steps: usize,
     every: usize,
 ) -> anyhow::Result<VarianceSeries> {
-    let probe_name = format!("varprobe_{}", tr.opts.size);
+    let probe = tr.engine.load(&format!("varprobe_{}", tr.opts.size))?;
     let size = tr.engine.manifest.size(&tr.opts.size)?.clone();
     let big_factor = tr.engine.manifest.varprobe_big_factor;
     let mut series = VarianceSeries {
@@ -59,12 +63,13 @@ pub fn run_probed_training(
             continue;
         }
         // draw small + big probe batches from a dedicated stream
-        let small = probe_batch(tr, tr.microbatch, 0x9a)?;
-        let big = probe_batch(tr, tr.microbatch * big_factor, 0x9b)?;
-        let mut inputs = tr.params.clone();
-        inputs.push(small);
-        inputs.push(big);
-        let out = tr.engine.run(&probe_name, &inputs)?;
+        let small = probe_batch(tr, tr.microbatch, 0x9a);
+        let big = probe_batch(tr, tr.microbatch * big_factor, 0x9b);
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(tr.params.len() + 2);
+        inputs.extend(tr.params.iter());
+        inputs.push(&small);
+        inputs.push(&big);
+        let out = tr.engine.run_exe_refs(&probe, &inputs)?;
         // aggregate per-element variances into per-layer totals
         let mut by_layer: BTreeMap<String, f64> = BTreeMap::new();
         for (p, v) in size.params.iter().zip(&out) {
@@ -88,23 +93,8 @@ fn layer_group(name: &str, kind: &str) -> String {
     name.split('.').next().unwrap_or(name).to_string()
 }
 
-fn probe_batch(tr: &Trainer, b: usize, stream: u64) -> anyhow::Result<Tensor> {
-    let w = tr.seq_len + 1;
-    let need = b * w;
-    let text = tr
-        .corpus()
-        .text(need * 8 + 1024, (stream << 40) | tr.step as u64);
-    let mut ids: Vec<i32> = tr
-        .tokenizer()
-        .encode(&text)
-        .into_iter()
-        .map(|x| x as i32)
-        .collect();
-    ids.truncate(need);
-    while ids.len() < need {
-        ids.push(0);
-    }
-    Ok(Tensor::from_i32(&[b, w], ids))
+fn probe_batch(tr: &Trainer, b: usize, stream: u64) -> Tensor {
+    tr.encode_batch(b, (stream << 40) | tr.step as u64)
 }
 
 #[cfg(test)]

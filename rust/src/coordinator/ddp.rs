@@ -11,12 +11,14 @@
 //!
 //! Parallelism: per *parameter*, not per tree round. Each parameter's
 //! shard column is an independent reduction, so columns are distributed
-//! over `std::thread::scope` workers (large tensors dominate, so columns
-//! are interleaved round-robin to balance). Within a column the pairwise
-//! tree order is exactly the sequential order — results are bit-identical
-//! to the single-threaded reduction regardless of thread count or
-//! scheduling, which the determinism tests below pin down.
+//! over the persistent [`WorkerPool`] (large tensors dominate, so columns
+//! are interleaved round-robin to balance) — no threads are spawned on
+//! the step path. Within a column the pairwise tree order is exactly the
+//! sequential order — results are bit-identical to the single-threaded
+//! reduction regardless of pool size or scheduling, which the
+//! determinism tests below pin down.
 
+use crate::parallel::{self, WorkerPool};
 use crate::runtime::Tensor;
 
 /// Tensors smaller than this (total f32 elements per parameter column)
@@ -42,8 +44,15 @@ fn tree_reduce_column(col: &mut [Tensor]) {
 
 /// Mean-reduce `shards[k][p]` over k (shards) for every parameter p,
 /// using pairwise tree combination. Consumes the shard gradients.
-/// Large-parameter columns run concurrently across scoped threads.
+/// Large-parameter columns run concurrently on the process-wide shared
+/// [`WorkerPool`] ([`parallel::shared`]); nothing is spawned per call.
 pub fn tree_all_reduce(shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    tree_all_reduce_in(parallel::shared(), shards)
+}
+
+/// [`tree_all_reduce`] against an explicit pool — the trainer passes its
+/// own handle; tests and benches pass purpose-built pools.
+pub fn tree_all_reduce_in(pool: &WorkerPool, shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
     assert!(!shards.is_empty());
     let n_shards = shards.len();
     let n_params = shards[0].len();
@@ -67,10 +76,7 @@ pub fn tree_all_reduce(shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
         .map(|c| c[0].numel())
         .sum();
     let workers = if n_shards > 1 && big_elems >= PAR_THRESHOLD {
-        std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(1)
-            .min(n_params)
+        pool.parallelism().min(n_params)
     } else {
         1
     };
@@ -79,19 +85,21 @@ pub fn tree_all_reduce(shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
         // round-robin interleave so every worker gets a mix of large and
         // small tensors (parameter lists are typically sorted by layer,
         // with the huge embed/head tensors at the ends)
-        std::thread::scope(|scope| {
-            let mut slots: Vec<Vec<&mut Vec<Tensor>>> = (0..workers).map(|_| Vec::new()).collect();
-            for (p, col) in columns.iter_mut().enumerate() {
-                slots[p % workers].push(col);
-            }
-            for slot in slots {
-                scope.spawn(move || {
+        let mut slots: Vec<Vec<&mut Vec<Tensor>>> = (0..workers).map(|_| Vec::new()).collect();
+        for (p, col) in columns.iter_mut().enumerate() {
+            slots[p % workers].push(col);
+        }
+        let tasks: Vec<_> = slots
+            .into_iter()
+            .map(|slot| {
+                move || {
                     for col in slot {
                         tree_reduce_column(col);
                     }
-                });
-            }
-        });
+                }
+            })
+            .collect();
+        pool.run(tasks);
     } else {
         for col in columns.iter_mut() {
             tree_reduce_column(col);
@@ -214,5 +222,48 @@ mod tests {
         let a = tree_all_reduce(shards.clone());
         let b = tree_all_reduce(shards);
         assert_eq!(a[0].f32s(), b[0].f32s());
+    }
+
+    #[test]
+    fn bit_identical_across_pool_sizes() {
+        // pool size must never change the float rounding: every pool
+        // reduces each column in the same sequential pairwise order
+        prop::check("tree-allreduce-pool-sizes", 6, |rng| {
+            let k = prop::usize_in(rng, 2, 6);
+            let shapes = vec![vec![140, 130], vec![40], vec![64, 280]];
+            let shards: Vec<Vec<Tensor>> = (0..k).map(|_| shard(rng, &shapes)).collect();
+            let want = tree_all_reduce_sequential(shards.clone());
+            for workers in [0usize, 1, 3, 7] {
+                let pool = crate::parallel::WorkerPool::new(workers);
+                let got = tree_all_reduce_in(&pool, shards.clone());
+                for (p, (w, g)) in want.iter().zip(&got).enumerate() {
+                    prop::ensure(
+                        w.f32s() == g.f32s(),
+                        format!("param {p} differs with {workers} workers"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pool_reuse_across_100_reduces_spawns_nothing() {
+        let pool = crate::parallel::WorkerPool::new(4);
+        let spawned = crate::parallel::threads_spawned_by_current_thread();
+        let mut rng = crate::util::rng::Pcg::new(9);
+        let shapes = vec![vec![130, 130], vec![17]];
+        let shards: Vec<Vec<Tensor>> = (0..4).map(|_| shard(&mut rng, &shapes)).collect();
+        let want = tree_all_reduce_sequential(shards.clone());
+        for _ in 0..100 {
+            let got = tree_all_reduce_in(&pool, shards.clone());
+            assert_eq!(got[0].f32s(), want[0].f32s());
+            assert_eq!(got[1].f32s(), want[1].f32s());
+        }
+        assert_eq!(
+            crate::parallel::threads_spawned_by_current_thread(),
+            spawned,
+            "tree_all_reduce_in must not spawn threads per step"
+        );
     }
 }

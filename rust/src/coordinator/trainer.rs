@@ -5,22 +5,25 @@
 //!   1. each DDP shard draws its microbatch from a pre-tokenized token
 //!      ring (BPE runs once per ring segment, not once per batch) and
 //!      runs `fwd_bwd_<size>` (loss + per-parameter gradients) — shards
-//!      run concurrently on scoped threads;
+//!      run concurrently on the persistent worker pool;
 //!   2. shard gradients are tree-all-reduced to the global mean
 //!      (parallel across parameters, bit-stable);
 //!   3. `update_<opt>_<size>` applies one optimizer step
 //!      (params, state, grads, lr, step) -> (params', state').
 //!
 //! Python never runs here; the loop is pure Rust + PJRT executions.
-//! The hot path is clone-free: executable inputs are assembled by
-//! reference (`Engine::run_exe_refs`), and the returned output tensors
-//! *become* the new params/state by move — nothing is copied per step.
+//! The hot path is clone-free and spawn-free: executable inputs are
+//! assembled by reference (`Engine::run_exe_refs`), the returned output
+//! tensors *become* the new params/state by move, and every per-step
+//! fan-out (ring refill, shard fwd/bwd, tree reduce) dispatches onto the
+//! [`WorkerPool`] bound at construction — zero thread spawns per step.
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::ddp;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::schedule::Schedule;
 use crate::data::{self, Corpus, Tokenizer};
+use crate::parallel::{self, WorkerPool};
 use crate::runtime::{Engine, Executable, Tensor};
 
 use std::sync::Arc;
@@ -61,7 +64,8 @@ impl Default for TrainOptions {
     }
 }
 
-/// Shard id offset reserved for the held-out eval stream.
+/// Shard id of the held-out eval ring — far beyond any training shard
+/// index, so the eval byte stream never overlaps a training stream.
 const EVAL_SHARD: usize = 1 << 20;
 
 /// Microbatches per token-ring segment: one corpus-chunk generation +
@@ -167,6 +171,11 @@ pub struct Trainer<'e> {
     pub microbatch: usize,
     shard_positions: Vec<usize>,
     rings: Vec<TokenRing>,
+    /// Held-out eval stream, pre-tokenized like the training rings.
+    eval_ring: TokenRing,
+    /// Persistent pool bound at construction (the process-wide shared
+    /// pool); every per-step fan-out reuses it — no spawns per step.
+    pool: &'static WorkerPool,
 }
 
 impl<'e> Trainer<'e> {
@@ -211,6 +220,8 @@ impl<'e> Trainer<'e> {
             microbatch: engine.manifest.microbatch,
             shard_positions: vec![0; shards],
             rings: (0..shards).map(|_| TokenRing::new()).collect(),
+            eval_ring: TokenRing::new(),
+            pool: parallel::shared(),
             opts,
         })
     }
@@ -237,12 +248,13 @@ impl<'e> Trainer<'e> {
         // post-construction mutation
         let shards = self.rings.len();
         debug_assert_eq!(shards, self.opts.shards.max(1), "opts.shards changed after new()");
+        let pool = self.pool;
 
-        // 1) per-shard microbatches from the token rings. Threads are
-        //    spawned only when a ring actually needs a refill (the
+        // 1) per-shard microbatches from the token rings. The pool is
+        //    engaged only when a ring actually needs a refill (the
         //    BPE-encode leg); warm steps — RING_BATCHES-1 of every
-        //    RING_BATCHES — are slice copies where spawn overhead would
-        //    dominate
+        //    RING_BATCHES — are slice copies where even pool dispatch
+        //    overhead would dominate
         let batches: Vec<Tensor> = {
             let corpus = &self.corpus;
             let tokenizer = &self.tokenizer;
@@ -254,21 +266,16 @@ impl<'e> Trainer<'e> {
                 .zip(positions.iter())
                 .any(|(r, &pos)| r.segment != pos / RING_BATCHES);
             if shards > 1 && any_refill {
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = rings
-                        .iter_mut()
-                        .take(shards)
-                        .enumerate()
-                        .map(|(s, ring)| {
-                            let pos = positions[s];
-                            scope.spawn(move || ring.batch(corpus, tokenizer, s, pos, b, w))
-                        })
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("batch thread panicked"))
-                        .collect()
-                })
+                let tasks: Vec<_> = rings
+                    .iter_mut()
+                    .take(shards)
+                    .enumerate()
+                    .map(|(s, ring)| {
+                        let pos = positions[s];
+                        move || ring.batch(corpus, tokenizer, s, pos, b, w)
+                    })
+                    .collect();
+                pool.run(tasks)
             } else {
                 rings
                     .iter_mut()
@@ -282,22 +289,18 @@ impl<'e> Trainer<'e> {
             *pos += 1;
         }
 
-        // 2) concurrent fwd/bwd per shard; results land in shard order so
-        //    the downstream reduction is bit-stable across runs
+        // 2) concurrent fwd/bwd per shard on the pool; `run` returns
+        //    results in shard order so the downstream reduction is
+        //    bit-stable across runs
         let mut loss_sum = 0.0;
         let shard_grads: Vec<Vec<Tensor>> = {
             let this: &Trainer = &*self;
             let results: Vec<anyhow::Result<(f64, Vec<Tensor>)>> = if shards > 1 {
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = batches
-                        .iter()
-                        .map(|batch| scope.spawn(move || this.grad_step(batch)))
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("shard thread panicked"))
-                        .collect()
-                })
+                let tasks: Vec<_> = batches
+                    .iter()
+                    .map(|batch| move || this.grad_step(batch))
+                    .collect();
+                pool.run(tasks)
             } else {
                 vec![this.grad_step(&batches[0])]
             };
@@ -310,9 +313,9 @@ impl<'e> Trainer<'e> {
             grads
         };
 
-        // 3) parallel tree all-reduce + optimizer update with borrowed
-        //    inputs; outputs become the new params/state by move
-        let grads = ddp::tree_all_reduce(shard_grads);
+        // 3) parallel tree all-reduce (same pool) + optimizer update with
+        //    borrowed inputs; outputs become the new params/state by move
+        let grads = ddp::tree_all_reduce_in(pool, shard_grads);
         let lr = self.schedule.lr(self.step);
         let lr_t = Tensor::scalar_f32(lr as f32);
         let step_t = Tensor::scalar_f32(self.step as f32);
@@ -336,31 +339,22 @@ impl<'e> Trainer<'e> {
     }
 
     /// Evaluate mean loss over `n` held-out batches; records perplexity.
+    ///
+    /// Eval batches come from the pre-tokenized `eval_ring` (shard id
+    /// `EVAL_SHARD`, far beyond any training shard, so the streams are
+    /// disjoint): one corpus chunk + one BPE encode serves `RING_BATCHES`
+    /// eval batches, and the segment stays cached across eval calls.
+    /// Ring content is a pure function of the batch index — independent
+    /// of call history — so the held-out set is identical every eval and
+    /// checkpoint resume stays bit-exact.
     pub fn eval(&mut self) -> anyhow::Result<f64> {
         let n = self.opts.eval_batches.max(1);
+        let (b, w) = (self.microbatch, self.seq_len + 1);
         let mut sum = 0.0;
         for i in 0..n {
-            let batch = {
-                // held-out stream: shard ids far beyond training shards,
-                // keyed by eval batch index (stable across calls)
-                let b = self.microbatch;
-                let w = self.seq_len + 1;
-                let need = b * w;
-                let text = self
-                    .corpus
-                    .text(need * 8 + 1024, ((EVAL_SHARD + i) as u64) << 24);
-                let mut ids: Vec<i32> = self
-                    .tokenizer
-                    .encode(&text)
-                    .into_iter()
-                    .map(|x| x as i32)
-                    .collect();
-                ids.truncate(need);
-                while ids.len() < need {
-                    ids.push(0);
-                }
-                Tensor::from_i32(&[b, w], ids)
-            };
+            let batch = self
+                .eval_ring
+                .batch(&self.corpus, &self.tokenizer, EVAL_SHARD, i, b, w);
             let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 1);
             inputs.extend(self.params.iter());
             inputs.push(&batch);
@@ -370,6 +364,28 @@ impl<'e> Trainer<'e> {
         let loss = sum / n as f64;
         self.metrics.record_eval(self.step, loss);
         Ok(loss)
+    }
+
+    /// One-off `[b, seq_len+1]` token batch from a dedicated corpus
+    /// stream `sub` — the probe/figure entry point (`analysis::variance`,
+    /// the figure regenerators). Content is a pure function of
+    /// `(b, sub)`; the training and eval paths use the token rings
+    /// instead.
+    pub fn encode_batch(&self, b: usize, sub: u64) -> Tensor {
+        let w = self.seq_len + 1;
+        let need = b * w;
+        let text = self.corpus.text(need * 8 + 1024, sub);
+        let mut ids: Vec<i32> = self
+            .tokenizer
+            .encode(&text)
+            .into_iter()
+            .map(|x| x as i32)
+            .collect();
+        ids.truncate(need);
+        while ids.len() < need {
+            ids.push(0);
+        }
+        Tensor::from_i32(&[b, w], ids)
     }
 
     /// Run the full configured training loop; returns final eval ppl.
@@ -446,13 +462,5 @@ impl<'e> Trainer<'e> {
     /// Measured optimizer-state footprint of this run (f32 bytes).
     pub fn state_bytes(&self) -> usize {
         self.state.iter().map(|t| 4 * t.numel()).sum()
-    }
-
-    pub fn tokenizer(&self) -> &Tokenizer {
-        &self.tokenizer
-    }
-
-    pub fn corpus(&self) -> &Corpus {
-        &self.corpus
     }
 }

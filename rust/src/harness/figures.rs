@@ -43,7 +43,8 @@ pub fn figure1(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<Stri
     let mut grid = vec![vec![' '; w + 14]; h];
     for (i, &(opt, mem, ppl)) in pts.iter().enumerate() {
         let x = (((mem - xmin) / (xmax - xmin)).clamp(0.0, 1.0) * (w - 1) as f64) as usize;
-        let y = (((ymax - ppl) / (ymax - ymin).max(1e-9)).clamp(0.0, 1.0) * (h - 1) as f64) as usize;
+        let yf = ((ymax - ppl) / (ymax - ymin).max(1e-9)).clamp(0.0, 1.0);
+        let y = (yf * (h - 1) as f64) as usize;
         let label = (b'A' + i as u8) as char;
         grid[y][x] = label;
         writeln!(out, "  {label} = {:<18} mem {mem:.2}G  ppl {:.2}", opt_label(opt), ppl)?;
@@ -101,26 +102,20 @@ pub fn figure3(engine: &Engine, size: &str, warm_steps: usize) -> anyhow::Result
         tr.train_step()?;
     }
     let sz = engine.manifest.size(size)?.clone();
-    // one more gradient evaluation to harvest the LM-head gradient
+    // one more gradient evaluation to harvest the LM-head gradient: a
+    // train_step-free probe from a dedicated stream (ref-assembled
+    // inputs inside grad_step — params are never cloned)
     let (_, grads) = {
-        let batch = {
-            // reuse trainer's eval machinery via a train_step-free probe
-            let w = sz.seq_len + 1;
-            let need = engine.manifest.microbatch * w;
-            let text = tr.corpus().text(need * 8 + 1024, 0xF16_3);
-            let mut ids: Vec<i32> = tr.tokenizer().encode(&text).into_iter().map(|x| x as i32).collect();
-            ids.truncate(need);
-            while ids.len() < need {
-                ids.push(0);
-            }
-            crate::runtime::Tensor::from_i32(&[engine.manifest.microbatch, w], ids)
-        };
+        let batch = tr.encode_batch(engine.manifest.microbatch, 0xF16_3);
         tr.grad_step(&batch)?
     };
     let head = grads.last().unwrap();
     let (row_h, col_h) = head_grad_histograms(head.f32s(), sz.d_model, sz.vocab, 24);
     let mut out = String::new();
-    writeln!(out, "\n== Figure 3 — LM-head gradient after normalization (step {warm_steps}) ==")?;
+    writeln!(
+        out,
+        "\n== Figure 3 — LM-head gradient after normalization (step {warm_steps}) =="
+    )?;
     writeln!(out, "-- (a) row-wise normalized: max |g| = {:.2} --", row_h.max_abs)?;
     out.push_str(&row_h.render(48));
     writeln!(out, "-- (b) column-wise normalized: max |g| = {:.2} --", col_h.max_abs)?;
@@ -133,7 +128,12 @@ pub fn figure3(engine: &Engine, size: &str, warm_steps: usize) -> anyhow::Result
 }
 
 /// Fig. 4 (and 6/7): per-layer gradient variance during training.
-pub fn figure4(engine: &Engine, size: &str, steps: usize, optimizer: &str) -> anyhow::Result<String> {
+pub fn figure4(
+    engine: &Engine,
+    size: &str,
+    steps: usize,
+    optimizer: &str,
+) -> anyhow::Result<String> {
     let opts = TrainOptions {
         size: size.into(),
         optimizer: optimizer.into(),
@@ -258,7 +258,10 @@ pub fn figure9(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<Stri
             writeln!(csv, "{opt},{s},{p}")?;
         }
     }
-    writeln!(out, "  paper shape: Muon fastest early; SCALE/Stable-SPAM/APOLLO-Mini catch up late")?;
+    writeln!(
+        out,
+        "  paper shape: Muon fastest early; SCALE/Stable-SPAM/APOLLO-Mini catch up late"
+    )?;
     std::fs::write(plots_dir().join("fig9_curves.csv"), csv)?;
     Ok(out)
 }
@@ -287,21 +290,17 @@ pub fn figure10(engine: &Engine, size: &str, steps: usize) -> anyhow::Result<Str
         while tr.step < upto {
             tr.train_step()?;
         }
-        let w = sz.seq_len + 1;
-        let need = engine.manifest.microbatch * w;
-        let text = tr.corpus().text(need * 8 + 1024, 0xF16_10);
-        let mut ids: Vec<i32> = tr.tokenizer().encode(&text).into_iter().map(|x| x as i32).collect();
-        ids.truncate(need);
-        while ids.len() < need {
-            ids.push(0);
-        }
-        let batch = crate::runtime::Tensor::from_i32(&[engine.manifest.microbatch, w], ids);
+        let batch = tr.encode_batch(engine.manifest.microbatch, 0xF16_10);
         let (_, grads) = tr.grad_step(&batch)?;
         let norms = head_column_norms(grads.last().unwrap().f32s(), sz.d_model, sz.vocab);
         // bucket the first 512 token ids into 16 buckets of mean norms
         let show = norms.len().min(512);
         let buckets = 16;
-        writeln!(out, "-- {phase} (step {}) — mean column norm per token-id bucket --", tr.step)?;
+        writeln!(
+            out,
+            "-- {phase} (step {}) — mean column norm per token-id bucket --",
+            tr.step
+        )?;
         let bmax = {
             let mut vals = Vec::new();
             for b in 0..buckets {

@@ -41,7 +41,9 @@ pub fn table1(engine: &Engine, budget_secs: f64) -> anyhow::Result<String> {
             .unwrap_or_default();
         t.row(vec![op.to_string(), paper_row, measured.join(" / ")]);
     }
-    t.footnote("paper's exact-SVD row omitted: LAPACK custom-calls unsupported here (DESIGN.md §3)");
+    t.footnote(
+        "paper's exact-SVD row omitted: LAPACK custom-calls unsupported here (DESIGN.md §3)",
+    );
     t.footnote(&format!("measured dims: {dims:?} (CPU, f32, interpret-lowered kernels)"));
     Ok(t.render())
 }
@@ -168,7 +170,9 @@ pub fn table5(engine: &Engine, sizes: &[String], steps: usize) -> anyhow::Result
             ]);
         }
     }
-    t.footnote("paper mem column: real-LLaMA bf16; measured state: f32 optimizer state of the tiny run");
+    t.footnote(
+        "paper mem column: real-LLaMA bf16; measured state: f32 optimizer state of the tiny run",
+    );
     Ok(t.render())
 }
 
@@ -304,7 +308,12 @@ pub fn table11(engine: &Engine, size: &str, base_steps: usize) -> anyhow::Result
 /// finetuning — continue training a pretrained model on a *shifted*
 /// corpus (different generator seed = new word inventory/states) at a
 /// low LR, comparing Adam vs SCALE transfer quality.
-pub fn table12(engine: &Engine, size: &str, pretrain_steps: usize, ft_steps: usize) -> anyhow::Result<String> {
+pub fn table12(
+    engine: &Engine,
+    size: &str,
+    pretrain_steps: usize,
+    ft_steps: usize,
+) -> anyhow::Result<String> {
     use crate::coordinator::{TrainOptions, Trainer};
     let mut t = Table::new(
         "Table 12 — finetuning stand-in (domain transfer; App. I)",
@@ -354,7 +363,9 @@ pub fn table12(engine: &Engine, size: &str, pretrain_steps: usize, ft_steps: usi
             ppl_cell(ft_ppl),
         ]);
     }
-    t.footnote("GLUE unavailable offline; substitution per DESIGN.md §3 (transfer to shifted c4sim domain)");
+    t.footnote(
+        "GLUE unavailable offline; substitution per DESIGN.md §3 (shifted-domain transfer)",
+    );
     Ok(t.render())
 }
 

@@ -18,5 +18,6 @@ pub mod data;
 pub mod harness;
 pub mod memory;
 pub mod optim;
+pub mod parallel;
 pub mod runtime;
 pub mod util;

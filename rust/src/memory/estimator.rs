@@ -121,7 +121,11 @@ impl MemoryModel {
 
 /// Measured (not modeled) state bytes for a tiny run in this repo:
 /// read straight from the manifest's state layout. f32 on CPU.
-pub fn measured_state_bytes(manifest: &Manifest, optimizer: &str, size: &str) -> anyhow::Result<usize> {
+pub fn measured_state_bytes(
+    manifest: &Manifest,
+    optimizer: &str,
+    size: &str,
+) -> anyhow::Result<usize> {
     let slots = manifest.state_spec(optimizer, size)?;
     Ok(slots
         .iter()

@@ -5,15 +5,28 @@
 //! ([`super::sim`]), (3) property tests of the normalization invariants.
 //! Matrices are row-major `(d_in, d_out)`, matching the JAX layout.
 //!
-//! Two API tiers:
+//! Three API tiers:
 //! * allocation-free `_into` / `_in_place` kernels over a caller-owned
 //!   [`NormWorkspace`] — the training hot path (see `optim::rules` and
 //!   `benches/bench_hot_path.rs`); every float operation is sequenced
 //!   identically to the allocating forms, so results are bit-identical;
+//! * `_par` variants ([`colnorm_into_par`]) that tile the work across a
+//!   persistent [`WorkerPool`] for large matrices — bit-identical to the
+//!   sequential forms by construction (see the tiling contract in
+//!   [`super`]'s module docs), falling back inline below
+//!   [`PAR_MIN_ELEMS`];
 //! * the original allocating signatures (`colnorm`, `rownorm`, `sign`),
 //!   kept as thin wrappers for tests, analysis, and one-shot callers.
 
+use crate::parallel::WorkerPool;
+
 pub const EPS: f32 = 1e-30;
+
+/// Matrices below this many elements run the sequential kernels even
+/// through the `_par` entry points: pool dispatch costs ~microseconds,
+/// which dominates the arithmetic for small tensors. The exact value
+/// never affects results — both paths are bit-identical — only latency.
+pub const PAR_MIN_ELEMS: usize = 1 << 15;
 
 /// Reusable per-column norm scratch. One workspace per (thread, kernel
 /// call site); `d_out` may vary call to call — the buffer is resized
@@ -82,6 +95,105 @@ pub fn colnorm_into(g: &[f32], d_in: usize, d_out: usize, ws: &mut NormWorkspace
             out[r * d_out + c] = g[r * d_out + c] / norms[c];
         }
     }
+}
+
+/// Contiguous tile width covering `len` items with `parts` workers.
+pub(crate) fn tile_width(len: usize, parts: usize) -> usize {
+    let parts = parts.max(1);
+    ((len + parts - 1) / parts).max(1)
+}
+
+/// Column-tiled parallel form of [`col_norms_into`]: the `d_out` axis is
+/// split into contiguous tiles, one pool task per tile, each writing a
+/// disjoint slice of the workspace. Per column the accumulation order
+/// over rows is exactly the sequential order, so the result is
+/// bit-identical for every pool size. Callers gate on size; this always
+/// tiles (except for empty matrices).
+pub(crate) fn col_norms_tiled<'w>(
+    pool: &WorkerPool,
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    ws: &'w mut NormWorkspace,
+) -> &'w [f32] {
+    assert_eq!(g.len(), d_in * d_out);
+    if d_in == 0 || d_out == 0 {
+        return col_norms_into(g, d_in, d_out, ws);
+    }
+    ws.reset(d_out);
+    let tile = tile_width(d_out, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, chunk) in ws.norms.chunks_mut(tile).enumerate() {
+        let c0 = ti * tile;
+        tasks.push(move || {
+            let width = chunk.len();
+            for r in 0..d_in {
+                let row = &g[r * d_out + c0..r * d_out + c0 + width];
+                for (n, &x) in chunk.iter_mut().zip(row) {
+                    *n += x * x;
+                }
+            }
+            for n in chunk.iter_mut() {
+                *n = n.sqrt().max(EPS);
+            }
+        });
+    }
+    pool.run(tasks);
+    &ws.norms
+}
+
+/// Column-wise normalization tiled across the pool — the parallel form
+/// of [`colnorm_into`], bit-identical to it for every pool size (the
+/// per-element operations and their order are unchanged; only the
+/// partitioning differs, and column reductions are independent). Small
+/// matrices (below [`PAR_MIN_ELEMS`]) run the sequential kernel inline.
+pub fn colnorm_into_par(
+    pool: &WorkerPool,
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    ws: &mut NormWorkspace,
+    out: &mut [f32],
+) {
+    colnorm_into_par_with(pool, g, d_in, d_out, ws, out, PAR_MIN_ELEMS)
+}
+
+/// [`colnorm_into_par`] with an explicit sequential-fallback threshold
+/// (elements); property tests sweep `min_elems` across the boundary to
+/// pin down that the threshold only selects a path, never a result.
+pub fn colnorm_into_par_with(
+    pool: &WorkerPool,
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    ws: &mut NormWorkspace,
+    out: &mut [f32],
+    min_elems: usize,
+) {
+    assert_eq!(g.len(), d_in * d_out);
+    assert_eq!(out.len(), g.len());
+    if d_in * d_out < min_elems.max(1) || pool.parallelism() == 1 {
+        return colnorm_into(g, d_in, d_out, ws, out);
+    }
+    // phase 1: per-column norms, tiled over columns (disjoint norm slices)
+    col_norms_tiled(pool, g, d_in, d_out, ws);
+    // phase 2: the scale pass, tiled over rows (disjoint output slices,
+    // shared read of the finished norms)
+    let norms: &[f32] = &ws.norms;
+    let rows = tile_width(d_in, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, out_chunk) in out.chunks_mut(rows * d_out).enumerate() {
+        let start = ti * rows * d_out;
+        let g_chunk = &g[start..start + out_chunk.len()];
+        tasks.push(move || {
+            for (row_out, row_g) in out_chunk.chunks_mut(d_out).zip(g_chunk.chunks(d_out)) {
+                for ((o, &x), &nm) in row_out.iter_mut().zip(row_g).zip(norms) {
+                    *o = x / nm;
+                }
+            }
+        });
+    }
+    pool.run(tasks);
 }
 
 /// Column-wise normalization of `g` in place.
@@ -287,7 +399,8 @@ mod tests {
         let mut ws = NormWorkspace::new();
         prop::quick("colnorm-into-bit-identical", |rng| {
             let (m, n) = (prop::usize_in(rng, 1, 24), prop::usize_in(rng, 1, 24));
-            let g = prop::matrix(rng, m, n, prop::f32_in(rng, 0.01, 10.0));
+            let g_scale = prop::f32_in(rng, 0.01, 10.0);
+            let g = prop::matrix(rng, m, n, g_scale);
             let want = colnorm_reference(&g, m, n);
             let mut out = vec![0.0f32; g.len()];
             colnorm_into(&g, m, n, &mut ws, &mut out);
@@ -343,5 +456,98 @@ mod tests {
         let mut out_a2 = vec![0.0f32; 6];
         colnorm_into(&a, 2, 3, &mut ws, &mut out_a2);
         assert_eq!(out_a, out_a2);
+    }
+
+    // ---- column-tiled parallel kernel bit-identity -----------------------
+
+    #[test]
+    fn par_kernel_bit_identical_over_pools_and_thresholds() {
+        // random shapes, several pool sizes, and thresholds straddling
+        // the numel boundary: every combination must reproduce the
+        // sequential kernel bit for bit (column reductions are
+        // independent, so tiling reassociates nothing)
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)];
+        let mut ws = NormWorkspace::new();
+        let mut ws_par = NormWorkspace::new();
+        prop::check("colnorm-par-bit-identical", 32, |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 48), prop::usize_in(rng, 1, 48));
+            let g_scale = prop::f32_in(rng, 0.01, 10.0);
+            let g = prop::matrix(rng, m, n, g_scale);
+            let mut want = vec![0.0f32; g.len()];
+            colnorm_into(&g, m, n, &mut ws, &mut want);
+            let numel = m * n;
+            for pool in &pools {
+                // thresholds straddling the gate: 0/1 force the tiled
+                // path, numel sits exactly on the boundary (tiled, since
+                // the gate is `numel < min`), numel+1 forces sequential
+                for min_elems in [0usize, 1, numel, numel + 1] {
+                    let mut got = vec![1e9f32; g.len()];
+                    colnorm_into_par_with(pool, &g, m, n, &mut ws_par, &mut got, min_elems);
+                    ensure(
+                        got == want,
+                        format!(
+                            "colnorm_into_par differs: {m}x{n}, {} workers, min {min_elems}",
+                            pool.workers()
+                        ),
+                    )?;
+                    ensure(
+                        ws_par.norms() == ws.norms(),
+                        format!("workspace norms differ: {m}x{n}, min {min_elems}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn col_norms_tiled_matches_sequential_exactly() {
+        let pool = WorkerPool::new(3);
+        let mut ws = NormWorkspace::new();
+        let mut ws_tiled = NormWorkspace::new();
+        prop::quick("col-norms-tiled-bits", |rng| {
+            let (m, n) = (prop::usize_in(rng, 1, 40), prop::usize_in(rng, 1, 40));
+            let g_scale = prop::f32_in(rng, 0.01, 5.0);
+            let g = prop::matrix(rng, m, n, g_scale);
+            let want = col_norms_into(&g, m, n, &mut ws).to_vec();
+            let got = col_norms_tiled(&pool, &g, m, n, &mut ws_tiled).to_vec();
+            ensure(got == want, format!("tiled norms differ at {m}x{n}"))
+        });
+    }
+
+    #[test]
+    fn par_kernel_default_threshold_tiles_large_matrices() {
+        // 256x256 = 65536 elements >= PAR_MIN_ELEMS: the default entry
+        // point takes the tiled path and must still match exactly
+        let pool = WorkerPool::new(4);
+        let mut rng = crate::util::rng::Pcg::new(77);
+        let (m, n) = (256usize, 256usize);
+        assert!(m * n >= PAR_MIN_ELEMS);
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut ws = NormWorkspace::new();
+        let mut want = vec![0.0f32; g.len()];
+        colnorm_into(&g, m, n, &mut ws, &mut want);
+        let mut ws_par = NormWorkspace::new();
+        let mut got = vec![0.0f32; g.len()];
+        colnorm_into_par(&pool, &g, m, n, &mut ws_par, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_kernel_single_column_and_single_row_edges() {
+        // degenerate shapes stress the tile arithmetic: one column
+        // (tiles collapse to width 1) and one row (row chunks collapse)
+        let pool = WorkerPool::new(3);
+        let mut ws = NormWorkspace::new();
+        let mut ws_par = NormWorkspace::new();
+        for (m, n) in [(64usize, 1usize), (1, 64), (5, 3), (3, 5)] {
+            let mut rng = crate::util::rng::Pcg::new((m * 100 + n) as u64);
+            let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let mut want = vec![0.0f32; g.len()];
+            colnorm_into(&g, m, n, &mut ws, &mut want);
+            let mut got = vec![0.0f32; g.len()];
+            colnorm_into_par_with(&pool, &g, m, n, &mut ws_par, &mut got, 0);
+            assert_eq!(got, want, "shape {m}x{n}");
+        }
     }
 }

@@ -31,6 +31,36 @@
 //! (property-tested in `colnorm::tests` and `rules::tests`), and
 //! `benches/bench_hot_path.rs` asserts the inner loop performs zero heap
 //! allocations per iteration.
+//!
+//! # Tiling and the threshold contract
+//!
+//! The `_par` kernels (`colnorm::colnorm_into_par`,
+//! `rules::scale_plain_ws_par`, `rules::scale_momentum_ws_par`) layer
+//! pool parallelism on top of the same buffers without changing any of
+//! the guarantees above:
+//!
+//! * **Partitioning, never reassociation.** Work is tiled along axes
+//!   whose units are independent: the norm pass splits the `d_out`
+//!   column axis (each column's row-accumulation order is exactly the
+//!   sequential order), elementwise passes (EMA, the fused apply) split
+//!   the row axis. No float reduction ever crosses a tile, so results
+//!   are bit-identical to the sequential kernels for *every* pool size —
+//!   property-tested across pools and shapes in both test modules.
+//! * **Disjoint output slices.** Each pool task owns a contiguous
+//!   `&mut` slice of the output (workspace norms in the column pass,
+//!   params/momentum rows in the apply passes) obtained via
+//!   `chunks_mut` — safe Rust, no aliasing, no locks on the data path.
+//! * **Size threshold.** Below `colnorm::PAR_MIN_ELEMS` elements the
+//!   `_par` entry points call the sequential kernels inline: pool
+//!   dispatch costs ~µs, which dominates small tensors. The threshold
+//!   (and the `_with` variants that override it) selects a code path
+//!   only — the property tests sweep it across the boundary to pin down
+//!   that it can never select a different *result*.
+//! * **Allocation contract.** The sequential `_into`/`_ws` kernels stay
+//!   allocation-free (the bench gate is unchanged). The `_par` forms
+//!   allocate O(pool workers) task boxes per call — amortized to noise
+//!   for the large tensors they gate on, and zero inside the per-element
+//!   loops.
 
 pub mod colnorm;
 pub mod rules;

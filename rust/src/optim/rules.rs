@@ -5,14 +5,19 @@
 //! the AOT artifacts — the same role ref.py plays for the Pallas kernels,
 //! one layer down.
 //!
-//! The SCALE rules come in two forms: `_ws` variants that fuse the
+//! The SCALE rules come in three forms: `_ws` variants that fuse the
 //! column-norm denominator into the parameter update through a
 //! caller-owned [`NormWorkspace`] (zero heap allocations, no direction
-//! buffer at all — the division happens inside the subtract), and the
-//! original allocating signatures as thin wrappers. Both produce
-//! bit-identical results: the float operations are sequenced the same.
+//! buffer at all — the division happens inside the subtract), `_par`
+//! variants ([`scale_plain_ws_par`], [`scale_momentum_ws_par`]) that
+//! tile the same passes across a persistent [`WorkerPool`] for large
+//! matrices, and the original allocating signatures as thin wrappers.
+//! All produce bit-identical results: the float operations are
+//! sequenced the same (tiling only partitions independent columns/rows,
+//! it never reassociates a reduction).
 
-use super::colnorm::{col_norms_into, NormWorkspace};
+use super::colnorm::{col_norms_into, col_norms_tiled, tile_width, NormWorkspace, PAR_MIN_ELEMS};
+use crate::parallel::WorkerPool;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AdamHp {
@@ -127,6 +132,124 @@ pub fn scale_momentum_ws(
             p[i] -= lr * (m[i] / norms[c]);
         }
     }
+}
+
+/// Parallel form of [`scale_plain_ws`]: column-tiled norm pass, then a
+/// row-tiled fused apply with disjoint parameter slices — bit-identical
+/// to the sequential rule for every pool size. Matrices below
+/// [`PAR_MIN_ELEMS`] run the sequential rule inline.
+pub fn scale_plain_ws_par(
+    pool: &WorkerPool,
+    p: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    ws: &mut NormWorkspace,
+) {
+    scale_plain_ws_par_with(pool, p, g, d_in, d_out, lr, ws, PAR_MIN_ELEMS)
+}
+
+/// [`scale_plain_ws_par`] with an explicit threshold (see
+/// `colnorm::colnorm_into_par_with`); the threshold selects a path,
+/// never a result.
+pub fn scale_plain_ws_par_with(
+    pool: &WorkerPool,
+    p: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    ws: &mut NormWorkspace,
+    min_elems: usize,
+) {
+    assert_eq!(p.len(), d_in * d_out);
+    assert_eq!(g.len(), d_in * d_out);
+    if d_in * d_out < min_elems.max(1) || pool.parallelism() == 1 {
+        return scale_plain_ws(p, g, d_in, d_out, lr, ws);
+    }
+    col_norms_tiled(pool, g, d_in, d_out, ws);
+    let norms: &[f32] = ws.norms();
+    let rows = tile_width(d_in, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, p_chunk) in p.chunks_mut(rows * d_out).enumerate() {
+        let start = ti * rows * d_out;
+        let g_chunk = &g[start..start + p_chunk.len()];
+        tasks.push(move || {
+            for (p_row, g_row) in p_chunk.chunks_mut(d_out).zip(g_chunk.chunks(d_out)) {
+                for ((pi, &gi), &nm) in p_row.iter_mut().zip(g_row).zip(norms) {
+                    *pi -= lr * (gi / nm);
+                }
+            }
+        });
+    }
+    pool.run(tasks);
+}
+
+/// Parallel form of [`scale_momentum_ws`]: row-tiled in-place EMA,
+/// column-tiled norms of the updated momentum, row-tiled fused apply —
+/// three pool barriers, each partitioning independent work, so the
+/// result is bit-identical to the sequential rule for every pool size.
+pub fn scale_momentum_ws_par(
+    pool: &WorkerPool,
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    beta: f32,
+    ws: &mut NormWorkspace,
+) {
+    scale_momentum_ws_par_with(pool, p, m, g, d_in, d_out, lr, beta, ws, PAR_MIN_ELEMS)
+}
+
+/// [`scale_momentum_ws_par`] with an explicit threshold.
+#[allow(clippy::too_many_arguments)]
+pub fn scale_momentum_ws_par_with(
+    pool: &WorkerPool,
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    beta: f32,
+    ws: &mut NormWorkspace,
+    min_elems: usize,
+) {
+    assert_eq!(p.len(), d_in * d_out);
+    assert_eq!(m.len(), d_in * d_out);
+    assert_eq!(g.len(), d_in * d_out);
+    if d_in * d_out < min_elems.max(1) || pool.parallelism() == 1 {
+        return scale_momentum_ws(p, m, g, d_in, d_out, lr, beta, ws);
+    }
+    let rows = tile_width(d_in, pool.parallelism());
+    // phase A: EMA into the momentum, row-tiled (elementwise, disjoint)
+    let mut tasks = Vec::new();
+    for (ti, m_chunk) in m.chunks_mut(rows * d_out).enumerate() {
+        let start = ti * rows * d_out;
+        let g_chunk = &g[start..start + m_chunk.len()];
+        tasks.push(move || ema_(m_chunk, g_chunk, beta));
+    }
+    pool.run(tasks);
+    // phase B: column norms of the updated momentum (column-tiled)
+    col_norms_tiled(pool, m, d_in, d_out, ws);
+    // phase C: fused normalized apply, row-tiled over the parameters
+    let norms: &[f32] = ws.norms();
+    let mut tasks = Vec::new();
+    for (ti, p_chunk) in p.chunks_mut(rows * d_out).enumerate() {
+        let start = ti * rows * d_out;
+        let m_chunk = &m[start..start + p_chunk.len()];
+        tasks.push(move || {
+            for (p_row, m_row) in p_chunk.chunks_mut(d_out).zip(m_chunk.chunks(d_out)) {
+                for ((pi, &mi), &nm) in p_row.iter_mut().zip(m_row).zip(norms) {
+                    *pi -= lr * (mi / nm);
+                }
+            }
+        });
+    }
+    pool.run(tasks);
 }
 
 /// SCALE stateless rule: `p -= lr * C(g)` over a (d_in, d_out) matrix.
@@ -265,7 +388,8 @@ mod tests {
         let mut ws = NormWorkspace::new();
         prop::quick("scale-ws-bit-identical", |rng| {
             let (di, dn) = (prop::usize_in(rng, 1, 16), prop::usize_in(rng, 1, 16));
-            let g = prop::matrix(rng, di, dn, prop::f32_in(rng, 0.1, 5.0));
+            let g_scale = prop::f32_in(rng, 0.1, 5.0);
+            let g = prop::matrix(rng, di, dn, g_scale);
             let p0 = prop::matrix(rng, di, dn, 1.0);
             let lr = prop::f32_in(rng, 1e-4, 0.5);
             let beta = prop::f32_in(rng, 0.0, 0.99);
@@ -284,6 +408,107 @@ mod tests {
             ensure(m_ws == m_ref, "momentum state differs")?;
             ensure(p_ws == p_ref, "scale_momentum_ws differs from reference")
         });
+    }
+
+    #[test]
+    fn par_rules_bit_identical_over_pools_and_thresholds() {
+        // the ISSUE acceptance property: `*_par` rules must reproduce the
+        // sequential `_ws` rules bit for bit across pool sizes, random
+        // shapes, and thresholds straddling the numel gate
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(5)];
+        let mut ws = NormWorkspace::new();
+        let mut ws_par = NormWorkspace::new();
+        prop::check("scale-par-bit-identical", 32, |rng| {
+            let (di, dn) = (prop::usize_in(rng, 1, 40), prop::usize_in(rng, 1, 40));
+            let g_scale = prop::f32_in(rng, 0.1, 5.0);
+            let g = prop::matrix(rng, di, dn, g_scale);
+            let p0 = prop::matrix(rng, di, dn, 1.0);
+            let m0 = prop::matrix(rng, di, dn, 0.3);
+            let lr = prop::f32_in(rng, 1e-4, 0.5);
+            let beta = prop::f32_in(rng, 0.0, 0.99);
+            let numel = di * dn;
+
+            let mut p_want = p0.clone();
+            scale_plain_ws(&mut p_want, &g, di, dn, lr, &mut ws);
+            let (mut pm_want, mut m_want) = (p0.clone(), m0.clone());
+            scale_momentum_ws(&mut pm_want, &mut m_want, &g, di, dn, lr, beta, &mut ws);
+
+            for pool in &pools {
+                for min_elems in [0usize, numel, numel + 1] {
+                    let mut p = p0.clone();
+                    scale_plain_ws_par_with(pool, &mut p, &g, di, dn, lr, &mut ws_par, min_elems);
+                    ensure(
+                        p == p_want,
+                        format!(
+                            "scale_plain_ws_par differs: {di}x{dn}, {} workers, min {min_elems}",
+                            pool.workers()
+                        ),
+                    )?;
+
+                    let (mut pm, mut m) = (p0.clone(), m0.clone());
+                    scale_momentum_ws_par_with(
+                        pool, &mut pm, &mut m, &g, di, dn, lr, beta, &mut ws_par, min_elems,
+                    );
+                    ensure(
+                        m == m_want,
+                        format!("momentum state differs: {di}x{dn}, min {min_elems}"),
+                    )?;
+                    ensure(
+                        pm == pm_want,
+                        format!("scale_momentum_ws_par differs: {di}x{dn}, min {min_elems}"),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn par_rules_large_matrix_default_threshold() {
+        // above PAR_MIN_ELEMS the default entry points take the tiled
+        // path; pin bit-identity at a realistic lm_head-ish shape
+        let pool = WorkerPool::new(4);
+        let (di, dn) = (128usize, 512usize);
+        assert!(di * dn >= PAR_MIN_ELEMS);
+        let mut rng = crate::util::rng::Pcg::new(21);
+        let g: Vec<f32> = (0..di * dn).map(|_| 0.1 * rng.normal() as f32).collect();
+        let p0: Vec<f32> = (0..di * dn).map(|_| rng.normal() as f32).collect();
+        let m0 = vec![0.05f32; di * dn];
+        let mut ws = NormWorkspace::new();
+
+        let mut p_want = p0.clone();
+        scale_plain_ws(&mut p_want, &g, di, dn, 0.01, &mut ws);
+        let mut p = p0.clone();
+        let mut ws_par = NormWorkspace::new();
+        scale_plain_ws_par(&pool, &mut p, &g, di, dn, 0.01, &mut ws_par);
+        assert_eq!(p, p_want);
+
+        let (mut pm_want, mut m_want) = (p0.clone(), m0.clone());
+        scale_momentum_ws(&mut pm_want, &mut m_want, &g, di, dn, 0.01, 0.9, &mut ws);
+        let (mut pm, mut m) = (p0, m0);
+        scale_momentum_ws_par(&pool, &mut pm, &mut m, &g, di, dn, 0.01, 0.9, &mut ws_par);
+        assert_eq!(m, m_want);
+        assert_eq!(pm, pm_want);
+    }
+
+    #[test]
+    fn par_rules_reuse_pool_without_spawning() {
+        let pool = WorkerPool::new(3);
+        let spawned = crate::parallel::threads_spawned_by_current_thread();
+        let (di, dn) = (64usize, 64usize);
+        let mut rng = crate::util::rng::Pcg::new(5);
+        let g: Vec<f32> = (0..di * dn).map(|_| rng.normal() as f32).collect();
+        let mut p = vec![0.0f32; di * dn];
+        let mut ws = NormWorkspace::new();
+        for _ in 0..100 {
+            scale_plain_ws_par_with(&pool, &mut p, &g, di, dn, 1e-3, &mut ws, 0);
+        }
+        assert_eq!(
+            crate::parallel::threads_spawned_by_current_thread(),
+            spawned,
+            "tiled kernels must never spawn threads"
+        );
+        assert!(p.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -1,0 +1,69 @@
+//! Persistent worker-pool runtime: the parallel substrate for every
+//! per-step fan-out in the coordinator and the tiled optimizer kernels.
+//!
+//! `std`-only by design (this build environment has no external crates):
+//! a fixed set of worker threads created **once** — at pool construction,
+//! never on the step path — fed through a mutex-protected job queue, with
+//! a scoped `run` (= submit + join) entry point that supports borrowed
+//! task environments, exactly like `std::thread::scope` but without the
+//! per-call thread spawns. `coordinator::Trainer` (shard fwd/bwd, batch
+//! tokenization, ring refill), `coordinator::ddp::tree_all_reduce`, and
+//! the `optim` `*_par` kernels all dispatch through one pool.
+//!
+//! # Determinism guarantees
+//!
+//! Scheduling is *not* deterministic — which worker runs which task, and
+//! in what interleaving, varies run to run. The pool's contract is that
+//! none of that nondeterminism can leak into results:
+//!
+//! * **Result ordering.** [`WorkerPool::run`] returns results slotted by
+//!   submission index. Output `i` is task `i`'s return value, always.
+//! * **Panic determinism.** A task panic is captured, the rest of the
+//!   batch still runs to completion, and the panic payload with the
+//!   lowest task index is re-raised at the `run` call site.
+//! * **No hidden reassociation.** The pool never splits, merges, or
+//!   reorders the *work inside* a task. Callers that need bit-identical
+//!   float results (tree reduction columns, column-tiled norm kernels)
+//!   get them by partitioning work into tasks whose internal operation
+//!   order matches the sequential implementation — the pool only decides
+//!   *when* each task runs, never what it computes. See
+//!   `optim::colnorm` and `coordinator::ddp` for the property tests that
+//!   pin this down.
+//!
+//! # Spawn accounting
+//!
+//! [`threads_spawned`] (and its per-thread variant) counts every worker
+//! the pool module has ever created. After construction the count must
+//! stay flat across any number of `run` calls — the zero-per-step-spawn
+//! acceptance gate enforced in `benches/bench_hot_path.rs` and the pool
+//! tests.
+
+mod pool;
+
+pub use pool::{threads_spawned, threads_spawned_by_current_thread, WorkerPool};
+
+use std::sync::OnceLock;
+
+static SHARED: OnceLock<WorkerPool> = OnceLock::new();
+
+/// Upper bound on shared-pool workers; beyond this the queue lock
+/// outweighs the extra lanes for the tensor sizes this crate handles.
+const MAX_SHARED_WORKERS: usize = 15;
+
+/// The process-wide shared pool, created on first use and reused by
+/// every `Trainer`/`Engine` consumer for the life of the process
+/// (sweeps construct many trainers; sharing one pool keeps the thread
+/// count flat instead of multiplying it per run). Sized to
+/// `available_parallelism - 1` workers — the dispatching thread is the
+/// extra lane — capped at [`MAX_SHARED_WORKERS`].
+pub fn shared() -> &'static WorkerPool {
+    SHARED.get_or_init(|| WorkerPool::new(default_workers()))
+}
+
+fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .saturating_sub(1)
+        .min(MAX_SHARED_WORKERS)
+}

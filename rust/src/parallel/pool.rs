@@ -1,0 +1,542 @@
+//! The persistent worker pool: `std`-only threads created once and fed
+//! type-erased jobs through a mutex-protected queue.
+//!
+//! See the module docs ([`super`]) for the determinism contract. The
+//! implementation notes that matter for soundness live on [`WorkerPool::run`].
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// Threads ever spawned by worker pools in this process (monotonic).
+///
+/// This is the zero-per-step-spawn acceptance gate: record the value,
+/// drive N steps through the pool, and assert it has not moved —
+/// `benches/bench_hot_path.rs` and the tests below both do.
+static SPAWNED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Spawns performed *by the current thread* — pool construction
+    /// spawns on the constructing thread, and a regression where `run`
+    /// spawned would land on the calling thread, so this isolates the
+    /// assertion from unrelated pool constructions on parallel test
+    /// threads.
+    static SPAWNED_HERE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Total pool worker threads spawned so far, process-wide.
+pub fn threads_spawned() -> usize {
+    SPAWNED.load(Ordering::SeqCst)
+}
+
+/// Pool worker threads spawned by the calling thread (race-free under
+/// concurrent test execution; see `SPAWNED_HERE`).
+pub fn threads_spawned_by_current_thread() -> usize {
+    SPAWNED_HERE.with(|c| c.get())
+}
+
+/// A lifetime-erased task closure: the batch bookkeeping inside
+/// [`WorkerPool::run`] guarantees the borrowed environment outlives
+/// every job.
+type Call = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued unit of work, tagged with its batch so a submitting thread
+/// only ever helps with *its own* batch (see [`WorkerPool::run`]).
+struct Job {
+    batch: u64,
+    call: Call,
+}
+
+#[derive(Default)]
+struct JobQueue {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+struct Shared {
+    queue: Mutex<JobQueue>,
+    work: Condvar,
+    /// Monotonic batch-id source for `run` dispatches.
+    next_batch: AtomicU64,
+}
+
+/// Completion latch for one `run` batch: counts outstanding jobs and
+/// wakes the submitting thread when the last one lands.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(n),
+            done: Condvar::new(),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn is_open(&self) -> bool {
+        *self.remaining.lock().unwrap() > 0
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.done.wait(left).unwrap();
+        }
+    }
+}
+
+/// Blocks on drop until the batch completes. This is the soundness
+/// backstop for the lifetime erasure in [`WorkerPool::run`]: even if the
+/// submitting thread unwinds between enqueue and join, the borrowed task
+/// environment stays alive until every job has finished with it.
+struct WaitGuard<'a>(&'a Latch);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        self.0.wait();
+    }
+}
+
+/// A fixed set of worker threads created once and reused for every
+/// dispatch. Construction is the only place threads are spawned; `run`
+/// never spawns.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` pool threads. `workers == 0` is valid and makes
+    /// every `run` execute inline on the caller.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(JobQueue::default()),
+            work: Condvar::new(),
+            next_batch: AtomicU64::new(0),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                SPAWNED.fetch_add(1, Ordering::SeqCst);
+                SPAWNED_HERE.with(|c| c.set(c.get() + 1));
+                thread::Builder::new()
+                    .name(format!("scale-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Worker threads owned by the pool (excluding the caller).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Concurrent lanes a `run` can use: the workers plus the submitting
+    /// thread, which executes its own batch's queued jobs while it waits.
+    pub fn parallelism(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `tasks` on the pool and return their results **in task
+    /// order**, blocking until all have completed (`run` = submit + join).
+    ///
+    /// * Results are slotted by submission index, so the output order is
+    ///   deterministic regardless of which worker runs what.
+    /// * A panicking task does not kill its worker: the payload is
+    ///   captured and re-raised here on the submitting thread, after the
+    ///   whole batch has completed. With several panics, the
+    ///   lowest-indexed payload is the one re-raised (deterministic).
+    /// * Tasks may borrow the caller's stack (`'env`): `run` does not
+    ///   return — or unwind — until every job has finished with those
+    ///   borrows.
+    /// * The caller participates: while waiting it drains *its own
+    ///   batch's* queued jobs (never another dispatcher's — no
+    ///   head-of-line blocking behind a foreign task), so a task that
+    ///   itself calls `run` on the same pool cannot deadlock: every
+    ///   nested batch can always be drained by its own submitter. A
+    ///   zero-worker pool degenerates to inline execution with the same
+    ///   all-tasks-run panic contract.
+    pub fn run<'env, T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        F: FnOnce() -> T + Send + 'env,
+        T: Send + 'env,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if n == 1 || self.handles.is_empty() {
+            // nothing to overlap: run inline — with the same contract as
+            // the pooled path (every task runs to completion, then the
+            // lowest-indexed panic is re-raised), so side effects never
+            // depend on the pool size
+            let mut first_panic = None;
+            let mut out = Vec::with_capacity(n);
+            for task in tasks {
+                match panic::catch_unwind(AssertUnwindSafe(task)) {
+                    Ok(v) => out.push(v),
+                    Err(p) => {
+                        if first_panic.is_none() {
+                            first_panic = Some(p);
+                        }
+                    }
+                }
+            }
+            if let Some(p) = first_panic {
+                panic::resume_unwind(p);
+            }
+            return out;
+        }
+
+        // per-job bookkeeping is *owned* (Arc) by each job, so the erased
+        // closure's only borrowed state is the tasks' own 'env captures
+        let batch = self.shared.next_batch.fetch_add(1, Ordering::Relaxed);
+        let latch = Arc::new(Latch::new(n));
+        let slots: Vec<Arc<Mutex<Option<thread::Result<T>>>>> =
+            (0..n).map(|_| Arc::new(Mutex::new(None))).collect();
+        let guard = WaitGuard(latch.as_ref());
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for (task, slot) in tasks.into_iter().zip(&slots) {
+                let slot = Arc::clone(slot);
+                let latch = Arc::clone(&latch);
+                let call: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
+                    let result = panic::catch_unwind(AssertUnwindSafe(task));
+                    *slot.lock().unwrap() = Some(result);
+                    latch.count_down();
+                });
+                // SAFETY: the transmute only erases 'env; layout is
+                // unchanged. The job's captures are its own Arcs plus the
+                // task's 'env environment, and `help_until` below — with
+                // `guard` as the unwind-path backstop — blocks until
+                // `latch` reports every job in this batch complete, so
+                // the 'env borrows can never dangle while a worker still
+                // holds the erased closure.
+                let call: Call = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>, Call>(call)
+                };
+                q.jobs.push_back(Job { batch, call });
+            }
+        }
+        self.shared.work.notify_all();
+        self.help_until(&latch, batch);
+        // the batch is complete; the guard's drop-wait is a no-op
+        drop(guard);
+
+        // every count_down happened after its slot store (program order)
+        // and before our latch wait returned (latch mutex), so the takes
+        // below observe every result
+        let mut first_panic = None;
+        let mut out = Vec::with_capacity(n);
+        for slot in &slots {
+            match slot.lock().unwrap().take() {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(p)) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+                None => unreachable!("batch latch released with a result missing"),
+            }
+        }
+        if let Some(p) = first_panic {
+            panic::resume_unwind(p);
+        }
+        out
+    }
+
+    /// Drain this batch's queued jobs on the calling thread until
+    /// `latch` opens, then sleep on the latch once none of them are left
+    /// in the queue (the stragglers are in flight on workers). Only jobs
+    /// tagged with `batch` are taken — helping with a foreign batch's
+    /// job would block this dispatcher behind work it does not own.
+    fn help_until(&self, latch: &Latch, batch: u64) {
+        loop {
+            if !latch.is_open() {
+                return;
+            }
+            let job = {
+                let mut q = self.shared.queue.lock().unwrap();
+                match q.jobs.iter().position(|j| j.batch == batch) {
+                    Some(idx) => q.jobs.remove(idx),
+                    None => None,
+                }
+            };
+            match job {
+                Some(job) => (job.call)(),
+                None => {
+                    latch.wait();
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.shutdown {
+                    return;
+                }
+                q = shared.work.wait(q).unwrap();
+            }
+        };
+        // the call catches its own panics, so the worker never unwinds
+        // and the queue mutex is never poisoned
+        (job.call)();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.queue.lock().unwrap().shutdown = true;
+        self.shared.work.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
+
+    #[test]
+    fn results_arrive_in_submission_order() {
+        let pool = WorkerPool::new(4);
+        // reverse-staggered sleeps: completion order is roughly the
+        // reverse of submission order, results must still be 0..n
+        let tasks: Vec<_> = (0..8u64)
+            .map(|i| {
+                move || {
+                    thread::sleep(Duration::from_millis(2 * (8 - i)));
+                    i
+                }
+            })
+            .collect();
+        assert_eq!(pool.run(tasks), (0..8).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom-from-task")),
+            Box::new(|| 3),
+        ];
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| pool.run(tasks)));
+        let payload = caught.expect_err("task panic must propagate to run()");
+        let msg = payload
+            .downcast_ref::<&str>()
+            .copied()
+            .unwrap_or("non-str payload");
+        assert!(msg.contains("boom-from-task"), "payload: {msg}");
+        // the pool must stay fully usable after a propagated panic
+        let ok: Vec<usize> = pool.run((0..6).map(|i| move || i * i).collect());
+        assert_eq!(ok, vec![0, 1, 4, 9, 16, 25]);
+    }
+
+    #[test]
+    fn lowest_index_panic_wins() {
+        let pool = WorkerPool::new(3);
+        for _ in 0..8 {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| panic!("first")),
+                Box::new(|| panic!("second")),
+                Box::new(|| 0),
+            ];
+            let payload =
+                panic::catch_unwind(AssertUnwindSafe(|| pool.run(tasks))).expect_err("must panic");
+            let msg = payload.downcast_ref::<&str>().copied().unwrap_or("?");
+            assert_eq!(msg, "first", "propagated payload must be deterministic");
+        }
+    }
+
+    #[test]
+    fn reuse_across_100_simulated_steps_spawns_nothing() {
+        let pool = WorkerPool::new(4);
+        let spawned_after_construction = threads_spawned_by_current_thread();
+        let mut acc = 0u64;
+        for step in 0..100u64 {
+            // a "step": fan out 8 tasks, join, fold the results
+            let parts: Vec<u64> = pool.run((0..8u64).map(|s| move || step * 100 + s).collect());
+            acc += parts.iter().sum::<u64>();
+        }
+        assert_eq!(
+            threads_spawned_by_current_thread(),
+            spawned_after_construction,
+            "run() must never spawn threads after pool construction"
+        );
+        // sum over steps of (800*step + 28)
+        let want: u64 = (0..100u64).map(|s| 800 * s + 28).sum();
+        assert_eq!(acc, want);
+    }
+
+    #[test]
+    fn tasks_may_borrow_and_mutate_stack_data() {
+        let pool = WorkerPool::new(3);
+        let mut data = vec![0u32; 64];
+        {
+            let tasks: Vec<_> = data
+                .chunks_mut(16)
+                .enumerate()
+                .map(|(i, chunk)| {
+                    move || {
+                        for (j, x) in chunk.iter_mut().enumerate() {
+                            *x = (i * 16 + j) as u32;
+                        }
+                    }
+                })
+                .collect();
+            pool.run(tasks);
+        }
+        for (i, x) in data.iter().enumerate() {
+            assert_eq!(*x, i as u32);
+        }
+    }
+
+    #[test]
+    fn nested_run_on_same_pool_makes_progress() {
+        // more outer tasks than workers, each dispatching an inner batch:
+        // the caller-helping loop must drain the queue instead of
+        // deadlocking on exhausted workers
+        let pool = WorkerPool::new(2);
+        let outer: Vec<u64> = pool.run(
+            (0..6u64)
+                .map(|i| {
+                    let pool = &pool;
+                    move || {
+                        let inner_tasks: Vec<_> = (0..4u64).map(|j| move || i * 10 + j).collect();
+                        let inner: Vec<u64> = pool.run(inner_tasks);
+                        inner.iter().sum()
+                    }
+                })
+                .collect(),
+        );
+        let want: Vec<u64> = (0..6u64).map(|i| 4 * (i * 10) + 6).collect();
+        assert_eq!(outer, want);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.parallelism(), 1);
+        let out = pool.run((0..5usize).map(|i| move || i + 1).collect());
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn inline_path_honors_all_tasks_run_panic_contract() {
+        // a panicking task must not stop later tasks, whatever the pool
+        // size — side effects are identical inline and pooled
+        for workers in [0usize, 2] {
+            let pool = WorkerPool::new(workers);
+            let ran_after = AtomicU64::new(0);
+            let tasks: Vec<_> = (0..3u64)
+                .map(|i| {
+                    let ran_after = &ran_after;
+                    move || {
+                        if i == 0 {
+                            panic!("early");
+                        }
+                        ran_after.fetch_add(1, Ordering::SeqCst);
+                        i
+                    }
+                })
+                .collect();
+            let caught = panic::catch_unwind(AssertUnwindSafe(|| pool.run(tasks)));
+            assert!(caught.is_err(), "panic must propagate ({workers} workers)");
+            assert_eq!(
+                ran_after.load(Ordering::SeqCst),
+                2,
+                "all tasks must run despite the panic ({workers} workers)"
+            );
+        }
+    }
+
+    #[test]
+    fn concurrent_dispatchers_get_their_own_results() {
+        // several threads share one pool; batch tagging must keep every
+        // dispatcher's results correct and its helping confined to its
+        // own batch
+        let pool = WorkerPool::new(3);
+        thread::scope(|s| {
+            for t in 0..4u64 {
+                let pool = &pool;
+                s.spawn(move || {
+                    for step in 0..25u64 {
+                        let base = t * 1_000 + step * 10;
+                        let tasks: Vec<_> = (0..6u64).map(|i| move || base + i).collect();
+                        let got = pool.run(tasks);
+                        let want: Vec<u64> = (0..6u64).map(|i| base + i).collect();
+                        assert_eq!(got, want, "dispatcher {t} step {step}");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = WorkerPool::new(1);
+        let out: Vec<u8> = pool.run(Vec::<fn() -> u8>::new());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn heavy_concurrent_counting_is_exact() {
+        // many small batches with shared atomics: no lost jobs, no
+        // double-executed jobs
+        let pool = WorkerPool::new(4);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(
+                (0..16)
+                    .map(|_| {
+                        let counter = &counter;
+                        move || {
+                            counter.fetch_add(1, Ordering::Relaxed);
+                        }
+                    })
+                    .collect(),
+            );
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 50 * 16);
+    }
+
+    #[test]
+    fn shared_pool_is_created_once() {
+        let a = super::super::shared() as *const WorkerPool;
+        let before = threads_spawned_by_current_thread();
+        let b = super::super::shared() as *const WorkerPool;
+        assert_eq!(a, b, "shared() must return the same pool");
+        assert_eq!(
+            threads_spawned_by_current_thread(),
+            before,
+            "a second shared() call must not respawn"
+        );
+    }
+}

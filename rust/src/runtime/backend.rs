@@ -8,12 +8,51 @@
 //! typed storage, so tensor round-trips and every pure-Rust code path
 //! work), while compilation/execution entry points return a clear
 //! runtime error instructing the user to rebuild with `--features xla`.
+//!
+//! [`LiteralView`] is the borrowed input form: on the stub backend it
+//! aliases the tensor's host storage (zero-copy — `run_exe_refs` callers
+//! no longer pay `to_literal`'s per-input copy), while the FFI build
+//! materializes owned literals at the [`execute_views`] seam because the
+//! C API requires owned buffers at upload time.
 
 #[cfg(feature = "xla")]
 pub use xla::{
     ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
     XlaComputation,
 };
+
+/// With the real FFI, executable inputs must be owned `xla::Literal`s —
+/// the C API copies host buffers at upload time — so the "view" wraps an
+/// owned literal and `Tensor::as_literal_ref` pays exactly the copy
+/// `to_literal` did. The borrowed form below (stub build) is the
+/// zero-copy one; donating PJRT buffers to avoid this copy on device is
+/// tracked in ROADMAP.
+#[cfg(feature = "xla")]
+pub struct LiteralView<'a> {
+    lit: Literal,
+    _borrow: std::marker::PhantomData<&'a ()>,
+}
+
+#[cfg(feature = "xla")]
+impl<'a> LiteralView<'a> {
+    pub fn from_owned(lit: Literal) -> LiteralView<'a> {
+        LiteralView {
+            lit,
+            _borrow: std::marker::PhantomData,
+        }
+    }
+}
+
+/// Execute with view inputs. The FFI path unwraps to owned literals;
+/// the stub path (below) would pass borrows straight through.
+#[cfg(feature = "xla")]
+pub fn execute_views(
+    exe: &PjRtLoadedExecutable,
+    args: Vec<LiteralView<'_>>,
+) -> Result<Vec<Vec<PjRtBuffer>>, xla::Error> {
+    let owned: Vec<Literal> = args.into_iter().map(|v| v.lit).collect();
+    exe.execute::<Literal>(&owned)
+}
 
 #[cfg(not(feature = "xla"))]
 mod stub {
@@ -163,6 +202,78 @@ mod stub {
         }
     }
 
+    /// Borrowed input payload for zero-copy execution.
+    #[derive(Debug, Clone, Copy)]
+    pub enum StorageRef<'a> {
+        F32(&'a [f32]),
+        I32(&'a [i32]),
+    }
+
+    /// Borrowed counterpart of [`Literal`]: shape plus a *view* of the
+    /// caller's host data. `Tensor::as_literal_ref` builds these without
+    /// copying the payload — the zero-copy leg of `Engine::run_exe_refs`
+    /// on this backend (the only allocation is the small dims vector).
+    #[derive(Debug, Clone)]
+    pub struct LiteralView<'a> {
+        dims: Vec<i64>,
+        storage: StorageRef<'a>,
+    }
+
+    impl<'a> LiteralView<'a> {
+        pub fn f32(dims: Vec<i64>, data: &'a [f32]) -> LiteralView<'a> {
+            debug_assert_eq!(dims.iter().product::<i64>(), data.len() as i64);
+            LiteralView {
+                dims,
+                storage: StorageRef::F32(data),
+            }
+        }
+
+        pub fn i32(dims: Vec<i64>, data: &'a [i32]) -> LiteralView<'a> {
+            debug_assert_eq!(dims.iter().product::<i64>(), data.len() as i64);
+            LiteralView {
+                dims,
+                storage: StorageRef::I32(data),
+            }
+        }
+
+        pub fn dims(&self) -> &[i64] {
+            &self.dims
+        }
+
+        /// The borrowed f32 payload, if this is an f32 view. The slice
+        /// aliases the source tensor's storage — the zero-copy tests
+        /// compare raw pointers through this.
+        pub fn f32s(&self) -> Option<&'a [f32]> {
+            match self.storage {
+                StorageRef::F32(d) => Some(d),
+                StorageRef::I32(_) => None,
+            }
+        }
+
+        /// Materialize an owned [`Literal`] (copies). This is the seam a
+        /// real upload path would cross; round-trip tests use it.
+        pub fn to_literal(&self) -> Literal {
+            let storage = match self.storage {
+                StorageRef::F32(d) => Storage::F32(d.to_vec()),
+                StorageRef::I32(d) => Storage::I32(d.to_vec()),
+            };
+            Literal {
+                dims: self.dims.clone(),
+                storage,
+            }
+        }
+    }
+
+    /// Borrowed-input execution: accepts views (no host copy on this
+    /// backend) and fails with the same unavailable error as the owned
+    /// path — the stub cannot execute artifacts.
+    pub fn execute_views(
+        _exe: &PjRtLoadedExecutable,
+        _args: Vec<LiteralView<'_>>,
+    ) -> Result<Vec<Vec<PjRtBuffer>>, BackendError> {
+        Err(unavailable("executing an artifact"))
+    }
+
     pub struct HloModuleProto;
 
     impl HloModuleProto {
@@ -217,6 +328,6 @@ mod stub {
 
 #[cfg(not(feature = "xla"))]
 pub use stub::{
-    ElementType, HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
-    XlaComputation,
+    execute_views, ElementType, HloModuleProto, Literal, LiteralView, PjRtBuffer, PjRtClient,
+    PjRtLoadedExecutable, XlaComputation,
 };

@@ -13,14 +13,19 @@
 //! sync-safe — the executable cache behind a `Mutex`, the perf counters
 //! as atomics. Callers pass inputs by reference ([`Engine::run_exe_refs`])
 //! so the hot path never clones parameter tensors just to build an
-//! argument list.
+//! argument list, and inputs cross the backend seam as borrowed literal
+//! views (`Tensor::as_literal_ref`) — on the stub backend no host copy
+//! is made at all.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::backend::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use super::backend::{
+    execute_views, HloModuleProto, Literal, LiteralView, PjRtClient, PjRtLoadedExecutable,
+    XlaComputation,
+};
 
 use super::artifact::{ArtifactSpec, Manifest};
 use super::tensor::Tensor;
@@ -129,15 +134,21 @@ impl Engine {
 
     /// Execute with borrowed inputs — the zero-copy entry point. The
     /// trainer assembles `[&params.., &state.., &grads.., &scalars..]`
-    /// without cloning a single tensor.
-    pub fn run_exe_refs(&self, exe: &Executable, inputs: &[&Tensor]) -> anyhow::Result<Vec<Tensor>> {
+    /// without cloning a single tensor, and on the stub backend the
+    /// input literals are *views* of the tensors' storage
+    /// ([`Tensor::as_literal_ref`]) — no per-input host copy either.
+    pub fn run_exe_refs(
+        &self,
+        exe: &Executable,
+        inputs: &[&Tensor],
+    ) -> anyhow::Result<Vec<Tensor>> {
         exe.check_inputs(inputs)?;
-        let lits: Vec<Literal> = inputs
+        let views: Vec<LiteralView> = inputs
             .iter()
-            .map(|t| t.to_literal())
+            .map(|t| t.as_literal_ref())
             .collect::<anyhow::Result<_>>()?;
         let t0 = Instant::now();
-        let out = exe.exe.0.execute::<Literal>(&lits)?;
+        let out = execute_views(&exe.exe.0, views)?;
         let mut tuple = out[0][0].to_literal_sync()?;
         self.exec_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);

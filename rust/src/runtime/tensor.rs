@@ -3,7 +3,7 @@
 //! gradients are all-reduced here, checkpoints serialize it, analysis
 //! reads it.
 
-use super::backend::{ElementType, Literal};
+use super::backend::{ElementType, Literal, LiteralView};
 
 use super::artifact::DType;
 
@@ -110,6 +110,27 @@ impl Tensor {
         Ok(lit.reshape(&dims)?)
     }
 
+    /// Borrowed literal view of this tensor — the zero-copy input leg of
+    /// `Engine::run_exe_refs`. On the stub backend the view aliases this
+    /// tensor's storage directly (no host copy; only the small dims
+    /// vector is built). With `--features xla` it materializes an owned
+    /// literal, since the FFI requires owned buffers at upload time.
+    #[cfg(not(feature = "xla"))]
+    pub fn as_literal_ref(&self) -> anyhow::Result<LiteralView<'_>> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            Tensor::F32 { data, .. } => LiteralView::f32(dims, data),
+            Tensor::I32 { data, .. } => LiteralView::i32(dims, data),
+        })
+    }
+
+    /// See the stub-backend form above; this leg pays the host copy the
+    /// FFI demands.
+    #[cfg(feature = "xla")]
+    pub fn as_literal_ref(&self) -> anyhow::Result<LiteralView<'_>> {
+        Ok(LiteralView::from_owned(self.to_literal()?))
+    }
+
     pub fn from_literal(lit: &Literal) -> anyhow::Result<Tensor> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -214,6 +235,37 @@ mod tests {
         let t = Tensor::scalar_f32(3.5);
         let back = Tensor::from_literal(&t.to_literal().unwrap()).unwrap();
         assert_eq!(back.item_f32(), 3.5);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn literal_view_is_zero_copy_and_faithful() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let view = t.as_literal_ref().unwrap();
+        assert_eq!(view.dims(), &[2, 3]);
+        // the view aliases the tensor's storage — no host copy
+        assert_eq!(view.f32s().unwrap().as_ptr(), t.f32s().as_ptr());
+        // materializing the view matches the owned to_literal path
+        let owned = view.to_literal();
+        assert_eq!(Tensor::from_literal(&owned).unwrap(), t);
+        assert_eq!(owned, t.to_literal().unwrap());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn literal_view_i32_and_scalar_shapes() {
+        let b = Tensor::from_i32(&[2, 4], (0..8).collect());
+        let vb = b.as_literal_ref().unwrap();
+        assert_eq!(vb.dims(), &[2, 4]);
+        assert!(vb.f32s().is_none());
+        assert_eq!(Tensor::from_literal(&vb.to_literal()).unwrap(), b);
+        let s = Tensor::scalar_f32(4.25);
+        let vs = s.as_literal_ref().unwrap();
+        assert!(vs.dims().is_empty());
+        assert_eq!(
+            Tensor::from_literal(&vs.to_literal()).unwrap().item_f32(),
+            4.25
+        );
     }
 
     #[test]

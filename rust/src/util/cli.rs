@@ -108,8 +108,8 @@ mod tests {
 
     #[test]
     fn parses_subcommand_and_opts() {
-        let mut a = Args::parse(&sv(&["train", "extra", "--size", "s60m", "--steps=100", "--quiet"]))
-            .unwrap();
+        let args = sv(&["train", "extra", "--size", "s60m", "--steps=100", "--quiet"]);
+        let mut a = Args::parse(&args).unwrap();
         assert_eq!(a.subcommand.as_deref(), Some("train"));
         assert_eq!(a.get("size"), Some("s60m"));
         assert_eq!(a.get_usize("steps", 0).unwrap(), 100);

@@ -73,9 +73,10 @@ fn fwd_bwd_loss_matches_eval_artifact() {
     let batch = Tensor::from_i32(&[b, w], (0..(b * w) as i32).map(|x| x % 100).collect());
     let (loss_fb, grads) = tr.grad_step(&batch).unwrap();
     assert_eq!(grads.len(), tr.params.len());
-    let mut inputs = tr.params.clone();
-    inputs.push(batch);
-    let out = eng.run("eval_s60m", &inputs).unwrap();
+    let evl = eng.load("eval_s60m").unwrap();
+    let mut inputs: Vec<&Tensor> = tr.params.iter().collect();
+    inputs.push(&batch);
+    let out = eng.run_exe_refs(&evl, &inputs).unwrap();
     let loss_ev = out[0].item_f32() as f64;
     assert!((loss_fb - loss_ev).abs() < 1e-5, "{loss_fb} vs {loss_ev}");
 }
@@ -191,12 +192,16 @@ fn update_artifact_matches_native_scale_rule() {
         })
         .collect();
     let lr = 0.01f32;
-    let mut inputs = tr.params.clone();
-    inputs.extend(tr.state.iter().cloned());
-    inputs.extend(grads.iter().cloned());
-    inputs.push(Tensor::scalar_f32(lr));
-    inputs.push(Tensor::scalar_f32(1.0));
-    let out = eng.run("update_scale_s60m", &inputs).unwrap();
+    let upd = eng.load("update_scale_s60m").unwrap();
+    let lr_t = Tensor::scalar_f32(lr);
+    let step_t = Tensor::scalar_f32(1.0);
+    let mut inputs: Vec<&Tensor> = Vec::new();
+    inputs.extend(tr.params.iter());
+    inputs.extend(tr.state.iter());
+    inputs.extend(grads.iter());
+    inputs.push(&lr_t);
+    inputs.push(&step_t);
+    let out = eng.run_exe_refs(&upd, &inputs).unwrap();
 
     // native mirror for the head (momentum path, beta=0.9, m0=0)
     let (d_in, vocab) = (info.d_model, info.vocab);
@@ -271,10 +276,13 @@ fn varprobe_artifact_runs() {
     let w = info.seq_len + 1;
     let mb = eng.manifest.microbatch;
     let big = mb * eng.manifest.varprobe_big_factor;
-    let mut inputs = tr.params.clone();
-    inputs.push(Tensor::from_i32(&[mb, w], vec![1; mb * w]));
-    inputs.push(Tensor::from_i32(&[big, w], vec![1; big * w]));
-    let out = eng.run("varprobe_s60m", &inputs).unwrap();
+    let probe = eng.load("varprobe_s60m").unwrap();
+    let small_batch = Tensor::from_i32(&[mb, w], vec![1; mb * w]);
+    let big_batch = Tensor::from_i32(&[big, w], vec![1; big * w]);
+    let mut inputs: Vec<&Tensor> = tr.params.iter().collect();
+    inputs.push(&small_batch);
+    inputs.push(&big_batch);
+    let out = eng.run_exe_refs(&probe, &inputs).unwrap();
     assert_eq!(out.len(), info.params.len());
     // identical small/big token content -> small but nonnegative variance
     for v in &out {
