@@ -22,9 +22,6 @@
 //! iteration, the pool spawns ZERO threads across the measured runs,
 //! and the zero-copy step is >= 2x faster than the allocating baseline.
 
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
-
 use scale_llm::coordinator::ddp;
 use scale_llm::optim::colnorm::{
     colnorm, colnorm_into, colnorm_into_par_with, rownorm_into, sign_into, NormWorkspace,
@@ -36,40 +33,13 @@ use scale_llm::util::bench::{black_box, Bencher, Stats};
 use scale_llm::util::json::Json;
 use scale_llm::util::rng::Pcg;
 
-/// Counting allocator: every heap allocation in the process bumps the
-/// counter, so "zero allocations in the kernel inner loop" is measured,
-/// not asserted by eyeball.
-struct CountingAlloc;
+#[path = "support/alloc_counter.rs"]
+mod alloc_counter;
 
-static ALLOCS: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
-    }
-
-    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
-    }
-
-    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
-    }
-
-    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
-        ALLOCS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
-    }
-}
+use alloc_counter::{allocs, CountingAlloc};
 
 #[global_allocator]
 static GLOBAL: CountingAlloc = CountingAlloc;
-
-fn allocs() -> u64 {
-    ALLOCS.load(Ordering::Relaxed)
-}
 
 /// The old `Tensor::add_assign` semantics: copy the source slice, then
 /// add — one full extra pass + allocation per reduce leg.

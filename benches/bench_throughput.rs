@@ -1,21 +1,248 @@
-//! Table 7 bench: end-to-end training throughput (tokens/sec) per
-//! optimizer.
+//! End-to-end training throughput on the native executor, with the
+//! deterministic steady-state gates that seed the perf trajectory.
 //!
 //!   cargo bench --bench bench_throughput
 //!
-//! Paper (LLaMA 1B, 4xH100): SCALE ~ Adam ~ APOLLO ~ Stable-SPAM;
-//! NS-based methods (Muon/SWAN) ~18.5% slower; GaLore/Fira ~8% slower.
-//! The measured column must reproduce that *shape*: NS methods pay the
-//! orthogonalization tax, SCALE stays within a few % of Adam.
+//! Sections:
+//!   1. Executor steady state (gated): drive `fwd_bwd_tiny` and
+//!      `update_scale_tiny` through `Engine::run_exe_refs_into` with
+//!      reused output buffers and the parallel threshold pinned to the
+//!      sequential path — the measured loop must perform ZERO heap
+//!      allocations (the workspace-arena contract of `exec`).
+//!   2. Trainer throughput: tokens/sec and step-latency p50/p99 for
+//!      1 vs N shards on the tiny and s60m configs — the measured loops
+//!      must spawn ZERO threads (the persistent-pool contract).
+//!
+//! Both gates are deterministic and enforced via the exit code (CI runs
+//! this bench); the timing numbers are recorded in
+//! `BENCH_throughput.json` for trajectory review, not gated — CI boxes
+//! are too noisy for latency assertions.
 
-use scale_llm::harness::tables::table7;
-use scale_llm::runtime::Engine;
+use std::time::{Duration, Instant};
+
+use scale_llm::coordinator::{TrainOptions, Trainer};
+use scale_llm::exec;
+use scale_llm::parallel;
+use scale_llm::runtime::{Engine, Tensor};
+use scale_llm::util::json::Json;
+
+#[path = "support/alloc_counter.rs"]
+mod alloc_counter;
+
+use alloc_counter::{allocs, CountingAlloc};
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Section 1: the executor's zero-allocation steady state. Returns
+/// (fwd+upd allocations over the measured loop, fwd ms, upd ms).
+/// The parallel threshold is pinned to the sequential path for the
+/// duration: pool dispatch boxes its task closures by design, so the
+/// allocation audit measures the arena contract, not the dispatch
+/// bookkeeping (spawns are gated instead).
+fn exec_steady_state(engine: &Engine) -> anyhow::Result<(u64, f64, f64)> {
+    parallel::set_min_ops_override(Some(usize::MAX));
+    let result = exec_steady_state_pinned(engine);
+    parallel::set_min_ops_override(None); // restore even on error
+    result
+}
+
+fn exec_steady_state_pinned(engine: &Engine) -> anyhow::Result<(u64, f64, f64)> {
+    let info = engine.manifest.size("tiny")?.clone();
+    let params = exec::native_init(&info, 0);
+    let (mb, w) = (engine.manifest.microbatch, info.seq_len + 1);
+    let toks: Vec<i32> = (0..mb * w).map(|i| (i % info.vocab) as i32).collect();
+    let batch = Tensor::from_i32(&[mb, w], toks);
+    let fwd = engine.load("fwd_bwd_tiny")?;
+    let upd = engine.load("update_scale_tiny")?;
+    let state: Vec<Tensor> = engine
+        .manifest
+        .state_spec("scale", "tiny")?
+        .iter()
+        .map(|s| Tensor::zeros(&s.shape))
+        .collect();
+    let lr_t = Tensor::scalar_f32(1e-2);
+    let step_t = Tensor::scalar_f32(1.0);
+
+    let mut fwd_inputs: Vec<&Tensor> = params.iter().collect();
+    fwd_inputs.push(&batch);
+    let mut fwd_out: Vec<Tensor> = Vec::new();
+    engine.run_exe_refs_into(&fwd, &fwd_inputs, &mut fwd_out)?;
+    engine.run_exe_refs_into(&fwd, &fwd_inputs, &mut fwd_out)?; // warm arena + outputs
+
+    let iters = 20u32;
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.run_exe_refs_into(&fwd, &fwd_inputs, &mut fwd_out)?;
+    }
+    let fwd_ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    let fwd_allocs = allocs() - a0;
+
+    let mut upd_inputs: Vec<&Tensor> = params.iter().collect();
+    upd_inputs.extend(state.iter());
+    upd_inputs.extend(fwd_out[1..].iter());
+    upd_inputs.push(&lr_t);
+    upd_inputs.push(&step_t);
+    let mut upd_out: Vec<Tensor> = Vec::new();
+    engine.run_exe_refs_into(&upd, &upd_inputs, &mut upd_out)?;
+    engine.run_exe_refs_into(&upd, &upd_inputs, &mut upd_out)?;
+
+    let a1 = allocs();
+    let t1 = Instant::now();
+    for _ in 0..iters {
+        engine.run_exe_refs_into(&upd, &upd_inputs, &mut upd_out)?;
+    }
+    let upd_ms = t1.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    let upd_allocs = allocs() - a1;
+
+    println!(
+        "exec steady state: fwd {fwd_ms:.3} ms, update {upd_ms:.3} ms; \
+         allocs over {iters}+{iters} iters: {} (must be 0)",
+        fwd_allocs + upd_allocs
+    );
+    Ok((fwd_allocs + upd_allocs, fwd_ms, upd_ms))
+}
+
+struct TrainRow {
+    size: String,
+    shards: usize,
+    steps: usize,
+    tokens_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    allocs_per_step: f64,
+    spawns: usize,
+}
+
+/// Section 2: full `Trainer::train_step` loop — throughput, latency
+/// percentiles, per-step allocations (reported), thread spawns (gated).
+fn train_row(engine: &Engine, size: &str, shards: usize, steps: usize) -> anyhow::Result<TrainRow> {
+    let opts = TrainOptions {
+        size: size.into(),
+        optimizer: "scale".into(),
+        // +2 so the metrics history reserved at construction also covers
+        // the warm-up steps: the measured loop must never regrow it
+        steps: steps + 2,
+        base_lr: 1e-2,
+        schedule: None,
+        shards,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        quiet: true,
+    };
+    let mut tr = Trainer::new(engine, opts)?;
+    tr.train_step()?; // warm: ring fill, arena + buffer creation
+    tr.train_step()?;
+    let mut samples: Vec<Duration> = Vec::with_capacity(steps);
+    let spawned0 = parallel::threads_spawned();
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..steps {
+        let s0 = Instant::now();
+        tr.train_step()?;
+        samples.push(s0.elapsed());
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let allocs_per_step = (allocs() - a0) as f64 / steps as f64;
+    let spawns = parallel::threads_spawned() - spawned0;
+    samples.sort();
+    let p50 = samples[steps / 2].as_secs_f64() * 1e3;
+    let p99 = samples[(steps * 99 / 100).min(steps - 1)].as_secs_f64() * 1e3;
+    let tokens = (steps * shards.max(1) * tr.microbatch * tr.seq_len) as f64;
+    let row = TrainRow {
+        size: size.to_string(),
+        shards,
+        steps,
+        tokens_per_sec: tokens / elapsed,
+        p50_ms: p50,
+        p99_ms: p99,
+        allocs_per_step,
+        spawns,
+    };
+    println!(
+        "{size} x{shards}: {:.0} tok/s, p50 {:.3} ms, p99 {:.3} ms, \
+         {:.1} allocs/step, {} spawns",
+        row.tokens_per_sec, row.p50_ms, row.p99_ms, row.allocs_per_step, row.spawns
+    );
+    Ok(row)
+}
 
 fn main() -> anyhow::Result<()> {
-    // ~20 steps per optimizer is enough for a stable tokens/sec estimate
-    match Engine::new("artifacts").and_then(|engine| table7(&engine, "s130m", 20)) {
-        Ok(t) => println!("{t}"),
-        Err(e) => println!("skipping throughput bench (artifacts/PJRT unavailable): {e}"),
-    }
+    // touch the shared pool (and its calibration) up front so one-time
+    // thread spawns and the probe are outside every measured region
+    let _ = parallel::shared();
+    let _ = parallel::tuned_min_ops();
+    let engine = match Engine::new("artifacts") {
+        Ok(e) if e.manifest.sizes.contains_key("tiny") => e,
+        Ok(_) => {
+            println!("skipping throughput bench (manifest lacks the tiny smoke size)");
+            return Ok(());
+        }
+        Err(e) => {
+            println!("skipping throughput bench (engine unavailable): {e}");
+            return Ok(());
+        }
+    };
+    println!("platform: {}", engine.platform());
+
+    println!("\n== executor steady state (zero-alloc gate) ==");
+    let (exec_allocs, fwd_ms, upd_ms) = exec_steady_state(&engine)?;
+
+    println!("\n== trainer throughput (zero-spawn gate) ==");
+    let rows = vec![
+        train_row(&engine, "tiny", 1, 60)?,
+        train_row(&engine, "tiny", 4, 60)?,
+        train_row(&engine, "s60m", 1, 30)?,
+        train_row(&engine, "s60m", 4, 30)?,
+    ];
+    let total_spawns: usize = rows.iter().map(|r| r.spawns).sum();
+
+    let row_json: Vec<Json> = rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("size", Json::str(&r.size)),
+                ("shards", Json::num(r.shards as f64)),
+                ("steps", Json::num(r.steps as f64)),
+                ("tokens_per_sec", Json::num(r.tokens_per_sec)),
+                ("step_p50_ms", Json::num(r.p50_ms)),
+                ("step_p99_ms", Json::num(r.p99_ms)),
+                ("allocs_per_step", Json::num(r.allocs_per_step)),
+                ("spawns", Json::num(r.spawns as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("throughput")),
+        ("platform", Json::str(&engine.platform())),
+        ("exec_fwd_ms", Json::num(fwd_ms)),
+        ("exec_update_ms", Json::num(upd_ms)),
+        ("exec_steady_allocs", Json::num(exec_allocs as f64)),
+        ("train_spawns", Json::num(total_spawns as f64)),
+        ("rows", Json::Arr(row_json)),
+    ]);
+    std::fs::write("BENCH_throughput.json", doc.to_string())?;
+    println!("\nbench json -> BENCH_throughput.json");
+
+    println!("\n== acceptance gates ==");
+    println!(
+        "  executor steady state allocation-free: {} ({exec_allocs} allocs)",
+        if exec_allocs == 0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "  zero thread spawns across training loops: {} ({total_spawns} spawned)",
+        if total_spawns == 0 { "PASS" } else { "FAIL" }
+    );
+    anyhow::ensure!(
+        exec_allocs == 0,
+        "steady-state executor performed {exec_allocs} heap allocations (expected 0)"
+    );
+    anyhow::ensure!(
+        total_spawns == 0,
+        "training loops spawned {total_spawns} threads (expected 0)"
+    );
     Ok(())
 }

@@ -1,0 +1,51 @@
+//! Shared counting global allocator for the bench acceptance gates:
+//! every heap allocation in the process bumps a counter, so
+//! "zero allocations in the measured loop" is measured, not asserted by
+//! eyeball. Each bench crate pulls this in via `#[path]` and declares
+//! its own `#[global_allocator]` instance:
+//!
+//! ```ignore
+//! #[path = "support/alloc_counter.rs"]
+//! mod alloc_counter;
+//! use alloc_counter::{allocs, CountingAlloc};
+//!
+//! #[global_allocator]
+//! static GLOBAL: CountingAlloc = CountingAlloc;
+//! ```
+//!
+//! Deallocations are deliberately not counted: the gates care about
+//! allocation *pressure* per iteration, and a free-only imbalance cannot
+//! occur in a loop that reuses its buffers.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+/// Heap allocations observed so far, process-wide.
+pub fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}

@@ -1,16 +1,18 @@
 //! Quickstart: train a tiny LLaMA with SCALE for 60 steps.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Demonstrates the minimal API surface: Engine (PJRT runtime) +
-//! TrainOptions + Trainer.
+//! Demonstrates the minimal API surface: Engine + TrainOptions +
+//! Trainer. On the default build this runs on the native CPU executor —
+//! no `make artifacts` required; with `--features xla` it executes the
+//! PJRT-lowered artifacts instead.
 
 use scale_llm::coordinator::{TrainOptions, Trainer};
 use scale_llm::runtime::Engine;
 
 fn main() -> anyhow::Result<()> {
     let engine = Engine::new("artifacts")?;
-    println!("PJRT platform: {}", engine.platform());
+    println!("platform: {}", engine.platform());
 
     let opts = TrainOptions {
         size: "s60m".into(),

@@ -21,20 +21,16 @@
 use crate::parallel::{self, WorkerPool};
 use crate::runtime::Tensor;
 
-/// Tensors smaller than this (total f32 elements per parameter column)
-/// reduce inline; threading tiny vectors costs more than it saves.
-const PAR_THRESHOLD: usize = 1 << 14;
-
 /// Reduce one parameter's shard column in place with pairwise tree
-/// combination; the mean lands in `col[0]`.
-fn tree_reduce_column(col: &mut [Tensor]) {
+/// combination; the mean lands in `*col[0]`.
+fn tree_reduce_column(col: &mut [&mut Tensor]) {
     let n = col.len();
     let mut stride = 1;
     while stride < n {
         let mut i = 0;
         while i + stride < n {
             let (left, right) = col.split_at_mut(i + stride);
-            left[i].add_assign(&right[0]);
+            left[i].add_assign(&*right[0]);
             i += 2 * stride;
         }
         stride *= 2;
@@ -52,31 +48,56 @@ pub fn tree_all_reduce(shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
 
 /// [`tree_all_reduce`] against an explicit pool — the trainer passes its
 /// own handle; tests and benches pass purpose-built pools.
-pub fn tree_all_reduce_in(pool: &WorkerPool, shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+pub fn tree_all_reduce_in(pool: &WorkerPool, mut shards: Vec<Vec<Tensor>>) -> Vec<Tensor> {
+    tree_all_reduce_into(pool, &mut shards, 0);
+    shards.swap_remove(0)
+}
+
+/// Borrowed, in-place form: reduces `shards[k][p]` over k for every
+/// `p >= skip`, leaving the mean in `shards[0][p]` and the partial sums
+/// the tree wrote into the other shards behind (callers treat those as
+/// scratch). `skip` lets the trainer reduce executable outputs whose
+/// leading entries are not gradients (the per-shard loss scalar).
+///
+/// The float semantics are exactly [`tree_all_reduce_in`]'s: per column
+/// the pairwise tree order is the sequential order, so results are
+/// bit-identical to the single-threaded reduction for every pool size.
+/// The parallel-dispatch threshold comes from the calibrated
+/// [`parallel::tuned_min_ops`] instead of a hard-coded constant.
+pub fn tree_all_reduce_into(pool: &WorkerPool, shards: &mut [Vec<Tensor>], skip: usize) {
     assert!(!shards.is_empty());
     let n_shards = shards.len();
     let n_params = shards[0].len();
-    for s in &shards {
+    for s in shards.iter() {
         assert_eq!(s.len(), n_params, "ragged shard gradient lists");
     }
+    assert!(skip <= n_params, "skip beyond parameter count");
+    if n_shards == 1 {
+        // a single shard's mean is itself (the tree would scale by 1/1,
+        // which is bitwise identity) — skip the traversal entirely
+        return;
+    }
 
-    // transpose to per-parameter columns (moves, no tensor copies)
-    let mut columns: Vec<Vec<Tensor>> = (0..n_params)
-        .map(|_| Vec::with_capacity(n_shards))
-        .collect();
-    for shard in shards {
-        for (p, t) in shard.into_iter().enumerate() {
-            columns[p].push(t);
+    // transpose to per-parameter columns of borrows (no tensor moves)
+    let n_cols = n_params - skip;
+    let mut columns: Vec<Vec<&mut Tensor>> =
+        (0..n_cols).map(|_| Vec::with_capacity(n_shards)).collect();
+    for shard in shards.iter_mut() {
+        for (p, t) in shard.iter_mut().enumerate() {
+            if p >= skip {
+                columns[p - skip].push(t);
+            }
         }
     }
 
+    let thr = parallel::tuned_min_ops();
     let big_elems: usize = columns
         .iter()
-        .filter(|c| c[0].numel() >= PAR_THRESHOLD)
+        .filter(|c| c[0].numel() >= thr)
         .map(|c| c[0].numel())
         .sum();
-    let workers = if n_shards > 1 && big_elems >= PAR_THRESHOLD {
-        pool.parallelism().min(n_params)
+    let workers = if big_elems >= thr {
+        pool.parallelism().min(n_cols)
     } else {
         1
     };
@@ -85,28 +106,26 @@ pub fn tree_all_reduce_in(pool: &WorkerPool, shards: Vec<Vec<Tensor>>) -> Vec<Te
         // round-robin interleave so every worker gets a mix of large and
         // small tensors (parameter lists are typically sorted by layer,
         // with the huge embed/head tensors at the ends)
-        let mut slots: Vec<Vec<&mut Vec<Tensor>>> = (0..workers).map(|_| Vec::new()).collect();
-        for (p, col) in columns.iter_mut().enumerate() {
+        let mut slots: Vec<Vec<Vec<&mut Tensor>>> = (0..workers).map(|_| Vec::new()).collect();
+        for (p, col) in columns.into_iter().enumerate() {
             slots[p % workers].push(col);
         }
         let tasks: Vec<_> = slots
             .into_iter()
             .map(|slot| {
                 move || {
-                    for col in slot {
-                        tree_reduce_column(col);
+                    for mut col in slot {
+                        tree_reduce_column(&mut col);
                     }
                 }
             })
             .collect();
         pool.run(tasks);
     } else {
-        for col in columns.iter_mut() {
-            tree_reduce_column(col);
+        for mut col in columns {
+            tree_reduce_column(&mut col);
         }
     }
-
-    columns.into_iter().map(|mut c| c.swap_remove(0)).collect()
 }
 
 /// Sequential baseline (reference semantics for tests).
@@ -242,6 +261,29 @@ mod tests {
                         format!("param {p} differs with {workers} workers"),
                     )?;
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn into_form_with_skip_matches_sequential_tree() {
+        // the trainer's borrowed path: skip=1 leaves the loss slot alone
+        // and reduces the rest bit-identically to the owned tree
+        prop::check("tree-allreduce-into-skip", 8, |rng| {
+            let k = prop::usize_in(rng, 1, 6);
+            let shapes = vec![vec![1], vec![40, 30], vec![17]];
+            let mut shards: Vec<Vec<Tensor>> = (0..k).map(|_| shard(rng, &shapes)).collect();
+            let inner: Vec<Vec<Tensor>> = shards.iter().map(|s| s[1..].to_vec()).collect();
+            let want = tree_all_reduce_sequential(inner);
+            let keep: Vec<f32> = shards.iter().map(|s| s[0].f32s()[0]).collect();
+            let pool = crate::parallel::WorkerPool::new(3);
+            tree_all_reduce_into(&pool, &mut shards, 1);
+            for (p, w) in want.iter().enumerate() {
+                prop::ensure(shards[0][p + 1].f32s() == w.f32s(), format!("param {p}"))?;
+            }
+            for (s, k0) in shards.iter().zip(&keep) {
+                prop::ensure(s[0].f32s()[0] == *k0, "skipped slot modified")?;
             }
             Ok(())
         });

@@ -6,23 +6,29 @@
 //!      ring (BPE runs once per ring segment, not once per batch) and
 //!      runs `fwd_bwd_<size>` (loss + per-parameter gradients) — shards
 //!      run concurrently on the persistent worker pool;
-//!   2. shard gradients are tree-all-reduced to the global mean
+//!   2. shard gradients are tree-all-reduced to the global mean in place
 //!      (parallel across parameters, bit-stable);
 //!   3. `update_<opt>_<size>` applies one optimizer step
 //!      (params, state, grads, lr, step) -> (params', state').
 //!
-//! Python never runs here; the loop is pure Rust + PJRT executions.
-//! The hot path is clone-free and spawn-free: executable inputs are
-//! assembled by reference (`Engine::run_exe_refs`), the returned output
-//! tensors *become* the new params/state by move, and every per-step
-//! fan-out (ring refill, shard fwd/bwd, tree reduce) dispatches onto the
-//! [`WorkerPool`] bound at construction — zero thread spawns per step.
+//! Python never runs here; the loop is pure Rust — native CPU programs
+//! by default, PJRT executions with `--features xla`. The hot path is
+//! clone-free, spawn-free, and (steady-state, on the native executor)
+//! allocation-free for every tensor buffer: batches, fwd/bwd outputs,
+//! and update outputs live in persistent buffers that executables write
+//! in place (`Engine::run_exe_refs_into`), the reduce mutates shard 0's
+//! gradients directly, and the new params/state are adopted by swapping
+//! buffers with the previous step's. Every per-step fan-out (ring
+//! refill, shard fwd/bwd, tree reduce, tiled kernels) dispatches onto
+//! the [`WorkerPool`] bound at construction — zero thread spawns per
+//! step.
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::ddp;
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::schedule::Schedule;
 use crate::data::{self, Corpus, Tokenizer};
+use crate::exec;
 use crate::parallel::{self, WorkerPool};
 use crate::runtime::{Engine, Executable, Tensor};
 
@@ -69,7 +75,7 @@ impl Default for TrainOptions {
 const EVAL_SHARD: usize = 1 << 20;
 
 /// Microbatches per token-ring segment: one corpus-chunk generation +
-/// BPE encode serves this many `next` calls.
+/// BPE encode serves this many batches.
 const RING_BATCHES: usize = 8;
 
 /// Pre-tokenized token ring for one DDP shard. Segment content is a pure
@@ -92,9 +98,13 @@ impl TokenRing {
         }
     }
 
-    /// The `[b, w]` batch at `stream_pos` for `shard`, refilling the ring
-    /// (one corpus chunk + one BPE encode per RING_BATCHES batches).
-    fn batch(
+    /// Write the `[b, w]` batch at `stream_pos` for `shard` into `out`,
+    /// refilling the ring (one corpus chunk + one BPE encode per
+    /// RING_BATCHES batches). `out`'s storage is reused in place when it
+    /// already has the right dtype and shape — the steady-state
+    /// zero-allocation path.
+    #[allow(clippy::too_many_arguments)]
+    fn batch_into(
         &mut self,
         corpus: &Corpus,
         tokenizer: &Tokenizer,
@@ -102,7 +112,8 @@ impl TokenRing {
         stream_pos: usize,
         b: usize,
         w: usize,
-    ) -> Tensor {
+        out: &mut Tensor,
+    ) {
         let need = b * w;
         let seg = stream_pos / RING_BATCHES;
         let seg_tokens = need * RING_BATCHES;
@@ -121,36 +132,17 @@ impl TokenRing {
             self.segment = seg;
         }
         let off = (stream_pos % RING_BATCHES) * need;
-        Tensor::from_i32(&[b, w], self.tokens[off..off + need].to_vec())
+        let src = &self.tokens[off..off + need];
+        let fits = match out {
+            Tensor::I32 { shape, .. } => shape.len() == 2 && shape[0] == b && shape[1] == w,
+            _ => false,
+        };
+        if fits {
+            out.i32s_mut().copy_from_slice(src);
+        } else {
+            *out = Tensor::from_i32(&[b, w], src.to_vec());
+        }
     }
-}
-
-/// Native parameter init mirroring model.init_params' scheme (ones for
-/// norm gains, N(0, 0.02) embeddings, 1/sqrt(d_in) fan-in matrices).
-/// Seeds are independent per parameter; exact agreement with the jax
-/// init artifact is not required (both are valid draws of the same
-/// scheme), only determinism per (size, seed).
-fn native_init(size: &crate::runtime::artifact::SizeInfo, seed: u64) -> Vec<Tensor> {
-    use crate::util::rng::Pcg;
-    size.params
-        .iter()
-        .enumerate()
-        .map(|(i, p)| {
-            let n = p.numel();
-            let mut rng = Pcg::with_stream(seed.wrapping_add(1), i as u64);
-            let data: Vec<f32> = match (p.kind.as_str(), p.name.as_str()) {
-                ("vector", _) => vec![1.0; n],
-                ("embed", _) | (_, "pos_embed") => {
-                    (0..n).map(|_| 0.02 * rng.normal() as f32).collect()
-                }
-                _ => {
-                    let scale = 1.0 / (p.shape[0] as f32).sqrt();
-                    (0..n).map(|_| scale * rng.normal() as f32).collect()
-                }
-            };
-            Tensor::from_f32(&p.shape, data)
-        })
-        .collect()
 }
 
 pub struct Trainer<'e> {
@@ -173,6 +165,18 @@ pub struct Trainer<'e> {
     rings: Vec<TokenRing>,
     /// Held-out eval stream, pre-tokenized like the training rings.
     eval_ring: TokenRing,
+    /// Persistent per-shard token batches, written in place each step.
+    batches: Vec<Tensor>,
+    /// Persistent per-shard fwd/bwd outputs: `[loss, grads..]` each.
+    fwd_outs: Vec<Vec<Tensor>>,
+    /// Persistent update outputs `[params'.., state'..]`, swapped with
+    /// `params`/`state` after each step (buffer ping-pong, no clones).
+    upd_out: Vec<Tensor>,
+    /// Reusable lr/step scalar inputs, mutated in place per step.
+    lr_t: Tensor,
+    step_t: Tensor,
+    eval_batch: Tensor,
+    eval_out: Vec<Tensor>,
     /// Persistent pool bound at construction (the process-wide shared
     /// pool); every per-step fan-out reuses it — no spawns per step.
     pool: &'static WorkerPool,
@@ -189,7 +193,7 @@ impl<'e> Trainer<'e> {
         // The init_<size> artifact exists for parity tests, but compiling
         // it costs 8-28s of PJRT time per process — native init removes it
         // from every run (EXPERIMENTS.md §Perf L3-2).
-        let params = native_init(&size, opts.seed);
+        let params = exec::native_init(&size, opts.seed);
         let state: Vec<Tensor> = engine
             .manifest
             .state_spec(&opts.optimizer, &opts.size)?
@@ -202,6 +206,14 @@ impl<'e> Trainer<'e> {
             .schedule
             .unwrap_or_else(|| Schedule::paper_default(opts.base_lr, opts.steps));
         let shards = opts.shards.max(1);
+        let mb = engine.manifest.microbatch;
+        let w = size.seq_len + 1;
+        let batches: Vec<Tensor> = (0..shards)
+            .map(|_| Tensor::from_i32(&[mb, w], vec![0; mb * w]))
+            .collect();
+        let mut metrics = Metrics::new();
+        // pre-size the history so steady-state steps never regrow it
+        metrics.steps.reserve(opts.steps + 1);
 
         Ok(Trainer {
             engine,
@@ -213,21 +225,30 @@ impl<'e> Trainer<'e> {
             params,
             state,
             step: 0,
-            metrics: Metrics::new(),
+            metrics,
             corpus,
             tokenizer,
             seq_len: size.seq_len,
-            microbatch: engine.manifest.microbatch,
+            microbatch: mb,
             shard_positions: vec![0; shards],
             rings: (0..shards).map(|_| TokenRing::new()).collect(),
             eval_ring: TokenRing::new(),
+            batches,
+            fwd_outs: vec![Vec::new(); shards],
+            upd_out: Vec::new(),
+            lr_t: Tensor::scalar_f32(0.0),
+            step_t: Tensor::scalar_f32(0.0),
+            eval_batch: Tensor::from_i32(&[mb, w], vec![0; mb * w]),
+            eval_out: Vec::new(),
             pool: parallel::shared(),
             opts,
         })
     }
 
     /// One fwd/bwd on a given batch: (loss, grads). Inputs are assembled
-    /// by reference — parameters are never cloned.
+    /// by reference — parameters are never cloned. This is the one-shot
+    /// probe/figure entry point; the training loop itself reuses
+    /// persistent output buffers instead.
     pub fn grad_step(&self, batch: &Tensor) -> anyhow::Result<(f64, Vec<Tensor>)> {
         let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 1);
         inputs.extend(self.params.iter());
@@ -238,9 +259,10 @@ impl<'e> Trainer<'e> {
     }
 
     /// One full coordinated training step (concurrent fwd/bwd per shard,
-    /// parallel all-reduce, optimizer update). Returns the mean shard
-    /// loss. Per-step heap traffic is limited to the executables' own
-    /// outputs — no parameter/state/gradient tensor is cloned.
+    /// in-place parallel all-reduce, optimizer update). Returns the mean
+    /// shard loss. Steady-state steps reuse every tensor buffer: the
+    /// executables write into persistent outputs and the new
+    /// params/state are adopted by swap.
     pub fn train_step(&mut self) -> anyhow::Result<f64> {
         self.step += 1;
         // shard count is fixed at construction (rings + stream positions
@@ -250,16 +272,16 @@ impl<'e> Trainer<'e> {
         debug_assert_eq!(shards, self.opts.shards.max(1), "opts.shards changed after new()");
         let pool = self.pool;
 
-        // 1) per-shard microbatches from the token rings. The pool is
-        //    engaged only when a ring actually needs a refill (the
-        //    BPE-encode leg); warm steps — RING_BATCHES-1 of every
-        //    RING_BATCHES — are slice copies where even pool dispatch
-        //    overhead would dominate
-        let batches: Vec<Tensor> = {
+        // 1) per-shard microbatches into the persistent batch tensors.
+        //    The pool is engaged only when a ring actually needs a refill
+        //    (the BPE-encode leg); warm steps — RING_BATCHES-1 of every
+        //    RING_BATCHES — are in-place slice copies
+        {
             let corpus = &self.corpus;
             let tokenizer = &self.tokenizer;
             let positions = &self.shard_positions;
             let rings = &mut self.rings;
+            let batches = &mut self.batches;
             let (b, w) = (self.microbatch, self.seq_len + 1);
             let any_refill = rings
                 .iter()
@@ -268,69 +290,94 @@ impl<'e> Trainer<'e> {
             if shards > 1 && any_refill {
                 let tasks: Vec<_> = rings
                     .iter_mut()
-                    .take(shards)
+                    .zip(batches.iter_mut())
                     .enumerate()
-                    .map(|(s, ring)| {
+                    .map(|(s, (ring, out))| {
                         let pos = positions[s];
-                        move || ring.batch(corpus, tokenizer, s, pos, b, w)
+                        move || ring.batch_into(corpus, tokenizer, s, pos, b, w, out)
                     })
                     .collect();
-                pool.run(tasks)
+                pool.run(tasks);
             } else {
-                rings
-                    .iter_mut()
-                    .take(shards)
-                    .enumerate()
-                    .map(|(s, ring)| ring.batch(corpus, tokenizer, s, positions[s], b, w))
-                    .collect()
+                for (s, (ring, out)) in rings.iter_mut().zip(batches.iter_mut()).enumerate() {
+                    ring.batch_into(corpus, tokenizer, s, positions[s], b, w, out);
+                }
             }
-        };
-        for pos in self.shard_positions.iter_mut().take(shards) {
+        }
+        for pos in self.shard_positions.iter_mut() {
             *pos += 1;
         }
 
         // 2) concurrent fwd/bwd per shard on the pool; `run` returns
         //    results in shard order so the downstream reduction is
-        //    bit-stable across runs
+        //    bit-stable across runs. Outputs land in persistent buffers.
         let mut loss_sum = 0.0;
-        let shard_grads: Vec<Vec<Tensor>> = {
-            let this: &Trainer = &*self;
-            let results: Vec<anyhow::Result<(f64, Vec<Tensor>)>> = if shards > 1 {
-                let tasks: Vec<_> = batches
-                    .iter()
-                    .map(|batch| move || this.grad_step(batch))
+        {
+            let engine = self.engine;
+            let fwd = &self.fwd;
+            let params = &self.params;
+            let n_params = self.n_params;
+            let batches = &self.batches;
+            let outs = &mut self.fwd_outs;
+            let results: Vec<anyhow::Result<()>> = if shards > 1 {
+                let tasks: Vec<_> = outs
+                    .iter_mut()
+                    .zip(batches.iter())
+                    .map(|(out, batch)| {
+                        move || {
+                            let mut inputs: Vec<&Tensor> = Vec::with_capacity(n_params + 1);
+                            inputs.extend(params.iter());
+                            inputs.push(batch);
+                            engine.run_exe_refs_into(fwd, &inputs, out)
+                        }
+                    })
                     .collect();
                 pool.run(tasks)
             } else {
-                vec![this.grad_step(&batches[0])]
+                let mut inputs: Vec<&Tensor> = Vec::with_capacity(n_params + 1);
+                inputs.extend(params.iter());
+                inputs.push(&batches[0]);
+                vec![engine.run_exe_refs_into(fwd, &inputs, &mut outs[0])]
             };
-            let mut grads = Vec::with_capacity(shards);
             for r in results {
-                let (loss, g) = r?;
-                loss_sum += loss;
-                grads.push(g);
+                r?;
             }
-            grads
-        };
+            for out in outs.iter() {
+                loss_sum += out[0].item_f32() as f64;
+            }
+        }
 
-        // 3) parallel tree all-reduce (same pool) + optimizer update with
-        //    borrowed inputs; outputs become the new params/state by move
-        let grads = ddp::tree_all_reduce_in(pool, shard_grads);
+        // 3) in-place parallel tree all-reduce across the shard outputs
+        //    (index 0 of each is the loss scalar — skipped); the mean
+        //    gradients land in fwd_outs[0][1..]
+        ddp::tree_all_reduce_into(pool, &mut self.fwd_outs, 1);
+
+        // 4) optimizer update with borrowed inputs into the persistent
+        //    update buffers; outputs become the new params/state by swap
         let lr = self.schedule.lr(self.step);
-        let lr_t = Tensor::scalar_f32(lr as f32);
-        let step_t = Tensor::scalar_f32(self.step as f32);
-        let mut inputs: Vec<&Tensor> =
-            Vec::with_capacity(self.n_params + self.state.len() + grads.len() + 2);
-        inputs.extend(self.params.iter());
-        inputs.extend(self.state.iter());
-        inputs.extend(grads.iter());
-        inputs.push(&lr_t);
-        inputs.push(&step_t);
-        let mut out = self.engine.run_exe_refs(&self.upd, &inputs)?;
-        drop(inputs);
-        let rest = out.split_off(self.n_params);
-        self.params = out;
-        self.state = rest;
+        self.lr_t.f32s_mut()[0] = lr as f32;
+        self.step_t.f32s_mut()[0] = self.step as f32;
+        {
+            let engine = self.engine;
+            let upd = &self.upd;
+            let params = &self.params;
+            let state = &self.state;
+            let grads = &self.fwd_outs[0][1..];
+            let n = params.len() + state.len() + grads.len() + 2;
+            let mut inputs: Vec<&Tensor> = Vec::with_capacity(n);
+            inputs.extend(params.iter());
+            inputs.extend(state.iter());
+            inputs.extend(grads.iter());
+            inputs.push(&self.lr_t);
+            inputs.push(&self.step_t);
+            engine.run_exe_refs_into(upd, &inputs, &mut self.upd_out)?;
+        }
+        for i in 0..self.n_params {
+            std::mem::swap(&mut self.params[i], &mut self.upd_out[i]);
+        }
+        for j in 0..self.state.len() {
+            std::mem::swap(&mut self.state[j], &mut self.upd_out[self.n_params + j]);
+        }
 
         let loss = loss_sum / shards as f64;
         let tokens = (self.step * shards * self.microbatch * self.seq_len) as u64;
@@ -352,14 +399,17 @@ impl<'e> Trainer<'e> {
         let (b, w) = (self.microbatch, self.seq_len + 1);
         let mut sum = 0.0;
         for i in 0..n {
-            let batch = self
-                .eval_ring
-                .batch(&self.corpus, &self.tokenizer, EVAL_SHARD, i, b, w);
+            {
+                let ring = &mut self.eval_ring;
+                let out = &mut self.eval_batch;
+                ring.batch_into(&self.corpus, &self.tokenizer, EVAL_SHARD, i, b, w, out);
+            }
             let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 1);
             inputs.extend(self.params.iter());
-            inputs.push(&batch);
-            let out = self.engine.run_exe_refs(&self.evl, &inputs)?;
-            sum += out[0].item_f32() as f64;
+            inputs.push(&self.eval_batch);
+            self.engine
+                .run_exe_refs_into(&self.evl, &inputs, &mut self.eval_out)?;
+            sum += self.eval_out[0].item_f32() as f64;
         }
         let loss = sum / n as f64;
         self.metrics.record_eval(self.step, loss);
@@ -459,8 +509,9 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
-    /// Measured optimizer-state footprint of this run (f32 bytes).
+    /// Measured optimizer-state footprint of this run, sized by each
+    /// buffer's actual dtype.
     pub fn state_bytes(&self) -> usize {
-        self.state.iter().map(|t| 4 * t.numel()).sum()
+        self.state.iter().map(|t| t.dtype().bytes() * t.numel()).sum()
     }
 }

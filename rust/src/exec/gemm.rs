@@ -1,0 +1,414 @@
+//! Pool-parallel blocked f32 GEMM kernels for the native executor.
+//!
+//! Three orientations cover every matmul the transformer fwd/bwd needs
+//! (row-major throughout):
+//!
+//! * [`matmul_nn`]  — `C[m,n] = A[m,k] · B[k,n]` (activations × weights).
+//!   B is packed transposed into a caller-owned panel buffer first, so
+//!   the inner kernel is a contiguous-by-contiguous dot product.
+//! * [`matmul_nt`]  — `C[m,n] (+)= A[m,k] · B[n,k]ᵀ` (backward data:
+//!   `dX = dY · Wᵀ`). Rows of both operands are already contiguous —
+//!   no packing needed.
+//! * [`matmul_tn`]  — `C[m,n] = A[k,m]ᵀ · B[k,n]` (backward weights:
+//!   `dW = Xᵀ · dY`), computed as row-blocked rank-1 accumulation so B
+//!   rows stream once per small block of C rows.
+//!
+//! # Determinism contract (see the `exec` module docs)
+//!
+//! Every output element is produced by exactly one task, and its
+//! accumulation order over `k` is a fixed function of `k` alone:
+//! `matmul_nn`/`matmul_nt` use the shared 8-lane [`dot`] (fixed lane
+//! association, sequential tail), `matmul_tn` accumulates rank-1 updates
+//! in sequential `r` order. Parallelism only partitions C into disjoint
+//! row blocks — it never changes which floats meet in which order — so
+//! results are bit-identical for every pool size and every threshold,
+//! property-tested below.
+//!
+//! The `min_ops` gate (`m*n*k` multiply-adds) selects the sequential
+//! path for small problems where pool dispatch (~µs) would dominate; it
+//! is calibrated at runtime by [`crate::parallel::calibrate`].
+
+use crate::optim::colnorm::tile_width;
+use crate::parallel::WorkerPool;
+
+/// Column-block width for the packed-panel kernels: one block of packed
+/// B rows (NB × k floats) stays L1/L2-resident across every A row that
+/// streams against it.
+const NB: usize = 64;
+
+/// C row-block height for the rank-1 `matmul_tn` kernel: each B row is
+/// loaded once per IB output rows instead of once per row.
+const IB: usize = 8;
+
+/// Contiguous dot product with a fixed 8-lane accumulation order.
+/// The association depends only on the slice length, never on the
+/// caller's tiling, which is what makes the GEMMs bit-stable.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let ia = &a[i * 8..i * 8 + 8];
+        let ib = &b[i * 8..i * 8 + 8];
+        for l in 0..8 {
+            acc[l] += ia[l] * ib[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
+}
+
+/// In-place `y += s * x` over contiguous slices — the optimizer layer's
+/// [`crate::optim::rules::axpy_`], re-exported so the executor and the
+/// update rules share one kernel (one place to vectorize later).
+pub(crate) use crate::optim::rules::axpy_ as axpy;
+
+/// Pack `B[k,n]` transposed into `pack` (n rows of k contiguous floats),
+/// in 32x32 blocks so both source and destination stay cache-friendly.
+fn pack_bt(b: &[f32], k: usize, n: usize, pack: &mut Vec<f32>) {
+    debug_assert_eq!(b.len(), k * n);
+    pack.clear();
+    pack.resize(k * n, 0.0);
+    const TB: usize = 32;
+    let mut j0 = 0;
+    while j0 < n {
+        let jn = (j0 + TB).min(n);
+        let mut p0 = 0;
+        while p0 < k {
+            let pn = (p0 + TB).min(k);
+            for j in j0..jn {
+                let row = &mut pack[j * k..];
+                for p in p0..pn {
+                    row[p] = b[p * n + j];
+                }
+            }
+            p0 = pn;
+        }
+        j0 = jn;
+    }
+}
+
+/// The nn inner kernel over one block of C rows. `a_rows` holds the same
+/// row range of A that `c_rows` covers in C; `bt` is the packed Bᵀ.
+fn nn_rows(a_rows: &[f32], bt: &[f32], c_rows: &mut [f32], k: usize, n: usize) {
+    let rows = c_rows.len() / n.max(1);
+    let mut j0 = 0;
+    while j0 < n {
+        let jn = (j0 + NB).min(n);
+        for i in 0..rows {
+            let a_row = &a_rows[i * k..(i + 1) * k];
+            let c_row = &mut c_rows[i * n..(i + 1) * n];
+            for j in j0..jn {
+                c_row[j] = dot(a_row, &bt[j * k..(j + 1) * k]);
+            }
+        }
+        j0 = jn;
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[k,n]`, panel-packed and row-blocked across the
+/// pool. `pack` is the caller-owned panel buffer (resized, reused).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nn(
+    pool: &WorkerPool,
+    min_ops: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    pack: &mut Vec<f32>,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    pack_bt(b, k, n, pack);
+    let bt: &[f32] = pack;
+    if m * n * k < min_ops.max(1) || pool.parallelism() == 1 || m == 1 {
+        return nn_rows(a, bt, c, k, n);
+    }
+    let rows = tile_width(m, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, c_rows) in c.chunks_mut(rows * n).enumerate() {
+        let r0 = ti * rows;
+        let a_rows = &a[r0 * k..r0 * k + (c_rows.len() / n) * k];
+        tasks.push(move || nn_rows(a_rows, bt, c_rows, k, n));
+    }
+    pool.run(tasks);
+}
+
+/// The nt inner kernel over one block of C rows.
+fn nt_rows(a_rows: &[f32], b: &[f32], c_rows: &mut [f32], k: usize, n: usize, acc: bool) {
+    let rows = c_rows.len() / n.max(1);
+    let mut j0 = 0;
+    while j0 < n {
+        let jn = (j0 + NB).min(n);
+        for i in 0..rows {
+            let a_row = &a_rows[i * k..(i + 1) * k];
+            let c_row = &mut c_rows[i * n..(i + 1) * n];
+            for j in j0..jn {
+                let v = dot(a_row, &b[j * k..(j + 1) * k]);
+                if acc {
+                    c_row[j] += v;
+                } else {
+                    c_row[j] = v;
+                }
+            }
+        }
+        j0 = jn;
+    }
+}
+
+/// `C[m,n] = A[m,k] · B[n,k]ᵀ` (or `+=` with `acc`) — the backward-data
+/// orientation. Both operands are read along contiguous rows.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_nt(
+    pool: &WorkerPool,
+    min_ops: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    acc: bool,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if m * n * k < min_ops.max(1) || pool.parallelism() == 1 || m == 1 {
+        return nt_rows(a, b, c, k, n, acc);
+    }
+    let rows = tile_width(m, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, c_rows) in c.chunks_mut(rows * n).enumerate() {
+        let r0 = ti * rows;
+        let a_rows = &a[r0 * k..r0 * k + (c_rows.len() / n) * k];
+        tasks.push(move || nt_rows(a_rows, b, c_rows, k, n, acc));
+    }
+    pool.run(tasks);
+}
+
+/// The tn inner kernel over one block of C rows (`i0..i0+rows` of m).
+fn tn_rows(a: &[f32], b: &[f32], c_rows: &mut [f32], i0: usize, k: usize, m: usize, n: usize) {
+    let rows = c_rows.len() / n.max(1);
+    c_rows.fill(0.0);
+    let mut ib0 = 0;
+    while ib0 < rows {
+        let ibn = (ib0 + IB).min(rows);
+        for r in 0..k {
+            let b_row = &b[r * n..(r + 1) * n];
+            let a_row = &a[r * m..(r + 1) * m];
+            for i in ib0..ibn {
+                axpy(&mut c_rows[i * n..(i + 1) * n], a_row[i0 + i], b_row);
+            }
+        }
+        ib0 = ibn;
+    }
+}
+
+/// `C[m,n] = A[k,m]ᵀ · B[k,n]` — the backward-weights orientation,
+/// accumulated as rank-1 updates in sequential `r` order (bit-stable).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_tn(
+    pool: &WorkerPool,
+    min_ops: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if m * n * k < min_ops.max(1) || pool.parallelism() == 1 || m == 1 {
+        return tn_rows(a, b, c, 0, k, m, n);
+    }
+    let rows = tile_width(m, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, c_rows) in c.chunks_mut(rows * n).enumerate() {
+        let i0 = ti * rows;
+        tasks.push(move || tn_rows(a, b, c_rows, i0, k, m, n));
+    }
+    pool.run(tasks);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{self, ensure};
+
+    /// Textbook triple loop — the semantic reference (not bit reference;
+    /// the kernels' fixed lane association is its own bit contract).
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as f64;
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j] as f64;
+                }
+            }
+        }
+        c.into_iter().map(|x| x as f32).collect()
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+        prop::slices_close(a, b, tol)
+    }
+
+    #[test]
+    fn nn_matches_naive_reference() {
+        let mut pack = Vec::new();
+        let pool = WorkerPool::new(2);
+        prop::check("gemm-nn-naive", 32, |rng| {
+            let m = prop::usize_in(rng, 1, 33);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 70);
+            let a = prop::matrix(rng, m, k, 1.0);
+            let b = prop::matrix(rng, k, n, 1.0);
+            let want = naive_nn(&a, &b, m, k, n);
+            let mut c = vec![0.0f32; m * n];
+            matmul_nn(&pool, 0, &a, &b, &mut c, m, k, n, &mut pack);
+            close(&c, &want, 1e-4)
+        });
+    }
+
+    #[test]
+    fn orientations_agree_through_transposes() {
+        // nt and tn must equal nn applied to explicitly transposed inputs
+        let mut pack = Vec::new();
+        let pool = WorkerPool::new(3);
+        prop::check("gemm-orientations", 32, |rng| {
+            let m = prop::usize_in(rng, 1, 20);
+            let k = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 20);
+            let a = prop::matrix(rng, m, k, 1.0);
+            let b = prop::matrix(rng, k, n, 1.0);
+            // B stored transposed: bt[n,k]
+            let mut bt = vec![0.0f32; k * n];
+            for p in 0..k {
+                for j in 0..n {
+                    bt[j * k + p] = b[p * n + j];
+                }
+            }
+            // A stored transposed: at[k,m]
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for p in 0..k {
+                    at[p * m + i] = a[i * k + p];
+                }
+            }
+            let mut want = vec![0.0f32; m * n];
+            matmul_nn(&pool, 0, &a, &b, &mut want, m, k, n, &mut pack);
+            let mut c_nt = vec![0.0f32; m * n];
+            matmul_nt(&pool, 0, &a, &bt, &mut c_nt, m, k, n, false);
+            close(&c_nt, &want, 1e-5)?;
+            let mut c_tn = vec![0.0f32; m * n];
+            matmul_tn(&pool, 0, &at, &b, &mut c_tn, m, k, n);
+            close(&c_tn, &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn nt_accumulate_adds_on_top() {
+        let pool = WorkerPool::new(0);
+        let a = vec![1.0f32, 2.0, 3.0, 4.0]; // 2x2
+        let bt = vec![1.0f32, 0.0, 0.0, 1.0]; // identity, stored [n,k]
+        let mut c = vec![10.0f32; 4];
+        matmul_nt(&pool, 0, &a, &bt, &mut c, 2, 2, 2, true);
+        assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn bit_identical_across_pools_and_thresholds() {
+        // the tentpole acceptance property: every orientation, random
+        // shapes spanning the NB/IB tile boundaries, pools of several
+        // sizes, thresholds forcing both paths — identical bits
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(5)];
+        let mut pack = Vec::new();
+        prop::check("gemm-bits-pools", 24, |rng| {
+            let m = prop::usize_in(rng, 1, 80);
+            let k = prop::usize_in(rng, 1, 40);
+            let n = prop::usize_in(rng, 1, 80);
+            let a = prop::matrix(rng, m, k, 1.0);
+            let b = prop::matrix(rng, k, n, 1.0);
+            let mut bt = vec![0.0f32; k * n];
+            for p in 0..k {
+                for j in 0..n {
+                    bt[j * k + p] = b[p * n + j];
+                }
+            }
+            let mut at = vec![0.0f32; k * m];
+            for i in 0..m {
+                for p in 0..k {
+                    at[p * m + i] = a[i * k + p];
+                }
+            }
+            let seq = WorkerPool::new(0);
+            let mut want_nn = vec![0.0f32; m * n];
+            matmul_nn(&seq, usize::MAX, &a, &b, &mut want_nn, m, k, n, &mut pack);
+            let mut want_nt = vec![0.0f32; m * n];
+            matmul_nt(&seq, usize::MAX, &a, &bt, &mut want_nt, m, k, n, false);
+            let mut want_tn = vec![0.0f32; m * n];
+            matmul_tn(&seq, usize::MAX, &at, &b, &mut want_tn, m, k, n);
+            for pool in &pools {
+                for min_ops in [0usize, m * n * k, usize::MAX] {
+                    let mut c = vec![9.0f32; m * n];
+                    matmul_nn(pool, min_ops, &a, &b, &mut c, m, k, n, &mut pack);
+                    ensure(c == want_nn, format!("nn {m}x{k}x{n} min {min_ops}"))?;
+                    let mut c = vec![9.0f32; m * n];
+                    matmul_nt(pool, min_ops, &a, &bt, &mut c, m, k, n, false);
+                    ensure(c == want_nt, format!("nt {m}x{k}x{n} min {min_ops}"))?;
+                    let mut c = vec![9.0f32; m * n];
+                    matmul_tn(pool, min_ops, &at, &b, &mut c, m, k, n);
+                    ensure(c == want_tn, format!("tn {m}x{k}x{n} min {min_ops}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_association_is_length_only() {
+        // same data split across different call sites must agree exactly
+        let mut rng = crate::util::rng::Pcg::new(3);
+        let a: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..100).map(|_| rng.normal() as f32).collect();
+        let d1 = dot(&a, &b);
+        let d2 = dot(&a[..100], &b[..100]);
+        assert_eq!(d1, d2);
+        assert!((0..17).all(|i| dot(&a[..i], &b[..i]).is_finite()));
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let pool = WorkerPool::new(2);
+        let mut pack = Vec::new();
+        // 1-row, 1-col, and k=1 paths all defined
+        let a = vec![2.0f32; 7];
+        let b = vec![3.0f32; 7];
+        let mut c = vec![0.0f32; 1];
+        matmul_nn(&pool, 0, &a, &b, &mut c, 1, 7, 1, &mut pack);
+        assert!((c[0] - 42.0).abs() < 1e-5);
+        let mut c = vec![0.0f32; 49];
+        matmul_tn(&pool, 0, &a, &b, &mut c, 7, 1, 7);
+        assert!((c[0] - 6.0).abs() < 1e-6 && (c[48] - 6.0).abs() < 1e-6);
+    }
+}

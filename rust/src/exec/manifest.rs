@@ -1,0 +1,326 @@
+//! Native manifest synthesis: the same contract `aot.py` serializes to
+//! `artifacts/manifest.json`, built directly in Rust so the default
+//! (no-PJRT) build can train without ever running Python.
+//!
+//! Mirrors `python/compile/configs.py` (the tiny simulation family and
+//! the Appendix-B paper dims) and `model.param_specs` (canonical
+//! parameter order), and adds two smoke-test sizes (`tiny`, `tinyg`)
+//! small enough for debug-mode CI. Update artifacts are emitted for
+//! every optimizer in [`super::update::NATIVE_OPTIMIZERS`], with state
+//! layouts from the same plan the executor runs — a single source of
+//! truth, so checkpoints and `state_spec` lookups agree by construction.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::exec::update::{state_slots, NATIVE_OPTIMIZERS};
+use crate::runtime::artifact::{
+    ArtifactSpec, DType, Manifest, PaperDims, ParamSpec, SizeInfo, StateSlot, TensorSpec,
+};
+
+pub(crate) const MICROBATCH: usize = 4;
+pub(crate) const VARPROBE_BIG_FACTOR: usize = 4;
+const NORM_DIMS: [usize; 3] = [128, 256, 512];
+
+struct Cfg {
+    name: &'static str,
+    paper: &'static str,
+    vocab: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    d_ff: usize,
+    seq_len: usize,
+    batch: usize,
+    gpt2: bool,
+}
+
+/// The configs.py size table, plus debug-fast smoke sizes.
+fn native_cfgs() -> Vec<Cfg> {
+    let c = |name, paper, vocab, d_model, n_layers, n_heads, d_ff, seq_len, batch, gpt2| Cfg {
+        name,
+        paper,
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        seq_len,
+        batch,
+        gpt2,
+    };
+    vec![
+        c("tiny", "smoke", 64, 32, 1, 2, 96, 16, 8, false),
+        c("tinyg", "smoke", 64, 32, 1, 2, 64, 16, 8, true),
+        c("s60m", "60M", 512, 64, 2, 2, 176, 64, 16, false),
+        c("s130m", "130M", 1024, 96, 3, 3, 256, 64, 16, false),
+        c("s350m", "350M", 2048, 128, 4, 4, 344, 96, 16, false),
+        c("e2e", "1B/7B", 4096, 192, 4, 4, 512, 128, 16, false),
+        c("gpt2s", "GPT2-M", 1024, 96, 3, 3, 384, 64, 16, true),
+    ]
+}
+
+/// Variance-analysis grouping label (`_layer_of` in aot.py): the name
+/// up to the first dot.
+fn layer_of(name: &str) -> String {
+    name.split('.').next().unwrap_or(name).to_string()
+}
+
+/// `model.param_specs(cfg)` in Rust: the canonical parameter inventory.
+fn param_specs(cfg: &Cfg) -> Vec<ParamSpec> {
+    let (d, f, v) = (cfg.d_model, cfg.d_ff, cfg.vocab);
+    let mut out = Vec::new();
+    let mut push = |name: String, kind: &str, shape: Vec<usize>| {
+        out.push(ParamSpec {
+            layer: layer_of(&name),
+            name,
+            kind: kind.to_string(),
+            shape,
+        });
+    };
+    push("embed".into(), "embed", vec![v, d]);
+    if cfg.gpt2 {
+        push("pos_embed".into(), "matrix", vec![cfg.seq_len, d]);
+    }
+    for i in 0..cfg.n_layers {
+        push(format!("block{i}.attn_norm"), "vector", vec![d]);
+        push(format!("block{i}.wq"), "matrix", vec![d, d]);
+        push(format!("block{i}.wk"), "matrix", vec![d, d]);
+        push(format!("block{i}.wv"), "matrix", vec![d, d]);
+        push(format!("block{i}.wo"), "matrix", vec![d, d]);
+        push(format!("block{i}.mlp_norm"), "vector", vec![d]);
+        if !cfg.gpt2 {
+            push(format!("block{i}.w_gate"), "matrix", vec![d, f]);
+        }
+        push(format!("block{i}.w_up"), "matrix", vec![d, f]);
+        push(format!("block{i}.w_down"), "matrix", vec![f, d]);
+    }
+    push("final_norm".into(), "vector", vec![d]);
+    push("lm_head".into(), "head", vec![d, v]);
+    out
+}
+
+fn size_info(cfg: &Cfg) -> SizeInfo {
+    let params = param_specs(cfg);
+    SizeInfo {
+        name: cfg.name.to_string(),
+        paper_size: cfg.paper.to_string(),
+        vocab: cfg.vocab,
+        d_model: cfg.d_model,
+        n_layers: cfg.n_layers,
+        n_heads: cfg.n_heads,
+        d_ff: cfg.d_ff,
+        seq_len: cfg.seq_len,
+        batch: cfg.batch,
+        arch: if cfg.gpt2 { "gpt2" } else { "llama" }.to_string(),
+        param_count: params.iter().map(|p| p.numel()).sum(),
+        params,
+    }
+}
+
+fn t_f32(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: DType::F32,
+    }
+}
+
+fn t_i32(name: &str, shape: Vec<usize>) -> TensorSpec {
+    TensorSpec {
+        name: name.to_string(),
+        shape,
+        dtype: DType::I32,
+    }
+}
+
+fn param_tensors(info: &SizeInfo) -> Vec<TensorSpec> {
+    let ps = &info.params;
+    ps.iter().map(|p| t_f32(&p.name, p.shape.clone())).collect()
+}
+
+fn slot_tensors(slots: &[StateSlot]) -> Vec<TensorSpec> {
+    slots.iter().map(|s| t_f32(&s.name, s.shape.clone())).collect()
+}
+
+fn artifact(
+    name: &str,
+    kind: &str,
+    size: Option<&str>,
+    optimizer: Option<&str>,
+    inputs: Vec<TensorSpec>,
+    outputs: Vec<TensorSpec>,
+) -> ArtifactSpec {
+    ArtifactSpec {
+        name: name.to_string(),
+        file: format!("native://{name}"),
+        kind: kind.to_string(),
+        size: size.map(String::from),
+        optimizer: optimizer.map(String::from),
+        inputs,
+        outputs,
+    }
+}
+
+/// Build the complete native manifest. `dir` is kept for display only —
+/// no file under it is ever read by the native executor.
+pub fn native_manifest(dir: PathBuf) -> Manifest {
+    let mut sizes = BTreeMap::new();
+    let mut artifacts = BTreeMap::new();
+    let mut state_specs = BTreeMap::new();
+
+    for cfg in native_cfgs() {
+        let info = size_info(&cfg);
+        let sname = cfg.name;
+        let pins = param_tensors(&info);
+        let batch = t_i32("batch", vec![MICROBATCH, info.seq_len + 1]);
+        let big_n = MICROBATCH * VARPROBE_BIG_FACTOR;
+        let big = t_i32("big_batch", vec![big_n, info.seq_len + 1]);
+        let loss = t_f32("loss", vec![]);
+
+        let mut inputs = pins.clone();
+        inputs.push(batch.clone());
+        let mut outputs = vec![loss.clone()];
+        outputs.extend(pins.clone());
+        let name = format!("fwd_bwd_{sname}");
+        let art = artifact(&name, "fwd_bwd", Some(sname), None, inputs, outputs);
+        artifacts.insert(name, art);
+
+        let mut inputs = pins.clone();
+        inputs.push(batch.clone());
+        let name = format!("eval_{sname}");
+        let art = artifact(&name, "eval", Some(sname), None, inputs, vec![loss.clone()]);
+        artifacts.insert(name, art);
+
+        let mut inputs = pins.clone();
+        inputs.push(batch.clone());
+        inputs.push(big);
+        let vouts: Vec<TensorSpec> = info.params.iter().map(|p| t_f32(&p.name, vec![])).collect();
+        let name = format!("varprobe_{sname}");
+        let art = artifact(&name, "varprobe", Some(sname), None, inputs, vouts);
+        artifacts.insert(name, art);
+
+        let name = format!("init_{sname}");
+        let seed_in = vec![t_i32("seed", vec![])];
+        let art = artifact(&name, "init", Some(sname), None, seed_in, pins.clone());
+        artifacts.insert(name, art);
+
+        for &opt in NATIVE_OPTIMIZERS {
+            let slots = state_slots(opt, &info).expect("native optimizer must have a plan");
+            let sins = slot_tensors(&slots);
+            let gins: Vec<TensorSpec> = info
+                .params
+                .iter()
+                .map(|p| t_f32(&format!("grad.{}", p.name), p.shape.clone()))
+                .collect();
+            let mut inputs = pins.clone();
+            inputs.extend(sins.clone());
+            inputs.extend(gins);
+            inputs.push(t_f32("lr", vec![]));
+            inputs.push(t_f32("step", vec![]));
+            let mut outputs = pins.clone();
+            outputs.extend(sins);
+            let name = format!("update_{opt}_{sname}");
+            let art = artifact(&name, "update", Some(sname), Some(opt), inputs, outputs);
+            artifacts.insert(name, art);
+            state_specs.insert(format!("{opt}_{sname}"), slots);
+        }
+
+        sizes.insert(sname.to_string(), info);
+    }
+
+    for d in NORM_DIMS {
+        for op in ["col", "row", "sign", "ns"] {
+            let name = format!("norm_{op}_{d}");
+            let io = vec![t_f32("x", vec![d, d])];
+            let out = vec![t_f32("y", vec![d, d])];
+            artifacts.insert(name.clone(), artifact(&name, "norm", None, None, io, out));
+        }
+    }
+
+    let mut paper_dims = BTreeMap::new();
+    let pd = |vocab, d_model, n_layers, d_ff| PaperDims {
+        vocab,
+        d_model,
+        n_layers,
+        d_ff,
+    };
+    paper_dims.insert("60M".to_string(), pd(32000, 512, 8, 1376));
+    paper_dims.insert("130M".to_string(), pd(32000, 768, 12, 2048));
+    paper_dims.insert("350M".to_string(), pd(32000, 1024, 24, 2736));
+    paper_dims.insert("1B".to_string(), pd(32000, 2048, 24, 5461));
+    paper_dims.insert("7B".to_string(), pd(32000, 4096, 32, 11008));
+
+    Manifest {
+        dir,
+        microbatch: MICROBATCH,
+        varprobe_big_factor: VARPROBE_BIG_FACTOR,
+        sizes,
+        artifacts,
+        state_specs,
+        paper_dims,
+        norm_bench_dims: NORM_DIMS.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_match_configs_py_param_counts() {
+        let m = native_manifest(PathBuf::from("unused"));
+        // param_count formula from configs.py: v*d + L*(4d² + 3df + 2d) + d + d*v
+        let s = m.size("s60m").unwrap();
+        let (v, d, f, l) = (512usize, 64usize, 176usize, 2usize);
+        let per_block = 4 * d * d + 3 * d * f + 2 * d;
+        assert_eq!(s.param_count, v * d + l * per_block + d + d * v);
+        // gpt2 variant: pos-emb + 2-matrix MLP
+        let g = m.size("gpt2s").unwrap();
+        let (v, d, f, l, s_len) = (1024usize, 96usize, 384usize, 3usize, 64usize);
+        let per_block = 4 * d * d + 2 * d * f + 2 * d;
+        assert_eq!(g.param_count, v * d + s_len * d + l * per_block + d + d * v);
+    }
+
+    #[test]
+    fn update_artifact_io_arity_matches_contract() {
+        // the same invariant the file-manifest test pins for real artifacts
+        let m = native_manifest(PathBuf::from("unused"));
+        let s = m.size("tiny").unwrap();
+        let a = m.artifact("update_scale_tiny").unwrap();
+        let st = m.state_spec("scale", "tiny").unwrap();
+        assert_eq!(a.inputs.len(), 2 * s.params.len() + st.len() + 2);
+        assert_eq!(a.outputs.len(), s.params.len() + st.len());
+        assert!(st.iter().any(|x| x.name == "lm_head.m"));
+    }
+
+    #[test]
+    fn fwd_bwd_artifact_shapes_line_up() {
+        let m = native_manifest(PathBuf::from("unused"));
+        let s = m.size("tiny").unwrap();
+        let a = m.artifact("fwd_bwd_tiny").unwrap();
+        assert_eq!(a.inputs.len(), s.params.len() + 1);
+        let batch = a.inputs.last().unwrap();
+        assert_eq!(batch.shape, vec![MICROBATCH, s.seq_len + 1]);
+        assert_eq!(a.outputs.len(), 1 + s.params.len());
+        assert!(a.outputs[0].shape.is_empty());
+        assert_eq!(a.outputs[1].shape, s.params[0].shape);
+    }
+
+    #[test]
+    fn optimizers_for_covers_native_zoo() {
+        let m = native_manifest(PathBuf::from("unused"));
+        let opts = m.optimizers_for("s130m");
+        for need in ["scale", "adam", "muon", "galore", "apollo_mini", "stable_spam"] {
+            assert!(opts.iter().any(|o| o == need), "{need}");
+        }
+    }
+
+    #[test]
+    fn head_dim_divides_for_every_size() {
+        for cfg in native_cfgs() {
+            assert_eq!(cfg.d_model % cfg.n_heads, 0, "{}", cfg.name);
+            assert_eq!((cfg.d_model / cfg.n_heads) % 2, 0, "{}: odd head_dim", cfg.name);
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! Native CPU execution engine: pure-Rust implementations of the
+//! manifest's artifact semantics (`fwd_bwd_*`, `eval_*`, `update_*_*`,
+//! `init_*`, `varprobe_*`, `norm_*_*`), selected by
+//! `runtime::client::Engine::load` whenever PJRT is unavailable — the
+//! default build trains end-to-end with no Python and no FFI. The `xla`
+//! cargo feature keeps its PJRT path untouched, which makes the two
+//! executors parity-testable against each other once the FFI is wired.
+//!
+//! # Kernel tiling / packing contract
+//!
+//! All heavy math routes through [`gemm`]'s three orientations (`nn`
+//! activations×weights with a packed-transposed B panel, `nt` backward
+//! data with contiguous-row dots, `tn` backward weights as row-blocked
+//! rank-1 accumulation). Two invariants hold everywhere:
+//!
+//! * **Disjoint output blocks.** Parallelism only ever partitions the
+//!   output matrix into contiguous row blocks, one pool task per block,
+//!   obtained via `chunks_mut` — no locks, no aliasing on the data path.
+//! * **Fixed accumulation order.** Each output element's reduction over
+//!   `k` is a function of `k` alone (8-lane dot association, sequential
+//!   rank-1 order), independent of the tiling. Results are therefore
+//!   bit-identical for every worker-pool size and every `min_ops`
+//!   threshold — the property tests in `gemm`, `ns`, and `model` sweep
+//!   pools and thresholds to pin this down.
+//!
+//! The sequential-fallback threshold (`min_ops`, multiply-add count) is
+//! calibrated at runtime from measured pool dispatch latency
+//! ([`crate::parallel::calibrate`]) rather than hard-coded; it selects a
+//! code path, never a result.
+//!
+//! # Arena ownership
+//!
+//! Every program owns its scratch: model programs keep a pool of
+//! [`model::ModelWs`] arenas (one per concurrent executor — DDP shards
+//! share one `Arc<Executable>`), update programs a single mutexed
+//! workspace. Arenas are fully sized at construction from the model
+//! dims, so a steady-state `fwd_bwd`/`update` execution touches the heap
+//! zero times when the caller reuses its output tensors
+//! (`Engine::run_exe_refs_into`) — the gate asserted by
+//! `benches/bench_throughput.rs`, extending the `bench_hot_path`
+//! discipline from the optimizer kernels to the whole step.
+
+pub mod gemm;
+pub mod manifest;
+pub(crate) mod model;
+pub(crate) mod ns;
+mod program;
+pub(crate) mod update;
+
+pub use manifest::native_manifest;
+pub use program::{native_init, NativeProgram};
+pub use update::NATIVE_OPTIMIZERS;

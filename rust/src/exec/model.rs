@@ -1,0 +1,1120 @@
+//! Native transformer forward/backward: the LLaMA-style block of
+//! `python/compile/model.py` (RMSNorm → RoPE attention → SwiGLU, untied
+//! LM head, mean next-token cross-entropy) and its GPT2 variant (learned
+//! positional embeddings, GELU MLP, no RoPE), in pure Rust over the
+//! [`super::gemm`] kernels.
+//!
+//! All intermediates live in a [`ModelWs`] arena owned by the
+//! `NativeProgram`: buffers are sized once at construction for the
+//! largest batch the program executes, so steady-state `fwd_bwd` calls
+//! perform zero heap allocations (the bench gate in
+//! `benches/bench_throughput.rs`). The backward pass is fused where it
+//! pays: softmax-cross-entropy produces `dlogits` in place of the logits
+//! buffer, and the attention softmax backward rescales and masks in one
+//! sweep over the probability rows.
+//!
+//! Determinism: every reduction (row norms, loss accumulation, attention
+//! dots) is sequenced identically regardless of pool size — parallelism
+//! enters only through the GEMM row-block partitioning, which the gemm
+//! module pins as bit-stable. `fwd_bwd` is therefore bit-identical for
+//! every worker-pool size and threshold (property-tested below).
+
+use crate::exec::gemm::{axpy, dot, matmul_nn, matmul_nt, matmul_tn};
+use crate::parallel::WorkerPool;
+use crate::runtime::artifact::SizeInfo;
+use crate::runtime::Tensor;
+
+const NORM_EPS: f32 = 1e-6;
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+
+/// Model dimensions + parameter-order bookkeeping, derived from the
+/// manifest's [`SizeInfo`]. Parameter order matches `model.param_specs`:
+/// embed, (pos_embed), per block [attn_norm, wq, wk, wv, wo, mlp_norm,
+/// (w_gate,) w_up, w_down], final_norm, lm_head.
+#[derive(Debug, Clone)]
+pub(crate) struct ModelSpec {
+    pub vocab: usize,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub gpt2: bool,
+}
+
+impl ModelSpec {
+    pub fn from_size(info: &SizeInfo) -> ModelSpec {
+        ModelSpec {
+            vocab: info.vocab,
+            d: info.d_model,
+            n_layers: info.n_layers,
+            n_heads: info.n_heads,
+            head_dim: info.d_model / info.n_heads,
+            d_ff: info.d_ff,
+            seq: info.seq_len,
+            gpt2: info.arch == "gpt2",
+        }
+    }
+
+    fn base(&self) -> usize {
+        if self.gpt2 {
+            2 // embed, pos_embed
+        } else {
+            1 // embed
+        }
+    }
+
+    fn per_block(&self) -> usize {
+        if self.gpt2 {
+            8
+        } else {
+            9
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.base() + self.n_layers * self.per_block() + 2
+    }
+
+    fn p_attn_norm(&self, l: usize) -> usize {
+        self.base() + l * self.per_block()
+    }
+
+    fn p_wq(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + 1
+    }
+
+    fn p_wk(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + 2
+    }
+
+    fn p_wv(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + 3
+    }
+
+    fn p_wo(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + 4
+    }
+
+    fn p_mlp_norm(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + 5
+    }
+
+    /// LLaMA only (SwiGLU gate matrix).
+    fn p_wgate(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + 6
+    }
+
+    fn p_wup(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + if self.gpt2 { 6 } else { 7 }
+    }
+
+    fn p_wdown(&self, l: usize) -> usize {
+        self.p_attn_norm(l) + if self.gpt2 { 7 } else { 8 }
+    }
+
+    pub fn idx_final_norm(&self) -> usize {
+        self.n_params() - 2
+    }
+
+    pub fn idx_head(&self) -> usize {
+        self.n_params() - 1
+    }
+}
+
+/// Per-layer activation stash (forward values the backward pass needs).
+struct LayerWs {
+    xn: Vec<f32>,     // rmsnorm(h) feeding attention        [b*s*d]
+    q: Vec<f32>,      // post-rope queries, head layout      [b*nh*s*dh]
+    k: Vec<f32>,      // post-rope keys                      [b*nh*s*dh]
+    v: Vec<f32>,      // values                              [b*nh*s*dh]
+    probs: Vec<f32>,  // attention probabilities             [b*nh*s*s]
+    merged: Vec<f32>, // merged attention output, pre-Wo     [b*s*d]
+    h_mid: Vec<f32>,  // h after the attention residual      [b*s*d]
+    xn2: Vec<f32>,    // rmsnorm(h_mid) feeding the MLP      [b*s*d]
+    gate: Vec<f32>,   // gate pre-activation (gpt2: up pre)  [b*s*f]
+    up: Vec<f32>,     // up projection (llama only)          [b*s*f]
+    act: Vec<f32>,    // MLP activation feeding w_down       [b*s*f]
+}
+
+impl LayerWs {
+    fn new(bsd: usize, bhss: usize, bsf: usize) -> LayerWs {
+        LayerWs {
+            xn: vec![0.0; bsd],
+            q: vec![0.0; bsd],
+            k: vec![0.0; bsd],
+            v: vec![0.0; bsd],
+            probs: vec![0.0; bhss],
+            merged: vec![0.0; bsd],
+            h_mid: vec![0.0; bsd],
+            xn2: vec![0.0; bsd],
+            gate: vec![0.0; bsf],
+            up: vec![0.0; bsf],
+            act: vec![0.0; bsf],
+        }
+    }
+}
+
+/// The per-program workspace arena: every forward/backward intermediate,
+/// sized once for `max_b` sequences and reused for the program's life.
+pub(crate) struct ModelWs {
+    hs: Vec<Vec<f32>>, // residual stream before each layer (+ final) [b*s*d]
+    layers: Vec<LayerWs>,
+    hf: Vec<f32>,       // final rmsnorm output                [b*s*d]
+    logits: Vec<f32>,   // logits, overwritten by dlogits      [b*s*v]
+    dh_a: Vec<f32>,     // running residual-stream gradient    [b*s*d]
+    dh_b: Vec<f32>,     // branch gradient scratch             [b*s*d]
+    tmp_d: Vec<f32>,    // flat [b*s, d] GEMM scratch          [b*s*d]
+    df1: Vec<f32>,      // MLP gradient scratch                [b*s*f]
+    df2: Vec<f32>,      // MLP gradient scratch                [b*s*f]
+    datt: Vec<f32>,     // d(merged attention), head layout    [b*nh*s*dh]
+    dq: Vec<f32>,       // [b*nh*s*dh]
+    dk: Vec<f32>,       // [b*nh*s*dh]
+    dv: Vec<f32>,       // [b*nh*s*dh]
+    dprobs: Vec<f32>,   // dprobs, rewritten to dscores        [b*nh*s*s]
+    rope_cos: Vec<f32>, // [s * dh/2]
+    rope_sin: Vec<f32>, // [s * dh/2]
+    pack: Vec<f32>,     // GEMM panel buffer
+}
+
+impl ModelWs {
+    pub fn new(spec: &ModelSpec, max_b: usize) -> ModelWs {
+        let (s, d, f, v) = (spec.seq, spec.d, spec.d_ff, spec.vocab);
+        let bsd = max_b * s * d;
+        let bsf = max_b * s * f;
+        let bhss = max_b * spec.n_heads * s * s;
+        let half = spec.head_dim / 2;
+        let mut rope_cos = vec![0.0f32; s * half];
+        let mut rope_sin = vec![0.0f32; s * half];
+        for t in 0..s {
+            for i in 0..half {
+                let freq = 10000f32.powf(-(i as f32) / half as f32);
+                let ang = t as f32 * freq;
+                rope_cos[t * half + i] = ang.cos();
+                rope_sin[t * half + i] = ang.sin();
+            }
+        }
+        ModelWs {
+            hs: (0..spec.n_layers + 1).map(|_| vec![0.0; bsd]).collect(),
+            layers: (0..spec.n_layers).map(|_| LayerWs::new(bsd, bhss, bsf)).collect(),
+            hf: vec![0.0; bsd],
+            logits: vec![0.0; max_b * s * v],
+            dh_a: vec![0.0; bsd],
+            dh_b: vec![0.0; bsd],
+            tmp_d: vec![0.0; bsd],
+            df1: vec![0.0; bsf],
+            df2: vec![0.0; bsf],
+            datt: vec![0.0; bsd],
+            dq: vec![0.0; bsd],
+            dk: vec![0.0; bsd],
+            dv: vec![0.0; bsd],
+            dprobs: vec![0.0; bhss],
+            rope_cos,
+            rope_sin,
+            pack: Vec::with_capacity(d * v.max(f).max(d)),
+        }
+    }
+}
+
+// ---- elementwise building blocks -------------------------------------------
+
+fn rmsnorm_fwd(x: &[f32], gain: &[f32], out: &mut [f32], d: usize) {
+    for (xr, or) in x.chunks(d).zip(out.chunks_mut(d)) {
+        let mut ms = 0.0f32;
+        for &xi in xr {
+            ms += xi * xi;
+        }
+        ms /= d as f32;
+        let rr = 1.0 / (ms + NORM_EPS).sqrt();
+        for i in 0..d {
+            or[i] = xr[i] * rr * gain[i];
+        }
+    }
+}
+
+/// RMSNorm backward: rewrites `dy` into `dx` in place and accumulates
+/// the gain gradient (caller zeroes `dgain` first).
+fn rmsnorm_bwd(x: &[f32], gain: &[f32], dy: &mut [f32], dgain: &mut [f32], d: usize) {
+    for (xr, dyr) in x.chunks(d).zip(dy.chunks_mut(d)) {
+        let mut ms = 0.0f32;
+        for &xi in xr {
+            ms += xi * xi;
+        }
+        ms /= d as f32;
+        let rr = 1.0 / (ms + NORM_EPS).sqrt();
+        let mut t1 = 0.0f32;
+        for i in 0..d {
+            t1 += dyr[i] * gain[i] * xr[i];
+        }
+        let coef = rr * rr * rr * t1 / d as f32;
+        for i in 0..d {
+            dgain[i] += dyr[i] * xr[i] * rr;
+            dyr[i] = rr * gain[i] * dyr[i] - coef * xr[i];
+        }
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    let u = GELU_C * (x + 0.044715 * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let x2 = x * x;
+    let u = GELU_C * (x + 0.044715 * x * x2);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * 0.044715 * x2)
+}
+
+/// `[b*s, d]` flat rows -> `[b, nh, s, dh]` head-major layout.
+fn split_heads(src: &[f32], dst: &mut [f32], b: usize, s: usize, nh: usize, dh: usize) {
+    let d = nh * dh;
+    for bi in 0..b {
+        for h in 0..nh {
+            for t in 0..s {
+                let so = (bi * s + t) * d + h * dh;
+                let dofs = ((bi * nh + h) * s + t) * dh;
+                dst[dofs..dofs + dh].copy_from_slice(&src[so..so + dh]);
+            }
+        }
+    }
+}
+
+/// Inverse of [`split_heads`].
+fn merge_heads(src: &[f32], dst: &mut [f32], b: usize, s: usize, nh: usize, dh: usize) {
+    let d = nh * dh;
+    for bi in 0..b {
+        for h in 0..nh {
+            for t in 0..s {
+                let so = ((bi * nh + h) * s + t) * dh;
+                let dofs = (bi * s + t) * d + h * dh;
+                dst[dofs..dofs + dh].copy_from_slice(&src[so..so + dh]);
+            }
+        }
+    }
+}
+
+/// Rotate `x` (head layout, `groups = b*nh`) by the RoPE tables.
+fn rope_fwd(x: &mut [f32], cos: &[f32], sin: &[f32], groups: usize, s: usize, dh: usize) {
+    let half = dh / 2;
+    for g in 0..groups {
+        for t in 0..s {
+            let off = (g * s + t) * dh;
+            let row = &mut x[off..off + dh];
+            for i in 0..half {
+                let (c, sn) = (cos[t * half + i], sin[t * half + i]);
+                let (x1, x2) = (row[i], row[i + half]);
+                row[i] = x1 * c - x2 * sn;
+                row[i + half] = x1 * sn + x2 * c;
+            }
+        }
+    }
+}
+
+/// Transpose of [`rope_fwd`] (rotation by the negated angle).
+fn rope_bwd(x: &mut [f32], cos: &[f32], sin: &[f32], groups: usize, s: usize, dh: usize) {
+    let half = dh / 2;
+    for g in 0..groups {
+        for t in 0..s {
+            let off = (g * s + t) * dh;
+            let row = &mut x[off..off + dh];
+            for i in 0..half {
+                let (c, sn) = (cos[t * half + i], sin[t * half + i]);
+                let (y1, y2) = (row[i], row[i + half]);
+                row[i] = y1 * c + y2 * sn;
+                row[i + half] = -y1 * sn + y2 * c;
+            }
+        }
+    }
+}
+
+/// Mean next-token cross-entropy over the logits (nats).
+fn xent_loss(logits: &[f32], toks: &[i32], b: usize, s: usize, v: usize) -> f32 {
+    let mut total = 0.0f64;
+    for bi in 0..b {
+        for t in 0..s {
+            let row = &logits[(bi * s + t) * v..(bi * s + t + 1) * v];
+            let tg = toks[bi * (s + 1) + t + 1] as usize;
+            let mut mx = row[0];
+            for &x in row {
+                if x > mx {
+                    mx = x;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &x in row {
+                sum += (x - mx).exp();
+            }
+            let lse = mx + sum.ln();
+            total += (lse - row[tg]) as f64;
+        }
+    }
+    (total / (b * s) as f64) as f32
+}
+
+/// Fused loss + backward: same accumulation order as [`xent_loss`]
+/// (their results are bit-identical), then rewrites the logits buffer
+/// into `dlogits = (softmax - onehot) / (b*s)` in place.
+fn xent_loss_bwd(logits: &mut [f32], toks: &[i32], b: usize, s: usize, v: usize) -> f32 {
+    let inv_n = 1.0 / (b * s) as f32;
+    let mut total = 0.0f64;
+    for bi in 0..b {
+        for t in 0..s {
+            let row = &mut logits[(bi * s + t) * v..(bi * s + t + 1) * v];
+            let tg = toks[bi * (s + 1) + t + 1] as usize;
+            let mut mx = row[0];
+            for &x in row.iter() {
+                if x > mx {
+                    mx = x;
+                }
+            }
+            let mut sum = 0.0f32;
+            for &x in row.iter() {
+                sum += (x - mx).exp();
+            }
+            let lse = mx + sum.ln();
+            total += (lse - row[tg]) as f64;
+            for x in row.iter_mut() {
+                *x = (*x - lse).exp() * inv_n;
+            }
+            row[tg] -= inv_n;
+        }
+    }
+    (total / (b * s) as f64) as f32
+}
+
+// ---- forward ---------------------------------------------------------------
+
+/// Run the forward pass, leaving logits and all per-layer stashes in
+/// `ws`. `toks` is the `[b, s+1]` token batch flattened.
+fn forward(
+    spec: &ModelSpec,
+    params: &[&Tensor],
+    toks: &[i32],
+    b: usize,
+    ws: &mut ModelWs,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let (s, d, v) = (spec.seq, spec.d, spec.vocab);
+    let bs = b * s;
+    let bsd = bs * d;
+    assert_eq!(toks.len(), b * (s + 1));
+
+    let ModelWs { hs, layers, hf, logits, tmp_d, rope_cos: cos, rope_sin: sin, pack, .. } = ws;
+
+    // token embedding (+ learned positions for gpt2)
+    {
+        let embed = params[0].f32s();
+        let h0 = &mut hs[0][..bsd];
+        for bi in 0..b {
+            for t in 0..s {
+                let id = toks[bi * (s + 1) + t] as usize;
+                let dst = (bi * s + t) * d;
+                h0[dst..dst + d].copy_from_slice(&embed[id * d..(id + 1) * d]);
+            }
+        }
+        if spec.gpt2 {
+            let pos = params[1].f32s();
+            for bi in 0..b {
+                for t in 0..s {
+                    let row = &mut h0[(bi * s + t) * d..(bi * s + t + 1) * d];
+                    for (hv, pv) in row.iter_mut().zip(&pos[t * d..(t + 1) * d]) {
+                        *hv += pv;
+                    }
+                }
+            }
+        }
+    }
+
+    for l in 0..spec.n_layers {
+        let (lo, hi) = hs.split_at_mut(l + 1);
+        let x = &lo[l][..bsd];
+        let h_next = &mut hi[0][..bsd];
+        let lw = &mut layers[l];
+        layer_forward(spec, params, l, x, h_next, lw, tmp_d, pack, cos, sin, b, pool, min_ops);
+    }
+
+    let x = &hs[spec.n_layers][..bsd];
+    rmsnorm_fwd(x, params[spec.idx_final_norm()].f32s(), &mut hf[..bsd], d);
+    let w_head = params[spec.idx_head()].f32s();
+    matmul_nn(pool, min_ops, &hf[..bsd], w_head, &mut logits[..bs * v], bs, d, v, pack);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn layer_forward(
+    spec: &ModelSpec,
+    params: &[&Tensor],
+    l: usize,
+    x: &[f32],
+    h_next: &mut [f32],
+    lw: &mut LayerWs,
+    tmp_d: &mut [f32],
+    pack: &mut Vec<f32>,
+    rope_cos: &[f32],
+    rope_sin: &[f32],
+    b: usize,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let (s, d, f) = (spec.seq, spec.d, spec.d_ff);
+    let (nh, dh) = (spec.n_heads, spec.head_dim);
+    let bs = b * s;
+    let bsd = bs * d;
+    let bsf = bs * f;
+    let LayerWs { xn, q, k, v, probs, merged, h_mid, xn2, gate, up, act } = lw;
+    let tmp = &mut tmp_d[..bsd];
+
+    // attention branch
+    rmsnorm_fwd(x, params[spec.p_attn_norm(l)].f32s(), &mut xn[..bsd], d);
+    for (w_idx, dst) in [
+        (spec.p_wq(l), &mut *q),
+        (spec.p_wk(l), &mut *k),
+        (spec.p_wv(l), &mut *v),
+    ] {
+        matmul_nn(pool, min_ops, &xn[..bsd], params[w_idx].f32s(), tmp, bs, d, d, pack);
+        split_heads(tmp, &mut dst[..bsd], b, s, nh, dh);
+    }
+    if !spec.gpt2 {
+        rope_fwd(&mut q[..bsd], rope_cos, rope_sin, b * nh, s, dh);
+        rope_fwd(&mut k[..bsd], rope_cos, rope_sin, b * nh, s, dh);
+    }
+    let inv = 1.0 / (dh as f32).sqrt();
+    for bh in 0..b * nh {
+        let (bi, h) = (bh / nh, bh % nh);
+        let q_bh = &q[bh * s * dh..(bh + 1) * s * dh];
+        let k_bh = &k[bh * s * dh..(bh + 1) * s * dh];
+        let v_bh = &v[bh * s * dh..(bh + 1) * s * dh];
+        let p_bh = &mut probs[bh * s * s..(bh + 1) * s * s];
+        for i in 0..s {
+            let qi = &q_bh[i * dh..(i + 1) * dh];
+            let row = &mut p_bh[i * s..(i + 1) * s];
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let sc = dot(qi, &k_bh[j * dh..(j + 1) * dh]) * inv;
+                row[j] = sc;
+                if sc > mx {
+                    mx = sc;
+                }
+            }
+            let mut sum = 0.0f32;
+            for rj in row.iter_mut().take(i + 1) {
+                let e = (*rj - mx).exp();
+                *rj = e;
+                sum += e;
+            }
+            let isum = 1.0 / sum;
+            for rj in row.iter_mut().take(i + 1) {
+                *rj *= isum;
+            }
+            for rj in row.iter_mut().take(s).skip(i + 1) {
+                *rj = 0.0;
+            }
+        }
+        for i in 0..s {
+            let off = (bi * s + i) * d + h * dh;
+            let orow = &mut merged[off..off + dh];
+            orow.fill(0.0);
+            for j in 0..=i {
+                axpy(orow, p_bh[i * s + j], &v_bh[j * dh..(j + 1) * dh]);
+            }
+        }
+    }
+    let wo = params[spec.p_wo(l)].f32s();
+    matmul_nn(pool, min_ops, &merged[..bsd], wo, tmp, bs, d, d, pack);
+    for i in 0..bsd {
+        h_mid[i] = x[i] + tmp[i];
+    }
+
+    // MLP branch
+    rmsnorm_fwd(&h_mid[..bsd], params[spec.p_mlp_norm(l)].f32s(), &mut xn2[..bsd], d);
+    if spec.gpt2 {
+        let wu = params[spec.p_wup(l)].f32s();
+        matmul_nn(pool, min_ops, &xn2[..bsd], wu, &mut gate[..bsf], bs, d, f, pack);
+        for i in 0..bsf {
+            act[i] = gelu(gate[i]);
+        }
+    } else {
+        let wg = params[spec.p_wgate(l)].f32s();
+        let wu = params[spec.p_wup(l)].f32s();
+        matmul_nn(pool, min_ops, &xn2[..bsd], wg, &mut gate[..bsf], bs, d, f, pack);
+        matmul_nn(pool, min_ops, &xn2[..bsd], wu, &mut up[..bsf], bs, d, f, pack);
+        for i in 0..bsf {
+            let a = gate[i];
+            let sg = a / (1.0 + (-a).exp()); // silu
+            act[i] = sg * up[i];
+        }
+    }
+    let wd = params[spec.p_wdown(l)].f32s();
+    matmul_nn(pool, min_ops, &act[..bsf], wd, tmp, bs, f, d, pack);
+    for i in 0..bsd {
+        h_next[i] = h_mid[i] + tmp[i];
+    }
+}
+
+// ---- entry points ----------------------------------------------------------
+
+/// Forward-only loss (the `eval_<size>` artifact semantics).
+pub(crate) fn eval_loss(
+    spec: &ModelSpec,
+    params: &[&Tensor],
+    toks: &[i32],
+    b: usize,
+    ws: &mut ModelWs,
+    pool: &WorkerPool,
+    min_ops: usize,
+) -> f32 {
+    forward(spec, params, toks, b, ws, pool, min_ops);
+    let (s, v) = (spec.seq, spec.vocab);
+    xent_loss(&ws.logits[..b * s * v], toks, b, s, v)
+}
+
+/// Forward + backward (the `fwd_bwd_<size>` artifact semantics): returns
+/// the loss and writes every parameter gradient into `grads` (same order
+/// and shapes as the parameters; previous contents are overwritten).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fwd_bwd(
+    spec: &ModelSpec,
+    params: &[&Tensor],
+    toks: &[i32],
+    b: usize,
+    grads: &mut [Tensor],
+    ws: &mut ModelWs,
+    pool: &WorkerPool,
+    min_ops: usize,
+) -> f32 {
+    forward(spec, params, toks, b, ws, pool, min_ops);
+    let (s, d, v) = (spec.seq, spec.d, spec.vocab);
+    let bs = b * s;
+    let bsd = bs * d;
+    assert_eq!(grads.len(), spec.n_params());
+
+    let ModelWs {
+        hs,
+        layers,
+        hf,
+        logits,
+        dh_a,
+        dh_b,
+        tmp_d,
+        df1,
+        df2,
+        datt,
+        dq,
+        dk,
+        dv,
+        dprobs,
+        rope_cos,
+        rope_sin,
+        pack,
+        ..
+    } = ws;
+
+    let loss = xent_loss_bwd(&mut logits[..bs * v], toks, b, s, v);
+    let dlog = &logits[..bs * v];
+
+    // LM head + final norm
+    matmul_tn(pool, min_ops, &hf[..bsd], dlog, grads[spec.idx_head()].f32s_mut(), d, bs, v);
+    let w_head = params[spec.idx_head()].f32s();
+    matmul_nt(pool, min_ops, dlog, w_head, &mut dh_a[..bsd], bs, v, d, false);
+    {
+        let g_final = params[spec.idx_final_norm()].f32s();
+        let dgain = grads[spec.idx_final_norm()].f32s_mut();
+        dgain.fill(0.0);
+        rmsnorm_bwd(&hs[spec.n_layers][..bsd], g_final, &mut dh_a[..bsd], dgain, d);
+    }
+
+    for l in (0..spec.n_layers).rev() {
+        layer_backward(
+            spec,
+            params,
+            l,
+            hs,
+            &mut layers[l],
+            grads,
+            dh_a,
+            dh_b,
+            tmp_d,
+            df1,
+            df2,
+            datt,
+            dq,
+            dk,
+            dv,
+            dprobs,
+            rope_cos,
+            rope_sin,
+            pack,
+            b,
+            pool,
+            min_ops,
+        );
+    }
+
+    // embedding (+ positional) gradients: ordered scatter-add
+    {
+        let ge = grads[0].f32s_mut();
+        ge.fill(0.0);
+        let dh0 = &dh_a[..bsd];
+        for bi in 0..b {
+            for t in 0..s {
+                let id = toks[bi * (s + 1) + t] as usize;
+                axpy(&mut ge[id * d..(id + 1) * d], 1.0, &dh0[(bi * s + t) * d..][..d]);
+            }
+        }
+    }
+    if spec.gpt2 {
+        let gp = grads[1].f32s_mut();
+        gp.fill(0.0);
+        let dh0 = &dh_a[..bsd];
+        for bi in 0..b {
+            for t in 0..s {
+                axpy(&mut gp[t * d..(t + 1) * d], 1.0, &dh0[(bi * s + t) * d..][..d]);
+            }
+        }
+    }
+    loss
+}
+
+#[allow(clippy::too_many_arguments)]
+fn layer_backward(
+    spec: &ModelSpec,
+    params: &[&Tensor],
+    l: usize,
+    hs: &[Vec<f32>],
+    lw: &mut LayerWs,
+    grads: &mut [Tensor],
+    dh_a: &mut [f32],
+    dh_b: &mut [f32],
+    tmp_d: &mut [f32],
+    df1: &mut [f32],
+    df2: &mut [f32],
+    datt: &mut [f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    dprobs: &mut [f32],
+    rope_cos: &[f32],
+    rope_sin: &[f32],
+    pack: &mut Vec<f32>,
+    b: usize,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let (s, d, f) = (spec.seq, spec.d, spec.d_ff);
+    let (nh, dh) = (spec.n_heads, spec.head_dim);
+    let bs = b * s;
+    let bsd = bs * d;
+    let bsf = bs * f;
+    let LayerWs { xn, q, k, v, probs, merged, h_mid, xn2, gate, up, act } = lw;
+    let x = &hs[l][..bsd];
+
+    // ---- MLP backward (dh_a holds dL/d h_next on entry) ----
+    let wd = params[spec.p_wdown(l)].f32s();
+    matmul_nt(pool, min_ops, &dh_a[..bsd], wd, &mut df1[..bsf], bs, d, f, false);
+    let gw = grads[spec.p_wdown(l)].f32s_mut();
+    matmul_tn(pool, min_ops, &act[..bsf], &dh_a[..bsd], gw, f, bs, d);
+    if spec.gpt2 {
+        for i in 0..bsf {
+            df1[i] *= gelu_grad(gate[i]);
+        }
+        let wu = params[spec.p_wup(l)].f32s();
+        let gw = grads[spec.p_wup(l)].f32s_mut();
+        matmul_tn(pool, min_ops, &xn2[..bsd], &df1[..bsf], gw, d, bs, f);
+        matmul_nt(pool, min_ops, &df1[..bsf], wu, &mut dh_b[..bsd], bs, f, d, false);
+    } else {
+        for i in 0..bsf {
+            let a = gate[i];
+            let sig = 1.0 / (1.0 + (-a).exp());
+            let dact = df1[i];
+            df2[i] = dact * up[i] * (sig * (1.0 + a * (1.0 - sig)));
+            df1[i] = dact * (a * sig);
+        }
+        let wg = params[spec.p_wgate(l)].f32s();
+        let wu = params[spec.p_wup(l)].f32s();
+        let gw = grads[spec.p_wup(l)].f32s_mut();
+        matmul_tn(pool, min_ops, &xn2[..bsd], &df1[..bsf], gw, d, bs, f);
+        let gw = grads[spec.p_wgate(l)].f32s_mut();
+        matmul_tn(pool, min_ops, &xn2[..bsd], &df2[..bsf], gw, d, bs, f);
+        matmul_nt(pool, min_ops, &df1[..bsf], wu, &mut dh_b[..bsd], bs, f, d, false);
+        matmul_nt(pool, min_ops, &df2[..bsf], wg, &mut dh_b[..bsd], bs, f, d, true);
+    }
+    {
+        let g_mlp = params[spec.p_mlp_norm(l)].f32s();
+        let dgain = grads[spec.p_mlp_norm(l)].f32s_mut();
+        dgain.fill(0.0);
+        rmsnorm_bwd(&h_mid[..bsd], g_mlp, &mut dh_b[..bsd], dgain, d);
+    }
+    for i in 0..bsd {
+        dh_a[i] += dh_b[i]; // dh_a now holds dL/d h_mid
+    }
+
+    // ---- attention backward ----
+    let wo = params[spec.p_wo(l)].f32s();
+    matmul_nt(pool, min_ops, &dh_a[..bsd], wo, &mut tmp_d[..bsd], bs, d, d, false);
+    let gw = grads[spec.p_wo(l)].f32s_mut();
+    matmul_tn(pool, min_ops, &merged[..bsd], &dh_a[..bsd], gw, d, bs, d);
+    split_heads(&tmp_d[..bsd], &mut datt[..bsd], b, s, nh, dh);
+    let inv = 1.0 / (dh as f32).sqrt();
+    for bh in 0..b * nh {
+        let q_bh = &q[bh * s * dh..(bh + 1) * s * dh];
+        let k_bh = &k[bh * s * dh..(bh + 1) * s * dh];
+        let v_bh = &v[bh * s * dh..(bh + 1) * s * dh];
+        let p_bh = &probs[bh * s * s..(bh + 1) * s * s];
+        let da_bh = &datt[bh * s * dh..(bh + 1) * s * dh];
+        let dp = &mut dprobs[bh * s * s..(bh + 1) * s * s];
+        for i in 0..s {
+            let da_row = &da_bh[i * dh..(i + 1) * dh];
+            let p_row = &p_bh[i * s..(i + 1) * s];
+            let dp_row = &mut dp[i * s..(i + 1) * s];
+            for j in 0..=i {
+                dp_row[j] = dot(da_row, &v_bh[j * dh..(j + 1) * dh]);
+            }
+            let mut tsum = 0.0f32;
+            for j in 0..=i {
+                tsum += p_row[j] * dp_row[j];
+            }
+            for j in 0..=i {
+                dp_row[j] = p_row[j] * (dp_row[j] - tsum) * inv;
+            }
+            for dj in dp_row.iter_mut().take(s).skip(i + 1) {
+                *dj = 0.0;
+            }
+        }
+        matmul_tn(pool, min_ops, p_bh, da_bh, &mut dv[bh * s * dh..(bh + 1) * s * dh], s, s, dh);
+        {
+            let dq_bh = &mut dq[bh * s * dh..(bh + 1) * s * dh];
+            for i in 0..s {
+                let row = &mut dq_bh[i * dh..(i + 1) * dh];
+                row.fill(0.0);
+                for j in 0..=i {
+                    axpy(row, dp[i * s + j], &k_bh[j * dh..(j + 1) * dh]);
+                }
+            }
+        }
+        matmul_tn(pool, min_ops, dp, q_bh, &mut dk[bh * s * dh..(bh + 1) * s * dh], s, s, dh);
+    }
+    if !spec.gpt2 {
+        rope_bwd(&mut dq[..bsd], rope_cos, rope_sin, b * nh, s, dh);
+        rope_bwd(&mut dk[..bsd], rope_cos, rope_sin, b * nh, s, dh);
+    }
+    for (hd, w_idx, acc) in [
+        (&*dq, spec.p_wq(l), false),
+        (&*dk, spec.p_wk(l), true),
+        (&*dv, spec.p_wv(l), true),
+    ] {
+        merge_heads(&hd[..bsd], &mut tmp_d[..bsd], b, s, nh, dh);
+        let gw = grads[w_idx].f32s_mut();
+        matmul_tn(pool, min_ops, &xn[..bsd], &tmp_d[..bsd], gw, d, bs, d);
+        let w = params[w_idx].f32s();
+        matmul_nt(pool, min_ops, &tmp_d[..bsd], w, &mut dh_b[..bsd], bs, d, d, acc);
+    }
+    {
+        let g_attn = params[spec.p_attn_norm(l)].f32s();
+        let dgain = grads[spec.p_attn_norm(l)].f32s_mut();
+        dgain.fill(0.0);
+        rmsnorm_bwd(x, g_attn, &mut dh_b[..bsd], dgain, d);
+    }
+    for i in 0..bsd {
+        dh_a[i] += dh_b[i]; // dh_a now holds dL/d hs[l]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn tiny_spec(gpt2: bool) -> ModelSpec {
+        ModelSpec {
+            vocab: 11,
+            d: 8,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 4,
+            d_ff: 12,
+            seq: 5,
+            gpt2,
+        }
+    }
+
+    /// Random parameters in the model's canonical order and shapes.
+    fn random_params(spec: &ModelSpec, seed: u64) -> Vec<Tensor> {
+        let mut rng = Pcg::new(seed);
+        let (v, d, f, s) = (spec.vocab, spec.d, spec.d_ff, spec.seq);
+        let mut shapes: Vec<Vec<usize>> = vec![vec![v, d]];
+        if spec.gpt2 {
+            shapes.push(vec![s, d]);
+        }
+        for _ in 0..spec.n_layers {
+            shapes.push(vec![d]); // attn_norm
+            for _ in 0..4 {
+                shapes.push(vec![d, d]); // wq wk wv wo
+            }
+            shapes.push(vec![d]); // mlp_norm
+            if !spec.gpt2 {
+                shapes.push(vec![d, f]); // w_gate
+            }
+            shapes.push(vec![d, f]); // w_up
+            shapes.push(vec![f, d]); // w_down
+        }
+        shapes.push(vec![d]); // final_norm
+        shapes.push(vec![d, v]); // lm_head
+        shapes
+            .into_iter()
+            .map(|sh| {
+                let n: usize = sh.iter().product();
+                let data: Vec<f32> = if sh.len() == 1 {
+                    vec![1.0; n]
+                } else {
+                    let scale = 1.0 / (sh[0] as f32).sqrt();
+                    (0..n).map(|_| scale * rng.normal() as f32).collect()
+                };
+                Tensor::from_f32(&sh, data)
+            })
+            .collect()
+    }
+
+    fn random_toks(spec: &ModelSpec, b: usize, seed: u64) -> Vec<i32> {
+        let mut rng = Pcg::new(seed);
+        let n = b * (spec.seq + 1);
+        (0..n).map(|_| rng.below(spec.vocab as u32) as i32).collect()
+    }
+
+    fn zeros_like(params: &[Tensor]) -> Vec<Tensor> {
+        params.iter().map(|p| Tensor::zeros(p.shape())).collect()
+    }
+
+    fn loss_of(spec: &ModelSpec, params: &[Tensor], toks: &[i32], b: usize) -> f32 {
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut ws = ModelWs::new(spec, b);
+        let pool = WorkerPool::new(0);
+        eval_loss(spec, &refs, toks, b, &mut ws, &pool, usize::MAX)
+    }
+
+    #[test]
+    fn directional_derivative_matches_backward() {
+        // the backward-pass oracle: for a random direction u,
+        // (L(p+eps*u) - L(p-eps*u)) / (2 eps) must equal <grad, u>
+        for gpt2 in [false, true] {
+            let spec = tiny_spec(gpt2);
+            let b = 2;
+            let params = random_params(&spec, 7);
+            let toks = random_toks(&spec, b, 8);
+            let refs: Vec<&Tensor> = params.iter().collect();
+            let mut grads = zeros_like(&params);
+            let mut ws = ModelWs::new(&spec, b);
+            let pool = WorkerPool::new(0);
+            let _ = fwd_bwd(&spec, &refs, &toks, b, &mut grads, &mut ws, &pool, usize::MAX);
+
+            let mut rng = Pcg::new(99);
+            let dirs: Vec<Vec<f32>> = params
+                .iter()
+                .map(|p| (0..p.numel()).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let mut analytic = 0.0f64;
+            for (g, u) in grads.iter().zip(&dirs) {
+                for (gi, ui) in g.f32s().iter().zip(u) {
+                    analytic += (*gi as f64) * (*ui as f64);
+                }
+            }
+            let eps = 1e-3f32;
+            let shift = |sign: f32| -> Vec<Tensor> {
+                params
+                    .iter()
+                    .zip(&dirs)
+                    .map(|(p, u)| {
+                        let data: Vec<f32> = p
+                            .f32s()
+                            .iter()
+                            .zip(u)
+                            .map(|(pi, ui)| pi + sign * eps * ui)
+                            .collect();
+                        Tensor::from_f32(p.shape(), data)
+                    })
+                    .collect()
+            };
+            let lp = loss_of(&spec, &shift(1.0), &toks, b) as f64;
+            let lm = loss_of(&spec, &shift(-1.0), &toks, b) as f64;
+            let numeric = (lp - lm) / (2.0 * eps as f64);
+            let denom = numeric.abs().max(analytic.abs()).max(1e-3);
+            let rel = (numeric - analytic).abs() / denom;
+            assert!(
+                rel < 2e-2,
+                "gpt2={gpt2}: directional derivative {numeric:.6} vs analytic {analytic:.6}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_step_reduces_loss() {
+        for gpt2 in [false, true] {
+            let spec = tiny_spec(gpt2);
+            let b = 2;
+            let params = random_params(&spec, 3);
+            let toks = random_toks(&spec, b, 4);
+            let refs: Vec<&Tensor> = params.iter().collect();
+            let mut grads = zeros_like(&params);
+            let mut ws = ModelWs::new(&spec, b);
+            let pool = WorkerPool::new(0);
+            let l0 = fwd_bwd(&spec, &refs, &toks, b, &mut grads, &mut ws, &pool, usize::MAX);
+            let stepped: Vec<Tensor> = params
+                .iter()
+                .zip(&grads)
+                .map(|(p, g)| {
+                    let data: Vec<f32> = p
+                        .f32s()
+                        .iter()
+                        .zip(g.f32s())
+                        .map(|(pi, gi)| pi - 0.05 * gi)
+                        .collect();
+                    Tensor::from_f32(p.shape(), data)
+                })
+                .collect();
+            let l1 = loss_of(&spec, &stepped, &toks, b);
+            assert!(l1 < l0, "gpt2={gpt2}: step did not reduce loss ({l0} -> {l1})");
+        }
+    }
+
+    #[test]
+    fn fwd_bwd_bit_identical_across_pools_and_thresholds() {
+        let spec = tiny_spec(false);
+        let b = 2;
+        let params = random_params(&spec, 11);
+        let toks = random_toks(&spec, b, 12);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let seq_pool = WorkerPool::new(0);
+        let mut want_grads = zeros_like(&params);
+        let mut ws = ModelWs::new(&spec, b);
+        let mp = usize::MAX;
+        let want_loss = fwd_bwd(&spec, &refs, &toks, b, &mut want_grads, &mut ws, &seq_pool, mp);
+        for workers in [0usize, 2, 5] {
+            let pool = WorkerPool::new(workers);
+            for min_ops in [0usize, usize::MAX] {
+                let mut grads = zeros_like(&params);
+                let mut ws = ModelWs::new(&spec, b);
+                let loss = fwd_bwd(&spec, &refs, &toks, b, &mut grads, &mut ws, &pool, min_ops);
+                assert_eq!(loss, want_loss, "{workers} workers, min {min_ops}");
+                for (p, (g, w)) in grads.iter().zip(&want_grads).enumerate() {
+                    assert_eq!(
+                        g.f32s(),
+                        w.f32s(),
+                        "param {p} differs: {workers} workers, min {min_ops}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_loss_matches_fwd_bwd_loss_exactly() {
+        let spec = tiny_spec(false);
+        let b = 2;
+        let params = random_params(&spec, 21);
+        let toks = random_toks(&spec, b, 22);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let pool = WorkerPool::new(2);
+        let mut ws = ModelWs::new(&spec, b);
+        let le = eval_loss(&spec, &refs, &toks, b, &mut ws, &pool, 0);
+        let mut grads = zeros_like(&params);
+        let lf = fwd_bwd(&spec, &refs, &toks, b, &mut grads, &mut ws, &pool, 0);
+        assert_eq!(le, lf);
+    }
+
+    #[test]
+    fn loss_is_near_uniform_with_zero_weights() {
+        // zero matrices (norm gains kept at 1) -> logits 0 -> loss ln(V)
+        let spec = tiny_spec(false);
+        let b = 1;
+        let params: Vec<Tensor> = random_params(&spec, 5)
+            .into_iter()
+            .map(|p| {
+                if p.shape().len() == 1 {
+                    p
+                } else {
+                    Tensor::zeros(p.shape())
+                }
+            })
+            .collect();
+        let toks = random_toks(&spec, b, 6);
+        let loss = loss_of(&spec, &params, &toks, b);
+        let want = (spec.vocab as f32).ln();
+        assert!((loss - want).abs() < 1e-4, "{loss} vs ln(v)={want}");
+    }
+
+    #[test]
+    fn rmsnorm_bwd_matches_finite_difference() {
+        let mut rng = Pcg::new(17);
+        let d = 6;
+        let rows = 3;
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let gain: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let mut dx = dy.clone();
+        let mut dgain = vec![0.0f32; d];
+        rmsnorm_bwd(&x, &gain, &mut dx, &mut dgain, d);
+        // numeric gradients of the scalar objective sum(dy * rmsnorm(x))
+        let obj = |x: &[f32], gain: &[f32]| -> f64 {
+            let mut out = vec![0.0f32; x.len()];
+            rmsnorm_fwd(x, gain, &mut out, d);
+            let pairs = out.iter().zip(&dy);
+            pairs.map(|(o, dyi)| (*o as f64) * (*dyi as f64)).sum()
+        };
+        let eps = 1e-3f32;
+        for i in [0usize, 5, 7, rows * d - 1] {
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let fd = (obj(&xp, &gain) - obj(&xm, &gain)) / (2.0 * eps as f64);
+            assert!(
+                (fd - dx[i] as f64).abs() < 1e-3,
+                "dx[{i}]: fd {fd} vs analytic {}",
+                dx[i]
+            );
+        }
+        for i in [0usize, d - 1] {
+            let mut gp = gain.clone();
+            gp[i] += eps;
+            let mut gm = gain.clone();
+            gm[i] -= eps;
+            let fd = (obj(&x, &gp) - obj(&x, &gm)) / (2.0 * eps as f64);
+            assert!(
+                (fd - dgain[i] as f64).abs() < 1e-3,
+                "dgain[{i}]: fd {fd} vs analytic {}",
+                dgain[i]
+            );
+        }
+    }
+
+    #[test]
+    fn rope_bwd_is_transpose_of_fwd() {
+        // <rope(x), y> == <x, rope_bwd(y)> (rotation is orthogonal)
+        let mut rng = Pcg::new(23);
+        let (groups, s, dh) = (3usize, 4usize, 6usize);
+        let half = dh / 2;
+        let mut cos = vec![0.0f32; s * half];
+        let mut sin = vec![0.0f32; s * half];
+        for t in 0..s {
+            for i in 0..half {
+                let ang = t as f32 * 0.3 + i as f32 * 0.7;
+                cos[t * half + i] = ang.cos();
+                sin[t * half + i] = ang.sin();
+            }
+        }
+        let n = groups * s * dh;
+        let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut rx = x.clone();
+        rope_fwd(&mut rx, &cos, &sin, groups, s, dh);
+        let mut ry = y.clone();
+        rope_bwd(&mut ry, &cos, &sin, groups, s, dh);
+        let ip = |u: &[f32], w: &[f32]| -> f64 {
+            u.iter().zip(w).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+        };
+        let lhs = ip(&rx, &y);
+        let rhs = ip(&x, &ry);
+        assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+}

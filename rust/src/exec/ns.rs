@@ -1,0 +1,198 @@
+//! Native Newton–Schulz orthogonalization (quintic iteration, Jordan et
+//! al. 2024 coefficients) — the matmul-only stand-in for exact SVD used
+//! by the `norm_ns_<d>` artifacts and the Muon/SWAN/`sgd_ns` update
+//! rules, mirroring `python/compile/newton_schulz.py`.
+//!
+//! Non-square matrices are handled by iterating on the short side (the
+//! transpose when `m > n`); spectral norm <= 1 is ensured by a Frobenius
+//! prescale. All matmuls route through [`super::gemm`], so the result is
+//! bit-identical for every worker-pool size.
+
+use crate::exec::gemm::{matmul_nn, matmul_nt};
+use crate::parallel::WorkerPool;
+
+pub(crate) const NS_STEPS: usize = 5;
+const NS_A: f32 = 3.4445;
+const NS_B: f32 = -4.7750;
+const NS_C: f32 = 2.0315;
+
+/// Scratch for the iteration: sized lazily, reused across calls.
+#[derive(Default)]
+pub(crate) struct NsWs {
+    xt: Vec<f32>,
+    a: Vec<f32>,
+    aa: Vec<f32>,
+    bx: Vec<f32>,
+    pack: Vec<f32>,
+}
+
+impl NsWs {
+    pub fn new() -> NsWs {
+        NsWs::default()
+    }
+}
+
+/// Clear-and-resize a scratch vector (no allocation once warm). Shared
+/// with the update rules (`exec::update`), which lean on the same
+/// capacity-reuse contract for their zero-steady-state-alloc gate.
+pub(crate) fn buf(v: &mut Vec<f32>, n: usize) -> &mut [f32] {
+    v.clear();
+    v.resize(n, 0.0);
+    &mut v[..]
+}
+
+fn transpose(src: &[f32], rows: usize, cols: usize, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), rows * cols);
+    debug_assert_eq!(dst.len(), rows * cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            dst[j * rows + i] = src[i * cols + j];
+        }
+    }
+}
+
+/// The quintic iteration on `x` with `r <= c` rows: `x <- A x + (B a +
+/// C a²) x` where `a = x xᵀ`.
+#[allow(clippy::too_many_arguments)]
+fn iterate(
+    x: &mut [f32],
+    r: usize,
+    c: usize,
+    steps: usize,
+    a_buf: &mut Vec<f32>,
+    aa_buf: &mut Vec<f32>,
+    bx_buf: &mut Vec<f32>,
+    pack: &mut Vec<f32>,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let mut frob = 0.0f32;
+    for &v in x.iter() {
+        frob += v * v;
+    }
+    let scale = 1.0 / (frob.sqrt() + 1e-7);
+    for v in x.iter_mut() {
+        *v *= scale;
+    }
+    let a = buf(a_buf, r * r);
+    let aa = buf(aa_buf, r * r);
+    let bx = buf(bx_buf, r * c);
+    for _ in 0..steps {
+        matmul_nt(pool, min_ops, x, x, a, r, c, r, false);
+        matmul_nn(pool, min_ops, a, a, aa, r, r, r, pack);
+        for i in 0..r * r {
+            aa[i] = NS_B * a[i] + NS_C * aa[i];
+        }
+        matmul_nn(pool, min_ops, aa, x, bx, r, r, c, pack);
+        for i in 0..r * c {
+            x[i] = NS_A * x[i] + bx[i];
+        }
+    }
+}
+
+/// Approximate `U Vᵀ` of `g` (shape `[m, n]`) into `out`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn ns_orth(
+    g: &[f32],
+    m: usize,
+    n: usize,
+    steps: usize,
+    out: &mut [f32],
+    ws: &mut NsWs,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    assert_eq!(g.len(), m * n);
+    assert_eq!(out.len(), m * n);
+    let NsWs { xt, a, aa, bx, pack } = ws;
+    if m <= n {
+        out.copy_from_slice(g);
+        iterate(out, m, n, steps, a, aa, bx, pack, pool, min_ops);
+    } else {
+        let xt = buf(xt, m * n);
+        transpose(g, m, n, xt);
+        iterate(xt, n, m, steps, a, aa, bx, pack, pool, min_ops);
+        transpose(xt, n, m, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn gram(x: &[f32], r: usize, c: usize) -> Vec<f32> {
+        let mut g = vec![0.0f32; r * r];
+        for i in 0..r {
+            for j in 0..r {
+                let mut s = 0.0f32;
+                for p in 0..c {
+                    s += x[i * c + p] * x[j * c + p];
+                }
+                g[i * r + j] = s;
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn pushes_singular_values_toward_one() {
+        let mut rng = Pcg::new(4);
+        let (m, n) = (6usize, 10usize);
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        let mut ws = NsWs::new();
+        let pool = WorkerPool::new(0);
+        ns_orth(&g, m, n, NS_STEPS, &mut out, &mut ws, &pool, usize::MAX);
+        let gm = gram(&out, m, n);
+        for i in 0..m {
+            let dii = gm[i * m + i];
+            assert!((0.4..1.6).contains(&dii), "diag {i} = {dii}");
+            for j in 0..m {
+                if i != j {
+                    assert!(gm[i * m + j].abs() < 0.35, "off-diag ({i},{j}) = {}", gm[i * m + j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tall_matrix_handled_via_transpose() {
+        let mut rng = Pcg::new(9);
+        let (m, n) = (12usize, 5usize);
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0.0f32; m * n];
+        let mut ws = NsWs::new();
+        let pool = WorkerPool::new(2);
+        ns_orth(&g, m, n, NS_STEPS, &mut out, &mut ws, &pool, 0);
+        // columns of a tall orthogonal factor are near-orthonormal:
+        // gram of the transpose is near identity
+        let mut gt = vec![0.0f32; m * n];
+        transpose(&out, m, n, &mut gt);
+        let gm = gram(&gt, n, m);
+        for i in 0..n {
+            assert!((0.4..1.6).contains(&gm[i * n + i]), "diag {i} = {}", gm[i * n + i]);
+        }
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn bit_identical_across_pools() {
+        let mut rng = Pcg::new(13);
+        let (m, n) = (7usize, 9usize);
+        let g: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let mut want = vec![0.0f32; m * n];
+        let mut ws = NsWs::new();
+        let seq = WorkerPool::new(0);
+        ns_orth(&g, m, n, NS_STEPS, &mut want, &mut ws, &seq, usize::MAX);
+        for workers in [0usize, 2, 5] {
+            let pool = WorkerPool::new(workers);
+            for min_ops in [0usize, usize::MAX] {
+                let mut out = vec![9.0f32; m * n];
+                let mut ws = NsWs::new();
+                ns_orth(&g, m, n, NS_STEPS, &mut out, &mut ws, &pool, min_ops);
+                assert_eq!(out, want, "{workers} workers, min {min_ops}");
+            }
+        }
+    }
+}

@@ -1,0 +1,432 @@
+//! [`NativeProgram`]: one manifest artifact compiled to a pure-Rust
+//! executor. `runtime::client::Engine::load` constructs these whenever
+//! PJRT is unavailable, so the coordinator's call sites are untouched —
+//! the same `(inputs) -> outputs` contract, the same shape checks.
+//!
+//! Workspace ownership: model programs keep a pool of [`ModelWs`] arenas
+//! behind a mutex (popped per call, so concurrent DDP shard executions
+//! each get their own arena and steady-state calls allocate nothing);
+//! update and norm programs serialize on a single workspace — they run
+//! once per step from the coordinator thread.
+
+use std::sync::Mutex;
+
+use crate::exec::model::{self, ModelSpec, ModelWs};
+use crate::exec::ns::{ns_orth, NsWs, NS_STEPS};
+use crate::exec::update::{UpdateProgram, UpdateWs};
+use crate::optim::colnorm::{colnorm_into, rownorm_into, sign_into, NormWorkspace};
+use crate::parallel;
+use crate::runtime::artifact::{ArtifactSpec, DType, Manifest, SizeInfo};
+use crate::runtime::Tensor;
+use crate::util::rng::Pcg;
+
+pub struct NativeProgram(Kind);
+
+enum Kind {
+    FwdBwd(ModelProg),
+    Eval(ModelProg),
+    VarProbe(ModelProg),
+    Update(UpdateProg),
+    Init(SizeInfo),
+    Norm {
+        op: NormOp,
+        d: usize,
+        ws: Mutex<NormState>,
+    },
+}
+
+struct ModelProg {
+    mspec: ModelSpec,
+    n_params: usize,
+    mb: usize,
+    max_b: usize,
+    /// Arena pool: one [`ModelWs`] per concurrent executor, created on
+    /// first use and recycled forever after (no steady-state allocs).
+    ws: Mutex<Vec<Box<ModelWs>>>,
+}
+
+impl ModelProg {
+    fn new(info: &SizeInfo, mb: usize, max_b: usize) -> ModelProg {
+        ModelProg {
+            mspec: ModelSpec::from_size(info),
+            n_params: info.params.len(),
+            mb,
+            max_b,
+            ws: Mutex::new(Vec::new()),
+        }
+    }
+
+    fn take_ws(&self) -> Box<ModelWs> {
+        let cached = self.ws.lock().unwrap().pop();
+        cached.unwrap_or_else(|| Box::new(ModelWs::new(&self.mspec, self.max_b)))
+    }
+
+    fn put_ws(&self, ws: Box<ModelWs>) {
+        self.ws.lock().unwrap().push(ws);
+    }
+}
+
+struct UpdateProg {
+    prog: UpdateProgram,
+    ws: Mutex<UpdateWs>,
+}
+
+#[derive(Clone, Copy)]
+enum NormOp {
+    Col,
+    Row,
+    Sign,
+    Ns,
+}
+
+struct NormState {
+    norm: NormWorkspace,
+    ns: NsWs,
+}
+
+fn size_of<'m>(manifest: &'m Manifest, spec: &ArtifactSpec) -> anyhow::Result<&'m SizeInfo> {
+    let sname = spec
+        .size
+        .as_deref()
+        .ok_or_else(|| anyhow::anyhow!("artifact {} has no size tag", spec.name))?;
+    manifest.size(sname)
+}
+
+impl NativeProgram {
+    pub fn new(manifest: &Manifest, spec: &ArtifactSpec) -> anyhow::Result<NativeProgram> {
+        let kind = match spec.kind.as_str() {
+            "fwd_bwd" => {
+                let info = size_of(manifest, spec)?;
+                Kind::FwdBwd(ModelProg::new(info, manifest.microbatch, manifest.microbatch))
+            }
+            "eval" => {
+                let info = size_of(manifest, spec)?;
+                Kind::Eval(ModelProg::new(info, manifest.microbatch, manifest.microbatch))
+            }
+            "varprobe" => {
+                let info = size_of(manifest, spec)?;
+                let big = manifest.microbatch * manifest.varprobe_big_factor;
+                Kind::VarProbe(ModelProg::new(info, manifest.microbatch, big))
+            }
+            "update" => {
+                let info = size_of(manifest, spec)?;
+                let opt = spec
+                    .optimizer
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("{}: no optimizer tag", spec.name))?;
+                let prog = UpdateProgram::new(opt, info)?;
+                let declared = manifest.state_spec(opt, &info.name)?;
+                anyhow::ensure!(
+                    declared.len() == prog.n_state(),
+                    "{}: state layout drift (manifest {} slots, plan {})",
+                    spec.name,
+                    declared.len(),
+                    prog.n_state()
+                );
+                Kind::Update(UpdateProg {
+                    prog,
+                    ws: Mutex::new(UpdateWs::new()),
+                })
+            }
+            "init" => Kind::Init(size_of(manifest, spec)?.clone()),
+            "norm" => {
+                let rest = spec.name.strip_prefix("norm_").unwrap_or(&spec.name);
+                let (op_s, d_s) = rest
+                    .rsplit_once('_')
+                    .ok_or_else(|| anyhow::anyhow!("bad norm artifact name {}", spec.name))?;
+                let d: usize = d_s.parse()?;
+                let op = match op_s {
+                    "col" => NormOp::Col,
+                    "row" => NormOp::Row,
+                    "sign" => NormOp::Sign,
+                    "ns" => NormOp::Ns,
+                    other => anyhow::bail!("unknown norm op {other:?}"),
+                };
+                let st = NormState {
+                    norm: NormWorkspace::new(),
+                    ns: NsWs::new(),
+                };
+                Kind::Norm {
+                    op,
+                    d,
+                    ws: Mutex::new(st),
+                }
+            }
+            other => anyhow::bail!(
+                "artifact kind {other:?} has no native executor; rebuild with --features xla"
+            ),
+        };
+        Ok(NativeProgram(kind))
+    }
+
+    /// Execute with borrowed inputs, writing into `out`. When `out`
+    /// already matches the artifact's output signature its buffers are
+    /// reused in place — the steady-state zero-allocation path.
+    pub fn execute_into(
+        &self,
+        spec: &ArtifactSpec,
+        inputs: &[&Tensor],
+        out: &mut Vec<Tensor>,
+    ) -> anyhow::Result<()> {
+        ensure_outputs(spec, out);
+        let pool = parallel::shared();
+        let min_ops = parallel::tuned_min_ops();
+        match &self.0 {
+            Kind::FwdBwd(mp) => {
+                let n = mp.n_params;
+                let toks = inputs[n].i32s();
+                let params = &inputs[..n];
+                let mut ws = mp.take_ws();
+                let grads = &mut out[1..];
+                let ms = &mp.mspec;
+                let loss = model::fwd_bwd(ms, params, toks, mp.mb, grads, &mut ws, pool, min_ops);
+                mp.put_ws(ws);
+                out[0].f32s_mut()[0] = loss;
+            }
+            Kind::Eval(mp) => {
+                let n = mp.n_params;
+                let toks = inputs[n].i32s();
+                let params = &inputs[..n];
+                let mut ws = mp.take_ws();
+                let loss = model::eval_loss(&mp.mspec, params, toks, mp.mb, &mut ws, pool, min_ops);
+                mp.put_ws(ws);
+                out[0].f32s_mut()[0] = loss;
+            }
+            Kind::VarProbe(mp) => {
+                let n = mp.n_params;
+                let params = &inputs[..n];
+                let small = inputs[n].i32s();
+                let big = inputs[n + 1].i32s();
+                let big_b = big.len() / (mp.mspec.seq + 1);
+                let mut gs: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+                let mut gb = gs.clone();
+                let mut ws = mp.take_ws();
+                model::fwd_bwd(&mp.mspec, params, small, mp.mb, &mut gs, &mut ws, pool, min_ops);
+                model::fwd_bwd(&mp.mspec, params, big, big_b, &mut gb, &mut ws, pool, min_ops);
+                mp.put_ws(ws);
+                for (i, (a, b)) in gs.iter().zip(&gb).enumerate() {
+                    let mut s = 0.0f64;
+                    for (x, y) in a.f32s().iter().zip(b.f32s()) {
+                        let dxy = (*x - *y) as f64;
+                        s += dxy * dxy;
+                    }
+                    out[i].f32s_mut()[0] = (s / a.numel() as f64) as f32;
+                }
+            }
+            Kind::Update(up) => {
+                let mut ws = up.ws.lock().unwrap();
+                up.prog.execute(inputs, out, &mut ws, pool, min_ops)?;
+            }
+            Kind::Init(info) => {
+                let seed = inputs[0].i32s()[0] as i64 as u64;
+                native_init_into(info, seed, out);
+            }
+            Kind::Norm { op, d, ws } => {
+                let x = inputs[0].f32s();
+                let mut st = ws.lock().unwrap();
+                let y = out[0].f32s_mut();
+                match op {
+                    NormOp::Col => colnorm_into(x, *d, *d, &mut st.norm, y),
+                    NormOp::Row => rownorm_into(x, *d, *d, y),
+                    NormOp::Sign => sign_into(x, y),
+                    NormOp::Ns => ns_orth(x, *d, *d, NS_STEPS, y, &mut st.ns, pool, min_ops),
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Reuse `out` if it already matches the artifact signature; otherwise
+/// rebuild it with correctly shaped zero tensors (first call, or a
+/// caller recycling buffers across artifacts).
+fn ensure_outputs(spec: &ArtifactSpec, out: &mut Vec<Tensor>) {
+    let ok = out.len() == spec.outputs.len()
+        && out
+            .iter()
+            .zip(&spec.outputs)
+            .all(|(t, s)| t.shape() == s.shape.as_slice() && t.dtype() == s.dtype);
+    if ok {
+        return;
+    }
+    out.clear();
+    for s in &spec.outputs {
+        out.push(match s.dtype {
+            DType::F32 => Tensor::zeros(&s.shape),
+            DType::I32 => Tensor::from_i32(&s.shape, vec![0; s.numel()]),
+        });
+    }
+}
+
+/// Native parameter init mirroring `model.init_params`' scheme (ones for
+/// norm gains, N(0, 0.02) embeddings, 1/sqrt(d_in) fan-in matrices).
+/// Seeds are independent per parameter; exact agreement with the jax
+/// init artifact is not required (both are valid draws of the same
+/// scheme), only determinism per (size, seed).
+pub fn native_init(size: &SizeInfo, seed: u64) -> Vec<Tensor> {
+    let ps = &size.params;
+    let mut out: Vec<Tensor> = ps.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+    native_init_into(size, seed, &mut out);
+    out
+}
+
+fn native_init_into(size: &SizeInfo, seed: u64, out: &mut [Tensor]) {
+    for (i, p) in size.params.iter().enumerate() {
+        let data = out[i].f32s_mut();
+        let mut rng = Pcg::with_stream(seed.wrapping_add(1), i as u64);
+        match (p.kind.as_str(), p.name.as_str()) {
+            ("vector", _) => data.fill(1.0),
+            ("embed", _) | (_, "pos_embed") => {
+                for v in data.iter_mut() {
+                    *v = 0.02 * rng.normal() as f32;
+                }
+            }
+            _ => {
+                let scale = 1.0 / (p.shape[0] as f32).sqrt();
+                for v in data.iter_mut() {
+                    *v = scale * rng.normal() as f32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::manifest::native_manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        native_manifest(PathBuf::from("unused"))
+    }
+
+    fn program(m: &Manifest, name: &str) -> NativeProgram {
+        NativeProgram::new(m, m.artifact(name).unwrap()).unwrap()
+    }
+
+    fn tiny_inputs(m: &Manifest) -> (Vec<Tensor>, Tensor) {
+        let info = m.size("tiny").unwrap();
+        let params = native_init(info, 3);
+        let w = info.seq_len + 1;
+        let mb = m.microbatch;
+        let toks: Vec<i32> = (0..mb * w).map(|i| (i % info.vocab) as i32).collect();
+        (params, Tensor::from_i32(&[mb, w], toks))
+    }
+
+    #[test]
+    fn fwd_bwd_program_runs_and_reuses_buffers() {
+        let m = manifest();
+        let prog = program(&m, "fwd_bwd_tiny");
+        let spec = m.artifact("fwd_bwd_tiny").unwrap();
+        let (params, batch) = tiny_inputs(&m);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&batch);
+        let mut out = Vec::new();
+        prog.execute_into(spec, &inputs, &mut out).unwrap();
+        assert_eq!(out.len(), 1 + params.len());
+        let loss1 = out[0].item_f32();
+        assert!(loss1.is_finite() && loss1 > 0.0);
+        let ptr_before = out[1].f32s().as_ptr();
+        prog.execute_into(spec, &inputs, &mut out).unwrap();
+        assert_eq!(out[1].f32s().as_ptr(), ptr_before, "grad buffer must be reused");
+        assert_eq!(out[0].item_f32(), loss1, "same inputs -> bit-identical loss");
+    }
+
+    #[test]
+    fn eval_matches_fwd_bwd_loss() {
+        let m = manifest();
+        let fwd = program(&m, "fwd_bwd_tiny");
+        let evl = program(&m, "eval_tiny");
+        let (params, batch) = tiny_inputs(&m);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&batch);
+        let spec_f = m.artifact("fwd_bwd_tiny").unwrap();
+        let mut out_f = Vec::new();
+        fwd.execute_into(spec_f, &inputs, &mut out_f).unwrap();
+        let spec_e = m.artifact("eval_tiny").unwrap();
+        let mut out_e = Vec::new();
+        evl.execute_into(spec_e, &inputs, &mut out_e).unwrap();
+        assert_eq!(out_f[0].item_f32(), out_e[0].item_f32());
+    }
+
+    #[test]
+    fn init_program_is_seed_deterministic() {
+        let m = manifest();
+        let prog = program(&m, "init_tiny");
+        let spec = m.artifact("init_tiny").unwrap();
+        let seed5 = Tensor::scalar_i32(5);
+        let seed6 = Tensor::scalar_i32(6);
+        let mut a = Vec::new();
+        prog.execute_into(spec, &[&seed5], &mut a).unwrap();
+        let mut b = Vec::new();
+        prog.execute_into(spec, &[&seed5], &mut b).unwrap();
+        let mut c = Vec::new();
+        prog.execute_into(spec, &[&seed6], &mut c).unwrap();
+        assert_eq!(a[0].f32s(), b[0].f32s());
+        assert_ne!(a[0].f32s(), c[0].f32s());
+        // norm gains are ones regardless of seed
+        let info = m.size("tiny").unwrap();
+        let gain_idx = info.params.iter().position(|p| p.kind == "vector").unwrap();
+        assert!(a[gain_idx].f32s().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn varprobe_outputs_are_nonnegative_scalars() {
+        let m = manifest();
+        let prog = program(&m, "varprobe_tiny");
+        let spec = m.artifact("varprobe_tiny").unwrap();
+        let info = m.size("tiny").unwrap();
+        let (params, small) = tiny_inputs(&m);
+        let w = info.seq_len + 1;
+        let big_n = m.microbatch * m.varprobe_big_factor;
+        let toks: Vec<i32> = (0..big_n * w).map(|i| (i % info.vocab) as i32).collect();
+        let big = Tensor::from_i32(&[big_n, w], toks);
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.push(&small);
+        inputs.push(&big);
+        let mut out = Vec::new();
+        prog.execute_into(spec, &inputs, &mut out).unwrap();
+        assert_eq!(out.len(), info.params.len());
+        for t in &out {
+            assert!(t.shape().is_empty());
+            assert!(t.item_f32() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn norm_programs_match_native_kernels() {
+        let m = manifest();
+        let d = 128usize;
+        let mut rng = Pcg::new(7);
+        let x: Vec<f32> = (0..d * d).map(|_| rng.normal() as f32).collect();
+        let xt = Tensor::from_f32(&[d, d], x.clone());
+        for op in ["col", "row", "sign"] {
+            let name = format!("norm_{op}_{d}");
+            let prog = program(&m, &name);
+            let spec = m.artifact(&name).unwrap();
+            let mut out = Vec::new();
+            prog.execute_into(spec, &[&xt], &mut out).unwrap();
+            let want = match op {
+                "col" => crate::optim::colnorm::colnorm(&x, d, d),
+                "row" => crate::optim::colnorm::rownorm(&x, d, d),
+                _ => crate::optim::colnorm::sign(&x),
+            };
+            assert_eq!(out[0].f32s(), &want[..], "{op}");
+        }
+        let prog = program(&m, "norm_ns_128");
+        let spec = m.artifact("norm_ns_128").unwrap();
+        let mut out = Vec::new();
+        prog.execute_into(spec, &[&xt], &mut out).unwrap();
+        assert!(out[0].f32s().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unsupported_kind_errors_clearly() {
+        let m = manifest();
+        let mut spec = m.artifact("fwd_bwd_tiny").unwrap().clone();
+        spec.kind = "mystery".into();
+        let err = NativeProgram::new(&m, &spec).unwrap_err().to_string();
+        assert!(err.contains("native executor"), "{err}");
+    }
+}

@@ -10,11 +10,17 @@
 //! - L3 (this crate): the training coordinator — data pipeline, DDP
 //!   simulation, scheduler, checkpointing, metrics, memory accounting,
 //!   and the benchmark harness that regenerates the paper's tables.
+//!
+//! On the default (no-`xla`) build, the [`exec`] native CPU engine
+//! stands in for L1/L2 at runtime: the same manifest contract, executed
+//! by pure-Rust pool-parallel kernels, so training runs end-to-end with
+//! no Python and no FFI.
 
 pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod harness;
 pub mod memory;
 pub mod optim;

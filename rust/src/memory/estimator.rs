@@ -14,7 +14,7 @@
 //! for APOLLO are `r x max(d_in, d_out)` per hidden matrix; GaLore/Fira
 //! additionally store the projector `min(d) x r`.
 
-use crate::runtime::artifact::{Manifest, PaperDims};
+use crate::runtime::artifact::{DType, Manifest, PaperDims};
 
 pub const BYTES: f64 = 2.0; // bf16
 const GB: f64 = 1e9; // the paper uses decimal GB
@@ -120,21 +120,24 @@ impl MemoryModel {
 }
 
 /// Measured (not modeled) state bytes for a tiny run in this repo:
-/// read straight from the manifest's state layout. f32 on CPU.
+/// read straight from the manifest's state layout (f32 slots on CPU —
+/// sized through [`DType::bytes`] so a future lower-precision state
+/// dtype cannot silently mis-size this).
 pub fn measured_state_bytes(
     manifest: &Manifest,
     optimizer: &str,
     size: &str,
 ) -> anyhow::Result<usize> {
+    let per = DType::F32.bytes();
     let slots = manifest.state_spec(optimizer, size)?;
     Ok(slots
         .iter()
-        .map(|s| 4 * s.shape.iter().product::<usize>())
+        .map(|s| per * s.shape.iter().product::<usize>())
         .sum())
 }
 
 pub fn measured_param_bytes(manifest: &Manifest, size: &str) -> anyhow::Result<usize> {
-    Ok(4 * manifest.size(size)?.param_count)
+    Ok(DType::F32.bytes() * manifest.size(size)?.param_count)
 }
 
 #[cfg(test)]

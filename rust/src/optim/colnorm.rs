@@ -22,10 +22,15 @@ use crate::parallel::WorkerPool;
 
 pub const EPS: f32 = 1e-30;
 
-/// Matrices below this many elements run the sequential kernels even
-/// through the `_par` entry points: pool dispatch costs ~microseconds,
-/// which dominates the arithmetic for small tensors. The exact value
-/// never affects results — both paths are bit-identical — only latency.
+/// Pre-calibration default for the sequential-fallback threshold:
+/// matrices below this many elements run the sequential kernels even
+/// through the `_par` entry points, because pool dispatch costs
+/// ~microseconds, which dominates the arithmetic for small tensors. The
+/// default `_par` entry points now use the *measured* threshold
+/// ([`crate::parallel::tuned_min_ops`]); this constant remains as the
+/// documented fallback and for tests that need a fixed reference point.
+/// The exact value never affects results — both paths are bit-identical
+/// — only latency.
 pub const PAR_MIN_ELEMS: usize = 1 << 15;
 
 /// Reusable per-column norm scratch. One workspace per (thread, kernel
@@ -146,7 +151,8 @@ pub(crate) fn col_norms_tiled<'w>(
 /// of [`colnorm_into`], bit-identical to it for every pool size (the
 /// per-element operations and their order are unchanged; only the
 /// partitioning differs, and column reductions are independent). Small
-/// matrices (below [`PAR_MIN_ELEMS`]) run the sequential kernel inline.
+/// matrices (below the calibrated [`crate::parallel::tuned_min_ops`]
+/// threshold) run the sequential kernel inline.
 pub fn colnorm_into_par(
     pool: &WorkerPool,
     g: &[f32],
@@ -155,7 +161,8 @@ pub fn colnorm_into_par(
     ws: &mut NormWorkspace,
     out: &mut [f32],
 ) {
-    colnorm_into_par_with(pool, g, d_in, d_out, ws, out, PAR_MIN_ELEMS)
+    let min_elems = crate::parallel::tuned_min_ops();
+    colnorm_into_par_with(pool, g, d_in, d_out, ws, out, min_elems)
 }
 
 /// [`colnorm_into_par`] with an explicit sequential-fallback threshold

@@ -50,9 +50,12 @@
 //!   `&mut` slice of the output (workspace norms in the column pass,
 //!   params/momentum rows in the apply passes) obtained via
 //!   `chunks_mut` — safe Rust, no aliasing, no locks on the data path.
-//! * **Size threshold.** Below `colnorm::PAR_MIN_ELEMS` elements the
-//!   `_par` entry points call the sequential kernels inline: pool
-//!   dispatch costs ~µs, which dominates small tensors. The threshold
+//! * **Size threshold.** Below a work-size threshold the `_par` entry
+//!   points call the sequential kernels inline: pool dispatch costs
+//!   ~µs, which dominates small tensors. The default entry points use
+//!   the *calibrated* threshold (`parallel::tuned_min_ops`, measured
+//!   from real dispatch latency at first use); `colnorm::PAR_MIN_ELEMS`
+//!   remains as the pre-calibration reference constant. The threshold
 //!   (and the `_with` variants that override it) selects a code path
 //!   only — the property tests sweep it across the boundary to pin down
 //!   that it can never select a different *result*.

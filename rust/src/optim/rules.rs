@@ -16,7 +16,7 @@
 //! sequenced the same (tiling only partitions independent columns/rows,
 //! it never reassociates a reduction).
 
-use super::colnorm::{col_norms_into, col_norms_tiled, tile_width, NormWorkspace, PAR_MIN_ELEMS};
+use super::colnorm::{col_norms_into, col_norms_tiled, tile_width, NormWorkspace};
 use crate::parallel::WorkerPool;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -38,13 +38,16 @@ impl Default for AdamHp {
 
 /// In-place EMA over slices: `m = beta*m + (1-beta)*g`. Shared by the
 /// momentum rules and the noisy-quadratic simulator.
+#[inline]
 pub fn ema_(m: &mut [f32], g: &[f32], beta: f32) {
     for (mi, gi) in m.iter_mut().zip(g) {
         *mi = beta * *mi + (1.0 - beta) * gi;
     }
 }
 
-/// In-place axpy over slices: `y += alpha * x`.
+/// In-place axpy over slices: `y += alpha * x`. Also the inner kernel of
+/// the native executor's rank-1 GEMM (`exec::gemm`), hence `#[inline]`.
+#[inline]
 pub fn axpy_(y: &mut [f32], alpha: f32, x: &[f32]) {
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
@@ -136,8 +139,9 @@ pub fn scale_momentum_ws(
 
 /// Parallel form of [`scale_plain_ws`]: column-tiled norm pass, then a
 /// row-tiled fused apply with disjoint parameter slices — bit-identical
-/// to the sequential rule for every pool size. Matrices below
-/// [`PAR_MIN_ELEMS`] run the sequential rule inline.
+/// to the sequential rule for every pool size. Matrices below the
+/// calibrated [`crate::parallel::tuned_min_ops`] threshold run the
+/// sequential rule inline.
 pub fn scale_plain_ws_par(
     pool: &WorkerPool,
     p: &mut [f32],
@@ -147,7 +151,8 @@ pub fn scale_plain_ws_par(
     lr: f32,
     ws: &mut NormWorkspace,
 ) {
-    scale_plain_ws_par_with(pool, p, g, d_in, d_out, lr, ws, PAR_MIN_ELEMS)
+    let min_elems = crate::parallel::tuned_min_ops();
+    scale_plain_ws_par_with(pool, p, g, d_in, d_out, lr, ws, min_elems)
 }
 
 /// [`scale_plain_ws_par`] with an explicit threshold (see
@@ -201,7 +206,8 @@ pub fn scale_momentum_ws_par(
     beta: f32,
     ws: &mut NormWorkspace,
 ) {
-    scale_momentum_ws_par_with(pool, p, m, g, d_in, d_out, lr, beta, ws, PAR_MIN_ELEMS)
+    let min_elems = crate::parallel::tuned_min_ops();
+    scale_momentum_ws_par_with(pool, p, m, g, d_in, d_out, lr, beta, ws, min_elems)
 }
 
 /// [`scale_momentum_ws_par`] with an explicit threshold.
@@ -277,7 +283,7 @@ pub fn scale_momentum(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::colnorm::colnorm;
+    use crate::optim::colnorm::{colnorm, PAR_MIN_ELEMS};
     use crate::util::prop::{self, ensure};
 
     #[test]

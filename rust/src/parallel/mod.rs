@@ -1,5 +1,6 @@
 //! Persistent worker-pool runtime: the parallel substrate for every
-//! per-step fan-out in the coordinator and the tiled optimizer kernels.
+//! per-step fan-out in the coordinator, the tiled optimizer kernels,
+//! and the native executor's GEMMs.
 //!
 //! `std`-only by design (this build environment has no external crates):
 //! a fixed set of worker threads created **once** — at pool construction,
@@ -7,8 +8,9 @@
 //! a scoped `run` (= submit + join) entry point that supports borrowed
 //! task environments, exactly like `std::thread::scope` but without the
 //! per-call thread spawns. `coordinator::Trainer` (shard fwd/bwd, batch
-//! tokenization, ring refill), `coordinator::ddp::tree_all_reduce`, and
-//! the `optim` `*_par` kernels all dispatch through one pool.
+//! tokenization, ring refill), `coordinator::ddp::tree_all_reduce`, the
+//! `optim` `*_par` kernels, and `exec::gemm` all dispatch through one
+//! pool.
 //!
 //! # Determinism guarantees
 //!
@@ -23,26 +25,41 @@
 //!   lowest task index is re-raised at the `run` call site.
 //! * **No hidden reassociation.** The pool never splits, merges, or
 //!   reorders the *work inside* a task. Callers that need bit-identical
-//!   float results (tree reduction columns, column-tiled norm kernels)
-//!   get them by partitioning work into tasks whose internal operation
-//!   order matches the sequential implementation — the pool only decides
-//!   *when* each task runs, never what it computes. See
-//!   `optim::colnorm` and `coordinator::ddp` for the property tests that
-//!   pin this down.
+//!   float results (tree reduction columns, column-tiled norm kernels,
+//!   GEMM row blocks) get them by partitioning work into tasks whose
+//!   internal operation order matches the sequential implementation —
+//!   the pool only decides *when* each task runs, never what it
+//!   computes. See `optim::colnorm`, `coordinator::ddp`, and
+//!   `exec::gemm` for the property tests that pin this down.
+//!
+//! # Threshold calibration
+//!
+//! Whether a kernel dispatches to the pool at all is gated on a
+//! work-size threshold in float ops: below it, dispatch latency (~µs)
+//! dominates the arithmetic. [`calibrate`] measures the *actual*
+//! dispatch latency of a pool and the single-thread per-op throughput,
+//! and [`tuned_min_ops`] memoizes that measurement for the shared pool —
+//! replacing the two hard-coded constants (`optim`'s `PAR_MIN_ELEMS`,
+//! ddp's old `PAR_THRESHOLD`) that PR 2 deferred. Every `_with` kernel
+//! variant takes the threshold explicitly; the property tests sweep it
+//! across the boundary to pin down that it selects a code path, never a
+//! result.
 //!
 //! # Spawn accounting
 //!
 //! [`threads_spawned`] (and its per-thread variant) counts every worker
 //! the pool module has ever created. After construction the count must
 //! stay flat across any number of `run` calls — the zero-per-step-spawn
-//! acceptance gate enforced in `benches/bench_hot_path.rs` and the pool
-//! tests.
+//! acceptance gate enforced in `benches/bench_hot_path.rs`,
+//! `benches/bench_throughput.rs`, and the pool tests.
 
 mod pool;
 
 pub use pool::{threads_spawned, threads_spawned_by_current_thread, WorkerPool};
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+use std::time::{Duration, Instant};
 
 static SHARED: OnceLock<WorkerPool> = OnceLock::new();
 
@@ -66,4 +83,94 @@ fn default_workers() -> usize {
         .unwrap_or(1)
         .saturating_sub(1)
         .min(MAX_SHARED_WORKERS)
+}
+
+static TUNED: OnceLock<usize> = OnceLock::new();
+static OVERRIDE_OPS: AtomicUsize = AtomicUsize::new(0);
+
+/// Force a process-wide threshold (benches pin `usize::MAX` to audit the
+/// sequential path's allocations, `Some(1)` — or `Some(0)`, which is
+/// clamped to 1 and means the same thing — to force pool dispatch);
+/// `None` restores the calibrated value. Thresholds select a code path,
+/// never a result, so this can never change any computed number.
+pub fn set_min_ops_override(ops: Option<usize>) {
+    // 0 is the internal "no override" sentinel; a caller passing
+    // Some(0) clearly wants everything parallel, which 1 also delivers
+    // (every kernel gates on `work < min_ops.max(1)`)
+    OVERRIDE_OPS.store(ops.map_or(0, |o| o.max(1)), Ordering::SeqCst);
+}
+
+/// The sequential-fallback threshold in float ops (elements for
+/// elementwise kernels, `m*n*k` for GEMM): calibrated once against the
+/// shared pool and memoized for the life of the process.
+pub fn tuned_min_ops() -> usize {
+    let o = OVERRIDE_OPS.load(Ordering::SeqCst);
+    if o != 0 {
+        return o;
+    }
+    *TUNED.get_or_init(|| calibrate(shared()))
+}
+
+/// Measure `pool`'s dispatch latency (best of 32 empty fan-outs) and the
+/// single-thread per-op throughput of an L1-resident multiply-add pass,
+/// and return the op count at which a parallel dispatch breaks even with
+/// a 2x margin, clamped to `[2^12, 2^22]`. Costs ~1 ms; runs once per
+/// process via [`tuned_min_ops`].
+pub fn calibrate(pool: &WorkerPool) -> usize {
+    if pool.workers() == 0 {
+        return usize::MAX; // no extra lanes: parallel dispatch can never win
+    }
+    let lanes = pool.parallelism();
+    let mut dispatch = Duration::MAX;
+    for _ in 0..32 {
+        let tasks: Vec<fn()> = (0..lanes).map(|_| (|| {}) as fn()).collect();
+        let t0 = Instant::now();
+        pool.run(tasks);
+        dispatch = dispatch.min(t0.elapsed());
+    }
+    let n = 1 << 14;
+    let mut y = vec![1.0f32; n];
+    let x = vec![0.5f32; n];
+    let passes = 64u32;
+    let t0 = Instant::now();
+    for p in 0..passes {
+        let s = 1.0 + (p as f32) * 1e-9;
+        for (yi, xi) in y.iter_mut().zip(&x) {
+            *yi += s * xi;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    std::hint::black_box(&y);
+    let per_op = (elapsed / (passes as usize * n) as f64).max(1e-12);
+    let min_ops = (2.0 * dispatch.as_secs_f64() / per_op) as usize;
+    min_ops.clamp(1 << 12, 1 << 22)
+}
+
+#[cfg(test)]
+mod calibrate_tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_threshold_is_in_band() {
+        let pool = WorkerPool::new(2);
+        let t = calibrate(&pool);
+        assert!((1 << 12..=1 << 22).contains(&t), "threshold {t}");
+    }
+
+    #[test]
+    fn zero_worker_pool_never_parallelizes() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(calibrate(&pool), usize::MAX);
+    }
+
+    #[test]
+    fn override_wins_and_clears() {
+        set_min_ops_override(Some(12345));
+        assert_eq!(tuned_min_ops(), 12345);
+        set_min_ops_override(None);
+        let t = tuned_min_ops();
+        assert!(t >= 1 << 12, "tuned {t}");
+        // memoized: a second call returns the identical value
+        assert_eq!(tuned_min_ops(), t);
+    }
 }

@@ -24,8 +24,15 @@ impl DType {
         }
     }
 
+    /// Bytes per element, matched per variant so a future bf16/i8 dtype
+    /// cannot silently mis-size the memory estimator (adding a variant
+    /// is a compile error here until its width is declared; the
+    /// estimator and `Trainer::state_bytes` route through this).
     pub fn bytes(&self) -> usize {
-        4
+        match self {
+            DType::F32 => 4,
+            DType::I32 => 4,
+        }
     }
 }
 

@@ -1,30 +1,33 @@
-//! PJRT engine: loads HLO-text artifacts, compiles them once, executes
-//! them from the training hot path.
+//! Engine: loads manifest artifacts, compiles them once, executes them
+//! from the training hot path — through PJRT when the `xla` feature is
+//! on, through the native CPU executor ([`crate::exec`]) otherwise.
 //!
-//! Interchange is HLO *text* (see aot.py / DESIGN.md): xla_extension
-//! 0.5.1 rejects jax>=0.5's 64-bit-id serialized protos, while the text
-//! parser reassigns ids. Executables are cached per artifact name; all
-//! artifacts are lowered with `return_tuple=True`, so each execution
-//! yields a single tuple buffer that [`Engine::run_exe`] untuples back
-//! into host [`Tensor`]s.
+//! With `--features xla`, interchange is HLO *text* (see aot.py /
+//! DESIGN.md): xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id
+//! serialized protos, while the text parser reassigns ids. On the
+//! default build no artifact files are needed at all: `Engine::new`
+//! falls back to the native manifest (`exec::native_manifest`) when
+//! `manifest.json` is absent, and `Engine::load` builds a
+//! [`crate::exec::NativeProgram`] per artifact — so `Trainer::train`,
+//! eval, and every bench run end-to-end without Python or PJRT.
 //!
 //! Threading: the engine is shared (`&Engine`) across the DDP shard
 //! threads of `Trainer::train_step`, so all interior mutability is
 //! sync-safe — the executable cache behind a `Mutex`, the perf counters
 //! as atomics. Callers pass inputs by reference ([`Engine::run_exe_refs`])
-//! so the hot path never clones parameter tensors just to build an
-//! argument list, and inputs cross the backend seam as borrowed literal
-//! views (`Tensor::as_literal_ref`) — on the stub backend no host copy
-//! is made at all.
+//! so the hot path never clones parameter tensors, and callers that own
+//! reusable output buffers use [`Engine::run_exe_refs_into`] — on the
+//! native executor that path is allocation-free in steady state.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+use super::backend::PjRtClient;
+#[cfg(feature = "xla")]
 use super::backend::{
-    execute_views, HloModuleProto, Literal, LiteralView, PjRtClient, PjRtLoadedExecutable,
-    XlaComputation,
+    execute_views, HloModuleProto, Literal, LiteralView, PjRtLoadedExecutable, XlaComputation,
 };
 
 use super::artifact::{ArtifactSpec, Manifest};
@@ -35,7 +38,7 @@ use super::tensor::Tensor;
 /// SAFETY (of the impls below): PJRT clients and loaded executables are
 /// thread-safe at the C API level (PJRT is designed for concurrent
 /// dispatch). The claim is scoped to these wrappers — Engine/Executable
-/// derive their own Send/Sync from their fields. The stub backend's
+/// derive their own Send/Sync from their fields. The native executor's
 /// types are plain host data and need no unsafe.
 ///
 /// PRECONDITION for enabling the `xla` feature: the C-API argument only
@@ -53,6 +56,7 @@ unsafe impl Send for SyncClient {}
 unsafe impl Sync for SyncClient {}
 
 /// See [`SyncClient`].
+#[cfg(feature = "xla")]
 struct SyncExec(PjRtLoadedExecutable);
 
 #[cfg(feature = "xla")]
@@ -60,11 +64,20 @@ unsafe impl Send for SyncExec {}
 #[cfg(feature = "xla")]
 unsafe impl Sync for SyncExec {}
 
+/// The two executor backends behind one [`Executable`] face.
+enum ExecKind {
+    #[cfg(feature = "xla")]
+    Pjrt(SyncExec),
+    #[cfg(not(feature = "xla"))]
+    Native(crate::exec::NativeProgram),
+}
+
 pub struct Engine {
     /// Constructed eagerly but allowed to fail without sinking the
-    /// Engine: manifest-only consumers (`scale list`, `memory-report`,
-    /// `table 4`) must work in stub builds; the stored error surfaces on
-    /// the first attempt to compile or execute an artifact.
+    /// Engine: on the default build every artifact runs natively and the
+    /// client is never consulted; with `xla`, manifest-only consumers
+    /// (`scale list`, `memory-report`, `table 4`) still work and the
+    /// stored error surfaces on the first compile.
     client: Result<SyncClient, String>,
     pub manifest: Manifest,
     cache: Mutex<HashMap<String, Arc<Executable>>>,
@@ -75,7 +88,18 @@ pub struct Engine {
 
 impl Engine {
     pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
-        let manifest = Manifest::load(artifact_dir)?;
+        let dir = artifact_dir.as_ref();
+        // Native builds synthesize the manifest when `make artifacts`
+        // has not produced one; a real manifest.json still wins so the
+        // PJRT-lowered shapes stay authoritative where they exist.
+        #[cfg(not(feature = "xla"))]
+        let manifest = if dir.join("manifest.json").exists() {
+            Manifest::load(dir)?
+        } else {
+            crate::exec::native_manifest(dir.to_path_buf())
+        };
+        #[cfg(feature = "xla")]
+        let manifest = Manifest::load(dir)?;
         let client = PjRtClient::cpu()
             .map(SyncClient)
             .map_err(|e| e.to_string());
@@ -88,34 +112,40 @@ impl Engine {
         })
     }
 
+    #[cfg(feature = "xla")]
     fn client(&self) -> anyhow::Result<&SyncClient> {
         self.client
             .as_ref()
             .map_err(|e| anyhow::anyhow!("PJRT client unavailable: {e}"))
     }
 
-    /// Load + compile an artifact (cached). The cache lock is held across
-    /// the compile on purpose: compiles are multi-second, and releasing
-    /// the lock between miss and insert would let concurrent callers
-    /// compile the same artifact twice. Loads happen at Trainer
-    /// construction, not on the threaded step path, so the serialization
-    /// is free in practice.
+    /// Load an artifact (cached): PJRT-compiled with `--features xla`,
+    /// a [`crate::exec::NativeProgram`] otherwise. The cache lock is
+    /// held across the build on purpose: PJRT compiles are multi-second,
+    /// and releasing the lock between miss and insert would let
+    /// concurrent callers compile the same artifact twice. Loads happen
+    /// at Trainer construction, not on the threaded step path, so the
+    /// serialization is free in practice.
     pub fn load(&self, name: &str) -> anyhow::Result<Arc<Executable>> {
         let mut cache = self.cache.lock().unwrap();
         if let Some(e) = cache.get(name) {
             return Ok(e.clone());
         }
         let spec = self.manifest.artifact(name)?.clone();
-        let path = self.manifest.dir.join(&spec.file);
         let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(&path)?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self.client()?.0.compile(&comp)?;
-        let compiled_in = t0.elapsed();
+        #[cfg(feature = "xla")]
+        let kind = {
+            let path = self.manifest.dir.join(&spec.file);
+            let proto = HloModuleProto::from_text_file(&path)?;
+            let comp = XlaComputation::from_proto(&proto);
+            ExecKind::Pjrt(SyncExec(self.client()?.0.compile(&comp)?))
+        };
+        #[cfg(not(feature = "xla"))]
+        let kind = ExecKind::Native(crate::exec::NativeProgram::new(&self.manifest, &spec)?);
         let e = Arc::new(Executable {
             spec,
-            exe: SyncExec(exe),
-            compiled_in,
+            kind,
+            compiled_in: t0.elapsed(),
         });
         cache.insert(name.to_string(), e.clone());
         Ok(e)
@@ -132,28 +162,52 @@ impl Engine {
         self.run_exe_refs(exe, &refs)
     }
 
-    /// Execute with borrowed inputs — the zero-copy entry point. The
+    /// Execute with borrowed inputs — the zero-clone entry point. The
     /// trainer assembles `[&params.., &state.., &grads.., &scalars..]`
-    /// without cloning a single tensor, and on the stub backend the
-    /// input literals are *views* of the tensors' storage
-    /// ([`Tensor::as_literal_ref`]) — no per-input host copy either.
+    /// without cloning a single tensor.
     pub fn run_exe_refs(
         &self,
         exe: &Executable,
         inputs: &[&Tensor],
     ) -> anyhow::Result<Vec<Tensor>> {
+        let mut out = Vec::new();
+        self.run_exe_refs_into(exe, inputs, &mut out)?;
+        Ok(out)
+    }
+
+    /// Execute with borrowed inputs into caller-owned output tensors.
+    /// When `out` already matches the artifact's output signature (the
+    /// steady state of a training loop), the native executor writes
+    /// every result in place — zero heap allocations per call; the PJRT
+    /// path falls back to materializing fresh outputs.
+    pub fn run_exe_refs_into(
+        &self,
+        exe: &Executable,
+        inputs: &[&Tensor],
+        out: &mut Vec<Tensor>,
+    ) -> anyhow::Result<()> {
         exe.check_inputs(inputs)?;
-        let views: Vec<LiteralView> = inputs
-            .iter()
-            .map(|t| t.as_literal_ref())
-            .collect::<anyhow::Result<_>>()?;
         let t0 = Instant::now();
-        let out = execute_views(&exe.exe.0, views)?;
-        let mut tuple = out[0][0].to_literal_sync()?;
+        match &exe.kind {
+            #[cfg(feature = "xla")]
+            ExecKind::Pjrt(sync) => {
+                let views: Vec<LiteralView> = inputs
+                    .iter()
+                    .map(|t| t.as_literal_ref())
+                    .collect::<anyhow::Result<_>>()?;
+                let res = execute_views(&sync.0, views)?;
+                let mut tuple = res[0][0].to_literal_sync()?;
+                let tensors = untuple(&mut tuple, exe.spec.outputs.len())?;
+                out.clear();
+                out.extend(tensors);
+            }
+            #[cfg(not(feature = "xla"))]
+            ExecKind::Native(prog) => prog.execute_into(&exe.spec, inputs, out)?,
+        }
         self.exec_nanos
             .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         self.exec_count.fetch_add(1, Ordering::Relaxed);
-        untuple(&mut tuple, exe.spec.outputs.len())
+        Ok(())
     }
 
     /// Cumulative execute-call wall time.
@@ -168,6 +222,9 @@ impl Engine {
     pub fn platform(&self) -> String {
         match &self.client {
             Ok(c) => c.0.platform_name(),
+            #[cfg(not(feature = "xla"))]
+            Err(_) => "native-cpu".to_string(),
+            #[cfg(feature = "xla")]
             Err(_) => "unavailable".to_string(),
         }
     }
@@ -175,7 +232,7 @@ impl Engine {
 
 pub struct Executable {
     pub spec: ArtifactSpec,
-    exe: SyncExec,
+    kind: ExecKind,
     pub compiled_in: std::time::Duration,
 }
 
@@ -207,6 +264,7 @@ impl Executable {
     }
 }
 
+#[cfg(feature = "xla")]
 fn untuple(tuple: &mut Literal, expected: usize) -> anyhow::Result<Vec<Tensor>> {
     let parts = tuple.decompose_tuple()?;
     if parts.len() != expected {
@@ -219,13 +277,11 @@ fn untuple(tuple: &mut Literal, expected: usize) -> anyhow::Result<Vec<Tensor>> 
 mod tests {
     use super::*;
 
-    /// Engine tests need `make artifacts` (and a real PJRT backend); skip
-    /// gracefully in environments without them so the suite stays green.
+    /// On the default build the native executor always works (the
+    /// manifest synthesizes when absent); with `--features xla` these
+    /// tests still need `make artifacts` + a real PJRT backend, so they
+    /// skip gracefully there.
     fn engine_or_skip() -> Option<Engine> {
-        if !cfg!(feature = "xla") {
-            eprintln!("skipping engine test (needs --features xla to execute artifacts)");
-            return None;
-        }
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         match Engine::new(dir) {
             Ok(e) => Some(e),
@@ -282,5 +338,29 @@ mod tests {
         let d = eng.manifest.norm_bench_dims[0];
         let bad = Tensor::zeros(&[d, d + 1]);
         assert!(eng.run(&format!("norm_col_{d}"), &[bad]).is_err());
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn run_exe_refs_into_reuses_buffers_and_counts_execs() {
+        let eng = engine_or_skip().unwrap();
+        let d = eng.manifest.norm_bench_dims[0];
+        let exe = eng.load(&format!("norm_sign_{d}")).unwrap();
+        let x = Tensor::from_f32(&[d, d], vec![-2.0; d * d]);
+        let mut out = Vec::new();
+        eng.run_exe_refs_into(&exe, &[&x], &mut out).unwrap();
+        assert_eq!(out[0].f32s()[0], -1.0);
+        let ptr = out[0].f32s().as_ptr();
+        let before = eng.exec_count();
+        eng.run_exe_refs_into(&exe, &[&x], &mut out).unwrap();
+        assert_eq!(out[0].f32s().as_ptr(), ptr, "output buffer must be reused");
+        assert_eq!(eng.exec_count(), before + 1);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn native_engine_reports_platform() {
+        let eng = engine_or_skip().unwrap();
+        assert_eq!(eng.platform(), "native-cpu");
     }
 }

@@ -89,6 +89,15 @@ impl Tensor {
         }
     }
 
+    /// Mutable view of an i32 tensor's storage (token-batch reuse in the
+    /// trainer's ring refill path).
+    pub fn i32s_mut(&mut self) -> &mut [i32] {
+        match self {
+            Tensor::I32 { data, .. } => data,
+            _ => panic!("expected i32 tensor"),
+        }
+    }
+
     /// Scalar extraction (0-d or 1-element tensors).
     pub fn item_f32(&self) -> f32 {
         let d = self.f32s();

@@ -1,31 +1,52 @@
-//! Integration tests over the full stack: artifacts + runtime +
-//! coordinator. Require `make artifacts` to have been run (the manifest
-//! and HLO files must exist).
+//! Integration tests over the full stack: manifest + runtime +
+//! coordinator. On the default build these run end-to-end on the native
+//! CPU executor (no artifacts, no Python, no PJRT — the manifest
+//! synthesizes) against the debug-fast `tiny` smoke size; with
+//! `--features xla` + `make artifacts` they exercise the PJRT path
+//! against `s60m` (real manifests only define the paper family) and
+//! skip gracefully when artifacts are missing.
+//!
+//! Equality tolerances: the native executor is bit-deterministic per
+//! seed by construction, so the determinism tests assert *bit* equality
+//! there; the PJRT executor gets small float tolerances (its kernels
+//! are a different lowering of the same math).
 
 use scale_llm::coordinator::{Checkpoint, Schedule, TrainOptions, Trainer};
+use scale_llm::memory::estimator::{measured_param_bytes, measured_state_bytes};
 use scale_llm::runtime::{Engine, Tensor};
 
-/// Full-stack tests need `make artifacts` plus a real PJRT backend
-/// (`--features xla`); skip gracefully where either is missing so the
-/// tier-1 suite stays green in artifact-less environments.
-fn engine() -> Option<Engine> {
-    if !cfg!(feature = "xla") {
-        eprintln!("skipping integration test (needs --features xla to execute artifacts)");
-        return None;
-    }
+/// Engine plus the smallest trainable size its manifest offers.
+fn engine() -> Option<(Engine, String)> {
     let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    match Engine::new(dir) {
-        Ok(e) => Some(e),
+    let eng = match Engine::new(dir) {
+        Ok(e) => e,
         Err(e) => {
             eprintln!("skipping integration test (run `make artifacts`): {e}");
-            None
+            return None;
+        }
+    };
+    for s in ["tiny", "s60m"] {
+        if eng.manifest.sizes.contains_key(s) {
+            let size = s.to_string();
+            return Some((eng, size));
         }
     }
+    eprintln!("skipping integration test (no smoke-able size in manifest)");
+    None
 }
 
-fn opts(optimizer: &str, steps: usize) -> TrainOptions {
+fn gpt2_size(eng: &Engine) -> Option<String> {
+    for s in ["tinyg", "gpt2s"] {
+        if eng.manifest.sizes.contains_key(s) {
+            return Some(s.to_string());
+        }
+    }
+    None
+}
+
+fn opts(size: &str, optimizer: &str, steps: usize) -> TrainOptions {
     TrainOptions {
-        size: "s60m".into(),
+        size: size.into(),
         optimizer: optimizer.into(),
         steps,
         base_lr: 1e-2,
@@ -39,124 +60,173 @@ fn opts(optimizer: &str, steps: usize) -> TrainOptions {
     }
 }
 
+/// Exact on the native executor, small float tolerance on PJRT.
+fn assert_close(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    if cfg!(feature = "xla") {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < 1e-4, "{what}[{i}]: {x} vs {y}");
+        }
+    } else {
+        assert_eq!(a, b, "{what}: must be bit-identical on the native executor");
+    }
+}
+
 #[test]
-fn scale_training_reduces_loss() {
-    let Some(eng) = engine() else { return };
-    let mut tr = Trainer::new(&eng, opts("scale", 40)).unwrap();
+fn training_reduces_loss() {
+    // the end-to-end smoke: Trainer::train on the default build, loss
+    // decreasing over 30 steps
+    let Some((eng, sz)) = engine() else { return };
+    let mut tr = Trainer::new(&eng, opts(&sz, "scale", 30)).unwrap();
     let first = tr.train_step().unwrap();
-    for _ in 0..39 {
+    for _ in 0..29 {
         tr.train_step().unwrap();
     }
     let last = tr.metrics.ema_loss.unwrap();
+    assert!(last.is_finite() && first.is_finite());
     assert!(
-        last < first - 0.3,
-        "loss should drop by >0.3 nats: first {first:.3} last {last:.3}"
+        last < first - 0.02,
+        "loss should decrease: first {first:.4} ema-last {last:.4}"
     );
 }
 
 #[test]
 fn eval_perplexity_finite_and_below_uniform() {
-    let Some(eng) = engine() else { return };
-    let mut tr = Trainer::new(&eng, opts("scale", 30)).unwrap();
+    let Some((eng, sz)) = engine() else { return };
+    let mut tr = Trainer::new(&eng, opts(&sz, "scale", 20)).unwrap();
     let ppl = tr.train().unwrap();
-    let vocab = eng.manifest.size("s60m").unwrap().vocab as f64;
+    let vocab = eng.manifest.size(&sz).unwrap().vocab as f64;
     assert!(ppl.is_finite() && ppl < vocab, "ppl {ppl} vs uniform {vocab}");
 }
 
 #[test]
 fn fwd_bwd_loss_matches_eval_artifact() {
-    // the two artifacts must agree on the loss for identical inputs
-    let Some(eng) = engine() else { return };
-    let tr = Trainer::new(&eng, opts("scale", 1)).unwrap();
+    // the two executables must agree on the loss for identical inputs
+    let Some((eng, sz)) = engine() else { return };
+    let tr = Trainer::new(&eng, opts(&sz, "scale", 1)).unwrap();
     let w = tr.seq_len + 1;
     let b = tr.microbatch;
-    let batch = Tensor::from_i32(&[b, w], (0..(b * w) as i32).map(|x| x % 100).collect());
+    let vocab = eng.manifest.size(&sz).unwrap().vocab as i32;
+    let batch = Tensor::from_i32(&[b, w], (0..(b * w) as i32).map(|x| x % vocab).collect());
     let (loss_fb, grads) = tr.grad_step(&batch).unwrap();
     assert_eq!(grads.len(), tr.params.len());
-    let evl = eng.load("eval_s60m").unwrap();
+    for (i, g) in grads.iter().enumerate() {
+        assert!(g.f32s().iter().all(|x| x.is_finite()), "grad {i} not finite");
+    }
+    let evl = eng.load(&format!("eval_{sz}")).unwrap();
     let mut inputs: Vec<&Tensor> = tr.params.iter().collect();
     inputs.push(&batch);
     let out = eng.run_exe_refs(&evl, &inputs).unwrap();
     let loss_ev = out[0].item_f32() as f64;
-    assert!((loss_fb - loss_ev).abs() < 1e-5, "{loss_fb} vs {loss_ev}");
+    let tol = if cfg!(feature = "xla") { 1e-5 } else { 1e-7 };
+    assert!((loss_fb - loss_ev).abs() < tol, "{loss_fb} vs {loss_ev}");
 }
 
 #[test]
-fn ddp_shard_counts_agree_in_expectation() {
-    // 1-shard vs 4-shard runs differ in batch content but both must train;
-    // determinism within a configuration must be exact.
-    let Some(eng) = engine() else { return };
-    let mut o1 = opts("scale", 10);
-    o1.shards = 4;
-    let mut a = Trainer::new(&eng, o1.clone()).unwrap();
-    let mut b = Trainer::new(&eng, o1).unwrap();
-    for _ in 0..10 {
+fn same_config_is_deterministic() {
+    let Some((eng, sz)) = engine() else { return };
+    let mut o = opts(&sz, "scale", 8);
+    o.shards = 4;
+    let mut a = Trainer::new(&eng, o.clone()).unwrap();
+    let mut b = Trainer::new(&eng, o).unwrap();
+    for _ in 0..8 {
         a.train_step().unwrap();
         b.train_step().unwrap();
     }
-    for (x, y) in a.params.iter().zip(&b.params) {
-        assert_eq!(x.f32s(), y.f32s(), "same config must be bit-identical");
+    for (p, (x, y)) in a.params.iter().zip(&b.params).enumerate() {
+        // same config in the same process must agree exactly on either
+        // executor (PJRT kernels are deterministic run-to-run too)
+        assert_eq!(x.f32s(), y.f32s(), "param {p}: same config must match");
+    }
+    for (s, (x, y)) in a.state.iter().zip(&b.state).enumerate() {
+        assert_eq!(x.f32s(), y.f32s(), "state {s}: same config must match");
     }
 }
 
 #[test]
-fn checkpoint_resume_is_bit_exact() {
-    let Some(eng) = engine() else { return };
+fn different_seeds_diverge() {
+    let Some((eng, sz)) = engine() else { return };
+    let mut o = opts(&sz, "scale", 2);
+    o.seed = 1;
+    let mut a = Trainer::new(&eng, opts(&sz, "scale", 2)).unwrap();
+    let mut b = Trainer::new(&eng, o).unwrap();
+    for _ in 0..2 {
+        a.train_step().unwrap();
+        b.train_step().unwrap();
+    }
+    assert_ne!(a.params[0].f32s(), b.params[0].f32s());
+}
+
+#[test]
+fn checkpoint_resume_is_exact() {
+    let Some((eng, sz)) = engine() else { return };
     // run A: 8 straight steps
-    let mut a = Trainer::new(&eng, opts("scale", 8)).unwrap();
+    let mut a = Trainer::new(&eng, opts(&sz, "scale", 8)).unwrap();
     for _ in 0..8 {
         a.train_step().unwrap();
     }
     // run B: 4 steps, checkpoint, restore into fresh trainer, 4 more
-    let mut b1 = Trainer::new(&eng, opts("scale", 8)).unwrap();
+    let mut b1 = Trainer::new(&eng, opts(&sz, "scale", 8)).unwrap();
     for _ in 0..4 {
         b1.train_step().unwrap();
     }
     let path = std::env::temp_dir().join(format!("scale_it_{}.ckpt", std::process::id()));
     b1.checkpoint().unwrap().save(&path).unwrap();
-    let mut b2 = Trainer::new(&eng, opts("scale", 8)).unwrap();
+    let mut b2 = Trainer::new(&eng, opts(&sz, "scale", 8)).unwrap();
     b2.restore(&Checkpoint::load(&path).unwrap()).unwrap();
     assert_eq!(b2.step, 4);
     for _ in 0..4 {
         b2.train_step().unwrap();
     }
     std::fs::remove_file(path).ok();
-    for (x, y) in a.params.iter().zip(&b2.params) {
-        let xd = x.f32s();
-        let yd = y.f32s();
-        for (u, v) in xd.iter().zip(yd) {
-            assert!((u - v).abs() < 1e-6, "resume drift: {u} vs {v}");
-        }
+    for (p, (x, y)) in a.params.iter().zip(&b2.params).enumerate() {
+        assert_close(x.f32s(), y.f32s(), &format!("resume param {p}"));
+    }
+    for (s, (x, y)) in a.state.iter().zip(&b2.state).enumerate() {
+        assert_close(x.f32s(), y.f32s(), &format!("resume state {s}"));
     }
 }
 
 #[test]
 fn restore_rejects_wrong_optimizer() {
-    let Some(eng) = engine() else { return };
-    let a = Trainer::new(&eng, opts("scale", 1)).unwrap();
+    let Some((eng, sz)) = engine() else { return };
+    let a = Trainer::new(&eng, opts(&sz, "scale", 1)).unwrap();
     let ckpt = a.checkpoint().unwrap();
-    let mut b = Trainer::new(&eng, opts("adam", 1)).unwrap();
+    let mut b = Trainer::new(&eng, opts(&sz, "adam", 1)).unwrap();
     assert!(b.restore(&ckpt).is_err());
 }
 
 #[test]
-fn scale_state_footprint_is_sgd_like() {
-    // the paper's memory claim, measured on the real state buffers
-    let Some(eng) = engine() else { return };
-    let scale = Trainer::new(&eng, opts("scale", 1)).unwrap();
-    let adam = Trainer::new(&eng, opts("adam", 1)).unwrap();
-    let params = 4 * eng.manifest.size("s60m").unwrap().param_count;
+fn state_footprint_matches_memory_estimator() {
+    // the paper's memory claim, measured on the real state buffers and
+    // cross-checked against memory::estimator's manifest accounting
+    let Some((eng, sz)) = engine() else { return };
+    let scale = Trainer::new(&eng, opts(&sz, "scale", 1)).unwrap();
+    let adam = Trainer::new(&eng, opts(&sz, "adam", 1)).unwrap();
+    let m = &eng.manifest;
+    assert_eq!(
+        scale.state_bytes(),
+        measured_state_bytes(m, "scale", &sz).unwrap()
+    );
+    assert_eq!(
+        adam.state_bytes(),
+        measured_state_bytes(m, "adam", &sz).unwrap()
+    );
+    let params = measured_param_bytes(m, &sz).unwrap();
     assert_eq!(adam.state_bytes(), 2 * params);
     assert!(scale.state_bytes() < adam.state_bytes() / 4);
 }
 
 #[test]
-fn all_s130m_optimizers_execute_one_step() {
-    // every lowered update artifact must run and produce finite params
-    let Some(eng) = engine() else { return };
-    for opt in eng.manifest.optimizers_for("s130m") {
-        let mut o = opts(&opt, 1);
-        o.size = "s130m".into();
+fn all_manifest_optimizers_execute_one_step() {
+    // every update artifact the manifest declares for the smoke size
+    // must run and produce finite params
+    let Some((eng, sz)) = engine() else { return };
+    let mut opts_list = eng.manifest.optimizers_for(&sz);
+    opts_list.sort();
+    assert!(opts_list.len() >= 10, "optimizer zoo too small: {opts_list:?}");
+    for opt in opts_list {
+        let mut o = opts(&sz, &opt, 1);
         o.base_lr = 1e-3;
         let mut tr = Trainer::new(&eng, o).unwrap();
         tr.train_step().unwrap_or_else(|e| panic!("{opt}: {e}"));
@@ -170,77 +240,99 @@ fn all_s130m_optimizers_execute_one_step() {
 }
 
 #[test]
-fn update_artifact_matches_native_scale_rule() {
-    // cross-layer parity: the L1 Pallas fused update inside
-    // update_scale_s60m == the native Rust mirror, for the lm_head.
-    let Some(eng) = engine() else { return };
-    let tr = Trainer::new(&eng, opts("scale", 1)).unwrap();
-    let info = eng.manifest.size("s60m").unwrap().clone();
+fn gpt2_architecture_trains() {
+    let Some((eng, _)) = engine() else { return };
+    let Some(gsz) = gpt2_size(&eng) else {
+        eprintln!("skipping gpt2 test (no gpt2 size in manifest)");
+        return;
+    };
+    let mut tr = Trainer::new(&eng, opts(&gsz, "scale", 12)).unwrap();
+    let first = tr.train_step().unwrap();
+    for _ in 0..11 {
+        tr.train_step().unwrap();
+    }
+    let last = tr.metrics.ema_loss.unwrap();
+    assert!(last.is_finite());
+    assert!(last < first, "gpt2 loss should decrease: {first:.4} -> {last:.4}");
+}
+
+#[test]
+fn varprobe_artifact_runs() {
+    let Some((eng, sz)) = engine() else { return };
+    let tr = Trainer::new(&eng, opts(&sz, "scale", 1)).unwrap();
+    let info = eng.manifest.size(&sz).unwrap();
+    let w = info.seq_len + 1;
+    let mb = eng.manifest.microbatch;
+    let big = mb * eng.manifest.varprobe_big_factor;
+    let probe = eng.load(&format!("varprobe_{sz}")).unwrap();
+    let small_batch = Tensor::from_i32(&[mb, w], vec![1; mb * w]);
+    let big_batch = Tensor::from_i32(&[big, w], vec![1; big * w]);
+    let mut inputs: Vec<&Tensor> = tr.params.iter().collect();
+    inputs.push(&small_batch);
+    inputs.push(&big_batch);
+    let out = eng.run_exe_refs(&probe, &inputs).unwrap();
+    assert_eq!(out.len(), info.params.len());
+    // identical small/big token content -> small but nonnegative variance
+    for v in &out {
+        assert!(v.item_f32() >= 0.0);
+    }
+}
+
+#[test]
+fn update_executable_matches_rules_kernels() {
+    // the ISSUE property: the executable update path must match calling
+    // the optim::rules workspace kernels directly (bit-for-bit on the
+    // native executor), across several gradient draws
+    let Some((eng, sz)) = engine() else { return };
+    let tr = Trainer::new(&eng, opts(&sz, "scale", 1)).unwrap();
+    let info = eng.manifest.size(&sz).unwrap().clone();
     let head_idx = info.params.len() - 1;
     assert_eq!(info.params[head_idx].name, "lm_head");
+    let upd = eng.load(&format!("update_scale_{sz}")).unwrap();
 
-    // build one update call by hand
-    let mut rng = scale_llm::util::rng::Pcg::new(3);
-    let grads: Vec<Tensor> = info
-        .params
-        .iter()
-        .map(|p| {
-            Tensor::from_f32(
-                &p.shape,
-                (0..p.numel()).map(|_| 0.1 * rng.normal() as f32).collect(),
-            )
-        })
-        .collect();
-    let lr = 0.01f32;
-    let upd = eng.load("update_scale_s60m").unwrap();
-    let lr_t = Tensor::scalar_f32(lr);
-    let step_t = Tensor::scalar_f32(1.0);
-    let mut inputs: Vec<&Tensor> = Vec::new();
-    inputs.extend(tr.params.iter());
-    inputs.extend(tr.state.iter());
-    inputs.extend(grads.iter());
-    inputs.push(&lr_t);
-    inputs.push(&step_t);
-    let out = eng.run_exe_refs(&upd, &inputs).unwrap();
+    for seed in [3u64, 4, 5] {
+        let mut rng = scale_llm::util::rng::Pcg::new(seed);
+        let grads: Vec<Tensor> = info
+            .params
+            .iter()
+            .map(|p| {
+                let data = (0..p.numel()).map(|_| 0.1 * rng.normal() as f32).collect();
+                Tensor::from_f32(&p.shape, data)
+            })
+            .collect();
+        let lr = 0.01f32;
+        let lr_t = Tensor::scalar_f32(lr);
+        let step_t = Tensor::scalar_f32(1.0);
+        let mut inputs: Vec<&Tensor> = Vec::new();
+        inputs.extend(tr.params.iter());
+        inputs.extend(tr.state.iter());
+        inputs.extend(grads.iter());
+        inputs.push(&lr_t);
+        inputs.push(&step_t);
+        let out = eng.run_exe_refs(&upd, &inputs).unwrap();
 
-    // native mirror for the head (momentum path, beta=0.9, m0=0)
-    let (d_in, vocab) = (info.d_model, info.vocab);
-    let mut p = tr.params[head_idx].f32s().to_vec();
-    let mut m = vec![0f32; d_in * vocab];
-    scale_llm::optim::rules::scale_momentum(
-        &mut p,
-        &mut m,
-        grads[head_idx].f32s(),
-        d_in,
-        vocab,
-        lr,
-        0.9,
-    );
-    let got = out[head_idx].f32s();
-    for (i, (a, b)) in got.iter().zip(&p).enumerate() {
-        assert!((a - b).abs() < 1e-4, "head elem {i}: artifact {a} vs native {b}");
-    }
+        // head: momentum path (beta=0.9, m0=0)
+        let (d_in, vocab) = (info.d_model, info.vocab);
+        let mut p = tr.params[head_idx].f32s().to_vec();
+        let mut m = vec![0f32; d_in * vocab];
+        let g = grads[head_idx].f32s();
+        scale_llm::optim::rules::scale_momentum(&mut p, &mut m, g, d_in, vocab, lr, 0.9);
+        assert_close(out[head_idx].f32s(), &p, &format!("head (seed {seed})"));
 
-    // and a hidden matrix (stateless colnorm path)
-    let wq_idx = info.params.iter().position(|p| p.name == "block0.wq").unwrap();
-    let mut pw = tr.params[wq_idx].f32s().to_vec();
-    scale_llm::optim::rules::scale_plain(
-        &mut pw,
-        grads[wq_idx].f32s(),
-        info.d_model,
-        info.d_model,
-        lr,
-    );
-    for (i, (a, b)) in out[wq_idx].f32s().iter().zip(&pw).enumerate() {
-        assert!((a - b).abs() < 1e-4, "wq elem {i}: {a} vs {b}");
+        // a hidden matrix: stateless colnorm path
+        let wq_idx = info.params.iter().position(|p| p.name == "block0.wq").unwrap();
+        let mut pw = tr.params[wq_idx].f32s().to_vec();
+        let d = info.d_model;
+        scale_llm::optim::rules::scale_plain(&mut pw, grads[wq_idx].f32s(), d, d, lr);
+        assert_close(out[wq_idx].f32s(), &pw, &format!("wq (seed {seed})"));
     }
 }
 
 #[test]
 fn schedule_drives_update_magnitude() {
     // warmup means step 1 uses a tiny LR: params barely move
-    let Some(eng) = engine() else { return };
-    let mut o = opts("scale", 100);
+    let Some((eng, sz)) = engine() else { return };
+    let mut o = opts(&sz, "scale", 100);
     o.schedule = Some(Schedule::paper_default(1e-2, 100));
     let mut tr = Trainer::new(&eng, o).unwrap();
     let before = tr.params[0].f32s().to_vec();
@@ -256,36 +348,17 @@ fn schedule_drives_update_magnitude() {
 }
 
 #[test]
-fn gpt2_architecture_trains() {
-    let Some(eng) = engine() else { return };
-    let mut o = opts("scale", 12);
-    o.size = "gpt2s".into();
-    let mut tr = Trainer::new(&eng, o).unwrap();
-    let first = tr.train_step().unwrap();
-    for _ in 0..11 {
+fn steady_state_steps_spawn_no_threads() {
+    let Some((eng, sz)) = engine() else { return };
+    let mut tr = Trainer::new(&eng, opts(&sz, "scale", 12)).unwrap();
+    tr.train_step().unwrap(); // warm: ring fill, buffer creation
+    let spawned = scale_llm::parallel::threads_spawned();
+    for _ in 0..10 {
         tr.train_step().unwrap();
     }
-    assert!(tr.metrics.ema_loss.unwrap() < first);
-}
-
-#[test]
-fn varprobe_artifact_runs() {
-    let Some(eng) = engine() else { return };
-    let tr = Trainer::new(&eng, opts("scale", 1)).unwrap();
-    let info = eng.manifest.size("s60m").unwrap();
-    let w = info.seq_len + 1;
-    let mb = eng.manifest.microbatch;
-    let big = mb * eng.manifest.varprobe_big_factor;
-    let probe = eng.load("varprobe_s60m").unwrap();
-    let small_batch = Tensor::from_i32(&[mb, w], vec![1; mb * w]);
-    let big_batch = Tensor::from_i32(&[big, w], vec![1; big * w]);
-    let mut inputs: Vec<&Tensor> = tr.params.iter().collect();
-    inputs.push(&small_batch);
-    inputs.push(&big_batch);
-    let out = eng.run_exe_refs(&probe, &inputs).unwrap();
-    assert_eq!(out.len(), info.params.len());
-    // identical small/big token content -> small but nonnegative variance
-    for v in &out {
-        assert!(v.item_f32() >= 0.0);
-    }
+    assert_eq!(
+        scale_llm::parallel::threads_spawned(),
+        spawned,
+        "train_step must never spawn threads"
+    );
 }
