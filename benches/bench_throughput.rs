@@ -9,11 +9,16 @@
 //!      reused output buffers and the parallel threshold pinned to the
 //!      sequential path — the measured loop must perform ZERO heap
 //!      allocations (the workspace-arena contract of `exec`).
-//!   2. Trainer throughput: tokens/sec and step-latency p50/p99 for
+//!   2. Attention pair dispatch A/B: per-config `fwd_bwd` latency with
+//!      the per-(batch, head) attention fan-out forced sequential vs
+//!      forced parallel (`exec::set_attn_pair_override`), everything
+//!      else at the calibrated thresholds. Both paths are bit-identical;
+//!      these rows record what the fan-out buys per config.
+//!   3. Trainer throughput: tokens/sec and step-latency p50/p99 for
 //!      1 vs N shards on the tiny and s60m configs — the measured loops
 //!      must spawn ZERO threads (the persistent-pool contract).
 //!
-//! Both gates are deterministic and enforced via the exit code (CI runs
+//! The gates are deterministic and enforced via the exit code (CI runs
 //! this bench); the timing numbers are recorded in
 //! `BENCH_throughput.json` for trajectory review, not gated — CI boxes
 //! are too noisy for latency assertions.
@@ -104,6 +109,49 @@ fn exec_steady_state_pinned(engine: &Engine) -> anyhow::Result<(u64, f64, f64)> 
     Ok((fwd_allocs + upd_allocs, fwd_ms, upd_ms))
 }
 
+/// Section 2: attention-parallel vs sequential A/B on one config's
+/// `fwd_bwd` executable. Restores the override even when a run errors.
+fn attn_ab_row(engine: &Engine, size: &str) -> anyhow::Result<Json> {
+    let result = attn_ab_row_forced(engine, size);
+    exec::set_attn_pair_override(None); // restore even on error
+    result
+}
+
+fn attn_ab_row_forced(engine: &Engine, size: &str) -> anyhow::Result<Json> {
+    let info = engine.manifest.size(size)?.clone();
+    let params = exec::native_init(&info, 0);
+    let (mb, w) = (engine.manifest.microbatch, info.seq_len + 1);
+    let toks: Vec<i32> = (0..mb * w).map(|i| (i % info.vocab) as i32).collect();
+    let batch = Tensor::from_i32(&[mb, w], toks);
+    let fwd = engine.load(&format!("fwd_bwd_{size}"))?;
+    let mut inputs: Vec<&Tensor> = params.iter().collect();
+    inputs.push(&batch);
+    let mut out: Vec<Tensor> = Vec::new();
+    engine.run_exe_refs_into(&fwd, &inputs, &mut out)?; // warm arena + outputs
+    let iters = 12u32;
+    let mut ms = [0.0f64; 2];
+    for (slot, force) in [(0usize, Some(false)), (1, Some(true))] {
+        exec::set_attn_pair_override(force);
+        engine.run_exe_refs_into(&fwd, &inputs, &mut out)?; // warm this path
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            engine.run_exe_refs_into(&fwd, &inputs, &mut out)?;
+        }
+        ms[slot] = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+    }
+    let speedup = ms[0] / ms[1].max(1e-9);
+    println!(
+        "{size}: fwd_bwd attn-sequential {:.3} ms, attn-parallel {:.3} ms ({speedup:.2}x)",
+        ms[0], ms[1]
+    );
+    Ok(Json::obj(vec![
+        ("size", Json::str(size)),
+        ("fwd_bwd_attn_seq_ms", Json::num(ms[0])),
+        ("fwd_bwd_attn_par_ms", Json::num(ms[1])),
+        ("attn_parallel_speedup", Json::num(speedup)),
+    ]))
+}
+
 struct TrainRow {
     size: String,
     shards: usize,
@@ -115,7 +163,7 @@ struct TrainRow {
     spawns: usize,
 }
 
-/// Section 2: full `Trainer::train_step` loop — throughput, latency
+/// Section 3: full `Trainer::train_step` loop — throughput, latency
 /// percentiles, per-step allocations (reported), thread spawns (gated).
 fn train_row(engine: &Engine, size: &str, shards: usize, steps: usize) -> anyhow::Result<TrainRow> {
     let opts = TrainOptions {
@@ -191,6 +239,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n== executor steady state (zero-alloc gate) ==");
     let (exec_allocs, fwd_ms, upd_ms) = exec_steady_state(&engine)?;
 
+    println!("\n== attention pair dispatch A/B (calibrated thresholds) ==");
+    let attn_rows = vec![attn_ab_row(&engine, "tiny")?, attn_ab_row(&engine, "s60m")?];
+
     println!("\n== trainer throughput (zero-spawn gate) ==");
     let rows = vec![
         train_row(&engine, "tiny", 1, 60)?,
@@ -222,6 +273,7 @@ fn main() -> anyhow::Result<()> {
         ("exec_update_ms", Json::num(upd_ms)),
         ("exec_steady_allocs", Json::num(exec_allocs as f64)),
         ("train_spawns", Json::num(total_spawns as f64)),
+        ("attention_ab", Json::Arr(attn_rows)),
         ("rows", Json::Arr(row_json)),
     ]);
     std::fs::write("BENCH_throughput.json", doc.to_string())?;

@@ -1,6 +1,34 @@
-//! L3 coordinator: the training runtime that composes AOT artifacts into
-//! the paper's pretraining pipeline — schedules, DDP reduction, metrics,
-//! checkpoints, sweeps.
+//! L3 coordinator: the training runtime that composes executable
+//! artifacts into the paper's pretraining pipeline — schedules, DDP
+//! reduction, metrics, checkpoints, sweeps.
+//!
+//! # Step anatomy
+//!
+//! [`Trainer::train_step`] drives one data-parallel step entirely
+//! through borrowed buffers: per-shard batches come out of pre-tokenized
+//! `TokenRing`s (`trainer`), shard `fwd_bwd` executions fan out on the
+//! shared [`crate::parallel::WorkerPool`] bound at construction, shard
+//! gradients are tree-reduced in place ([`ddp::tree_all_reduce_into`],
+//! bit-identical to the sequential reference), and the optimizer update
+//! executable writes into persistent output tensors
+//! (`Engine::run_exe_refs_into`), whose buffers are adopted back by
+//! swap. Learning rates come from [`Schedule`] (the paper's warmup +
+//! cosine/linear variants).
+//!
+//! # Steady-state contract
+//!
+//! After the warm-up step, the loop neither allocates on the executor
+//! hot path nor spawns threads: arenas, rings, metrics history, and
+//! output tensors are all sized up front and reused. Both halves are
+//! enforced as deterministic gates in `benches/bench_throughput.rs`
+//! (allocation counter + spawn counter), which CI runs.
+//!
+//! # Durability and experiments
+//!
+//! [`Checkpoint`] serializes params/state/ring positions so resume is
+//! bit-exact (integration-tested); `metrics` records loss/throughput
+//! series for the harness tables; `sweep` composes many short trainings
+//! (LR sweeps, optimizer face-offs) over one shared engine and pool.
 
 pub mod checkpoint;
 pub mod ddp;

@@ -13,6 +13,12 @@
 //!   `dW = Xᵀ · dY`), computed as row-blocked rank-1 accumulation so B
 //!   rows stream once per small block of C rows.
 //!
+//! The scalar inner loops live one module down in [`super::kernels`]
+//! ([`dot`] = `dot8`, `axpy` = `axpy8`); building every orientation on
+//! those two microkernels is what lets the optional `simd` feature
+//! vectorize the whole executor in one place without touching any
+//! tiling code here.
+//!
 //! # Determinism contract (see the `exec` module docs)
 //!
 //! Every output element is produced by exactly one task, and its
@@ -40,32 +46,19 @@ const NB: usize = 64;
 /// loaded once per IB output rows instead of once per row.
 const IB: usize = 8;
 
-/// Contiguous dot product with a fixed 8-lane accumulation order.
-/// The association depends only on the slice length, never on the
-/// caller's tiling, which is what makes the GEMMs bit-stable.
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0.0f32; 8];
-    let chunks = a.len() / 8;
-    for i in 0..chunks {
-        let ia = &a[i * 8..i * 8 + 8];
-        let ib = &b[i * 8..i * 8 + 8];
-        for l in 0..8 {
-            acc[l] += ia[l] * ib[l];
-        }
-    }
-    let mut tail = 0.0f32;
-    for i in chunks * 8..a.len() {
-        tail += a[i] * b[i];
-    }
-    (((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))) + tail
-}
+/// Contiguous dot product with a fixed 8-lane accumulation order — the
+/// [`super::kernels::dot8`] microkernel under the name the GEMM inner
+/// loops (and their docs) use. The association depends only on the slice
+/// length, never on the caller's tiling, which is what makes the GEMMs
+/// bit-stable; with `--features simd` it dispatches to the bit-identical
+/// AVX2 body (see the `kernels` module docs).
+pub use crate::exec::kernels::dot8 as dot;
 
-/// In-place `y += s * x` over contiguous slices — the optimizer layer's
-/// [`crate::optim::rules::axpy_`], re-exported so the executor and the
-/// update rules share one kernel (one place to vectorize later).
-pub(crate) use crate::optim::rules::axpy_ as axpy;
+/// In-place `y += s * x` over contiguous slices — the
+/// [`super::kernels::axpy8`] microkernel, shared with the attention
+/// inner loops and (via its scalar body) the optimizer update rules:
+/// one place to vectorize.
+pub(crate) use crate::exec::kernels::axpy8 as axpy;
 
 /// Pack `B[k,n]` transposed into `pack` (n rows of k contiguous floats),
 /// in 32x32 blocks so both source and destination stay cache-friendly.
@@ -249,6 +242,21 @@ pub fn matmul_tn(
     pool.run(tasks);
 }
 
+/// Sequential-by-construction [`matmul_tn`]: the same inner kernel with
+/// no pool interaction at all, for callers that are themselves pool
+/// tasks (the per-(batch, head) attention backward in `exec::model`) and
+/// should stay off the queue. Bit-identical to [`matmul_tn`] for every
+/// pool size and threshold — that is the gemm determinism contract.
+pub(crate) fn matmul_tn_seq(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), k * m);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    tn_rows(a, b, c, 0, k, m, n);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -334,6 +342,25 @@ mod tests {
         let mut c = vec![10.0f32; 4];
         matmul_nt(&pool, 0, &a, &bt, &mut c, 2, 2, 2, true);
         assert_eq!(c, vec![11.0, 12.0, 13.0, 14.0]);
+    }
+
+    #[test]
+    fn tn_seq_matches_tn_bitwise() {
+        // the attention backward runs matmul_tn_seq inside pool tasks;
+        // it must be the exact bits of the dispatching form
+        let pool = WorkerPool::new(3);
+        prop::check("gemm-tn-seq", 16, |rng| {
+            let m = prop::usize_in(rng, 1, 30);
+            let k = prop::usize_in(rng, 1, 24);
+            let n = prop::usize_in(rng, 1, 30);
+            let a = prop::matrix(rng, k, m, 1.0);
+            let b = prop::matrix(rng, k, n, 1.0);
+            let mut want = vec![0.0f32; m * n];
+            matmul_tn(&pool, 0, &a, &b, &mut want, m, k, n);
+            let mut c = vec![9.0f32; m * n];
+            matmul_tn_seq(&a, &b, &mut c, m, k, n);
+            ensure(c == want, format!("tn_seq {m}x{k}x{n}"))
+        });
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! the Appendix-B paper dims) and `model.param_specs` (canonical
 //! parameter order), and adds two smoke-test sizes (`tiny`, `tinyg`)
 //! small enough for debug-mode CI. Update artifacts are emitted for
-//! every optimizer in [`super::update::NATIVE_OPTIMIZERS`], with state
+//! every optimizer in [`crate::exec::NATIVE_OPTIMIZERS`], with state
 //! layouts from the same plan the executor runs — a single source of
 //! truth, so checkpoints and `state_spec` lookups agree by construction.
 

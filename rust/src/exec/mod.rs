@@ -11,27 +11,36 @@
 //! All heavy math routes through [`gemm`]'s three orientations (`nn`
 //! activations×weights with a packed-transposed B panel, `nt` backward
 //! data with contiguous-row dots, `tn` backward weights as row-blocked
-//! rank-1 accumulation). Two invariants hold everywhere:
+//! rank-1 accumulation), whose inner loops bottom out in the [`kernels`]
+//! microkernels (`dot8`/`axpy8` — scalar 8-lane by default, bit-identical
+//! AVX2 under the off-by-default `simd` cargo feature). Two invariants
+//! hold everywhere:
 //!
-//! * **Disjoint output blocks.** Parallelism only ever partitions the
-//!   output matrix into contiguous row blocks, one pool task per block,
-//!   obtained via `chunks_mut` — no locks, no aliasing on the data path.
+//! * **Disjoint output blocks.** Parallelism only ever partitions
+//!   outputs into contiguous blocks, one pool task per block, obtained
+//!   via `chunks_mut` — no locks, no aliasing on the data path. This
+//!   covers both the GEMM row blocks and the transformer's
+//!   per-(batch, head) attention pairs, whose softmax/context/gradient
+//!   rows are disjoint slices of the head-layout buffers (`model`).
 //! * **Fixed accumulation order.** Each output element's reduction over
 //!   `k` is a function of `k` alone (8-lane dot association, sequential
-//!   rank-1 order), independent of the tiling. Results are therefore
-//!   bit-identical for every worker-pool size and every `min_ops`
-//!   threshold — the property tests in `gemm`, `ns`, and `model` sweep
-//!   pools and thresholds to pin this down.
+//!   rank-1 order), independent of the tiling, the pool size, and the
+//!   build flavor. Results are therefore bit-identical for every
+//!   worker-pool size, every `min_ops` threshold, and with or without
+//!   `simd` — the property tests in `gemm`, `kernels`, `ns`, and
+//!   `model` sweep all of these to pin it down.
 //!
 //! The sequential-fallback threshold (`min_ops`, multiply-add count) is
 //! calibrated at runtime from measured pool dispatch latency
 //! ([`crate::parallel::calibrate`]) rather than hard-coded; it selects a
-//! code path, never a result.
+//! code path, never a result. The attention fan-out obeys the same gate
+//! (pair count × `s²·dh` score ops against the threshold), with a
+//! bench-only override ([`set_attn_pair_override`]) for A/B rows.
 //!
 //! # Arena ownership
 //!
 //! Every program owns its scratch: model programs keep a pool of
-//! [`model::ModelWs`] arenas (one per concurrent executor — DDP shards
+//! `model::ModelWs` arenas (one per concurrent executor — DDP shards
 //! share one `Arc<Executable>`), update programs a single mutexed
 //! workspace. Arenas are fully sized at construction from the model
 //! dims, so a steady-state `fwd_bwd`/`update` execution touches the heap
@@ -41,6 +50,7 @@
 //! discipline from the optimizer kernels to the whole step.
 
 pub mod gemm;
+pub mod kernels;
 pub mod manifest;
 pub(crate) mod model;
 pub(crate) mod ns;
@@ -48,5 +58,6 @@ mod program;
 pub(crate) mod update;
 
 pub use manifest::native_manifest;
+pub use model::set_attn_pair_override;
 pub use program::{native_init, NativeProgram};
 pub use update::NATIVE_OPTIMIZERS;

@@ -15,17 +15,72 @@
 //!
 //! Determinism: every reduction (row norms, loss accumulation, attention
 //! dots) is sequenced identically regardless of pool size — parallelism
-//! enters only through the GEMM row-block partitioning, which the gemm
-//! module pins as bit-stable. `fwd_bwd` is therefore bit-identical for
-//! every worker-pool size and threshold (property-tested below).
+//! enters only through two partitionings that never reassociate a float:
+//! the GEMM row blocks (pinned bit-stable by the gemm module) and the
+//! per-(batch, head) attention pairs. Each pair's softmax rows, context
+//! rows, and gradient rows are contiguous disjoint slices of the
+//! head-layout buffers (`probs`, `att`, `dq/dk/dv`, `dprobs`), so pairs
+//! fan out to the shared worker pool via `chunks_mut` with no aliasing,
+//! each pair running the sequential code verbatim; the fan-out is gated
+//! by the calibrated `min_ops` threshold and its small per-pair matmuls
+//! stay off the pool queue (`matmul_tn_seq`). `fwd_bwd` is therefore
+//! bit-identical for every worker-pool size and threshold
+//! (property-tested below, including ragged pair counts).
 
-use crate::exec::gemm::{axpy, dot, matmul_nn, matmul_nt, matmul_tn};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::exec::gemm::{axpy, dot, matmul_nn, matmul_nt, matmul_tn, matmul_tn_seq};
+use crate::optim::colnorm::tile_width;
 use crate::parallel::WorkerPool;
 use crate::runtime::artifact::SizeInfo;
 use crate::runtime::Tensor;
 
 const NORM_EPS: f32 = 1e-6;
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+
+/// Process-wide override for the attention pair dispatch: 0 = gate on
+/// `min_ops` (default), 1 = force the parallel path, 2 = force the
+/// sequential path. Both paths are bit-identical (property-tested), so
+/// this selects a code path, never a result — it exists so the
+/// throughput bench can emit attention-parallel vs sequential A/B rows
+/// with everything else held at the calibrated thresholds.
+static ATTN_PAIR_FORCE: AtomicU8 = AtomicU8::new(0);
+
+/// Force the per-(batch, head) attention fan-out on (`Some(true)`), off
+/// (`Some(false)`), or restore the `tuned_min_ops` gate (`None`). See
+/// `ATTN_PAIR_FORCE` above; bench/test hook, never needed for
+/// correctness — both paths are bit-identical.
+pub fn set_attn_pair_override(force: Option<bool>) {
+    let v = match force {
+        None => 0,
+        Some(true) => 1,
+        Some(false) => 2,
+    };
+    ATTN_PAIR_FORCE.store(v, Ordering::SeqCst);
+}
+
+/// Decide whether one layer's (batch, head) attention pairs fan out to
+/// the pool. `pairs * s * s * dh` approximates the pair loops'
+/// multiply-add count (scores + context; causal masking halves it),
+/// comparable with the GEMM `m*n*k` convention the calibrated `min_ops`
+/// threshold is expressed in. A single-lane pool or a single pair always
+/// runs inline — dispatch could only add latency there.
+fn attn_pairs_parallel(
+    pool: &WorkerPool,
+    min_ops: usize,
+    pairs: usize,
+    s: usize,
+    dh: usize,
+) -> bool {
+    if pool.parallelism() == 1 || pairs == 1 {
+        return false;
+    }
+    match ATTN_PAIR_FORCE.load(Ordering::SeqCst) {
+        1 => true,
+        2 => false,
+        _ => pairs * s * s * dh >= min_ops.max(1),
+    }
+}
 
 /// Model dimensions + parameter-order bookkeeping, derived from the
 /// manifest's [`SizeInfo`]. Parameter order matches `model.param_specs`:
@@ -163,6 +218,7 @@ pub(crate) struct ModelWs {
     layers: Vec<LayerWs>,
     hf: Vec<f32>,       // final rmsnorm output                [b*s*d]
     logits: Vec<f32>,   // logits, overwritten by dlogits      [b*s*v]
+    att: Vec<f32>,      // attention context, head layout (fwd) [b*nh*s*dh]
     dh_a: Vec<f32>,     // running residual-stream gradient    [b*s*d]
     dh_b: Vec<f32>,     // branch gradient scratch             [b*s*d]
     tmp_d: Vec<f32>,    // flat [b*s, d] GEMM scratch          [b*s*d]
@@ -200,6 +256,7 @@ impl ModelWs {
             layers: (0..spec.n_layers).map(|_| LayerWs::new(bsd, bhss, bsf)).collect(),
             hf: vec![0.0; bsd],
             logits: vec![0.0; max_b * s * v],
+            att: vec![0.0; bsd],
             dh_a: vec![0.0; bsd],
             dh_b: vec![0.0; bsd],
             tmp_d: vec![0.0; bsd],
@@ -329,6 +386,235 @@ fn rope_bwd(x: &mut [f32], cos: &[f32], sin: &[f32], groups: usize, s: usize, dh
     }
 }
 
+// ---- attention pair kernels ------------------------------------------------
+//
+// One (batch, head) pair is the unit of attention parallelism: its
+// probability rows, context rows, and gradient rows are contiguous
+// disjoint slices of the head-layout buffers, so pairs fan out to the
+// worker pool with no locks and no aliasing, and each pair's float
+// sequence is the sequential code verbatim — the parallel and inline
+// paths are bit-identical for every pool size (property-tested below).
+
+/// Forward for one (batch, head) pair: causal `softmax(q·kᵀ/√dh)` into
+/// `p_bh` (`[s, s]`, upper triangle zeroed) and the context `probs · v`
+/// into `a_bh` (`[s, dh]`, head layout).
+fn attn_pair_fwd(
+    q_bh: &[f32],
+    k_bh: &[f32],
+    v_bh: &[f32],
+    p_bh: &mut [f32],
+    a_bh: &mut [f32],
+    s: usize,
+    dh: usize,
+    inv: f32,
+) {
+    for i in 0..s {
+        let qi = &q_bh[i * dh..(i + 1) * dh];
+        let row = &mut p_bh[i * s..(i + 1) * s];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let sc = dot(qi, &k_bh[j * dh..(j + 1) * dh]) * inv;
+            row[j] = sc;
+            if sc > mx {
+                mx = sc;
+            }
+        }
+        let mut sum = 0.0f32;
+        for rj in row.iter_mut().take(i + 1) {
+            let e = (*rj - mx).exp();
+            *rj = e;
+            sum += e;
+        }
+        let isum = 1.0 / sum;
+        for rj in row.iter_mut().take(i + 1) {
+            *rj *= isum;
+        }
+        for rj in row.iter_mut().take(s).skip(i + 1) {
+            *rj = 0.0;
+        }
+    }
+    for i in 0..s {
+        let orow = &mut a_bh[i * dh..(i + 1) * dh];
+        orow.fill(0.0);
+        for j in 0..=i {
+            axpy(orow, p_bh[i * s + j], &v_bh[j * dh..(j + 1) * dh]);
+        }
+    }
+}
+
+/// Backward for one (batch, head) pair: rewrites `dp` from d(probs) to
+/// d(scores) (softmax backward, rescaled and causally masked in one
+/// sweep) and writes `dq/dk/dv` for the pair. The small per-pair matmuls
+/// go through [`matmul_tn_seq`] — this function runs *inside* pool
+/// tasks, so it must never touch the queue itself.
+#[allow(clippy::too_many_arguments)]
+fn attn_pair_bwd(
+    q_bh: &[f32],
+    k_bh: &[f32],
+    v_bh: &[f32],
+    p_bh: &[f32],
+    da_bh: &[f32],
+    dp: &mut [f32],
+    dq_bh: &mut [f32],
+    dk_bh: &mut [f32],
+    dv_bh: &mut [f32],
+    s: usize,
+    dh: usize,
+    inv: f32,
+) {
+    for i in 0..s {
+        let da_row = &da_bh[i * dh..(i + 1) * dh];
+        let p_row = &p_bh[i * s..(i + 1) * s];
+        let dp_row = &mut dp[i * s..(i + 1) * s];
+        for j in 0..=i {
+            dp_row[j] = dot(da_row, &v_bh[j * dh..(j + 1) * dh]);
+        }
+        let mut tsum = 0.0f32;
+        for j in 0..=i {
+            tsum += p_row[j] * dp_row[j];
+        }
+        for j in 0..=i {
+            dp_row[j] = p_row[j] * (dp_row[j] - tsum) * inv;
+        }
+        for dj in dp_row.iter_mut().take(s).skip(i + 1) {
+            *dj = 0.0;
+        }
+    }
+    matmul_tn_seq(p_bh, da_bh, dv_bh, s, s, dh);
+    for i in 0..s {
+        let row = &mut dq_bh[i * dh..(i + 1) * dh];
+        row.fill(0.0);
+        for j in 0..=i {
+            axpy(row, dp[i * s + j], &k_bh[j * dh..(j + 1) * dh]);
+        }
+    }
+    matmul_tn_seq(dp, q_bh, dk_bh, s, s, dh);
+}
+
+/// Every (batch, head) forward for one layer: `probs` and `att` are the
+/// pair-major buffers (`pairs * s*s` / `pairs * s*dh`), carved into
+/// per-pair slices. Above the `min_ops` gate, pairs are grouped into
+/// `tile_width` blocks and dispatched as disjoint pool tasks.
+#[allow(clippy::too_many_arguments)]
+fn attn_pairs_fwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &mut [f32],
+    att: &mut [f32],
+    pairs: usize,
+    s: usize,
+    dh: usize,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let (ss, sd) = (s * s, s * dh);
+    let inv = 1.0 / (dh as f32).sqrt();
+    if !attn_pairs_parallel(pool, min_ops, pairs, s, dh) {
+        for (bh, (p_bh, a_bh)) in probs.chunks_mut(ss).zip(att.chunks_mut(sd)).enumerate() {
+            let o = bh * sd;
+            let (q_bh, k_bh, v_bh) = (&q[o..o + sd], &k[o..o + sd], &v[o..o + sd]);
+            attn_pair_fwd(q_bh, k_bh, v_bh, p_bh, a_bh, s, dh, inv);
+        }
+        return;
+    }
+    let pb = tile_width(pairs, pool.parallelism());
+    let mut tasks = Vec::new();
+    let blocks = probs.chunks_mut(pb * ss).zip(att.chunks_mut(pb * sd));
+    for (ti, (p_blk, a_blk)) in blocks.enumerate() {
+        tasks.push(move || {
+            let pair_slices = p_blk.chunks_mut(ss).zip(a_blk.chunks_mut(sd));
+            for (i, (p_bh, a_bh)) in pair_slices.enumerate() {
+                let o = (ti * pb + i) * sd;
+                let (q_bh, k_bh, v_bh) = (&q[o..o + sd], &k[o..o + sd], &v[o..o + sd]);
+                attn_pair_fwd(q_bh, k_bh, v_bh, p_bh, a_bh, s, dh, inv);
+            }
+        });
+    }
+    pool.run(tasks);
+}
+
+/// Sequential run of one contiguous block of backward pairs (`base` is
+/// the first pair's index): the shared body of both dispatch paths in
+/// [`attn_pairs_bwd`].
+#[allow(clippy::too_many_arguments)]
+fn attn_pair_bwd_block(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    datt: &[f32],
+    dp_blk: &mut [f32],
+    dq_blk: &mut [f32],
+    dk_blk: &mut [f32],
+    dv_blk: &mut [f32],
+    base: usize,
+    s: usize,
+    dh: usize,
+) {
+    let (ss, sd) = (s * s, s * dh);
+    let inv = 1.0 / (dh as f32).sqrt();
+    let n = dp_blk.len() / ss;
+    for i in 0..n {
+        let bh = base + i;
+        let (po, so) = (bh * ss, bh * sd);
+        attn_pair_bwd(
+            &q[so..so + sd],
+            &k[so..so + sd],
+            &v[so..so + sd],
+            &probs[po..po + ss],
+            &datt[so..so + sd],
+            &mut dp_blk[i * ss..(i + 1) * ss],
+            &mut dq_blk[i * sd..(i + 1) * sd],
+            &mut dk_blk[i * sd..(i + 1) * sd],
+            &mut dv_blk[i * sd..(i + 1) * sd],
+            s,
+            dh,
+            inv,
+        );
+    }
+}
+
+/// Every (batch, head) backward for one layer: reads the stashed
+/// `probs`/`q`/`k`/`v` and the incoming `datt`, writes the pair-major
+/// `dprobs`/`dq`/`dk`/`dv`. Same dispatch shape as [`attn_pairs_fwd`]:
+/// pair blocks are disjoint `chunks_mut` slices, one pool task each.
+#[allow(clippy::too_many_arguments)]
+fn attn_pairs_bwd(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    probs: &[f32],
+    datt: &[f32],
+    dprobs: &mut [f32],
+    dq: &mut [f32],
+    dk: &mut [f32],
+    dv: &mut [f32],
+    pairs: usize,
+    s: usize,
+    dh: usize,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let (ss, sd) = (s * s, s * dh);
+    if !attn_pairs_parallel(pool, min_ops, pairs, s, dh) {
+        attn_pair_bwd_block(q, k, v, probs, datt, dprobs, dq, dk, dv, 0, s, dh);
+        return;
+    }
+    let pb = tile_width(pairs, pool.parallelism());
+    let mut tasks = Vec::new();
+    let dkv = dk.chunks_mut(pb * sd).zip(dv.chunks_mut(pb * sd));
+    let grads = dq.chunks_mut(pb * sd).zip(dkv);
+    let blocks = dprobs.chunks_mut(pb * ss).zip(grads);
+    for (ti, (dp_blk, (dq_blk, (dk_blk, dv_blk)))) in blocks.enumerate() {
+        tasks.push(move || {
+            let base = ti * pb;
+            attn_pair_bwd_block(q, k, v, probs, datt, dp_blk, dq_blk, dk_blk, dv_blk, base, s, dh);
+        });
+    }
+    pool.run(tasks);
+}
+
 /// Mean next-token cross-entropy over the logits (nats).
 fn xent_loss(logits: &[f32], toks: &[i32], b: usize, s: usize, v: usize) -> f32 {
     let mut total = 0.0f64;
@@ -402,7 +688,8 @@ fn forward(
     let bsd = bs * d;
     assert_eq!(toks.len(), b * (s + 1));
 
-    let ModelWs { hs, layers, hf, logits, tmp_d, rope_cos: cos, rope_sin: sin, pack, .. } = ws;
+    let ModelWs { hs, layers, hf, logits, tmp_d, att, rope_cos, rope_sin, pack, .. } = ws;
+    let (cos, sin) = (rope_cos.as_slice(), rope_sin.as_slice());
 
     // token embedding (+ learned positions for gpt2)
     {
@@ -431,9 +718,9 @@ fn forward(
     for l in 0..spec.n_layers {
         let (lo, hi) = hs.split_at_mut(l + 1);
         let x = &lo[l][..bsd];
-        let h_next = &mut hi[0][..bsd];
+        let hn = &mut hi[0][..bsd];
         let lw = &mut layers[l];
-        layer_forward(spec, params, l, x, h_next, lw, tmp_d, pack, cos, sin, b, pool, min_ops);
+        layer_forward(spec, params, l, x, hn, lw, tmp_d, att, pack, cos, sin, b, pool, min_ops);
     }
 
     let x = &hs[spec.n_layers][..bsd];
@@ -451,6 +738,7 @@ fn layer_forward(
     h_next: &mut [f32],
     lw: &mut LayerWs,
     tmp_d: &mut [f32],
+    att: &mut [f32],
     pack: &mut Vec<f32>,
     rope_cos: &[f32],
     rope_sin: &[f32],
@@ -480,47 +768,12 @@ fn layer_forward(
         rope_fwd(&mut q[..bsd], rope_cos, rope_sin, b * nh, s, dh);
         rope_fwd(&mut k[..bsd], rope_cos, rope_sin, b * nh, s, dh);
     }
-    let inv = 1.0 / (dh as f32).sqrt();
-    for bh in 0..b * nh {
-        let (bi, h) = (bh / nh, bh % nh);
-        let q_bh = &q[bh * s * dh..(bh + 1) * s * dh];
-        let k_bh = &k[bh * s * dh..(bh + 1) * s * dh];
-        let v_bh = &v[bh * s * dh..(bh + 1) * s * dh];
-        let p_bh = &mut probs[bh * s * s..(bh + 1) * s * s];
-        for i in 0..s {
-            let qi = &q_bh[i * dh..(i + 1) * dh];
-            let row = &mut p_bh[i * s..(i + 1) * s];
-            let mut mx = f32::NEG_INFINITY;
-            for j in 0..=i {
-                let sc = dot(qi, &k_bh[j * dh..(j + 1) * dh]) * inv;
-                row[j] = sc;
-                if sc > mx {
-                    mx = sc;
-                }
-            }
-            let mut sum = 0.0f32;
-            for rj in row.iter_mut().take(i + 1) {
-                let e = (*rj - mx).exp();
-                *rj = e;
-                sum += e;
-            }
-            let isum = 1.0 / sum;
-            for rj in row.iter_mut().take(i + 1) {
-                *rj *= isum;
-            }
-            for rj in row.iter_mut().take(s).skip(i + 1) {
-                *rj = 0.0;
-            }
-        }
-        for i in 0..s {
-            let off = (bi * s + i) * d + h * dh;
-            let orow = &mut merged[off..off + dh];
-            orow.fill(0.0);
-            for j in 0..=i {
-                axpy(orow, p_bh[i * s + j], &v_bh[j * dh..(j + 1) * dh]);
-            }
-        }
-    }
+    let att = &mut att[..bsd];
+    let bhss = b * nh * s * s;
+    attn_pairs_fwd(
+        &q[..bsd], &k[..bsd], &v[..bsd], &mut probs[..bhss], att, b * nh, s, dh, pool, min_ops,
+    );
+    merge_heads(att, &mut merged[..bsd], b, s, nh, dh);
     let wo = params[spec.p_wo(l)].f32s();
     matmul_nn(pool, min_ops, &merged[..bsd], wo, tmp, bs, d, d, pack);
     for i in 0..bsd {
@@ -756,45 +1009,23 @@ fn layer_backward(
     let gw = grads[spec.p_wo(l)].f32s_mut();
     matmul_tn(pool, min_ops, &merged[..bsd], &dh_a[..bsd], gw, d, bs, d);
     split_heads(&tmp_d[..bsd], &mut datt[..bsd], b, s, nh, dh);
-    let inv = 1.0 / (dh as f32).sqrt();
-    for bh in 0..b * nh {
-        let q_bh = &q[bh * s * dh..(bh + 1) * s * dh];
-        let k_bh = &k[bh * s * dh..(bh + 1) * s * dh];
-        let v_bh = &v[bh * s * dh..(bh + 1) * s * dh];
-        let p_bh = &probs[bh * s * s..(bh + 1) * s * s];
-        let da_bh = &datt[bh * s * dh..(bh + 1) * s * dh];
-        let dp = &mut dprobs[bh * s * s..(bh + 1) * s * s];
-        for i in 0..s {
-            let da_row = &da_bh[i * dh..(i + 1) * dh];
-            let p_row = &p_bh[i * s..(i + 1) * s];
-            let dp_row = &mut dp[i * s..(i + 1) * s];
-            for j in 0..=i {
-                dp_row[j] = dot(da_row, &v_bh[j * dh..(j + 1) * dh]);
-            }
-            let mut tsum = 0.0f32;
-            for j in 0..=i {
-                tsum += p_row[j] * dp_row[j];
-            }
-            for j in 0..=i {
-                dp_row[j] = p_row[j] * (dp_row[j] - tsum) * inv;
-            }
-            for dj in dp_row.iter_mut().take(s).skip(i + 1) {
-                *dj = 0.0;
-            }
-        }
-        matmul_tn(pool, min_ops, p_bh, da_bh, &mut dv[bh * s * dh..(bh + 1) * s * dh], s, s, dh);
-        {
-            let dq_bh = &mut dq[bh * s * dh..(bh + 1) * s * dh];
-            for i in 0..s {
-                let row = &mut dq_bh[i * dh..(i + 1) * dh];
-                row.fill(0.0);
-                for j in 0..=i {
-                    axpy(row, dp[i * s + j], &k_bh[j * dh..(j + 1) * dh]);
-                }
-            }
-        }
-        matmul_tn(pool, min_ops, dp, q_bh, &mut dk[bh * s * dh..(bh + 1) * s * dh], s, s, dh);
-    }
+    let bhss = b * nh * s * s;
+    attn_pairs_bwd(
+        &q[..bsd],
+        &k[..bsd],
+        &v[..bsd],
+        &probs[..bhss],
+        &datt[..bsd],
+        &mut dprobs[..bhss],
+        &mut dq[..bsd],
+        &mut dk[..bsd],
+        &mut dv[..bsd],
+        b * nh,
+        s,
+        dh,
+        pool,
+        min_ops,
+    );
     if !spec.gpt2 {
         rope_bwd(&mut dq[..bsd], rope_cos, rope_sin, b * nh, s, dh);
         rope_bwd(&mut dk[..bsd], rope_cos, rope_sin, b * nh, s, dh);
@@ -1003,6 +1234,72 @@ mod tests {
                         "param {p} differs: {workers} workers, min {min_ops}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_pair_tiling_bit_identical_with_ragged_pairs() {
+        // 3 heads x batch 3 = 9 pairs: indivisible by the tested pool
+        // lane counts, so the pair blocks are ragged (the last block is
+        // short). Every pool size and threshold must produce the exact
+        // bits of the sequential reference.
+        let spec = ModelSpec {
+            vocab: 13,
+            d: 12,
+            n_layers: 2,
+            n_heads: 3,
+            head_dim: 4,
+            d_ff: 10,
+            seq: 6,
+            gpt2: false,
+        };
+        let b = 3;
+        let params = random_params(&spec, 31);
+        let toks = random_toks(&spec, b, 32);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let seq_pool = WorkerPool::new(0);
+        let mut want_grads = zeros_like(&params);
+        let mut ws = ModelWs::new(&spec, b);
+        let mp = usize::MAX;
+        let want_loss = fwd_bwd(&spec, &refs, &toks, b, &mut want_grads, &mut ws, &seq_pool, mp);
+        for workers in [0usize, 2, 3, 7] {
+            let pool = WorkerPool::new(workers);
+            for min_ops in [0usize, 1 << 10, usize::MAX] {
+                let mut grads = zeros_like(&params);
+                let mut ws = ModelWs::new(&spec, b);
+                let loss = fwd_bwd(&spec, &refs, &toks, b, &mut grads, &mut ws, &pool, min_ops);
+                assert_eq!(loss, want_loss, "{workers} workers, min {min_ops}");
+                for (p, (g, w)) in grads.iter().zip(&want_grads).enumerate() {
+                    assert_eq!(g.f32s(), w.f32s(), "param {p}: {workers} workers, min {min_ops}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attn_pair_override_selects_path_never_result() {
+        // the bench A/B knob: forcing either dispatch path (with the
+        // threshold pinned so the gate alone would choose sequentially)
+        // must not change a single bit
+        let spec = tiny_spec(false);
+        let b = 2;
+        let params = random_params(&spec, 41);
+        let toks = random_toks(&spec, b, 42);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let pool = WorkerPool::new(3);
+        let mut base = zeros_like(&params);
+        let mut ws = ModelWs::new(&spec, b);
+        let l0 = fwd_bwd(&spec, &refs, &toks, b, &mut base, &mut ws, &pool, usize::MAX);
+        for force in [Some(true), Some(false), None] {
+            set_attn_pair_override(force);
+            let mut grads = zeros_like(&params);
+            let mut ws = ModelWs::new(&spec, b);
+            let loss = fwd_bwd(&spec, &refs, &toks, b, &mut grads, &mut ws, &pool, usize::MAX);
+            set_attn_pair_override(None);
+            assert_eq!(loss, l0, "force {force:?}");
+            for (g, w) in grads.iter().zip(&base) {
+                assert_eq!(g.f32s(), w.f32s(), "force {force:?}");
             }
         }
     }

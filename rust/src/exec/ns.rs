@@ -9,6 +9,7 @@
 //! bit-identical for every worker-pool size.
 
 use crate::exec::gemm::{matmul_nn, matmul_nt};
+use crate::exec::kernels::dot8;
 use crate::parallel::WorkerPool;
 
 pub(crate) const NS_STEPS: usize = 5;
@@ -66,10 +67,9 @@ fn iterate(
     pool: &WorkerPool,
     min_ops: usize,
 ) {
-    let mut frob = 0.0f32;
-    for &v in x.iter() {
-        frob += v * v;
-    }
+    // Frobenius norm via the shared dot microkernel (fixed 8-lane
+    // association — deterministic, and vectorized under `simd`).
+    let frob = dot8(&x[..], &x[..]);
     let scale = 1.0 / (frob.sqrt() + 1e-7);
     for v in x.iter_mut() {
         *v *= scale;

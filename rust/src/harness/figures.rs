@@ -1,7 +1,7 @@
 //! Figure regenerators: `scale figure <n>` → ASCII series + CSV files.
 //!
 //! Figures are rendered as terminal plots and, where useful, written as
-//! CSV next to the working directory (plots/fig<N>_*.csv) so they can be
+//! CSV next to the working directory (`plots/fig<N>_*.csv`) so they can
 //! re-plotted with any tool.
 
 use std::fmt::Write as _;

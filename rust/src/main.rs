@@ -3,8 +3,8 @@
 //! Subcommands:
 //!   train            train one configuration (preset file + overrides)
 //!   eval             evaluate a checkpoint's perplexity
-//!   table <n>        regenerate paper table n (1-13)
-//!   figure <n>       regenerate paper figure n (1-10)
+//!   table `<n>`      regenerate paper table n (1-13)
+//!   figure `<n>`     regenerate paper figure n (1-10)
 //!   memory-report    Appendix-B memory accounting (exact)
 //!   variance         Fig.-4 style per-layer variance probe
 //!   sweep-lr         LR sweep for one optimizer

@@ -13,8 +13,9 @@
 //! * `_par` variants ([`colnorm_into_par`]) that tile the work across a
 //!   persistent [`WorkerPool`] for large matrices — bit-identical to the
 //!   sequential forms by construction (see the tiling contract in
-//!   [`super`]'s module docs), falling back inline below
-//!   [`PAR_MIN_ELEMS`];
+//!   [`super`]'s module docs), falling back inline below the calibrated
+//!   [`crate::parallel::tuned_min_ops`] threshold (or the explicit one
+//!   handed to a `_with` variant);
 //! * the original allocating signatures (`colnorm`, `rownorm`, `sign`),
 //!   kept as thin wrappers for tests, analysis, and one-shot callers.
 

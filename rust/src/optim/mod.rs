@@ -52,13 +52,18 @@
 //!   `chunks_mut` — safe Rust, no aliasing, no locks on the data path.
 //! * **Size threshold.** Below a work-size threshold the `_par` entry
 //!   points call the sequential kernels inline: pool dispatch costs
-//!   ~µs, which dominates small tensors. The default entry points use
-//!   the *calibrated* threshold (`parallel::tuned_min_ops`, measured
-//!   from real dispatch latency at first use); `colnorm::PAR_MIN_ELEMS`
-//!   remains as the pre-calibration reference constant. The threshold
-//!   (and the `_with` variants that override it) selects a code path
-//!   only — the property tests sweep it across the boundary to pin down
-//!   that it can never select a different *result*.
+//!   ~µs, which dominates small tensors. There is no hard-coded default
+//!   anymore: every default entry point reads the *calibrated*
+//!   threshold ([`crate::parallel::tuned_min_ops`], measured once per
+//!   process from real dispatch latency by
+//!   [`crate::parallel::calibrate`], pinnable through
+//!   [`crate::parallel::set_min_ops_override`] for the bench gates).
+//!   The PR 2 constant [`colnorm::PAR_MIN_ELEMS`] survives only as a
+//!   fixed reference point for tests and docs — no kernel consults it.
+//!   The threshold (and the `_with` variants that take it explicitly)
+//!   selects a code path only — the property tests sweep it across the
+//!   boundary to pin down that it can never select a different
+//!   *result*.
 //! * **Allocation contract.** The sequential `_into`/`_ws` kernels stay
 //!   allocation-free (the bench gate is unchanged). The `_par` forms
 //!   allocate O(pool workers) task boxes per call — amortized to noise

@@ -45,8 +45,9 @@ pub fn ema_(m: &mut [f32], g: &[f32], beta: f32) {
     }
 }
 
-/// In-place axpy over slices: `y += alpha * x`. Also the inner kernel of
-/// the native executor's rank-1 GEMM (`exec::gemm`), hence `#[inline]`.
+/// In-place axpy over slices: `y += alpha * x`. Also the scalar body of
+/// the native executor's [`crate::exec::kernels::axpy8`] microkernel
+/// (rank-1 GEMM, attention context rows), hence `#[inline]`.
 #[inline]
 pub fn axpy_(y: &mut [f32], alpha: f32, x: &[f32]) {
     for (yi, xi) in y.iter_mut().zip(x) {

@@ -9,8 +9,8 @@
 //! task environments, exactly like `std::thread::scope` but without the
 //! per-call thread spawns. `coordinator::Trainer` (shard fwd/bwd, batch
 //! tokenization, ring refill), `coordinator::ddp::tree_all_reduce`, the
-//! `optim` `*_par` kernels, and `exec::gemm` all dispatch through one
-//! pool.
+//! `optim` `*_par` kernels, `exec::gemm`, and the per-(batch, head)
+//! attention fan-out in `exec::model` all dispatch through one pool.
 //!
 //! # Determinism guarantees
 //!
@@ -29,8 +29,9 @@
 //!   GEMM row blocks) get them by partitioning work into tasks whose
 //!   internal operation order matches the sequential implementation —
 //!   the pool only decides *when* each task runs, never what it
-//!   computes. See `optim::colnorm`, `coordinator::ddp`, and
-//!   `exec::gemm` for the property tests that pin this down.
+//!   computes. See `optim::colnorm`, `coordinator::ddp`, `exec::gemm`,
+//!   and `exec::model` (attention pair blocks) for the property tests
+//!   that pin this down.
 //!
 //! # Threshold calibration
 //!
@@ -72,7 +73,7 @@ const MAX_SHARED_WORKERS: usize = 15;
 /// (sweeps construct many trainers; sharing one pool keeps the thread
 /// count flat instead of multiplying it per run). Sized to
 /// `available_parallelism - 1` workers — the dispatching thread is the
-/// extra lane — capped at [`MAX_SHARED_WORKERS`].
+/// extra lane — capped at `MAX_SHARED_WORKERS`.
 pub fn shared() -> &'static WorkerPool {
     SHARED.get_or_init(|| WorkerPool::new(default_workers()))
 }
