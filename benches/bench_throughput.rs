@@ -101,12 +101,48 @@ fn exec_steady_state_pinned(engine: &Engine) -> anyhow::Result<(u64, f64, f64)> 
     let upd_ms = t1.elapsed().as_secs_f64() * 1e3 / iters as f64;
     let upd_allocs = allocs() - a1;
 
+    // the Table-13 mix_* updates share the workspace-arena contract:
+    // audit each with a short loop (allocations gated, time not kept)
+    let mut mix_allocs = 0u64;
+    for opt in [
+        "mix_col_last_row_rest",
+        "mix_row_first_col_rest",
+        "mix_larger_dim",
+        "mix_row_last_col_rest",
+    ] {
+        let name = format!("update_{opt}_tiny");
+        if engine.manifest.artifact(&name).is_err() {
+            continue; // an xla manifest may bound its artifact set
+        }
+        let exe = engine.load(&name)?;
+        let state: Vec<Tensor> = engine
+            .manifest
+            .state_spec(opt, "tiny")?
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.extend(state.iter());
+        inputs.extend(fwd_out[1..].iter());
+        inputs.push(&lr_t);
+        inputs.push(&step_t);
+        let mut out: Vec<Tensor> = Vec::new();
+        engine.run_exe_refs_into(&exe, &inputs, &mut out)?;
+        engine.run_exe_refs_into(&exe, &inputs, &mut out)?; // warm workspaces
+        let a = allocs();
+        for _ in 0..10 {
+            engine.run_exe_refs_into(&exe, &inputs, &mut out)?;
+        }
+        mix_allocs += allocs() - a;
+    }
+
     println!(
         "exec steady state: fwd {fwd_ms:.3} ms, update {upd_ms:.3} ms; \
-         allocs over {iters}+{iters} iters: {} (must be 0)",
+         allocs over {iters}+{iters} iters: {} (must be 0); \
+         mix_* update allocs: {mix_allocs} (must be 0)",
         fwd_allocs + upd_allocs
     );
-    Ok((fwd_allocs + upd_allocs, fwd_ms, upd_ms))
+    Ok((fwd_allocs + upd_allocs + mix_allocs, fwd_ms, upd_ms))
 }
 
 /// Section 2: attention-parallel vs sequential A/B on one config's

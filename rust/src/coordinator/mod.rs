@@ -27,8 +27,10 @@
 //!
 //! [`Checkpoint`] serializes params/state/ring positions so resume is
 //! bit-exact (integration-tested); `metrics` records loss/throughput
-//! series for the harness tables; `sweep` composes many short trainings
-//! (LR sweeps, optimizer face-offs) over one shared engine and pool.
+//! series for the harness tables; `sweep` fans whole trials out as jobs
+//! on the same shared pool ([`SweepSpec`]: optimizer × LR × seed grids),
+//! slotted by trial index so the concurrent result vector is
+//! bit-identical to the serial loop for every pool size.
 
 pub mod checkpoint;
 pub mod ddp;
@@ -39,4 +41,5 @@ pub mod trainer;
 
 pub use checkpoint::Checkpoint;
 pub use schedule::Schedule;
+pub use sweep::{SweepPoint, SweepSpec};
 pub use trainer::{TrainOptions, Trainer};

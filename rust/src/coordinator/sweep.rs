@@ -1,50 +1,288 @@
-//! Sweep driver: run the trainer across a hyperparameter grid.
+//! Sweep driver: run the trainer across a hyperparameter grid,
+//! concurrently.
 //!
-//! Backs the paper's wandb sweeps (App. C) and the LR-sensitivity study
-//! (Fig. 8). Each point is an independent deterministic run.
+//! Backs the paper's wandb sweeps (App. C), the LR-sensitivity study
+//! (Fig. 8), and optimizer face-offs like the Table-13 ablations. A
+//! [`SweepSpec`] is a grid of composable axes (optimizer × learning
+//! rate × seed) over one base [`TrainOptions`]; every grid point is an
+//! independent deterministic run, so [`SweepSpec::run`] dispatches the
+//! trials as jobs on the process-wide shared [`WorkerPool`] and slots
+//! results by trial index — the concurrent output is bit-identical to
+//! the serial loop for every pool size. [`SweepSpec::run_serial`] is the
+//! kept sequential reference; the differential suite in
+//! `rust/tests/sweep_differential.rs` pins the equivalence, including
+//! the `ppl = inf` slotting of diverged trials.
+//!
+//! # Why concurrent trials are bit-identical
+//!
+//! A trial is a pure function of its `TrainOptions`: each builds its own
+//! [`Trainer`] (own params, state, token rings, persistent buffers) over
+//! the shared `Engine`, whose per-program workspaces are scratch that
+//! every execution fully overwrites before reading, and the data
+//! pipeline cache is keyed by `(vocab, seed)` with deterministic
+//! content. Scheduling therefore cannot reach any computed number.
+//! Trial jobs fan their intra-trial work (shard fwd/bwd, tree reduce,
+//! tiled kernels, GEMM blocks) out as *nested* batches on the same
+//! pool; the batch-tagged queue makes that composition deadlock-free
+//! (see [`crate::parallel`]). No sweep path ever spawns a thread — the
+//! trials ride the pool every `Trainer` already uses.
 
 use crate::coordinator::trainer::{TrainOptions, Trainer};
+use crate::parallel::{self, WorkerPool};
 use crate::runtime::Engine;
+use crate::util::json::Json;
 
-#[derive(Debug, Clone)]
+/// One finished trial. `ppl` and `final_loss_ema` are `f64::INFINITY`
+/// when the run diverged (non-finite loss or past the divergence bar).
+#[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
+    pub optimizer: String,
     pub lr: f64,
+    pub seed: u64,
     pub ppl: f64,
     pub final_loss_ema: f64,
     pub diverged: bool,
 }
 
-/// Train `base` once per learning rate; returns one point per LR.
+/// A multi-trial grid over one base configuration. Axes compose: the
+/// trial list is the cartesian product, optimizer-major, then LR, then
+/// seed. An empty axis means "just the base value" — so a plain LR
+/// sweep, an optimizer face-off, and a seed-replication study are all
+/// the same engine.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Template for every trial. Per-axis fields are overridden per
+    /// trial; `schedule` is reset to `None` (fresh cosine at each peak)
+    /// and `quiet` is forced (concurrent trials must not interleave
+    /// logging).
+    pub base: TrainOptions,
+    /// Peak learning rates; empty -> one LR per trial, resolved from
+    /// `lr_for` (when set) or `base.base_lr`.
+    pub lrs: Vec<f64>,
+    /// Optimizer names; empty -> just `base.optimizer`.
+    pub optimizers: Vec<String>,
+    /// Data/init seeds; empty -> just `base.seed`.
+    pub seeds: Vec<u64>,
+    /// Per-optimizer peak-LR resolver, consulted only when `lrs` is
+    /// empty: an optimizer face-off then gives every optimizer its own
+    /// tuned default instead of one shared LR (the Table-13 semantics;
+    /// the CLI wires `harness::default_lr` here). `None` -> every
+    /// trial uses `base.base_lr`.
+    pub lr_for: Option<fn(&str) -> f64>,
+    /// Upper bound on trials in flight at once (`0` = unbounded). Caps
+    /// peak memory — every in-flight trial holds a full `Trainer` — at
+    /// the cost of a wave barrier per chunk. Never affects results:
+    /// chunking only changes scheduling, and results stay slotted by
+    /// trial index.
+    pub max_concurrent: usize,
+}
+
+impl SweepSpec {
+    pub fn new(base: TrainOptions) -> SweepSpec {
+        SweepSpec {
+            base,
+            lrs: Vec::new(),
+            optimizers: Vec::new(),
+            seeds: Vec::new(),
+            lr_for: None,
+            max_concurrent: 0,
+        }
+    }
+
+    /// The Fig. 8 / App. C shape: one optimizer, a grid of peak LRs.
+    pub fn lr_grid(base: TrainOptions, lrs: &[f64]) -> SweepSpec {
+        SweepSpec {
+            lrs: lrs.to_vec(),
+            ..SweepSpec::new(base)
+        }
+    }
+
+    /// The Table-13 shape: one LR, a grid of optimizers.
+    pub fn optimizer_grid(base: TrainOptions, optimizers: &[&str]) -> SweepSpec {
+        SweepSpec {
+            optimizers: optimizers.iter().map(|s| s.to_string()).collect(),
+            ..SweepSpec::new(base)
+        }
+    }
+
+    /// Trial options in canonical order (optimizer-major, then LR, then
+    /// seed) — the order `run`, `run_on`, and `run_serial` all emit.
+    pub fn trials(&self) -> Vec<TrainOptions> {
+        let opt_axis: Vec<String> = if self.optimizers.is_empty() {
+            vec![self.base.optimizer.clone()]
+        } else {
+            self.optimizers.clone()
+        };
+        let seed_axis: Vec<u64> = if self.seeds.is_empty() {
+            vec![self.base.seed]
+        } else {
+            self.seeds.clone()
+        };
+        let n_lrs = self.lrs.len().max(1);
+        let mut out = Vec::with_capacity(opt_axis.len() * n_lrs * seed_axis.len());
+        for opt in &opt_axis {
+            let lr_axis: Vec<f64> = if !self.lrs.is_empty() {
+                self.lrs.clone()
+            } else if let Some(f) = self.lr_for {
+                vec![f(opt)]
+            } else {
+                vec![self.base.base_lr]
+            };
+            for &lr in &lr_axis {
+                for &seed in &seed_axis {
+                    let mut t = self.base.clone();
+                    t.optimizer = opt.clone();
+                    t.base_lr = lr;
+                    t.seed = seed;
+                    t.schedule = None; // rebuild the cosine schedule at this peak
+                    t.quiet = true;
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Run every trial concurrently on the process-wide shared pool —
+    /// the production entry point (zero thread spawns).
+    pub fn run(&self, engine: &Engine) -> anyhow::Result<Vec<SweepPoint>> {
+        self.run_on(engine, parallel::shared())
+    }
+
+    /// Run every trial as one job on `pool`, results slotted by trial
+    /// index — bit-identical to [`run_serial`](Self::run_serial) for
+    /// every pool size and every `max_concurrent` (a zero-worker pool
+    /// degenerates to the inline loop). On a trial error the in-flight
+    /// wave still runs to completion (the pool contract) but later
+    /// waves are skipped, and the lowest-indexed error is returned.
+    ///
+    /// Peak memory: a queued trial holds only its `TrainOptions` — the
+    /// `Trainer` is built inside the job — so at most
+    /// `min(trials, pool lanes, max_concurrent)` full trainers are ever
+    /// resident at once. Lower `max_concurrent` to trade wall-clock for
+    /// a smaller bound.
+    pub fn run_on(&self, engine: &Engine, pool: &WorkerPool) -> anyhow::Result<Vec<SweepPoint>> {
+        let mut queue: Vec<_> = self
+            .trials()
+            .into_iter()
+            .map(|t| move || run_trial(engine, t))
+            .collect();
+        let cap = if self.max_concurrent == 0 {
+            queue.len()
+        } else {
+            self.max_concurrent
+        };
+        let mut results = Vec::with_capacity(queue.len());
+        while !queue.is_empty() {
+            let rest = queue.split_off(queue.len().min(cap));
+            let wave = pool.run(queue);
+            let failed = wave.iter().any(|r| r.is_err());
+            results.extend(wave);
+            if failed {
+                break; // fail fast: don't train the remaining waves
+            }
+            queue = rest;
+        }
+        results.into_iter().collect()
+    }
+
+    /// The sequential reference loop the differential tests compare
+    /// against. One behavioral difference from `run_on`: this stops at
+    /// the first trial error instead of completing the batch (the
+    /// returned value is identical either way).
+    pub fn run_serial(&self, engine: &Engine) -> anyhow::Result<Vec<SweepPoint>> {
+        let mut out = Vec::new();
+        for t in self.trials() {
+            out.push(run_trial(engine, t)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Train one grid point to completion. Divergence (non-finite loss, or
+/// a training error after construction) lands in the `ppl = inf` slot
+/// rather than failing the sweep, exactly like the serial loop always
+/// did; construction errors (unknown optimizer/size) still propagate.
+fn run_trial(engine: &Engine, opts: TrainOptions) -> anyhow::Result<SweepPoint> {
+    let (optimizer, lr, seed) = (opts.optimizer.clone(), opts.base_lr, opts.seed);
+    let mut tr = Trainer::new(engine, opts)?;
+    let ppl = match tr.train() {
+        Ok(p) if p.is_finite() => p,
+        _ => f64::INFINITY,
+    };
+    let ema = match tr.metrics.ema_loss {
+        Some(e) if e.is_finite() => e,
+        _ => f64::INFINITY,
+    };
+    Ok(SweepPoint {
+        optimizer,
+        lr,
+        seed,
+        ppl,
+        final_loss_ema: ema,
+        diverged: !ppl.is_finite() || ppl > 1e6,
+    })
+}
+
+/// Train `base` once per learning rate (concurrently, on the shared
+/// pool); returns one point per LR, in grid order.
 pub fn lr_sweep(
     engine: &Engine,
     base: &TrainOptions,
     lrs: &[f64],
 ) -> anyhow::Result<Vec<SweepPoint>> {
-    let mut out = Vec::with_capacity(lrs.len());
-    for &lr in lrs {
-        let mut opts = base.clone();
-        opts.base_lr = lr;
-        opts.schedule = None; // rebuild the cosine schedule at this peak
-        opts.quiet = true;
-        let mut tr = Trainer::new(engine, opts)?;
-        let ppl = match tr.train() {
-            Ok(p) if p.is_finite() => p,
-            _ => f64::INFINITY,
-        };
-        let ema = tr.metrics.ema_loss.unwrap_or(f64::INFINITY);
-        out.push(SweepPoint {
-            lr,
-            ppl,
-            final_loss_ema: ema,
-            diverged: !ppl.is_finite() || ppl > 1e6,
-        });
-    }
-    Ok(out)
+    SweepSpec::lr_grid(base.clone(), lrs).run(engine)
 }
 
 /// The paper's App. C learning-rate grid.
 pub fn paper_lr_grid() -> Vec<f64> {
     vec![5e-5, 1e-4, 3e-4, 5e-4, 1e-3, 3e-3, 5e-3]
+}
+
+/// `null` for non-finite values — JSON has no infinity; `diverged`
+/// carries the flag in the report.
+fn num_or_null(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Seeds are u64 and f64 is exact only below 2^53, so bigger seeds are
+/// emitted as decimal strings — re-running a reported seed must
+/// reproduce the trial that produced the numbers.
+fn json_seed(seed: u64) -> Json {
+    if seed < (1u64 << 53) {
+        Json::num(seed as f64)
+    } else {
+        Json::str(&seed.to_string())
+    }
+}
+
+/// Machine-readable sweep report (`scale sweep --json`).
+pub fn report_json(spec: &SweepSpec, points: &[SweepPoint]) -> Json {
+    let pts: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("optimizer", Json::str(&p.optimizer)),
+                ("lr", num_or_null(p.lr)),
+                ("seed", json_seed(p.seed)),
+                ("ppl", num_or_null(p.ppl)),
+                ("final_loss_ema", num_or_null(p.final_loss_ema)),
+                ("diverged", Json::Bool(p.diverged)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("report", Json::str("sweep")),
+        ("size", Json::str(&spec.base.size)),
+        ("steps", Json::num(spec.base.steps as f64)),
+        ("shards", Json::num(spec.base.shards.max(1) as f64)),
+        ("trials", Json::num(points.len() as f64)),
+        ("points", Json::Arr(pts)),
+    ])
 }
 
 #[cfg(test)]
@@ -56,5 +294,96 @@ mod tests {
         let g = paper_lr_grid();
         assert!(g.windows(2).all(|w| w[0] < w[1]));
         assert!(g.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn trial_order_is_optimizer_major_then_lr_then_seed() {
+        let mut spec = SweepSpec::new(TrainOptions::default());
+        spec.optimizers = vec!["scale".into(), "adam".into()];
+        spec.lrs = vec![1e-3, 1e-2];
+        spec.seeds = vec![0, 7];
+        let ts = spec.trials();
+        assert_eq!(ts.len(), 8);
+        let key: Vec<(&str, f64, u64)> = ts
+            .iter()
+            .map(|t| (t.optimizer.as_str(), t.base_lr, t.seed))
+            .collect();
+        assert_eq!(key[0], ("scale", 1e-3, 0));
+        assert_eq!(key[1], ("scale", 1e-3, 7));
+        assert_eq!(key[2], ("scale", 1e-2, 0));
+        assert_eq!(key[4], ("adam", 1e-3, 0));
+        assert_eq!(key[7], ("adam", 1e-2, 7));
+        assert!(ts.iter().all(|t| t.quiet && t.schedule.is_none()));
+    }
+
+    #[test]
+    fn lr_for_resolves_per_optimizer_when_lr_axis_is_empty() {
+        fn table_lr(opt: &str) -> f64 {
+            if opt == "adam" { 2e-3 } else { 1e-2 }
+        }
+        let mut spec = SweepSpec::new(TrainOptions::default());
+        spec.optimizers = vec!["scale".into(), "adam".into()];
+        spec.lr_for = Some(table_lr);
+        let ts = spec.trials();
+        assert_eq!(ts.len(), 2);
+        assert_eq!(ts[0].base_lr, 1e-2);
+        assert_eq!(ts[1].base_lr, 2e-3);
+        // an explicit LR axis wins over the resolver
+        spec.lrs = vec![5e-4];
+        let ts = spec.trials();
+        assert!(ts.iter().all(|t| t.base_lr == 5e-4));
+    }
+
+    #[test]
+    fn empty_axes_default_to_the_base_point() {
+        let base = TrainOptions {
+            optimizer: "muon".into(),
+            base_lr: 0.5,
+            seed: 9,
+            ..TrainOptions::default()
+        };
+        let ts = SweepSpec::new(base).trials();
+        assert_eq!(ts.len(), 1);
+        assert_eq!(ts[0].optimizer, "muon");
+        assert_eq!(ts[0].base_lr, 0.5);
+        assert_eq!(ts[0].seed, 9);
+    }
+
+    #[test]
+    fn report_json_guards_nonfinite_and_big_seeds() {
+        let spec = SweepSpec::new(TrainOptions::default());
+        let pts = vec![
+            SweepPoint {
+                optimizer: "scale".into(),
+                lr: f64::INFINITY,
+                seed: 0,
+                ppl: f64::INFINITY,
+                final_loss_ema: f64::INFINITY,
+                diverged: true,
+            },
+            SweepPoint {
+                optimizer: "adam".into(),
+                lr: 1e-2,
+                seed: 1 << 60,
+                ppl: 2.0,
+                final_loss_ema: 0.7,
+                diverged: false,
+            },
+        ];
+        let text = report_json(&spec, &pts).to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("trials").unwrap().as_usize(), Some(2));
+        let arr = back.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        // JSON has no infinity: non-finite lr/ppl/ema all become null
+        assert_eq!(arr[0].get("lr").unwrap(), &Json::Null);
+        assert_eq!(arr[0].get("ppl").unwrap(), &Json::Null);
+        assert_eq!(arr[0].get("diverged").unwrap().as_bool(), Some(true));
+        // seeds above 2^53 keep full precision as decimal strings
+        assert_eq!(
+            arr[1].get("seed").unwrap().as_str(),
+            Some("1152921504606846976")
+        );
+        assert_eq!(arr[1].get("ppl").unwrap().as_f64(), Some(2.0));
     }
 }

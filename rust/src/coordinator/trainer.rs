@@ -22,6 +22,13 @@
 //! refill, shard fwd/bwd, tree reduce, tiled kernels) dispatches onto
 //! the [`WorkerPool`] bound at construction — zero thread spawns per
 //! step.
+//!
+//! Trainers are themselves dispatchable: `coordinator::sweep` runs whole
+//! trainings as jobs on the same shared pool, with this trainer's
+//! per-step fan-outs becoming *nested* batches. Everything that feeds a
+//! run's result is owned per trainer (params, state, rings, buffers) or
+//! deterministic per `(size, seed)`, which is why concurrent trials are
+//! bit-identical to serial ones.
 
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::ddp;

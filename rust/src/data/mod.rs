@@ -20,21 +20,26 @@ use std::sync::{Arc, Mutex, OnceLock};
 ///
 /// BPE training costs seconds, and experiment sweeps construct many
 /// Trainers over the same (vocab, seed) pair — results are memoized
-/// process-wide (EXPERIMENTS.md §Perf L3-1).
+/// process-wide (EXPERIMENTS.md §Perf L3-1). Each key memoizes through
+/// its own `OnceLock`, so concurrent sweep trials that race on the same
+/// (vocab, seed) share ONE build (losers block on the winner's cell)
+/// while distinct keys still build in parallel.
 pub fn pipeline(vocab: usize, seed: u64) -> (Arc<Corpus>, Arc<Tokenizer>) {
-    static CACHE: OnceLock<Mutex<HashMap<(usize, u64), (Arc<Corpus>, Arc<Tokenizer>)>>> =
-        OnceLock::new();
+    type Entry = Arc<OnceLock<(Arc<Corpus>, Arc<Tokenizer>)>>;
+    static CACHE: OnceLock<Mutex<HashMap<(usize, u64), Entry>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    if let Some(hit) = cache.lock().unwrap().get(&(vocab, seed)) {
-        return hit.clone();
-    }
-    let built = pipeline_uncached(vocab, seed);
-    let entry = (Arc::new(built.0), Arc::new(built.1));
-    cache
+    let entry = cache
         .lock()
         .unwrap()
-        .insert((vocab, seed), entry.clone());
+        .entry((vocab, seed))
+        .or_insert_with(|| Arc::new(OnceLock::new()))
+        .clone();
     entry
+        .get_or_init(|| {
+            let built = pipeline_uncached(vocab, seed);
+            (Arc::new(built.0), Arc::new(built.1))
+        })
+        .clone()
 }
 
 /// The uncached construction (exposed for benchmarking the real cost).

@@ -6,9 +6,11 @@
 //! the Appendix-B paper dims) and `model.param_specs` (canonical
 //! parameter order), and adds two smoke-test sizes (`tiny`, `tinyg`)
 //! small enough for debug-mode CI. Update artifacts are emitted for
-//! every optimizer in [`crate::exec::NATIVE_OPTIMIZERS`], with state
-//! layouts from the same plan the executor runs — a single source of
-//! truth, so checkpoints and `state_spec` lookups agree by construction.
+//! every optimizer in [`crate::exec::NATIVE_OPTIMIZERS`] — since PR 5
+//! that is the complete registry, Table-13 `mix_*` ablations included —
+//! with state layouts from the same plan the executor runs: a single
+//! source of truth, so checkpoints and `state_spec` lookups agree by
+//! construction.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -311,7 +313,18 @@ mod tests {
     fn optimizers_for_covers_native_zoo() {
         let m = native_manifest(PathBuf::from("unused"));
         let opts = m.optimizers_for("s130m");
-        for need in ["scale", "adam", "muon", "galore", "apollo_mini", "stable_spam"] {
+        for need in [
+            "scale",
+            "adam",
+            "muon",
+            "galore",
+            "apollo_mini",
+            "stable_spam",
+            "mix_col_last_row_rest",
+            "mix_row_first_col_rest",
+            "mix_larger_dim",
+            "mix_row_last_col_rest",
+        ] {
             assert!(opts.iter().any(|o| o == need), "{need}");
         }
     }

@@ -3,11 +3,12 @@
 //! PJRT is unavailable, so the coordinator's call sites are untouched —
 //! the same `(inputs) -> outputs` contract, the same shape checks.
 //!
-//! Workspace ownership: model programs keep a pool of [`ModelWs`] arenas
-//! behind a mutex (popped per call, so concurrent DDP shard executions
-//! each get their own arena and steady-state calls allocate nothing);
-//! update and norm programs serialize on a single workspace — they run
-//! once per step from the coordinator thread.
+//! Workspace ownership: model and update programs keep a pool of
+//! workspaces behind a mutex (popped per call, so concurrent executions
+//! — DDP shards of one trainer, or whole sweep trials sharing one
+//! update program — each get their own scratch and steady-state calls
+//! allocate nothing); norm programs serialize on a single workspace —
+//! they are bench/table one-shots.
 
 use std::sync::Mutex;
 
@@ -68,7 +69,12 @@ impl ModelProg {
 
 struct UpdateProg {
     prog: UpdateProgram,
-    ws: Mutex<UpdateWs>,
+    /// Workspace pool, one [`UpdateWs`] per concurrent executor:
+    /// concurrent sweep trials of the same (optimizer, size) share one
+    /// program, and holding a single workspace mutex across the whole
+    /// update would serialize them (blocking a pool worker, which
+    /// cannot drain queued jobs while parked on a lock).
+    ws: Mutex<Vec<Box<UpdateWs>>>,
 }
 
 #[derive(Clone, Copy)]
@@ -125,7 +131,7 @@ impl NativeProgram {
                 );
                 Kind::Update(UpdateProg {
                     prog,
-                    ws: Mutex::new(UpdateWs::new()),
+                    ws: Mutex::new(Vec::new()),
                 })
             }
             "init" => Kind::Init(size_of(manifest, spec)?.clone()),
@@ -214,8 +220,11 @@ impl NativeProgram {
                 }
             }
             Kind::Update(up) => {
-                let mut ws = up.ws.lock().unwrap();
-                up.prog.execute(inputs, out, &mut ws, pool, min_ops)?;
+                let cached = up.ws.lock().unwrap().pop();
+                let mut ws = cached.unwrap_or_else(|| Box::new(UpdateWs::new()));
+                let result = up.prog.execute(inputs, out, &mut ws, pool, min_ops);
+                up.ws.lock().unwrap().push(ws);
+                result?;
             }
             Kind::Init(info) => {
                 let seed = inputs[0].i32s()[0] as i64 as u64;

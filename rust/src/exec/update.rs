@@ -11,10 +11,13 @@
 //! workspace kernels (`scale_plain_ws_par_with`, `scale_momentum_ws_par_with`,
 //! `adam`) — the executable path is bit-identical to calling those
 //! kernels directly, which the integration suite property-tests. The
-//! projection optimizers (GaLore/Fira/APOLLO) use a deterministic PCG
-//! sketch in place of JAX's `fold_in` key schedule: same construction,
-//! different (but fixed) random bits, refreshed on the same epoch
-//! boundary (`(step-1) / 50`).
+//! Table-13 `mix_*` ablations are pure compositions of the same
+//! col/row/momentum kernels selected per parameter kind (the property
+//! tests below pin each composition bit-for-bit across pool sizes and
+//! thresholds). The projection optimizers (GaLore/Fira/APOLLO) use a
+//! deterministic PCG sketch in place of JAX's `fold_in` key schedule:
+//! same construction, different (but fixed) random bits, refreshed on
+//! the same epoch boundary (`(step-1) / 50`).
 
 use crate::exec::gemm::{axpy, matmul_nn, matmul_tn};
 use crate::exec::ns::{buf, ns_orth, NsWs, NS_STEPS};
@@ -31,8 +34,8 @@ const SPAM_THETA: f32 = 2.0;
 const PROJ_REFRESH: u32 = 50;
 const PROJ_KEY: u64 = 0xA90110;
 
-/// Optimizers the native executor can run (the Python registry minus
-/// the Table-13 `mix_*` ablations).
+/// Optimizers the native executor can run — the complete Python
+/// registry, including the Table-13 `mix_*` ablations.
 pub const NATIVE_OPTIMIZERS: &[&str] = &[
     "sgd",
     "sgd_momentum",
@@ -51,6 +54,10 @@ pub const NATIVE_OPTIMIZERS: &[&str] = &[
     "fira",
     "apollo",
     "apollo_mini",
+    "mix_col_last_row_rest",
+    "mix_row_first_col_rest",
+    "mix_larger_dim",
+    "mix_row_last_col_rest",
 ];
 
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -62,6 +69,11 @@ enum Rule {
     ScalePlain,
     ScaleMomentum,
     RowNorm,
+    RowNormMomentum,
+    /// Table-13 "larger dim": colnorm when `d_in >= d_out`, rownorm
+    /// otherwise (`_norm_larger_dim` in optimizers.py).
+    LargerPlain,
+    LargerMomentum,
     SignSgd,
     NsPlain,
     NsMomentum,
@@ -82,10 +94,16 @@ impl Rule {
             Rule::Sgd
             | Rule::ScalePlain
             | Rule::RowNorm
+            | Rule::LargerPlain
             | Rule::SignSgd
             | Rule::NsPlain
             | Rule::Swan => vec![],
-            Rule::SgdMomentum | Rule::ScaleMomentum | Rule::NsMomentum | Rule::Muon => {
+            Rule::SgdMomentum
+            | Rule::ScaleMomentum
+            | Rule::RowNormMomentum
+            | Rule::LargerMomentum
+            | Rule::NsMomentum
+            | Rule::Muon => {
                 vec![("m", shape.to_vec())]
             }
             Rule::Adam => vec![("m", shape.to_vec()), ("v", shape.to_vec())],
@@ -130,6 +148,13 @@ fn rule_table(optimizer: &str) -> Option<[Rule; 4]> {
         "fira" => [Galore { residual: true }, Adam, Adam, Adam],
         "apollo" => [Apollo { rank1: false }, Adam, Adam, Adam],
         "apollo_mini" => [Apollo { rank1: true }, Adam, Adam, Adam],
+        // Table-13 mixed-normalization ablations (App. M): compositions
+        // of the col/row kernels with momentum only on the LM head,
+        // mirroring the optimizers.py registry entry by entry
+        "mix_col_last_row_rest" => [RowNorm, ScaleMomentum, RowNorm, Adam],
+        "mix_row_first_col_rest" => [ScalePlain, ScaleMomentum, RowNorm, Adam],
+        "mix_larger_dim" => [LargerPlain, LargerMomentum, LargerPlain, Adam],
+        "mix_row_last_col_rest" => [ScalePlain, RowNormMomentum, ScalePlain, Adam],
         _ => return None,
     })
 }
@@ -290,6 +315,33 @@ impl UpdateProgram {
                     let d = buf(dir, g.len());
                     rownorm_into(g, di, dn, d);
                     axpy(p, -lr, d);
+                }
+                Rule::RowNormMomentum => {
+                    let m = state_out[cursor].f32s_mut();
+                    rules::ema_(m, g, BETA);
+                    let d = buf(dir, g.len());
+                    rownorm_into(m, di, dn, d);
+                    axpy(p, -lr, d);
+                }
+                Rule::LargerPlain => {
+                    if di >= dn {
+                        scale_plain_ws_par_with(pool, p, g, di, dn, lr, norm, min_ops);
+                    } else {
+                        let d = buf(dir, g.len());
+                        rownorm_into(g, di, dn, d);
+                        axpy(p, -lr, d);
+                    }
+                }
+                Rule::LargerMomentum => {
+                    let m = state_out[cursor].f32s_mut();
+                    if di >= dn {
+                        scale_momentum_ws_par_with(pool, p, m, g, di, dn, lr, BETA, norm, min_ops);
+                    } else {
+                        rules::ema_(m, g, BETA);
+                        let d = buf(dir, g.len());
+                        rownorm_into(m, di, dn, d);
+                        axpy(p, -lr, d);
+                    }
                 }
                 Rule::SignSgd => {
                     let d = buf(dir, g.len());
@@ -526,6 +578,20 @@ mod tests {
     }
 
     fn run_update(optimizer: &str, lr: f32, step: f32) -> (Vec<Tensor>, usize) {
+        run_update_on(optimizer, lr, step, &WorkerPool::new(2), 0)
+    }
+
+    /// Same draw order as [`run_update`] (params, then grads, from one
+    /// seed-5 PCG stream; state slots are zeros) with the pool and the
+    /// sequential-fallback threshold parameterized, so the mix property
+    /// tests can sweep both.
+    fn run_update_on(
+        optimizer: &str,
+        lr: f32,
+        step: f32,
+        pool: &WorkerPool,
+        min_ops: usize,
+    ) -> (Vec<Tensor>, usize) {
         let size = toy_size();
         let prog = UpdateProgram::new(optimizer, &size).unwrap();
         let slots = state_slots(optimizer, &size).unwrap();
@@ -554,8 +620,7 @@ mod tests {
             out.push(Tensor::zeros(&s.shape));
         }
         let mut ws = UpdateWs::new();
-        let pool = WorkerPool::new(2);
-        prog.execute(&refs, &mut out, &mut ws, &pool, 0).unwrap();
+        prog.execute(&refs, &mut out, &mut ws, pool, min_ops).unwrap();
         (out, size.params.len())
     }
 
@@ -575,7 +640,7 @@ mod tests {
 
     #[test]
     fn update_is_deterministic() {
-        for opt in ["scale", "adam", "galore", "apollo_mini", "stable_spam"] {
+        for opt in ["scale", "adam", "galore", "apollo_mini", "stable_spam", "mix_larger_dim"] {
             let (a, _) = run_update(opt, 1e-2, 1.0);
             let (b, _) = run_update(opt, 1e-2, 1.0);
             for (x, y) in a.iter().zip(&b) {
@@ -667,5 +732,208 @@ mod tests {
         let (out2, _) = run_update("galore", 1e-2, 2.0);
         // at step 2 the projector input state was zeros and must remain so
         assert!(out2[p_idx].f32s().iter().all(|&x| x == 0.0));
+    }
+
+    // ---- Table-13 mix_* compositions ---------------------------------
+
+    /// The composed-kernel vocabulary of the `mix_*` plans, applied
+    /// sequentially — the oracle the executable path must match bit for
+    /// bit. `Larger*` resolves to col/row by `d_in >= d_out`, exactly
+    /// like `_norm_larger_dim` in optimizers.py.
+    #[derive(Clone, Copy)]
+    enum RefRule {
+        ColPlain,
+        ColMmt,
+        RowPlain,
+        RowMmt,
+        LargerPlain,
+        LargerMmt,
+        VectorAdam,
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn apply_ref_rule(
+        rule: RefRule,
+        p: &mut [f32],
+        st: &mut [Vec<f32>],
+        g: &[f32],
+        di: usize,
+        dn: usize,
+        lr: f32,
+        ws: &mut NormWorkspace,
+    ) {
+        use RefRule::*;
+        match rule {
+            ColPlain => rules::scale_plain_ws(p, g, di, dn, lr, ws),
+            ColMmt => rules::scale_momentum_ws(p, &mut st[0], g, di, dn, lr, BETA, ws),
+            RowPlain => {
+                let mut d = vec![0.0f32; g.len()];
+                rownorm_into(g, di, dn, &mut d);
+                rules::axpy_(p, -lr, &d);
+            }
+            RowMmt => {
+                rules::ema_(&mut st[0], g, BETA);
+                let mut d = vec![0.0f32; g.len()];
+                rownorm_into(&st[0], di, dn, &mut d);
+                rules::axpy_(p, -lr, &d);
+            }
+            LargerPlain => {
+                let r = if di >= dn { ColPlain } else { RowPlain };
+                apply_ref_rule(r, p, st, g, di, dn, lr, ws);
+            }
+            LargerMmt => {
+                let r = if di >= dn { ColMmt } else { RowMmt };
+                apply_ref_rule(r, p, st, g, di, dn, lr, ws);
+            }
+            VectorAdam => {
+                let (m, v) = st.split_at_mut(1);
+                rules::adam(p, &mut m[0], &mut v[0], g, lr, AdamHp::default(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn mix_rules_bit_match_their_composed_kernels() {
+        use RefRule::*;
+        // per toy-size parameter order: embed(16x4, embed),
+        // attn_norm(4, vector), wq(4x4, matrix), lm_head(4x16, head).
+        // embed is tall (col branch of Larger*), the head is wide (row
+        // branch), so both _norm_larger_dim arms are exercised.
+        let cases: [(&str, [RefRule; 4]); 4] = [
+            ("mix_col_last_row_rest", [RowPlain, VectorAdam, RowPlain, ColMmt]),
+            ("mix_row_first_col_rest", [RowPlain, VectorAdam, ColPlain, ColMmt]),
+            ("mix_larger_dim", [LargerPlain, VectorAdam, LargerPlain, LargerMmt]),
+            ("mix_row_last_col_rest", [ColPlain, VectorAdam, ColPlain, RowMmt]),
+        ];
+        let size = toy_size();
+        let lr = 0.02f32;
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)];
+        for (opt, rules_by_param) in cases {
+            // reference: identical seed-5 draws to run_update_on, the
+            // composed kernels applied sequentially in canonical order
+            let mut rng = crate::util::rng::Pcg::new(5);
+            let mut params: Vec<Vec<f32>> = size
+                .params
+                .iter()
+                .map(|p| (0..p.numel()).map(|_| rng.normal() as f32).collect())
+                .collect();
+            let grads: Vec<Vec<f32>> = size
+                .params
+                .iter()
+                .map(|p| (0..p.numel()).map(|_| 0.1 * rng.normal() as f32).collect())
+                .collect();
+            let mut ws = NormWorkspace::new();
+            let mut state_ref: Vec<Vec<f32>> = Vec::new();
+            for (i, p) in size.params.iter().enumerate() {
+                let (di, dn) = if p.shape.len() == 2 {
+                    (p.shape[0], p.shape[1])
+                } else {
+                    (1, p.shape[0])
+                };
+                let n_slots = match rules_by_param[i] {
+                    VectorAdam => 2,
+                    ColMmt | RowMmt | LargerMmt => 1,
+                    _ => 0,
+                };
+                let mut st: Vec<Vec<f32>> = vec![vec![0.0f32; p.numel()]; n_slots];
+                apply_ref_rule(
+                    rules_by_param[i], &mut params[i], &mut st, &grads[i], di, dn, lr, &mut ws,
+                );
+                state_ref.extend(st);
+            }
+            // executable path: every pool size x thresholds straddling
+            // the per-matrix numel gate (largest toy matrix = 64 elems)
+            for pool in &pools {
+                for min_ops in [0usize, 64, usize::MAX] {
+                    let (out, np) = run_update_on(opt, lr, 1.0, pool, min_ops);
+                    assert_eq!(out.len(), np + state_ref.len(), "{opt}: arity");
+                    for i in 0..np {
+                        assert_eq!(
+                            out[i].f32s(),
+                            &params[i][..],
+                            "{opt}: param {i} ({} workers, min_ops {min_ops})",
+                            pool.workers()
+                        );
+                    }
+                    for (j, st) in state_ref.iter().enumerate() {
+                        assert_eq!(
+                            out[np + j].f32s(),
+                            &st[..],
+                            "{opt}: state {j} ({} workers, min_ops {min_ops})",
+                            pool.workers()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn larger_dim_momentum_takes_the_colnorm_branch_on_tall_heads() {
+        // a 16x4 head: d_in >= d_out, so LargerMomentum must be exactly
+        // the colnorm momentum kernel (the toy size only covers the wide
+        // head's rownorm branch)
+        let params = vec![ParamSpec {
+            name: "lm_head".into(),
+            kind: "head".into(),
+            shape: vec![16, 4],
+            layer: "lm_head".into(),
+        }];
+        let size = SizeInfo {
+            name: "tall".into(),
+            paper_size: "tall".into(),
+            vocab: 4,
+            d_model: 16,
+            n_layers: 0,
+            n_heads: 1,
+            d_ff: 8,
+            seq_len: 4,
+            batch: 4,
+            arch: "llama".into(),
+            param_count: 64,
+            params,
+        };
+        let prog = UpdateProgram::new("mix_larger_dim", &size).unwrap();
+        assert_eq!(prog.n_state(), 1);
+        let mut rng = crate::util::rng::Pcg::new(11);
+        let p0: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let g0: Vec<f32> = (0..64).map(|_| 0.1 * rng.normal() as f32).collect();
+        let inputs = [
+            Tensor::from_f32(&[16, 4], p0.clone()),
+            Tensor::zeros(&[16, 4]),
+            Tensor::from_f32(&[16, 4], g0.clone()),
+            Tensor::scalar_f32(0.05),
+            Tensor::scalar_f32(1.0),
+        ];
+        let refs: Vec<&Tensor> = inputs.iter().collect();
+        let mut out = vec![Tensor::zeros(&[16, 4]), Tensor::zeros(&[16, 4])];
+        let mut ws = UpdateWs::new();
+        let pool = WorkerPool::new(3);
+        prog.execute(&refs, &mut out, &mut ws, &pool, 0).unwrap();
+        let mut p_want = p0;
+        let mut m_want = vec![0.0f32; 64];
+        let mut nws = NormWorkspace::new();
+        rules::scale_momentum_ws(&mut p_want, &mut m_want, &g0, 16, 4, 0.05, BETA, &mut nws);
+        assert_eq!(out[0].f32s(), &p_want[..]);
+        assert_eq!(out[1].f32s(), &m_want[..]);
+    }
+
+    #[test]
+    fn mix_plans_carry_momentum_only_on_the_head() {
+        let size = toy_size();
+        for opt in [
+            "mix_col_last_row_rest",
+            "mix_row_first_col_rest",
+            "mix_larger_dim",
+            "mix_row_last_col_rest",
+        ] {
+            let slots = state_slots(opt, &size).unwrap();
+            let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(
+                names,
+                vec!["block0.attn_norm.m", "block0.attn_norm.v", "lm_head.m"],
+                "{opt}: mix state must equal SCALE's (vector Adam + head momentum)"
+            );
+        }
     }
 }

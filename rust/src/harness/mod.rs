@@ -30,7 +30,8 @@ pub fn default_lr(optimizer: &str) -> f64 {
         // parameters at the same rate as the colnorm family
         "sgd_ns" | "ns_mmt_last" => 1e-1,
         "sign_sgd" => 1e-3,
-        // column/row/sign-normalized SGD family and SCALE
+        // column/row-normalized SGD family, SCALE, and the Table-13
+        // mix_* ablations (all norm-bounded updates of the same scale)
         _ => 1e-2,
     }
 }

@@ -369,7 +369,9 @@ pub fn table12(
     Ok(t.render())
 }
 
-/// Table 13 (App. M): mixed-normalization ablations on s130m.
+/// Table 13 (App. M): mixed-normalization ablations on s130m. All four
+/// `mix_*` rules execute natively (`exec::update` composes them from
+/// the col/row/momentum kernels), so this table runs without PJRT.
 pub fn table13(engine: &Engine, steps: usize) -> anyhow::Result<String> {
     let opts = [
         "scale", "mix_col_last_row_rest", "mix_row_first_col_rest",

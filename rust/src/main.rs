@@ -7,6 +7,7 @@
 //!   figure `<n>`     regenerate paper figure n (1-10)
 //!   memory-report    Appendix-B memory accounting (exact)
 //!   variance         Fig.-4 style per-layer variance probe
+//!   sweep            concurrent multi-axis grid (optimizer x lr x seed)
 //!   sweep-lr         LR sweep for one optimizer
 //!   ablate-momentum  Theorem 2.1 noisy-quadratic placement study
 //!   list             show available sizes/optimizers/artifacts
@@ -44,6 +45,7 @@ fn run() -> anyhow::Result<()> {
         "figure" => cmd_figure(&mut args),
         "memory-report" => cmd_memory(&mut args),
         "variance" => cmd_variance(&mut args),
+        "sweep" => cmd_sweep_grid(&mut args),
         "sweep-lr" => cmd_sweep(&mut args),
         "ablate-momentum" => cmd_ablate(&mut args),
         "list" => cmd_list(&mut args),
@@ -66,6 +68,11 @@ usage: scale <subcommand> [options]
   figure <1..10>  regenerate a paper figure [--steps N] [--size s130m]
   memory-report   Appendix-B accounting (exact paper numbers)
   variance        per-layer gradient variance probe [--optimizer ...]
+  sweep           --size s130m --optimizers scale,adam --lrs 1e-3,1e-2
+                  [--seeds 0,1] [--steps N] [--shards N] [--json]
+                  [--max-concurrent N]   concurrent trial grid on the
+                  shared pool; without --lr/--lrs each optimizer uses its
+                  tuned default LR; --json emits the report on stdout
   sweep-lr        --optimizer scale --size s130m --steps 100
   ablate-momentum Theorem 2.1 noisy-quadratic placement study
   list            artifacts / sizes / optimizers available
@@ -142,11 +149,12 @@ fn cmd_eval(args: &mut Args) -> anyhow::Result<()> {
 }
 
 fn sizes_arg(args: &mut Args, default: &str) -> Vec<String> {
-    args.get_or("sizes", default)
-        .split(',')
-        .filter(|s| !s.is_empty())
-        .map(String::from)
-        .collect()
+    let got = csv_list(args, "sizes");
+    if got.is_empty() {
+        default.split(',').map(String::from).collect()
+    } else {
+        got
+    }
 }
 
 fn cmd_table(args: &mut Args) -> anyhow::Result<()> {
@@ -253,12 +261,119 @@ fn cmd_variance(args: &mut Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
-    use scale_llm::coordinator::sweep::{lr_sweep, paper_lr_grid};
+/// Comma-separated option value -> trimmed entries (absent key -> empty).
+fn csv_list(args: &mut Args, key: &str) -> Vec<String> {
+    args.get_or(key, "")
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(String::from)
+        .collect()
+}
+
+/// `scale sweep`: the concurrent multi-trial engine. Axes left empty
+/// collapse to the base value, so `--lrs`-only is the classic LR sweep
+/// and `--optimizers`-only is a Table-13-style face-off — in which
+/// case, unless `--lr`/`--lrs` pins one explicitly, every optimizer
+/// trains at its own tuned default LR (the same resolution `table 13`
+/// and `run_zoo` use), not at one shared base LR.
+fn cmd_sweep_grid(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::coordinator::sweep::{report_json, SweepSpec};
     let dir = artifact_dir(args);
     let size = args.get_or("size", "s130m");
     let optimizer = args.get_or("optimizer", "scale");
     let steps = args.get_usize("steps", 100)?;
+    let shards = args.get_usize("shards", 4)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let eval_batches = args.get_usize("eval-batches", 8)?;
+    let max_concurrent = args.get_usize("max-concurrent", 0)?;
+    let lr_arg = args.get("lr").map(str::to_string);
+    let lr = match &lr_arg {
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| anyhow::anyhow!("--lr expects a number, got {v:?}"))?,
+        None => harness::default_lr(&optimizer),
+    };
+    let lrs: Vec<f64> = csv_list(args, "lrs")
+        .iter()
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--lrs expects numbers, got {s:?}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let optimizers = csv_list(args, "optimizers");
+    let seeds: Vec<u64> = csv_list(args, "seeds")
+        .iter()
+        .map(|s| {
+            s.parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("--seeds expects integers, got {s:?}"))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let json = args.flag("json");
+    args.finish()?;
+
+    // face-off semantics: with an optimizer axis and no explicit LR,
+    // each optimizer resolves its own tuned default per trial
+    let lr_for = if lr_arg.is_none() && lrs.is_empty() {
+        Some(harness::default_lr as fn(&str) -> f64)
+    } else {
+        None
+    };
+    let engine = Engine::new(&dir)?;
+    let base = TrainOptions {
+        size,
+        optimizer,
+        steps,
+        base_lr: lr,
+        schedule: None,
+        shards,
+        seed,
+        eval_every: 0,
+        eval_batches,
+        log_every: 0,
+        quiet: true,
+    };
+    let spec = SweepSpec {
+        base,
+        lrs,
+        optimizers,
+        seeds,
+        lr_for,
+        max_concurrent,
+    };
+    // fail fast on a typo'd optimizer before any trial trains
+    for opt in &spec.optimizers {
+        engine.manifest.artifact(&format!("update_{opt}_{}", spec.base.size))?;
+    }
+    let pts = spec.run(&engine)?;
+    if json {
+        println!("{}", report_json(&spec, &pts).to_string());
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!("sweep — {} trials ({steps} steps, size {})", pts.len(), spec.base.size),
+        &["optimizer", "lr", "seed", "final ppl", "diverged"],
+    );
+    for p in &pts {
+        t.row(vec![
+            p.optimizer.clone(),
+            format!("{:.0e}", p.lr),
+            format!("{}", p.seed),
+            harness::ppl_cell(p.ppl),
+            if p.diverged { "yes".into() } else { "no".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::coordinator::sweep::{paper_lr_grid, SweepSpec};
+    let dir = artifact_dir(args);
+    let size = args.get_or("size", "s130m");
+    let optimizer = args.get_or("optimizer", "scale");
+    let steps = args.get_usize("steps", 100)?;
+    let max_concurrent = args.get_usize("max-concurrent", 0)?;
     args.finish()?;
     let engine = Engine::new(&dir)?;
     let base = TrainOptions {
@@ -268,7 +383,9 @@ fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
         quiet: true,
         ..TrainOptions::default()
     };
-    let pts = lr_sweep(&engine, &base, &paper_lr_grid())?;
+    let mut spec = SweepSpec::lr_grid(base, &paper_lr_grid());
+    spec.max_concurrent = max_concurrent;
+    let pts = spec.run(&engine)?;
     let mut t = Table::new(
         &format!("LR sweep — {optimizer} ({steps} steps)"),
         &["lr", "final ppl", "diverged"],

@@ -9,8 +9,16 @@
 //! task environments, exactly like `std::thread::scope` but without the
 //! per-call thread spawns. `coordinator::Trainer` (shard fwd/bwd, batch
 //! tokenization, ring refill), `coordinator::ddp::tree_all_reduce`, the
-//! `optim` `*_par` kernels, `exec::gemm`, and the per-(batch, head)
-//! attention fan-out in `exec::model` all dispatch through one pool.
+//! `optim` `*_par` kernels, `exec::gemm`, the per-(batch, head)
+//! attention fan-out in `exec::model`, and whole sweep trials
+//! (`coordinator::sweep` — one training per job, its per-step fan-outs
+//! as nested batches) all dispatch through one pool.
+//!
+//! Nesting is safe by construction: jobs are batch-tagged, and a
+//! waiting submitter only ever drains jobs from *its own* batch, so a
+//! job that dispatches a nested batch can always complete that batch
+//! itself even when every worker is busy — trial-level and intra-trial
+//! parallelism compose without deadlock or head-of-line blocking.
 //!
 //! # Determinism guarantees
 //!

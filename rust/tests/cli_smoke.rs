@@ -45,7 +45,7 @@ fn runtime_available() -> bool {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["help"]);
     assert!(ok);
-    for cmd in ["train", "table", "figure", "memory-report", "sweep-lr"] {
+    for cmd in ["train", "table", "figure", "memory-report", "sweep", "sweep-lr"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -116,6 +116,37 @@ fn train_and_eval_checkpoint() {
     assert!(ok2, "{text2}");
     assert!(text2.contains("step 5"));
     std::fs::remove_file(ckpt).ok();
+}
+
+#[test]
+fn sweep_subcommand_emits_parseable_json() {
+    if !runtime_available() {
+        return;
+    }
+    // the native manifest always carries the mix_* ablations; a real
+    // (xla) manifest may not, so that leg sticks to the universal zoo
+    let size = if cfg!(feature = "xla") { "s60m" } else { "tiny" };
+    let optimizers = if cfg!(feature = "xla") {
+        "scale,adam"
+    } else {
+        "scale,mix_larger_dim"
+    };
+    let (ok, text) = run(&[
+        "sweep", "--size", size, "--optimizers", optimizers, "--lrs", "1e-2,1e-3",
+        "--steps", "2", "--shards", "1", "--eval-batches", "2", "--json",
+    ]);
+    assert!(ok, "{text}");
+    let doc = scale_llm::util::json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("sweep --json must print valid JSON ({e}):\n{text}"));
+    assert_eq!(doc.get("report").unwrap().as_str(), Some("sweep"));
+    assert_eq!(doc.get("trials").unwrap().as_usize(), Some(4));
+    let pts = doc.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(pts.len(), 4);
+    for p in pts {
+        assert!(p.get("optimizer").unwrap().as_str().is_some());
+        assert!(p.get("lr").unwrap().as_f64().is_some());
+        assert!(p.get("diverged").unwrap().as_bool().is_some());
+    }
 }
 
 #[test]

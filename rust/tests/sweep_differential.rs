@@ -1,0 +1,158 @@
+//! Differential suite for the concurrent sweep engine: trials
+//! dispatched on a worker pool must produce bit-identical `SweepPoint`
+//! vectors to the sequential reference loop — for every pool size,
+//! including diverged trials slotted as `ppl = inf` — with zero thread
+//! spawns outside pre-built pools.
+//!
+//! This lives in its own test target (cargo runs test binaries one at a
+//! time) so the explicit `WorkerPool` constructions here can never race
+//! `integration.rs`'s process-global spawn-counter assertions.
+
+use scale_llm::coordinator::sweep::{lr_sweep, SweepPoint, SweepSpec};
+use scale_llm::coordinator::TrainOptions;
+use scale_llm::parallel::{self, WorkerPool};
+use scale_llm::runtime::Engine;
+
+/// Engine plus the smallest trainable size its manifest offers.
+fn engine() -> Option<(Engine, String)> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let eng = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping sweep test (run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    for s in ["tiny", "s60m"] {
+        if eng.manifest.sizes.contains_key(s) {
+            return Some((eng, s.to_string()));
+        }
+    }
+    eprintln!("skipping sweep test (no smoke-able size in manifest)");
+    None
+}
+
+fn base(size: &str, optimizer: &str, steps: usize) -> TrainOptions {
+    TrainOptions {
+        size: size.into(),
+        optimizer: optimizer.into(),
+        steps,
+        base_lr: 1e-2,
+        schedule: None,
+        shards: 2,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        quiet: true,
+    }
+}
+
+/// Bit-level comparison: f64 fields by `to_bits` so deterministic
+/// non-finite slots (inf, and any NaN ema a diverged run produced)
+/// compare exactly too.
+fn assert_points_bit_identical(got: &[SweepPoint], want: &[SweepPoint], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: trial count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.optimizer, w.optimizer, "{what}: trial {i} optimizer");
+        assert_eq!(g.lr.to_bits(), w.lr.to_bits(), "{what}: trial {i} lr");
+        assert_eq!(g.seed, w.seed, "{what}: trial {i} seed");
+        assert_eq!(g.ppl.to_bits(), w.ppl.to_bits(), "{what}: trial {i} ppl");
+        assert_eq!(
+            g.final_loss_ema.to_bits(),
+            w.final_loss_ema.to_bits(),
+            "{what}: trial {i} final_loss_ema"
+        );
+        assert_eq!(g.diverged, w.diverged, "{what}: trial {i} diverged");
+    }
+}
+
+#[test]
+fn sweep_concurrent_is_bit_identical_to_serial_and_spawn_free() {
+    let Some((eng, sz)) = engine() else { return };
+    // 2 optimizers x 3 LRs x 2 seeds; the 1e12 trials diverge, so the
+    // inf slotting is exercised at every pool size
+    let mut spec = SweepSpec::lr_grid(base(&sz, "scale", 3), &[1e-3, 1e-2, 1e12]);
+    spec.optimizers = vec!["scale".into(), "adam".into()];
+    spec.seeds = vec![0, 1];
+
+    let want = spec.run_serial(&eng).expect("serial sweep");
+    assert_eq!(want.len(), 12);
+    assert!(
+        want.iter().any(|p| p.diverged && p.ppl == f64::INFINITY),
+        "the 1e12 trials must land in the ppl = inf slot"
+    );
+    assert!(want.iter().any(|p| !p.diverged), "sane LRs must converge");
+
+    // all pool construction happens before the spawn snapshot; the
+    // shared pool is warmed by a full run so its lazy init (and the
+    // threshold calibration) is outside the gated region
+    let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)];
+    let shared_first = spec.run(&eng).expect("shared-pool sweep");
+    let spawned = parallel::threads_spawned();
+    for pool in &pools {
+        let got = spec.run_on(&eng, pool).expect("concurrent sweep");
+        assert_points_bit_identical(&got, &want, &format!("{} workers", pool.workers()));
+    }
+    let shared_again = spec.run(&eng).expect("shared-pool sweep (second run)");
+    // the memory cap chunks trials into waves; results must not move
+    let mut capped = spec.clone();
+    capped.max_concurrent = 2;
+    let capped_pts = capped.run(&eng).expect("capped sweep");
+    assert_eq!(
+        parallel::threads_spawned(),
+        spawned,
+        "sweeps must never spawn threads outside pre-built pools"
+    );
+    assert_points_bit_identical(&shared_first, &want, "shared pool (first run)");
+    assert_points_bit_identical(&shared_again, &want, "shared pool (second run)");
+    assert_points_bit_identical(&capped_pts, &want, "max_concurrent = 2");
+}
+
+#[test]
+fn lr_sweep_entry_point_matches_sequential_reference() {
+    let Some((eng, sz)) = engine() else { return };
+    let b = base(&sz, "scale", 2);
+    let grid = [5e-3, 1e-2, 3e-2];
+    let spec = SweepSpec::lr_grid(b.clone(), &grid);
+    let want = spec.run_serial(&eng).expect("serial reference");
+    let got = lr_sweep(&eng, &b, &grid).expect("lr_sweep");
+    assert_points_bit_identical(&got, &want, "lr_sweep");
+    // slotting preserves grid order regardless of completion order
+    let lrs: Vec<f64> = got.iter().map(|p| p.lr).collect();
+    assert_eq!(lrs, grid.to_vec());
+}
+
+#[test]
+fn optimizer_axis_sweep_runs_the_mix_rules_natively() {
+    // the Table-13 acceptance path: SCALE plus all four mix_* ablations
+    // as one optimizer-axis sweep, end to end on the native executor
+    let Some((eng, sz)) = engine() else { return };
+    let mixes = [
+        "mix_col_last_row_rest",
+        "mix_row_first_col_rest",
+        "mix_larger_dim",
+        "mix_row_last_col_rest",
+    ];
+    let missing = mixes
+        .iter()
+        .any(|o| eng.manifest.artifact(&format!("update_{o}_{sz}")).is_err());
+    if missing {
+        eprintln!("skipping mix sweep (manifest lacks mix_* update artifacts)");
+        return;
+    }
+    let mut all = vec!["scale"];
+    all.extend_from_slice(&mixes);
+    let spec = SweepSpec::optimizer_grid(base(&sz, "scale", 2), &all);
+    let pts = spec.run(&eng).expect("optimizer-axis sweep");
+    assert_eq!(pts.len(), 5);
+    assert_eq!(pts[0].optimizer, "scale");
+    assert_eq!(pts[1].optimizer, "mix_col_last_row_rest");
+    for p in &pts {
+        assert!(
+            p.ppl.is_finite() && !p.diverged,
+            "{}: norm-bounded rule diverged at the shared tiny LR",
+            p.optimizer
+        );
+    }
+}
