@@ -188,6 +188,28 @@ fn attn_ab_row_forced(engine: &Engine, size: &str) -> anyhow::Result<Json> {
     ]))
 }
 
+/// Durability-tax audit: with no failpoint spec installed, a
+/// `fault::fires` check must be one relaxed atomic load — zero heap
+/// allocations and zero thread spawns across a million calls. (The
+/// trainer hot path runs one per step; this gate keeps the injection
+/// hooks free when disarmed.)
+fn failpoint_disabled_audit() -> (u64, f64) {
+    assert!(
+        !scale_llm::fault::armed(),
+        "throughput bench must run with failpoints disarmed"
+    );
+    let iters = 1_000_000u64;
+    let spawned0 = parallel::threads_spawned();
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(scale_llm::fault::fires(std::hint::black_box("grad_nan")));
+    }
+    let ns_per_call = t0.elapsed().as_secs_f64() * 1e9 / iters as f64;
+    let violations = (allocs() - a0) + (parallel::threads_spawned() - spawned0) as u64;
+    (violations, ns_per_call)
+}
+
 struct TrainRow {
     size: String,
     shards: usize,
@@ -275,6 +297,13 @@ fn main() -> anyhow::Result<()> {
     println!("\n== executor steady state (zero-alloc gate) ==");
     let (exec_allocs, fwd_ms, upd_ms) = exec_steady_state(&engine)?;
 
+    println!("\n== disarmed failpoint overhead (zero-alloc gate) ==");
+    let (fp_violations, fp_ns) = failpoint_disabled_audit();
+    println!(
+        "fault::fires with no spec installed: {fp_ns:.2} ns/call, \
+         {fp_violations} allocs+spawns over 1M calls (must be 0)"
+    );
+
     println!("\n== attention pair dispatch A/B (calibrated thresholds) ==");
     let attn_rows = vec![attn_ab_row(&engine, "tiny")?, attn_ab_row(&engine, "s60m")?];
 
@@ -308,6 +337,8 @@ fn main() -> anyhow::Result<()> {
         ("exec_fwd_ms", Json::num(fwd_ms)),
         ("exec_update_ms", Json::num(upd_ms)),
         ("exec_steady_allocs", Json::num(exec_allocs as f64)),
+        ("failpoint_check_ns", Json::num(fp_ns)),
+        ("failpoint_disabled_allocs", Json::num(fp_violations as f64)),
         ("train_spawns", Json::num(total_spawns as f64)),
         ("attention_ab", Json::Arr(attn_rows)),
         ("rows", Json::Arr(row_json)),
@@ -324,6 +355,10 @@ fn main() -> anyhow::Result<()> {
         "  zero thread spawns across training loops: {} ({total_spawns} spawned)",
         if total_spawns == 0 { "PASS" } else { "FAIL" }
     );
+    println!(
+        "  disarmed failpoints allocation- and spawn-free: {} ({fp_violations})",
+        if fp_violations == 0 { "PASS" } else { "FAIL" }
+    );
     anyhow::ensure!(
         exec_allocs == 0,
         "steady-state executor performed {exec_allocs} heap allocations (expected 0)"
@@ -331,6 +366,10 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         total_spawns == 0,
         "training loops spawned {total_spawns} threads (expected 0)"
+    );
+    anyhow::ensure!(
+        fp_violations == 0,
+        "disarmed failpoint checks performed {fp_violations} allocations/spawns (expected 0)"
     );
     Ok(())
 }

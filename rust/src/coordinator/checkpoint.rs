@@ -1,19 +1,46 @@
-//! Binary checkpointing: params + optimizer state + run position.
+//! Binary checkpointing: params + optimizer state + run position, with
+//! durability guarantees (see docs/ARCHITECTURE.md "Durability & fault
+//! model").
 //!
-//! Format (little-endian):
-//!   magic "SCLK" | u32 version | str size | str optimizer | u64 step |
-//!   u32 n_tensors | n x ( str name | u32 ndims | u64 dims... | f32 data... )
+//! Format v2 (little-endian):
+//!   magic "SCLK" | u32 version=2
+//!   | [ str size | str optimizer | u64 step | u32 n_tensors ] u32 crc
+//!   | n x ( [ str name | u32 ndims | u64 dims... | f32 data... ] u32 crc )
+//! Each bracketed region is followed by its own CRC-32 (ISO-HDLC), so a
+//! torn write or bit rot is caught at load time instead of resuming
+//! from garbage. Strings are u32-length-prefixed UTF-8.
 //!
-//! Strings are u32-length-prefixed UTF-8. Resume must be bit-exact: the
-//! integration suite checks train(2k) == train(k) + resume(k).
+//! Saves are atomic: the bytes go to `<path>.tmp`, are fsynced, and are
+//! renamed over `<path>` only once complete — a crash mid-save can tear
+//! the `.tmp` but never an existing snapshot. Version 1 (no CRCs, no
+//! atomic write) is still loadable; [`Checkpoint::save_v1`] keeps the
+//! legacy writer around so that compatibility stays testable.
+//!
+//! The loader is hardened against hostile or corrupt headers: tensor
+//! count, rank, and dims are bounded, and every payload is validated
+//! against the bytes actually left in the file *before* any allocation.
+//!
+//! [`CheckpointStore`] manages a run directory of `step_XXXXXXXX.ckpt`
+//! snapshots: keep-last-k retention, stale-`.tmp` cleanup, and
+//! quarantine-with-fallback on corrupt snapshots. Resume must be
+//! bit-exact: the integration suite checks train(2k) == train(k) +
+//! resume(k), and the chaos suite (rust/tests/chaos.rs) checks the
+//! same across injected crashes.
 
 use std::io::{Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::runtime::Tensor;
+use crate::util::crc::Crc32;
 
 const MAGIC: &[u8; 4] = b"SCLK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// Hostile-header bounds: no real snapshot comes near these, and they
+/// keep a corrupt length field from driving a multi-GB allocation.
+const MAX_TENSORS: usize = 1 << 20;
+const MAX_DIMS: usize = 8;
+const MAX_DIM: u64 = 1 << 31;
 
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -25,10 +52,67 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
+    /// Atomic v2 save: write `<path>.tmp`, fsync, rename over `path`.
+    /// On error the torn `.tmp` is intentionally left behind (exactly
+    /// what a crash would leave) and `path` is never touched;
+    /// [`CheckpointStore`] sweeps stale `.tmp` files on open and after
+    /// every successful save.
     pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        let path = path.as_ref();
+        if crate::fault::fires("save_io") {
+            return Err(io_fault("failpoint save_io"));
+        }
+        let tmp = tmp_path(path);
+        self.write_v2(&tmp)?;
+        std::fs::rename(&tmp, path)?;
+        sync_dir(path);
+        Ok(())
+    }
+
+    fn write_v2(&self, tmp: &Path) -> anyhow::Result<()> {
+        let file = std::fs::File::create(tmp)?;
+        let mut w = std::io::BufWriter::new(&file);
         w.write_all(MAGIC)?;
         w.write_all(&VERSION.to_le_bytes())?;
+        {
+            let mut cw = CrcWriter::new(&mut w);
+            write_str(&mut cw, &self.size)?;
+            write_str(&mut cw, &self.optimizer)?;
+            cw.write_all(&self.step.to_le_bytes())?;
+            cw.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+            let crc = cw.value();
+            w.write_all(&crc.to_le_bytes())?;
+        }
+        let torn_at = self.tensors.len() / 2;
+        for (i, (name, t)) in self.tensors.iter().enumerate() {
+            if i == torn_at && crate::fault::fires("save_partial") {
+                w.flush()?;
+                return Err(io_fault("failpoint save_partial: simulated crash mid-save"));
+            }
+            let mut cw = CrcWriter::new(&mut w);
+            write_str(&mut cw, name)?;
+            let shape = t.shape();
+            cw.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                cw.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &x in t.f32s() {
+                cw.write_all(&x.to_le_bytes())?;
+            }
+            let crc = cw.value();
+            w.write_all(&crc.to_le_bytes())?;
+        }
+        w.flush()?;
+        file.sync_all()?;
+        Ok(())
+    }
+
+    /// Legacy v1 writer — direct, no CRCs, no atomic rename. Kept only
+    /// so the v1 -> v2-loader compatibility path stays testable.
+    pub fn save_v1(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&1u32.to_le_bytes())?;
         write_str(&mut w, &self.size)?;
         write_str(&mut w, &self.optimizer)?;
         w.write_all(&self.step.to_le_bytes())?;
@@ -44,47 +128,303 @@ impl Checkpoint {
                 w.write_all(&x.to_le_bytes())?;
             }
         }
+        w.flush()?;
         Ok(())
     }
 
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Checkpoint> {
-        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        if crate::fault::fires("load_io") {
+            return Err(io_fault("failpoint load_io"));
+        }
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        let mut r = Counted::new(std::io::BufReader::new(file));
         let mut magic = [0u8; 4];
         r.read_exact(&mut magic)?;
         anyhow::ensure!(&magic == MAGIC, "not a SCALE checkpoint");
         let version = read_u32(&mut r)?;
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
-        let size = read_str(&mut r)?;
-        let optimizer = read_str(&mut r)?;
-        let mut step8 = [0u8; 8];
-        r.read_exact(&mut step8)?;
-        let step = u64::from_le_bytes(step8);
-        let n = read_u32(&mut r)? as usize;
-        let mut tensors = Vec::with_capacity(n);
-        for _ in 0..n {
-            let name = read_str(&mut r)?;
-            let ndims = read_u32(&mut r)? as usize;
-            let mut shape = Vec::with_capacity(ndims);
-            for _ in 0..ndims {
-                let mut d8 = [0u8; 8];
-                r.read_exact(&mut d8)?;
-                shape.push(u64::from_le_bytes(d8) as usize);
-            }
-            let numel: usize = shape.iter().product();
-            let mut data = vec![0f32; numel];
-            let mut buf = vec![0u8; numel * 4];
-            r.read_exact(&mut buf)?;
-            for (i, c) in buf.chunks_exact(4).enumerate() {
-                data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
-            }
-            tensors.push((name, Tensor::from_f32(&shape, data)));
+        match version {
+            1 => load_body_v1(&mut r, file_len),
+            2 => load_body_v2(&mut r, file_len),
+            v => anyhow::bail!("unsupported checkpoint version {v}"),
         }
-        Ok(Checkpoint {
-            size,
-            optimizer,
-            step,
-            tensors,
-        })
+    }
+}
+
+fn load_body_v2<R: Read>(r: &mut Counted<R>, file_len: u64) -> anyhow::Result<Checkpoint> {
+    r.reset_crc();
+    let size = read_str(r)?;
+    let optimizer = read_str(r)?;
+    let step = read_u64(r)?;
+    let n = read_u32(r)? as usize;
+    let computed = r.crc();
+    let stored = read_u32(r)?;
+    anyhow::ensure!(computed == stored, "checkpoint header corrupt (crc mismatch)");
+    anyhow::ensure!(n <= MAX_TENSORS, "absurd tensor count {n}");
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        r.reset_crc();
+        let name = read_str(r)?;
+        let shape = read_shape(r, &name)?;
+        let data = read_payload(r, &shape, file_len, &name)?;
+        let computed = r.crc();
+        let stored = read_u32(r)?;
+        anyhow::ensure!(computed == stored, "tensor {name:?} corrupt (crc mismatch)");
+        tensors.push((name, Tensor::from_f32(&shape, data)));
+    }
+    Ok(Checkpoint { size, optimizer, step, tensors })
+}
+
+fn load_body_v1<R: Read>(r: &mut Counted<R>, file_len: u64) -> anyhow::Result<Checkpoint> {
+    let size = read_str(r)?;
+    let optimizer = read_str(r)?;
+    let step = read_u64(r)?;
+    let n = read_u32(r)? as usize;
+    anyhow::ensure!(n <= MAX_TENSORS, "absurd tensor count {n}");
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name = read_str(r)?;
+        let shape = read_shape(r, &name)?;
+        let data = read_payload(r, &shape, file_len, &name)?;
+        tensors.push((name, Tensor::from_f32(&shape, data)));
+    }
+    Ok(Checkpoint { size, optimizer, step, tensors })
+}
+
+fn read_shape<R: Read>(r: &mut Counted<R>, name: &str) -> anyhow::Result<Vec<usize>> {
+    let ndims = read_u32(r)? as usize;
+    anyhow::ensure!(ndims <= MAX_DIMS, "tensor {name:?}: absurd rank {ndims}");
+    let mut shape = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        let d = read_u64(r)?;
+        anyhow::ensure!(d <= MAX_DIM, "tensor {name:?}: absurd dim {d}");
+        shape.push(d as usize);
+    }
+    Ok(shape)
+}
+
+/// Read a tensor payload, validating the claimed byte count against
+/// what the file actually still holds *before* allocating anything.
+fn read_payload<R: Read>(
+    r: &mut Counted<R>,
+    shape: &[usize],
+    file_len: u64,
+    name: &str,
+) -> anyhow::Result<Vec<f32>> {
+    let numel = shape
+        .iter()
+        .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+        .ok_or_else(|| anyhow::anyhow!("tensor {name:?}: element count overflows"))?;
+    let bytes = numel
+        .checked_mul(4)
+        .ok_or_else(|| anyhow::anyhow!("tensor {name:?}: byte count overflows"))?;
+    let remaining = file_len.saturating_sub(r.count());
+    anyhow::ensure!(
+        bytes as u64 <= remaining,
+        "tensor {name:?}: payload of {bytes} bytes exceeds the {remaining} left in the file"
+    );
+    let mut data = vec![0f32; numel];
+    let mut chunk = [0u8; 4096];
+    let mut idx = 0;
+    while idx < numel {
+        let take = ((numel - idx) * 4).min(chunk.len());
+        let buf = &mut chunk[..take];
+        r.read_exact(buf)?;
+        for c in buf.chunks_exact(4) {
+            data[idx] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            idx += 1;
+        }
+    }
+    Ok(data)
+}
+
+/// Directory of retained snapshots (`step_XXXXXXXX.ckpt`): atomic
+/// saves, keep-last-k pruning, stale-`.tmp` cleanup, and quarantine
+/// with fallback when the newest snapshot turns out corrupt.
+#[derive(Debug, Clone)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a checkpoint directory and sweep any
+    /// stale `.tmp` leftovers from interrupted saves. `keep` is clamped
+    /// to at least 1.
+    pub fn open(dir: impl Into<PathBuf>, keep: usize) -> anyhow::Result<CheckpointStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        let store = CheckpointStore { dir, keep: keep.max(1) };
+        store.clean_tmp();
+        Ok(store)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, step: u64) -> PathBuf {
+        self.dir.join(format!("step_{:08}.ckpt", step))
+    }
+
+    /// Atomically persist `ckpt` under its step name, then prune to the
+    /// newest `keep` snapshots and sweep stale `.tmp` files.
+    pub fn save(&self, ckpt: &Checkpoint) -> anyhow::Result<PathBuf> {
+        let path = self.path_for(ckpt.step);
+        ckpt.save(&path)?;
+        self.clean_tmp();
+        let mut steps = self.list()?;
+        while steps.len() > self.keep {
+            let (_, old) = steps.remove(0);
+            std::fs::remove_file(old).ok();
+        }
+        Ok(path)
+    }
+
+    /// All snapshots by ascending step. Files not matching the strict
+    /// `step_<digits>.ckpt` naming — `.tmp` leftovers, `.corrupt`
+    /// quarantines, anything else — are ignored.
+    pub fn list(&self) -> anyhow::Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(step) = parse_step(name) {
+                out.push((step, entry.path()));
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Load the newest loadable snapshot. One that fails to load (torn
+    /// write, bit rot, injected IO fault) is quarantined — renamed to
+    /// `<name>.corrupt` — and the scan falls back to the next-newest.
+    /// `None` means the directory holds no loadable snapshot.
+    pub fn latest(&self) -> anyhow::Result<Option<(u64, Checkpoint)>> {
+        let mut steps = self.list()?;
+        steps.reverse();
+        for (step, path) in steps {
+            match Checkpoint::load(&path) {
+                Ok(ck) => return Ok(Some((step, ck))),
+                Err(e) => {
+                    let mut q = path.file_name().unwrap_or_default().to_os_string();
+                    q.push(".corrupt");
+                    let qpath = path.with_file_name(q);
+                    eprintln!(
+                        "checkpoint {}: {e}; quarantined as {}",
+                        path.display(),
+                        qpath.display()
+                    );
+                    std::fs::rename(&path, &qpath).ok();
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    fn clean_tmp(&self) {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else { return };
+        for entry in rd.flatten() {
+            if entry.file_name().to_string_lossy().ends_with(".ckpt.tmp") {
+                std::fs::remove_file(entry.path()).ok();
+            }
+        }
+    }
+}
+
+fn parse_step(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("step_")?.strip_suffix(".ckpt")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Best-effort fsync of the directory holding `path`, so the rename
+/// that published a snapshot survives power loss too.
+fn sync_dir(path: &Path) {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    if let Ok(d) = std::fs::File::open(parent) {
+        let _ = d.sync_all();
+    }
+}
+
+fn io_fault(msg: &str) -> anyhow::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, msg.to_string()).into()
+}
+
+/// Tee writer: forwards to the inner writer while accumulating the
+/// CRC of everything written — frames one checksummed region.
+struct CrcWriter<'a, W: Write> {
+    w: &'a mut W,
+    crc: Crc32,
+}
+
+impl<'a, W: Write> CrcWriter<'a, W> {
+    fn new(w: &'a mut W) -> Self {
+        CrcWriter { w, crc: Crc32::new() }
+    }
+
+    fn value(&self) -> u32 {
+        self.crc.value()
+    }
+}
+
+impl<W: Write> Write for CrcWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.w.write(buf)?;
+        self.crc.update(&buf[..n]);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.w.flush()
+    }
+}
+
+/// Tee reader: counts bytes consumed (for payload-vs-file-length
+/// validation) and accumulates the CRC of the current region.
+struct Counted<R> {
+    inner: R,
+    crc: Crc32,
+    count: u64,
+}
+
+impl<R: Read> Counted<R> {
+    fn new(inner: R) -> Self {
+        Counted { inner, crc: Crc32::new(), count: 0 }
+    }
+
+    fn reset_crc(&mut self) {
+        self.crc = Crc32::new();
+    }
+
+    fn crc(&self) -> u32 {
+        self.crc.value()
+    }
+
+    fn count(&self) -> u64 {
+        self.count
+    }
+}
+
+impl<R: Read> Read for Counted<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.crc.update(&buf[..n]);
+        self.count += n as u64;
+        Ok(n)
     }
 }
 
@@ -97,6 +437,12 @@ fn read_u32<R: Read>(r: &mut R) -> anyhow::Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
 }
 
 fn read_str<R: Read>(r: &mut R) -> anyhow::Result<String> {
@@ -115,6 +461,10 @@ mod tests {
         std::env::temp_dir().join(format!("scale_ckpt_{name}_{}", std::process::id()))
     }
 
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("scale_store_{name}_{}", std::process::id()))
+    }
+
     fn sample() -> Checkpoint {
         Checkpoint {
             size: "s60m".into(),
@@ -128,20 +478,45 @@ mod tests {
         }
     }
 
+    fn assert_same(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.size, b.size);
+        assert_eq!(a.optimizer, b.optimizer);
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.tensors.len(), b.tensors.len());
+        for ((an, at), (bn, bt)) in a.tensors.iter().zip(&b.tensors) {
+            assert_eq!(an, bn);
+            assert_eq!(at, bt);
+        }
+    }
+
     #[test]
     fn roundtrip_exact() {
         let p = tmp("rt");
         let c = sample();
         c.save(&p).unwrap();
         let back = Checkpoint::load(&p).unwrap();
-        assert_eq!(back.size, c.size);
-        assert_eq!(back.optimizer, c.optimizer);
-        assert_eq!(back.step, c.step);
-        assert_eq!(back.tensors.len(), c.tensors.len());
-        for ((an, at), (bn, bt)) in c.tensors.iter().zip(&back.tensors) {
-            assert_eq!(an, bn);
-            assert_eq!(at, bt);
-        }
+        assert_same(&c, &back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn v1_roundtrips_through_v2_loader() {
+        let p = tmp("v1rt");
+        let c = sample();
+        c.save_v1(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[4..8], &1u32.to_le_bytes(), "save_v1 must stamp version 1");
+        let back = Checkpoint::load(&p).unwrap();
+        assert_same(&c, &back);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn save_leaves_no_tmp_behind() {
+        let p = tmp("atomic");
+        sample().save(&p).unwrap();
+        assert!(!tmp_path(&p).exists(), "successful save must rename its .tmp away");
+        assert!(Checkpoint::load(&p).is_ok());
         std::fs::remove_file(p).ok();
     }
 
@@ -161,5 +536,129 @@ mod tests {
         std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
         assert!(Checkpoint::load(&p).is_err());
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_flipped_payload_bit() {
+        let p = tmp("flip");
+        sample().save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("crc") || err.contains("corrupt") || err.contains("absurd"), "{err}");
+        std::fs::remove_file(p).ok();
+    }
+
+    /// A syntactically valid v1 prefix the hostile-header tests extend.
+    fn v1_prefix(n_tensors: u32) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&4u32.to_le_bytes());
+        b.extend_from_slice(b"tiny");
+        b.extend_from_slice(&5u32.to_le_bytes());
+        b.extend_from_slice(b"scale");
+        b.extend_from_slice(&7u64.to_le_bytes());
+        b.extend_from_slice(&n_tensors.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn hostile_headers_bounded_before_allocation() {
+        // absurd rank
+        let p = tmp("rank");
+        let mut b = v1_prefix(1);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(b"t");
+        b.extend_from_slice(&(u32::MAX).to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        assert!(Checkpoint::load(&p).unwrap_err().to_string().contains("absurd rank"));
+
+        // absurd single dim
+        let mut b = v1_prefix(1);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(b"t");
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        assert!(Checkpoint::load(&p).unwrap_err().to_string().contains("absurd dim"));
+
+        // dims individually legal but the claimed payload dwarfs the
+        // file: must be rejected before any buffer is allocated
+        let mut b = v1_prefix(1);
+        b.extend_from_slice(&1u32.to_le_bytes());
+        b.extend_from_slice(b"t");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&(1u64 << 20).to_le_bytes());
+        b.extend_from_slice(&(1u64 << 10).to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        assert!(Checkpoint::load(&p).unwrap_err().to_string().contains("exceeds"));
+
+        // absurd tensor count
+        let b = v1_prefix(u32::MAX);
+        std::fs::write(&p, &b).unwrap();
+        assert!(Checkpoint::load(&p).unwrap_err().to_string().contains("absurd tensor count"));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn store_retention_latest_and_quarantine() {
+        let dir = tmp_dir("ret");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 2).unwrap();
+        for step in [3u64, 6, 9] {
+            let mut c = sample();
+            c.step = step;
+            store.save(&c).unwrap();
+        }
+        let steps: Vec<u64> = store.list().unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, [6, 9], "keep-last-2 must prune step 3");
+        let (step, ck) = store.latest().unwrap().expect("latest");
+        assert_eq!((step, ck.step), (9, 9));
+
+        // corrupt the newest: latest() must quarantine it and fall back
+        let newest = store.path_for(9);
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (step, ck) = store.latest().unwrap().expect("fallback");
+        assert_eq!((step, ck.step), (6, 6));
+        assert!(!newest.exists(), "corrupt snapshot must be moved aside");
+        assert!(
+            newest.with_file_name("step_00000009.ckpt.corrupt").exists(),
+            "corrupt snapshot must be quarantined, not deleted"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_ignores_and_cleans_stale_tmp() {
+        let dir = tmp_dir("tmpclean");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        let mut c = sample();
+        c.step = 4;
+        store.save(&c).unwrap();
+        // a torn write from a crashed process
+        let stale = dir.join("step_00000008.ckpt.tmp");
+        std::fs::write(&stale, b"torn").unwrap();
+        let (step, _) = store.latest().unwrap().expect("latest");
+        assert_eq!(step, 4, "a .tmp leftover must never be picked up as a snapshot");
+        // re-opening the directory sweeps it
+        CheckpointStore::open(&dir, 3).unwrap();
+        assert!(!stale.exists(), "stale .tmp must be cleaned on open");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_empty_dir_has_no_latest() {
+        let dir = tmp_dir("empty");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        assert!(store.latest().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -61,6 +61,23 @@ impl Metrics {
         });
     }
 
+    /// Drop every record past `step` and rebuild the EMA by replaying
+    /// the retained losses through the exact `record_step` fold, so a
+    /// guard rollback leaves metrics bit-identical to a run that never
+    /// took the doomed steps. Used by `Trainer::train_guarded`.
+    pub fn truncate_to_step(&mut self, step: usize) {
+        self.steps.retain(|s| s.step <= step);
+        self.evals.retain(|e| e.step <= step);
+        let mut ema = None;
+        for s in &self.steps {
+            ema = Some(match ema {
+                None => s.loss,
+                Some(e) => (1.0 - self.ema_alpha) * e + self.ema_alpha * s.loss,
+            });
+        }
+        self.ema_loss = ema;
+    }
+
     pub fn record_eval(&mut self, step: usize, loss: f64) {
         self.evals.push(EvalRecord {
             step,
@@ -178,6 +195,30 @@ mod tests {
         let text = std::fs::read_to_string(&dir).unwrap();
         assert!(text.contains("step,loss") && text.contains("eval_ppl"));
         std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn truncate_replays_ema_bit_exactly() {
+        let losses = [9.3, 7.1, 6.6, 6.2, 5.9, 5.7];
+        let mut full = Metrics::new();
+        let mut short = Metrics::new();
+        for (i, &l) in losses.iter().enumerate() {
+            full.record_step(i + 1, l, 1e-3, 64);
+            if i < 3 {
+                short.record_step(i + 1, l, 1e-3, 64);
+            }
+        }
+        full.record_eval(5, 5.9);
+        full.truncate_to_step(3);
+        assert_eq!(full.steps.len(), 3);
+        assert!(full.evals.is_empty(), "evals past the rollback point must go too");
+        assert_eq!(
+            full.ema_loss.unwrap().to_bits(),
+            short.ema_loss.unwrap().to_bits(),
+            "replayed EMA must be bit-identical to never having taken the dropped steps"
+        );
+        full.truncate_to_step(0);
+        assert!(full.steps.is_empty() && full.ema_loss.is_none());
     }
 
     #[test]

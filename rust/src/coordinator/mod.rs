@@ -35,11 +35,13 @@
 pub mod checkpoint;
 pub mod ddp;
 pub mod metrics;
+pub mod recovery;
 pub mod schedule;
 pub mod sweep;
 pub mod trainer;
 
-pub use checkpoint::Checkpoint;
+pub use checkpoint::{Checkpoint, CheckpointStore};
+pub use recovery::{GuardPolicy, TrainError};
 pub use schedule::Schedule;
-pub use sweep::{SweepPoint, SweepSpec};
+pub use sweep::{SweepPoint, SweepSpec, TrialOutcome};
 pub use trainer::{TrainOptions, Trainer};

@@ -1,0 +1,156 @@
+//! Typed training failures and the divergence-guard policy.
+//!
+//! [`TrainError`] splits "the run is mathematically doomed"
+//! (`Divergence`) from "the disk let us down" (`Io`) from "the executor
+//! itself failed" (`Engine`), so recovery code — `Trainer::train_guarded`
+//! rollback, `sweep` trial retry — classifies failures by variant
+//! instead of string-matching `anyhow` messages. Divergence is
+//! deterministic (same seed, same step, same non-finite value) and is
+//! therefore never blindly re-run: the guard rolls back *with LR
+//! backoff*, and a sweep trial slots it as a diverged point immediately.
+//! Io and panics are treated as transient and retried up to a cap;
+//! Engine errors (bad manifest, missing artifact) fail fast.
+//!
+//! [`GuardPolicy`] configures `Trainer::train_guarded`: where the run's
+//! [`super::checkpoint::CheckpointStore`] lives, the auto-checkpoint
+//! cadence, retention, the total rollback budget, and the LR backoff
+//! applied on every rollback.
+
+use std::fmt;
+use std::path::PathBuf;
+
+/// A classified training failure. Implements `std::error::Error`, so
+/// `?` lifts it into `anyhow::Result` at the CLI/test boundary while
+/// recovery code can still match on the variant.
+#[derive(Debug)]
+pub enum TrainError {
+    /// Non-finite loss or gradients: deterministic, not retryable
+    /// as-is — roll back and shrink the LR, or give up.
+    Divergence { step: usize, what: &'static str },
+    /// Checkpoint save/load failed: transient, worth retrying.
+    Io(anyhow::Error),
+    /// The executor or configuration failed: fail fast.
+    Engine(anyhow::Error),
+}
+
+impl TrainError {
+    pub fn divergence(step: usize, what: &'static str) -> TrainError {
+        TrainError::Divergence { step, what }
+    }
+
+    pub fn io(e: anyhow::Error) -> TrainError {
+        TrainError::Io(e)
+    }
+
+    pub fn engine(e: anyhow::Error) -> TrainError {
+        TrainError::Engine(e)
+    }
+
+    pub fn is_divergence(&self) -> bool {
+        matches!(self, TrainError::Divergence { .. })
+    }
+}
+
+impl fmt::Display for TrainError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrainError::Divergence { step, what } => {
+                write!(f, "divergence at step {step}: {what}")
+            }
+            TrainError::Io(e) => write!(f, "checkpoint io: {e}"),
+            TrainError::Engine(e) => write!(f, "engine: {e}"),
+        }
+    }
+}
+
+// `anyhow::Error` (vendored) is string-backed and does not implement
+// `std::error::Error`, so there is no source() chain to expose here.
+impl std::error::Error for TrainError {}
+
+/// Engine/config failures arrive through `?` from `anyhow` call sites;
+/// IO and divergence are always constructed explicitly.
+impl From<anyhow::Error> for TrainError {
+    fn from(e: anyhow::Error) -> TrainError {
+        TrainError::Engine(e)
+    }
+}
+
+/// Configuration for `Trainer::train_guarded`: auto-checkpoint cadence
+/// plus rollback-on-divergence with LR backoff and a bounded retry
+/// budget.
+#[derive(Debug, Clone)]
+pub struct GuardPolicy {
+    /// Run directory for the `CheckpointStore`.
+    pub dir: PathBuf,
+    /// Auto-checkpoint every N steps (>= 1). A baseline snapshot is
+    /// also taken at step 0 so rollback always has a target.
+    pub checkpoint_every: usize,
+    /// Keep-last-k retention in the store.
+    pub keep_last: usize,
+    /// Total rollbacks allowed across the whole run; the retry after
+    /// which a still-diverging run propagates its `Divergence` error.
+    pub max_retries: usize,
+    /// Multiplied into the trainer's LR scale on every rollback.
+    /// `1.0` keeps the schedule bit-identical (useful when the
+    /// divergence was injected, not earned); `0.5` is the classic
+    /// halving.
+    pub lr_backoff: f64,
+}
+
+impl GuardPolicy {
+    pub fn new(dir: impl Into<PathBuf>) -> GuardPolicy {
+        GuardPolicy {
+            dir: dir.into(),
+            checkpoint_every: 50,
+            keep_last: 3,
+            max_retries: 3,
+            lr_backoff: 0.5,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.checkpoint_every >= 1, "guard: checkpoint_every must be >= 1");
+        anyhow::ensure!(
+            self.lr_backoff.is_finite() && self.lr_backoff > 0.0,
+            "guard: lr_backoff must be a positive finite factor"
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_classification() {
+        let d = TrainError::divergence(7, "non-finite loss");
+        assert!(d.is_divergence());
+        assert_eq!(d.to_string(), "divergence at step 7: non-finite loss");
+        let io = TrainError::io(anyhow::anyhow!("disk on fire"));
+        assert!(io.to_string().contains("checkpoint io"));
+        let eng: TrainError = anyhow::anyhow!("no such artifact").into();
+        assert!(matches!(eng, TrainError::Engine(_)));
+    }
+
+    #[test]
+    fn lifts_into_anyhow() {
+        // the blanket `impl From<E: std::error::Error> for anyhow::Error`
+        // is what lets `?` carry a TrainError out of CLI/test code
+        let e: anyhow::Error = TrainError::divergence(3, "non-finite gradient").into();
+        assert!(e.to_string().contains("divergence at step 3"), "{e}");
+    }
+
+    #[test]
+    fn policy_validation() {
+        let mut p = GuardPolicy::new("ckpts");
+        p.validate().unwrap();
+        p.checkpoint_every = 0;
+        assert!(p.validate().is_err());
+        p.checkpoint_every = 1;
+        p.lr_backoff = 0.0;
+        assert!(p.validate().is_err());
+        p.lr_backoff = f64::NAN;
+        assert!(p.validate().is_err());
+    }
+}

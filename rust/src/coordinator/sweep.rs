@@ -26,14 +26,58 @@
 //! pool; the batch-tagged queue makes that composition deadlock-free
 //! (see [`crate::parallel`]). No sweep path ever spawns a thread — the
 //! trials ride the pool every `Trainer` already uses.
+//!
+//! # Fault handling
+//!
+//! Trial failures are classified ([`TrialOutcome`]), not string-matched:
+//! a deterministic divergence slots as a `diverged` point immediately,
+//! while transient faults — a panic inside the trial job (including
+//! panics re-raised from nested pool batches) or an Io/Engine error
+//! after construction — are retried with a fresh `Trainer` up to
+//! [`SweepSpec::retries`] times and then slotted as `faulted` instead of
+//! aborting the batch. Construction errors (unknown optimizer/size)
+//! still fail fast. Every trial runs inside
+//! `fault::scoped("trial{i}", ..)`, so an injected fault spec like
+//! `trial2/trial_panic@1` targets the same grid point at every pool
+//! size — the chaos suite pins retried-sweep reports bit-identical to
+//! fault-free ones.
 
+use crate::coordinator::recovery::TrainError;
 use crate::coordinator::trainer::{TrainOptions, Trainer};
 use crate::parallel::{self, WorkerPool};
 use crate::runtime::Engine;
 use crate::util::json::Json;
 
+/// Typed classification of how a trial concluded, surfaced in
+/// [`report_json`] as `outcome` (the `diverged` bool stays for
+/// compatibility).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrialOutcome {
+    /// Clean first-attempt finish.
+    Ok,
+    /// Deterministic divergence: typed [`TrainError::Divergence`] or a
+    /// final ppl past the 1e6 bar. Never retried — same seed, same math.
+    Diverged,
+    /// Transient faults exhausted the retry budget; slotted, not fatal.
+    Faulted,
+    /// Finished clean after at least one retry.
+    Retried,
+}
+
+impl TrialOutcome {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TrialOutcome::Ok => "ok",
+            TrialOutcome::Diverged => "diverged",
+            TrialOutcome::Faulted => "faulted",
+            TrialOutcome::Retried => "retried",
+        }
+    }
+}
+
 /// One finished trial. `ppl` and `final_loss_ema` are `f64::INFINITY`
-/// when the run diverged (non-finite loss or past the divergence bar).
+/// when the run diverged (non-finite loss or past the divergence bar)
+/// or faulted past its retry budget.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
     pub optimizer: String,
@@ -42,6 +86,9 @@ pub struct SweepPoint {
     pub ppl: f64,
     pub final_loss_ema: f64,
     pub diverged: bool,
+    pub outcome: TrialOutcome,
+    /// Attempts consumed (1 = no retry was needed).
+    pub attempts: u32,
 }
 
 /// A multi-trial grid over one base configuration. Axes compose: the
@@ -75,6 +122,10 @@ pub struct SweepSpec {
     /// chunking only changes scheduling, and results stay slotted by
     /// trial index.
     pub max_concurrent: usize,
+    /// Retry budget per trial for transient faults (panics, Io/Engine
+    /// errors after construction). `0` = fault once, slot as `faulted`.
+    /// Divergence is never retried.
+    pub retries: usize,
 }
 
 impl SweepSpec {
@@ -86,6 +137,7 @@ impl SweepSpec {
             seeds: Vec::new(),
             lr_for: None,
             max_concurrent: 0,
+            retries: 0,
         }
     }
 
@@ -162,10 +214,17 @@ impl SweepSpec {
     /// resident at once. Lower `max_concurrent` to trade wall-clock for
     /// a smaller bound.
     pub fn run_on(&self, engine: &Engine, pool: &WorkerPool) -> anyhow::Result<Vec<SweepPoint>> {
+        let retries = self.retries;
+        // the scope is keyed by the absolute grid index (not the wave
+        // position), so `trial{i}/...` fault specs target the same grid
+        // point for every pool size and every max_concurrent
         let mut queue: Vec<_> = self
             .trials()
             .into_iter()
-            .map(|t| move || run_trial(engine, t))
+            .enumerate()
+            .map(|(i, t)| {
+                move || crate::fault::scoped(&format!("trial{i}"), || run_trial(engine, t, retries))
+            })
             .collect();
         let cap = if self.max_concurrent == 0 {
             queue.len()
@@ -192,36 +251,87 @@ impl SweepSpec {
     /// returned value is identical either way).
     pub fn run_serial(&self, engine: &Engine) -> anyhow::Result<Vec<SweepPoint>> {
         let mut out = Vec::new();
-        for t in self.trials() {
-            out.push(run_trial(engine, t)?);
+        for (i, t) in self.trials().into_iter().enumerate() {
+            let pt = crate::fault::scoped(&format!("trial{i}"), || {
+                run_trial(engine, t, self.retries)
+            })?;
+            out.push(pt);
         }
         Ok(out)
     }
 }
 
-/// Train one grid point to completion. Divergence (non-finite loss, or
-/// a training error after construction) lands in the `ppl = inf` slot
-/// rather than failing the sweep, exactly like the serial loop always
-/// did; construction errors (unknown optimizer/size) still propagate.
-fn run_trial(engine: &Engine, opts: TrainOptions) -> anyhow::Result<SweepPoint> {
+/// Train one grid point to completion, with bounded retries for
+/// transient faults:
+///
+/// - construction failure (unknown optimizer/size) propagates — a
+///   deterministic config mistake fails the sweep fast;
+/// - divergence (typed, or a finite ppl past the 1e6 bar) slots as a
+///   `diverged` point immediately — replaying deterministic math
+///   cannot help;
+/// - a panic inside the trial job (including panics the pool re-raises
+///   from nested batches) or an Io/Engine error after construction is
+///   retried with a fresh `Trainer` up to `retries` times, then
+///   slotted as `faulted` rather than failing the whole batch.
+fn run_trial(engine: &Engine, opts: TrainOptions, retries: usize) -> anyhow::Result<SweepPoint> {
+    use std::panic::{self, AssertUnwindSafe};
     let (optimizer, lr, seed) = (opts.optimizer.clone(), opts.base_lr, opts.seed);
-    let mut tr = Trainer::new(engine, opts)?;
-    let ppl = match tr.train() {
-        Ok(p) if p.is_finite() => p,
-        _ => f64::INFINITY,
-    };
-    let ema = match tr.metrics.ema_loss {
-        Some(e) if e.is_finite() => e,
-        _ => f64::INFINITY,
-    };
-    Ok(SweepPoint {
-        optimizer,
+    let point = |ppl: f64, ema: f64, outcome: TrialOutcome, attempts: u32| SweepPoint {
+        optimizer: optimizer.clone(),
         lr,
         seed,
         ppl,
         final_loss_ema: ema,
-        diverged: !ppl.is_finite() || ppl > 1e6,
-    })
+        diverged: outcome == TrialOutcome::Diverged,
+        outcome,
+        attempts,
+    };
+    let mut attempts: u32 = 0;
+    loop {
+        attempts += 1;
+        // AssertUnwindSafe: on panic the Trainer and everything it
+        // borrows are dropped inside the closure — nothing partially
+        // mutated crosses back over the unwind boundary
+        type Finished = (Result<f64, TrainError>, Option<f64>);
+        let attempt = panic::catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<Finished> {
+            if crate::fault::fires("trial_panic") {
+                panic!("failpoint trial_panic");
+            }
+            let mut tr = Trainer::new(engine, opts.clone())?;
+            let r = tr.train();
+            Ok((r, tr.metrics.ema_loss))
+        }));
+        match attempt {
+            // construction failed deterministically: fail the sweep fast
+            Ok(Err(e)) => return Err(e),
+            Ok(Ok((Ok(p), ema))) => {
+                let ppl = if p.is_finite() { p } else { f64::INFINITY };
+                let ema = match ema {
+                    Some(e) if e.is_finite() => e,
+                    _ => f64::INFINITY,
+                };
+                let outcome = if !ppl.is_finite() || ppl > 1e6 {
+                    TrialOutcome::Diverged
+                } else if attempts > 1 {
+                    TrialOutcome::Retried
+                } else {
+                    TrialOutcome::Ok
+                };
+                return Ok(point(ppl, ema, outcome, attempts));
+            }
+            Ok(Ok((Err(TrainError::Divergence { .. }), _))) => {
+                let o = TrialOutcome::Diverged;
+                return Ok(point(f64::INFINITY, f64::INFINITY, o, attempts));
+            }
+            // transient — retry with a fresh Trainer, then slot
+            Ok(Ok((Err(_), _))) | Err(_) => {
+                if attempts > retries as u32 {
+                    let o = TrialOutcome::Faulted;
+                    return Ok(point(f64::INFINITY, f64::INFINITY, o, attempts));
+                }
+            }
+        }
+    }
 }
 
 /// Train `base` once per learning rate (concurrently, on the shared
@@ -272,6 +382,8 @@ pub fn report_json(spec: &SweepSpec, points: &[SweepPoint]) -> Json {
                 ("ppl", num_or_null(p.ppl)),
                 ("final_loss_ema", num_or_null(p.final_loss_ema)),
                 ("diverged", Json::Bool(p.diverged)),
+                ("outcome", Json::str(p.outcome.as_str())),
+                ("attempts", Json::num(p.attempts as f64)),
             ])
         })
         .collect();
@@ -360,6 +472,8 @@ mod tests {
                 ppl: f64::INFINITY,
                 final_loss_ema: f64::INFINITY,
                 diverged: true,
+                outcome: TrialOutcome::Diverged,
+                attempts: 1,
             },
             SweepPoint {
                 optimizer: "adam".into(),
@@ -368,6 +482,8 @@ mod tests {
                 ppl: 2.0,
                 final_loss_ema: 0.7,
                 diverged: false,
+                outcome: TrialOutcome::Retried,
+                attempts: 2,
             },
         ];
         let text = report_json(&spec, &pts).to_string();
@@ -385,5 +501,17 @@ mod tests {
             Some("1152921504606846976")
         );
         assert_eq!(arr[1].get("ppl").unwrap().as_f64(), Some(2.0));
+        // typed outcomes ride along with the legacy diverged bool
+        assert_eq!(arr[0].get("outcome").unwrap().as_str(), Some("diverged"));
+        assert_eq!(arr[1].get("outcome").unwrap().as_str(), Some("retried"));
+        assert_eq!(arr[1].get("attempts").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn outcome_strings_are_stable() {
+        assert_eq!(TrialOutcome::Ok.as_str(), "ok");
+        assert_eq!(TrialOutcome::Diverged.as_str(), "diverged");
+        assert_eq!(TrialOutcome::Faulted.as_str(), "faulted");
+        assert_eq!(TrialOutcome::Retried.as_str(), "retried");
     }
 }

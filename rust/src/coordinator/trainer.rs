@@ -29,10 +29,20 @@
 //! run's result is owned per trainer (params, state, rings, buffers) or
 //! deterministic per `(size, seed)`, which is why concurrent trials are
 //! bit-identical to serial ones.
+//!
+//! Durability: [`Trainer::train_guarded`] wraps the same loop in a
+//! divergence guard — non-finite loss/gradients roll the run back to
+//! the newest good snapshot in a
+//! [`CheckpointStore`](crate::coordinator::checkpoint::CheckpointStore)
+//! with LR backoff and a bounded retry budget, and auto-checkpoints
+//! land every N steps. Failures are typed
+//! ([`TrainError`](crate::coordinator::recovery::TrainError)) so
+//! callers classify instead of string-matching.
 
-use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::checkpoint::{Checkpoint, CheckpointStore};
 use crate::coordinator::ddp;
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::recovery::{GuardPolicy, TrainError};
 use crate::coordinator::schedule::Schedule;
 use crate::data::{self, Corpus, Tokenizer};
 use crate::exec;
@@ -187,6 +197,12 @@ pub struct Trainer<'e> {
     /// Persistent pool bound at construction (the process-wide shared
     /// pool); every per-step fan-out reuses it — no spawns per step.
     pool: &'static WorkerPool,
+    /// Multiplied into every scheduled LR. Stays `1.0` (a bit-exact
+    /// identity) until a guard rollback applies `GuardPolicy::lr_backoff`.
+    lr_scale: f64,
+    /// Full per-step gradient finiteness scan; enabled only inside
+    /// `train_guarded` so plain runs pay nothing for the guard.
+    guard_checks: bool,
 }
 
 impl<'e> Trainer<'e> {
@@ -248,6 +264,8 @@ impl<'e> Trainer<'e> {
             eval_batch: Tensor::from_i32(&[mb, w], vec![0; mb * w]),
             eval_out: Vec::new(),
             pool: parallel::shared(),
+            lr_scale: 1.0,
+            guard_checks: false,
             opts,
         })
     }
@@ -270,7 +288,14 @@ impl<'e> Trainer<'e> {
     /// shard loss. Steady-state steps reuse every tensor buffer: the
     /// executables write into persistent outputs and the new
     /// params/state are adopted by swap.
-    pub fn train_step(&mut self) -> anyhow::Result<f64> {
+    ///
+    /// A non-finite mean loss (and, in guarded runs, any non-finite
+    /// gradient) aborts the step *before* the optimizer update or the
+    /// metrics record, returning [`TrainError::Divergence`] — params,
+    /// state, and the EMA stay at their last healthy values, which is
+    /// what makes rollback bit-exact. Engine failures surface as
+    /// [`TrainError::Engine`].
+    pub fn train_step(&mut self) -> Result<f64, TrainError> {
         self.step += 1;
         // shard count is fixed at construction (rings + stream positions
         // are sized then); opts.shards is pub, so don't silently trust a
@@ -359,9 +384,33 @@ impl<'e> Trainer<'e> {
         //    gradients land in fwd_outs[0][1..]
         ddp::tree_all_reduce_into(pool, &mut self.fwd_outs, 1);
 
+        // deterministic fault injection (chaos suite / --faults): poison
+        // the reduced gradients exactly where a real overflow would land.
+        // One relaxed atomic load when no failpoint spec is installed.
+        if crate::fault::fires("grad_nan") {
+            for g in self.fwd_outs[0][1..].iter_mut() {
+                g.f32s_mut().fill(f32::NAN);
+            }
+        }
+
+        // divergence guard: bail before the update and before the
+        // metrics record, so a doomed step leaves no trace to roll back
+        let loss = loss_sum / shards as f64;
+        if !loss.is_finite() {
+            return Err(TrainError::divergence(self.step, "non-finite loss"));
+        }
+        if self.guard_checks {
+            let finite = self.fwd_outs[0][1..]
+                .iter()
+                .all(|g| g.f32s().iter().all(|x| x.is_finite()));
+            if !finite {
+                return Err(TrainError::divergence(self.step, "non-finite gradient"));
+            }
+        }
+
         // 4) optimizer update with borrowed inputs into the persistent
         //    update buffers; outputs become the new params/state by swap
-        let lr = self.schedule.lr(self.step);
+        let lr = self.schedule.lr(self.step) * self.lr_scale;
         self.lr_t.f32s_mut()[0] = lr as f32;
         self.step_t.f32s_mut()[0] = self.step as f32;
         {
@@ -386,7 +435,6 @@ impl<'e> Trainer<'e> {
             std::mem::swap(&mut self.state[j], &mut self.upd_out[self.n_params + j]);
         }
 
-        let loss = loss_sum / shards as f64;
         let tokens = (self.step * shards * self.microbatch * self.seq_len) as u64;
         self.metrics.record_step(self.step, loss, lr, tokens);
         Ok(loss)
@@ -445,37 +493,127 @@ impl<'e> Trainer<'e> {
         Tensor::from_i32(&[b, w], ids)
     }
 
-    /// Run the full configured training loop; returns final eval ppl.
-    pub fn train(&mut self) -> anyhow::Result<f64> {
-        for _ in 0..self.opts.steps {
-            let loss = self.train_step()?;
-            if !self.opts.quiet
-                && self.opts.log_every > 0
-                && self.step % self.opts.log_every == 0
-            {
+    /// Per-step logging + periodic-eval cadence shared by `train` and
+    /// `train_guarded`.
+    fn after_step(&mut self, loss: f64) -> Result<(), TrainError> {
+        if !self.opts.quiet
+            && self.opts.log_every > 0
+            && self.step % self.opts.log_every == 0
+        {
+            println!(
+                "  step {:>5}/{:<5} loss {:.4} (ema {:.4}) lr {:.2e}",
+                self.step,
+                self.opts.steps,
+                loss,
+                self.metrics.ema_loss.unwrap_or(loss),
+                self.schedule.lr(self.step) * self.lr_scale
+            );
+        }
+        if self.opts.eval_every > 0 && self.step % self.opts.eval_every == 0 {
+            let el = self.eval().map_err(TrainError::engine)?;
+            if !self.opts.quiet {
                 println!(
-                    "  step {:>5}/{:<5} loss {:.4} (ema {:.4}) lr {:.2e}",
+                    "  step {:>5} eval loss {:.4} ppl {:.2}",
                     self.step,
-                    self.opts.steps,
-                    loss,
-                    self.metrics.ema_loss.unwrap_or(loss),
-                    self.schedule.lr(self.step)
+                    el,
+                    el.exp()
                 );
             }
-            if self.opts.eval_every > 0 && self.step % self.opts.eval_every == 0 {
-                let el = self.eval()?;
-                if !self.opts.quiet {
-                    println!(
-                        "  step {:>5} eval loss {:.4} ppl {:.2}",
-                        self.step,
-                        el,
-                        el.exp()
-                    );
+        }
+        Ok(())
+    }
+
+    /// Run the configured training loop up to `opts.steps` *total*
+    /// steps (a restored trainer trains only the remainder); returns
+    /// final eval ppl. Divergence aborts the run — use
+    /// [`Trainer::train_guarded`] for rollback-and-retry.
+    pub fn train(&mut self) -> Result<f64, TrainError> {
+        while self.step < self.opts.steps {
+            let loss = self.train_step()?;
+            self.after_step(loss)?;
+        }
+        let final_loss = self.eval().map_err(TrainError::engine)?;
+        Ok(final_loss.exp())
+    }
+
+    /// [`Trainer::train`] under a durability [`GuardPolicy`]: snapshots
+    /// step 0 as a rollback baseline, auto-checkpoints every
+    /// `checkpoint_every` steps into the policy's
+    /// [`CheckpointStore`], and on divergence restores the newest good
+    /// snapshot, rewinds metrics bit-exactly, scales the LR by
+    /// `lr_backoff`, and replays — up to `max_retries` rollbacks for
+    /// the whole run. Non-divergence errors (Io, Engine) propagate
+    /// immediately; retrying those is the sweep layer's call, not the
+    /// trainer's.
+    ///
+    /// With `lr_backoff = 1.0` a rollback replay is bit-identical to a
+    /// run that never diverged — checkpoint round-trips are exact, ring
+    /// segments are pure functions of the stream position, and the EMA
+    /// rewind replays the recorded fold. The chaos suite pins that.
+    pub fn train_guarded(&mut self, policy: &GuardPolicy) -> Result<f64, TrainError> {
+        policy.validate().map_err(TrainError::engine)?;
+        let store =
+            CheckpointStore::open(&policy.dir, policy.keep_last).map_err(TrainError::io)?;
+        if self.step == 0 {
+            let ck = self.checkpoint().map_err(TrainError::engine)?;
+            store.save(&ck).map_err(TrainError::io)?;
+        }
+        self.guard_checks = true;
+        let out = self.run_guarded(policy, &store);
+        self.guard_checks = false;
+        out
+    }
+
+    fn run_guarded(
+        &mut self,
+        policy: &GuardPolicy,
+        store: &CheckpointStore,
+    ) -> Result<f64, TrainError> {
+        let mut retries_left = policy.max_retries;
+        while self.step < self.opts.steps {
+            match self.train_step() {
+                Ok(loss) => {
+                    self.after_step(loss)?;
+                    if self.step % policy.checkpoint_every == 0 {
+                        let ck = self.checkpoint().map_err(TrainError::engine)?;
+                        store.save(&ck).map_err(TrainError::io)?;
+                    }
                 }
+                Err(e @ TrainError::Divergence { .. }) => {
+                    if retries_left == 0 {
+                        return Err(e);
+                    }
+                    retries_left -= 1;
+                    let bad_step = self.step;
+                    let (_, ck) = store
+                        .latest()
+                        .map_err(TrainError::io)?
+                        .ok_or_else(|| {
+                            TrainError::io(anyhow::anyhow!("no snapshot to roll back to"))
+                        })?;
+                    self.restore(&ck).map_err(TrainError::engine)?;
+                    self.metrics.truncate_to_step(self.step);
+                    self.lr_scale *= policy.lr_backoff;
+                    if !self.opts.quiet {
+                        println!(
+                            "  {e}; rolled back {bad_step} -> {} (lr scale {:.3}, {} retr{} left)",
+                            self.step,
+                            self.lr_scale,
+                            retries_left,
+                            if retries_left == 1 { "y" } else { "ies" }
+                        );
+                    }
+                }
+                Err(e) => return Err(e),
             }
         }
-        let final_loss = self.eval()?;
+        let final_loss = self.eval().map_err(TrainError::engine)?;
         Ok(final_loss.exp())
+    }
+
+    /// Current LR multiplier: 1.0 until a guard rollback backs it off.
+    pub fn lr_scale(&self) -> f64 {
+        self.lr_scale
     }
 
     // ---- checkpointing -----------------------------------------------------

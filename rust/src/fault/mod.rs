@@ -1,0 +1,316 @@
+//! Deterministic failpoint registry: scheduled fault injection for the
+//! chaos suite and for `--faults` on the CLI.
+//!
+//! A failpoint is a named *site* compiled permanently into the code
+//! path it guards (`crate::fault::fires("grad_nan")`). With no spec
+//! installed the call is a single relaxed atomic load — no lock, no
+//! allocation, no branch taken — so the zero-alloc / zero-spawn
+//! steady-state gates are untouched. Installing a spec arms the
+//! registry; every matching site call then increments a per-entry hit
+//! counter under a mutex and fires when the counter lands in the
+//! entry's scheduled range.
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec    := entry ("," entry)*
+//! entry   := [scope "/"] site "@" range
+//! range   := N          fire on exactly the Nth hit (1-based)
+//!          | N..M       fire on hits N through M inclusive
+//!          | N..        fire on every hit from the Nth on
+//!          | *          fire on every hit
+//! ```
+//!
+//! Examples: `grad_nan@5` poisons the gradients once, at the fifth
+//! training step; `save_io@1..` makes every checkpoint save fail;
+//! `trial2/trial_panic@1` panics the first attempt of sweep trial 2
+//! only. Hit counters are consumed as they accumulate, which is what
+//! makes retries deterministic: after `grad_nan@5` has fired, hit 6
+//! (the retried step) passes clean.
+//!
+//! ## Scopes
+//!
+//! A `scope/` prefix restricts an entry to call sites running inside
+//! [`scoped`] on the *same thread* — the sweep engine wraps every trial
+//! in `scoped("trial{i}", ..)`, so a scoped spec targets the same trial
+//! index no matter which pool worker executes it or how many workers
+//! exist. Scopes are thread-local and do not propagate into nested pool
+//! batches dispatched onto other workers.
+//!
+//! ## Sites
+//!
+//! | site          | lives in                  | effect when fired            |
+//! |---------------|---------------------------|------------------------------|
+//! | `save_io`     | `Checkpoint::save`        | IO error before writing      |
+//! | `save_partial`| `Checkpoint::save`        | error mid-write (torn .tmp)  |
+//! | `load_io`     | `Checkpoint::load`        | IO error before reading      |
+//! | `grad_nan`    | `Trainer::train_step`     | NaN written into gradients   |
+//! | `trial_panic` | `sweep::run_trial`        | panic inside the trial job   |
+//! | `pool_job`    | `parallel::WorkerPool`    | panic inside a pool job      |
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, ensure, Result};
+
+#[derive(Debug, Clone)]
+struct Entry {
+    scope: Option<String>,
+    site: String,
+    from: u64,
+    to: u64,
+    hits: u64,
+}
+
+/// Fast-path arm flag: `false` means [`fires`] returns immediately
+/// after one relaxed load, touching neither the registry mutex nor the
+/// thread-local scope.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ENTRIES: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static SCOPE: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+fn lock() -> std::sync::MutexGuard<'static, Vec<Entry>> {
+    // a panic while holding the lock is impossible below, but a
+    // poisoned registry should keep injecting, not cascade
+    ENTRIES.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn parse_range(range: &str) -> Result<(u64, u64)> {
+    if range == "*" {
+        return Ok((1, u64::MAX));
+    }
+    if let Some((a, b)) = range.split_once("..") {
+        let from: u64 = a.trim().parse().map_err(|_| {
+            anyhow::anyhow!("fault spec: bad range start {a:?} (want N.. or N..M)")
+        })?;
+        let to = if b.trim().is_empty() {
+            u64::MAX
+        } else {
+            b.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault spec: bad range end {b:?}"))?
+        };
+        ensure!(from >= 1, "fault spec: hit counts are 1-based, got {from}");
+        ensure!(to >= from, "fault spec: empty range {from}..{to}");
+        return Ok((from, to));
+    }
+    let n: u64 = range
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("fault spec: bad range {range:?} (want N, N..M, N.., or *)"))?;
+    ensure!(n >= 1, "fault spec: hit counts are 1-based, got {n}");
+    Ok((n, n))
+}
+
+/// Install a failpoint spec (see the module docs for the grammar),
+/// replacing any previous one, and arm the registry. Errors on an
+/// empty or malformed spec without disturbing the installed one.
+pub fn configure(spec: &str) -> Result<()> {
+    let mut entries = Vec::new();
+    for raw in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let Some((target, range)) = raw.split_once('@') else {
+            bail!("fault spec: missing '@' in {raw:?} (want [scope/]site@range)");
+        };
+        let (scope, site) = match target.split_once('/') {
+            Some((sc, st)) => (Some(sc.trim().to_string()), st.trim()),
+            None => (None, target.trim()),
+        };
+        ensure!(!site.is_empty(), "fault spec: empty site in {raw:?}");
+        if let Some(sc) = &scope {
+            ensure!(!sc.is_empty(), "fault spec: empty scope in {raw:?}");
+        }
+        let (from, to) = parse_range(range.trim())?;
+        entries.push(Entry { scope, site: site.to_string(), from, to, hits: 0 });
+    }
+    ensure!(!entries.is_empty(), "fault spec: no entries in {spec:?}");
+    *lock() = entries;
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Install from the `SCALE_FAULTS` environment variable if it is set
+/// and non-empty; a no-op otherwise.
+pub fn configure_from_env() -> Result<()> {
+    match std::env::var("SCALE_FAULTS") {
+        Ok(s) if !s.trim().is_empty() => configure(&s),
+        _ => Ok(()),
+    }
+}
+
+/// Disarm the registry and drop all entries (and this thread's scope).
+pub fn clear() {
+    ARMED.store(false, Ordering::Relaxed);
+    lock().clear();
+    SCOPE.with(|s| *s.borrow_mut() = None);
+}
+
+/// Whether any spec is installed. When this is `false`, [`fires`] is a
+/// single relaxed load.
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// The injection check. Every call increments the hit counter of each
+/// entry whose site (and scope, if any) matches; returns `true` when
+/// at least one matching entry's counter lies in its scheduled range.
+#[inline]
+pub fn fires(site: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fires_slow(site)
+}
+
+#[cold]
+fn fires_slow(site: &str) -> bool {
+    SCOPE.with(|scope| {
+        let scope = scope.borrow();
+        let mut fire = false;
+        for e in lock().iter_mut() {
+            if e.site != site {
+                continue;
+            }
+            if let Some(want) = &e.scope {
+                if scope.as_deref() != Some(want.as_str()) {
+                    continue;
+                }
+            }
+            e.hits += 1;
+            if e.hits >= e.from && e.hits <= e.to {
+                fire = true;
+            }
+        }
+        fire
+    })
+}
+
+/// Run `f` with this thread's failpoint scope set to `scope`, restoring
+/// the previous scope afterwards — including on unwind, so a panicking
+/// scoped region (the whole point of `trial_panic`) cannot leak its
+/// scope onto a reused pool worker. Free when the registry is disarmed.
+pub fn scoped<T>(scope: &str, f: impl FnOnce() -> T) -> T {
+    if !ARMED.load(Ordering::Relaxed) {
+        return f();
+    }
+    struct Restore(Option<String>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0.take();
+            SCOPE.with(|s| *s.borrow_mut() = prev);
+        }
+    }
+    let prev = SCOPE.with(|s| s.borrow_mut().replace(scope.to_string()));
+    let _restore = Restore(prev);
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global, so tests serialize on one lock
+    /// and always leave it disarmed.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disarmed_never_fires() {
+        let _g = guard();
+        clear();
+        assert!(!armed());
+        for _ in 0..100 {
+            assert!(!fires("grad_nan"));
+        }
+    }
+
+    #[test]
+    fn single_hit_fires_once_then_passes() {
+        let _g = guard();
+        configure("grad_nan@3").unwrap();
+        let pattern: Vec<bool> = (0..6).map(|_| fires("grad_nan")).collect();
+        assert_eq!(pattern, [false, false, true, false, false, false]);
+        clear();
+    }
+
+    #[test]
+    fn ranges_and_star() {
+        let _g = guard();
+        configure("a@2..3, b@2.., c@*").unwrap();
+        let a: Vec<bool> = (0..4).map(|_| fires("a")).collect();
+        assert_eq!(a, [false, true, true, false]);
+        let b: Vec<bool> = (0..4).map(|_| fires("b")).collect();
+        assert_eq!(b, [false, true, true, true]);
+        let c: Vec<bool> = (0..3).map(|_| fires("c")).collect();
+        assert_eq!(c, [true, true, true]);
+        clear();
+    }
+
+    #[test]
+    fn sites_count_independently() {
+        let _g = guard();
+        configure("x@1").unwrap();
+        assert!(!fires("y"));
+        assert!(fires("x"), "y hits must not consume x's counter");
+        clear();
+    }
+
+    #[test]
+    fn scoped_entries_match_only_inside_scope() {
+        let _g = guard();
+        configure("trial1/p@1").unwrap();
+        assert!(!fires("p"), "unscoped call must not match");
+        assert!(!scoped("trial0", || fires("p")), "wrong scope");
+        assert!(scoped("trial1", || fires("p")), "right scope, first hit");
+        assert!(!scoped("trial1", || fires("p")), "consumed");
+        clear();
+    }
+
+    #[test]
+    fn scope_restored_after_panic() {
+        let _g = guard();
+        configure("trial9/p@*").unwrap();
+        let r = std::panic::catch_unwind(|| scoped("trial9", || panic!("boom")));
+        assert!(r.is_err());
+        assert!(!fires("p"), "scope must not leak out of the unwound region");
+        clear();
+    }
+
+    #[test]
+    fn nested_scopes_restore_outer() {
+        let _g = guard();
+        configure("outer/p@*").unwrap();
+        scoped("outer", || {
+            assert!(fires("p"));
+            scoped("inner", || assert!(!fires("p")));
+            assert!(fires("p"), "outer scope restored after nested region");
+        });
+        clear();
+    }
+
+    #[test]
+    fn malformed_specs_rejected() {
+        let _g = guard();
+        clear();
+        for bad in ["", "nosigil", "x@", "x@0", "x@0..2", "x@3..2", "x@z", "/x@1", "s/@1"] {
+            assert!(configure(bad).is_err(), "spec {bad:?} must be rejected");
+        }
+        assert!(!armed(), "failed configure must not arm the registry");
+    }
+
+    #[test]
+    fn reconfigure_replaces_counters() {
+        let _g = guard();
+        configure("x@1").unwrap();
+        assert!(fires("x"));
+        configure("x@1").unwrap();
+        assert!(fires("x"), "fresh spec restarts the hit counter");
+        clear();
+    }
+}

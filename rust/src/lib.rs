@@ -21,6 +21,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod exec;
+pub mod fault;
 pub mod harness;
 pub mod memory;
 pub mod optim;

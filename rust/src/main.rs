@@ -17,7 +17,7 @@
 
 use scale_llm::analysis::tables::Table;
 use scale_llm::config;
-use scale_llm::coordinator::{Checkpoint, TrainOptions, Trainer};
+use scale_llm::coordinator::{Checkpoint, CheckpointStore, GuardPolicy, TrainOptions, Trainer};
 use scale_llm::harness::{self, figures, tables};
 use scale_llm::memory::estimator::measured_state_bytes;
 use scale_llm::optim::sim;
@@ -37,6 +37,12 @@ fn artifact_dir(args: &mut Args) -> String {
 
 fn run() -> anyhow::Result<()> {
     let mut args = Args::from_env()?;
+    // deterministic fault injection (chaos testing): --faults on any
+    // subcommand, or the SCALE_FAULTS environment variable
+    scale_llm::fault::configure_from_env()?;
+    if let Some(spec) = args.get("faults") {
+        scale_llm::fault::configure(spec)?;
+    }
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "train" => cmd_train(&mut args),
@@ -62,7 +68,12 @@ const HELP: &str = "scale — SCALE optimizer reproduction (Rust + JAX + Pallas 
 usage: scale <subcommand> [options]
 
   train           --size s130m --optimizer scale --steps 200 --lr 1e-2
-                  [--preset configs/x.json] [--save ckpt.bin] [--resume ckpt.bin]
+                  [--preset configs/x.json] [--save ckpt.bin]
+                  [--resume ckpt.bin | --resume auto]
+                  [--checkpoint-every N]  guard mode: auto-checkpoint into
+                  --ckpt-dir (default ckpts), roll back on divergence with
+                  --lr-backoff (0.5) up to --retries (3) times, keep the
+                  newest --keep-last (3) snapshots
   eval            --load ckpt.bin [--eval-batches 16]
   table <1..13>   regenerate a paper table  [--steps N] [--sizes s60m,s130m]
   figure <1..10>  regenerate a paper figure [--steps N] [--size s130m]
@@ -70,20 +81,29 @@ usage: scale <subcommand> [options]
   variance        per-layer gradient variance probe [--optimizer ...]
   sweep           --size s130m --optimizers scale,adam --lrs 1e-3,1e-2
                   [--seeds 0,1] [--steps N] [--shards N] [--json]
-                  [--max-concurrent N]   concurrent trial grid on the
-                  shared pool; without --lr/--lrs each optimizer uses its
-                  tuned default LR; --json emits the report on stdout
+                  [--max-concurrent N] [--retries N]   concurrent trial
+                  grid on the shared pool; without --lr/--lrs each
+                  optimizer uses its tuned default LR; --json emits the
+                  report on stdout; --retries re-runs trials that hit
+                  transient faults before slotting them as faulted
   sweep-lr        --optimizer scale --size s130m --steps 100
   ablate-momentum Theorem 2.1 noisy-quadratic placement study
   list            artifacts / sizes / optimizers available
 
-common: --artifacts DIR (default ./artifacts), --quiet";
+common: --artifacts DIR (default ./artifacts), --quiet,
+        --faults SPEC (deterministic failpoint injection, e.g.
+        grad_nan@5 or trial1/trial_panic@1; also via SCALE_FAULTS)";
 
 fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     let dir = artifact_dir(args);
     let preset = args.get("preset").map(|s| s.to_string());
     let save = args.get("save").map(|s| s.to_string());
     let resume = args.get("resume").map(|s| s.to_string());
+    let ckpt_every = args.get_usize("checkpoint-every", 0)?;
+    let ckpt_dir = args.get_or("ckpt-dir", "ckpts");
+    let keep_last = args.get_usize("keep-last", 3)?;
+    let retries = args.get_usize("retries", 3)?;
+    let lr_backoff = args.get_f64("lr-backoff", 0.5)?;
     let base = match preset {
         Some(p) => config::load_preset(p)?,
         None => TrainOptions::default(),
@@ -102,12 +122,36 @@ fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
         opts.shards
     );
     let mut tr = Trainer::new(&engine, opts)?;
-    if let Some(r) = resume {
-        let ckpt = Checkpoint::load(&r)?;
-        tr.restore(&ckpt)?;
-        println!("resumed from {r} at step {}", tr.step);
+    match resume.as_deref() {
+        // `--resume auto`: newest loadable snapshot in the run's
+        // checkpoint directory (corrupt ones are quarantined over)
+        Some("auto") => {
+            let store = CheckpointStore::open(&ckpt_dir, keep_last)?;
+            match store.latest()? {
+                Some((step, ckpt)) => {
+                    tr.restore(&ckpt)?;
+                    println!("resumed from {} at step {step}", store.dir().display());
+                }
+                None => println!("no snapshot in {}; starting fresh", store.dir().display()),
+            }
+        }
+        Some(path) => {
+            let ckpt = Checkpoint::load(path)?;
+            tr.restore(&ckpt)?;
+            println!("resumed from {path} at step {}", tr.step);
+        }
+        None => {}
     }
-    let ppl = tr.train()?;
+    let ppl = if ckpt_every > 0 {
+        let mut policy = GuardPolicy::new(&ckpt_dir);
+        policy.checkpoint_every = ckpt_every;
+        policy.keep_last = keep_last;
+        policy.max_retries = retries;
+        policy.lr_backoff = lr_backoff;
+        tr.train_guarded(&policy)?
+    } else {
+        tr.train()?
+    };
     println!(
         "final eval ppl {ppl:.3} | {:.0} tok/s | optimizer state {} KiB",
         tr.metrics.tokens_per_sec(),
@@ -309,6 +353,7 @@ fn cmd_sweep_grid(args: &mut Args) -> anyhow::Result<()> {
                 .map_err(|_| anyhow::anyhow!("--seeds expects integers, got {s:?}"))
         })
         .collect::<anyhow::Result<_>>()?;
+    let retries = args.get_usize("retries", 0)?;
     let json = args.flag("json");
     args.finish()?;
 
@@ -340,6 +385,7 @@ fn cmd_sweep_grid(args: &mut Args) -> anyhow::Result<()> {
         seeds,
         lr_for,
         max_concurrent,
+        retries,
     };
     // fail fast on a typo'd optimizer before any trial trains
     for opt in &spec.optimizers {
@@ -352,7 +398,7 @@ fn cmd_sweep_grid(args: &mut Args) -> anyhow::Result<()> {
     }
     let mut t = Table::new(
         &format!("sweep — {} trials ({steps} steps, size {})", pts.len(), spec.base.size),
-        &["optimizer", "lr", "seed", "final ppl", "diverged"],
+        &["optimizer", "lr", "seed", "final ppl", "outcome", "attempts"],
     );
     for p in &pts {
         t.row(vec![
@@ -360,7 +406,8 @@ fn cmd_sweep_grid(args: &mut Args) -> anyhow::Result<()> {
             format!("{:.0e}", p.lr),
             format!("{}", p.seed),
             harness::ppl_cell(p.ppl),
-            if p.diverged { "yes".into() } else { "no".into() },
+            p.outcome.as_str().into(),
+            format!("{}", p.attempts),
         ]);
     }
     println!("{}", t.render());

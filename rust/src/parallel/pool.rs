@@ -187,7 +187,12 @@ impl WorkerPool {
             let mut first_panic = None;
             let mut out = Vec::with_capacity(n);
             for task in tasks {
-                match panic::catch_unwind(AssertUnwindSafe(task)) {
+                match panic::catch_unwind(AssertUnwindSafe(|| {
+                    if crate::fault::fires("pool_job") {
+                        panic!("failpoint pool_job");
+                    }
+                    task()
+                })) {
                     Ok(v) => out.push(v),
                     Err(p) => {
                         if first_panic.is_none() {
@@ -215,7 +220,15 @@ impl WorkerPool {
                 let slot = Arc::clone(slot);
                 let latch = Arc::clone(&latch);
                 let call: Box<dyn FnOnce() + Send + 'env> = Box::new(move || {
-                    let result = panic::catch_unwind(AssertUnwindSafe(task));
+                    // the `pool_job` failpoint fires *inside* the catch,
+                    // so an injected panic exercises exactly the capture
+                    // path a real task panic takes
+                    let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                        if crate::fault::fires("pool_job") {
+                            panic!("failpoint pool_job");
+                        }
+                        task()
+                    }));
                     *slot.lock().unwrap() = Some(result);
                     latch.count_down();
                 });

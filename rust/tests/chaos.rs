@@ -1,0 +1,455 @@
+//! Chaos suite: deterministic fault injection against the durability
+//! layer (PR: robustness). Every test schedules faults through the
+//! process-global `scale_llm::fault` registry and proves a recovery
+//! property *bit-exactly* where the contract promises one:
+//!
+//! - crash at step k, resume from the store -> identical params/state
+//!   to a run that never crashed;
+//! - a torn mid-save `.tmp` is never picked up and the store falls
+//!   back to the previous good snapshot;
+//! - NaN-injected gradients roll back under the guard and (at
+//!   `lr_backoff = 1.0`) finish bit-identical to a fault-free run;
+//! - sweeps with retried trial panics report bit-identical numbers to
+//!   fault-free sweeps for pool sizes {0, 2, 7}.
+//!
+//! This is its own test binary (see Cargo.toml): the registry is
+//! process-global, so these tests must not share a process with suites
+//! that assume no faults are armed. Within the binary, `#[test]`s run
+//! on parallel threads, so every test serializes on `LOCK` and leaves
+//! the registry cleared.
+
+use std::sync::Mutex;
+
+use scale_llm::coordinator::{
+    Checkpoint, CheckpointStore, GuardPolicy, SweepPoint, SweepSpec, TrainError, TrainOptions,
+    Trainer,
+};
+use scale_llm::fault;
+use scale_llm::parallel::WorkerPool;
+use scale_llm::runtime::Engine;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize on the registry and guarantee it ends up cleared even if
+/// the test panics (the next test must start disarmed).
+struct FaultGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn guard() -> FaultGuard<'static> {
+    let g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    fault::clear();
+    FaultGuard(g)
+}
+
+/// Engine plus the smallest trainable size its manifest offers.
+fn engine() -> Option<(Engine, String)> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let eng = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping chaos test (run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    for s in ["tiny", "s60m"] {
+        if eng.manifest.sizes.contains_key(s) {
+            return Some((eng, s.to_string()));
+        }
+    }
+    eprintln!("skipping chaos test (no smoke-able size in manifest)");
+    None
+}
+
+fn opts(size: &str, steps: usize) -> TrainOptions {
+    TrainOptions {
+        size: size.into(),
+        optimizer: "scale".into(),
+        steps,
+        base_lr: 1e-2,
+        schedule: None,
+        shards: 2,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        quiet: true,
+    }
+}
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("scale_chaos_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+fn tensor_bits(ts: &[scale_llm::runtime::Tensor]) -> Vec<u32> {
+    ts.iter().flat_map(|t| t.f32s().iter().map(|x| x.to_bits())).collect()
+}
+
+/// A process dies at step 7 of 10 with snapshots every 3 steps; a fresh
+/// trainer resuming from the store must land on bit-identical params
+/// and state to a run that never crashed.
+#[test]
+fn crash_at_step_k_resume_is_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("crash");
+
+    // the uninterrupted reference
+    let mut reference = Trainer::new(&eng, opts(&sz, 10)).unwrap();
+    while reference.step < 10 {
+        reference.train_step().unwrap();
+    }
+
+    // the "crashed" leg: same opts (the cosine schedule spans all 10
+    // steps), killed after step 7 with snapshots at steps 3 and 6
+    {
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        let mut tr = Trainer::new(&eng, opts(&sz, 10)).unwrap();
+        while tr.step < 7 {
+            tr.train_step().unwrap();
+            if tr.step % 3 == 0 {
+                store.save(&tr.checkpoint().unwrap()).unwrap();
+            }
+        }
+        // drop without saving step 7: the crash loses it
+    }
+
+    // resume in a fresh trainer from the newest snapshot (step 6)
+    let store = CheckpointStore::open(&dir, 3).unwrap();
+    let (step, ck) = store.latest().unwrap().expect("snapshot to resume from");
+    assert_eq!(step, 6);
+    let mut resumed = Trainer::new(&eng, opts(&sz, 10)).unwrap();
+    resumed.restore(&ck).unwrap();
+    while resumed.step < 10 {
+        resumed.train_step().unwrap();
+    }
+
+    assert_eq!(
+        tensor_bits(&resumed.params),
+        tensor_bits(&reference.params),
+        "resumed params must be bit-identical to the uninterrupted run"
+    );
+    assert_eq!(
+        tensor_bits(&resumed.state),
+        tensor_bits(&reference.state),
+        "resumed optimizer state must be bit-identical"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A crash in the middle of writing a snapshot (the `save_partial`
+/// failpoint) leaves only a torn `.tmp`: the store must keep serving
+/// the previous good snapshot, never the torn bytes, and must sweep
+/// the leftover on the next open.
+#[test]
+fn torn_mid_save_tmp_is_ignored_and_cleaned() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("torn");
+
+    let store = CheckpointStore::open(&dir, 3).unwrap();
+    let mut tr = Trainer::new(&eng, opts(&sz, 4)).unwrap();
+    tr.train_step().unwrap();
+    store.save(&tr.checkpoint().unwrap()).unwrap();
+
+    tr.train_step().unwrap();
+    fault::configure("save_partial@1").unwrap();
+    let err = store.save(&tr.checkpoint().unwrap()).unwrap_err();
+    assert!(err.to_string().contains("save_partial"), "{err}");
+    fault::clear();
+    let torn = dir.join("step_00000002.ckpt.tmp");
+    assert!(torn.exists(), "a failed save must leave the torn .tmp, like a real crash");
+
+    // the torn write published nothing: step 1 is still the newest
+    let (step, ck) = store.latest().unwrap().expect("previous snapshot");
+    assert_eq!((step, ck.step), (1, 1));
+
+    // a restart (re-open) sweeps the leftover
+    CheckpointStore::open(&dir, 3).unwrap();
+    assert!(!torn.exists(), "stale .tmp must be swept on open");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `save_io` faults surface as typed `TrainError::Io` from the guarded
+/// loop — classification, not string matching.
+#[test]
+fn save_fault_in_guarded_run_is_typed_io() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("saveio");
+
+    fault::configure("save_io@1..").unwrap();
+    let mut tr = Trainer::new(&eng, opts(&sz, 3)).unwrap();
+    let err = tr.train_guarded(&GuardPolicy::new(&dir)).unwrap_err();
+    assert!(matches!(err, TrainError::Io(_)), "want Io, got {err}");
+    fault::clear();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// NaNs injected into the reduced gradients at step 5: the guard rolls
+/// back to the step-4 snapshot and replays. With `lr_backoff = 1.0`
+/// the finished run — params, state, EMA, final ppl — must be
+/// bit-identical to a run that never saw the fault.
+#[test]
+fn nan_injection_rollback_recovers_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("nan");
+
+    let mut clean = Trainer::new(&eng, opts(&sz, 10)).unwrap();
+    let clean_ppl = clean.train().unwrap();
+
+    fault::configure("grad_nan@5").unwrap();
+    let mut guarded = Trainer::new(&eng, opts(&sz, 10)).unwrap();
+    let policy = GuardPolicy {
+        dir: dir.clone(),
+        checkpoint_every: 2,
+        keep_last: 3,
+        max_retries: 3,
+        lr_backoff: 1.0, // identity: the injected fault wasn't the LR's fault
+    };
+    let guarded_ppl = guarded.train_guarded(&policy).unwrap();
+    assert!(!fault::fires("grad_nan"), "the single scheduled injection must be consumed");
+    fault::clear();
+
+    assert_eq!(
+        guarded_ppl.to_bits(),
+        clean_ppl.to_bits(),
+        "rollback replay must reproduce the clean run's final ppl bit-for-bit"
+    );
+    assert_eq!(tensor_bits(&guarded.params), tensor_bits(&clean.params), "params");
+    assert_eq!(tensor_bits(&guarded.state), tensor_bits(&clean.state), "optimizer state");
+    assert_eq!(
+        guarded.metrics.ema_loss.unwrap().to_bits(),
+        clean.metrics.ema_loss.unwrap().to_bits(),
+        "the EMA rewind must replay the exact record_step fold"
+    );
+    assert_eq!(guarded.metrics.steps.len(), clean.metrics.steps.len());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A rollback with `lr_backoff = 0.5` halves the LR scale and the run
+/// still finishes.
+#[test]
+fn lr_backoff_applied_on_rollback() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("backoff");
+
+    fault::configure("grad_nan@3").unwrap();
+    let mut tr = Trainer::new(&eng, opts(&sz, 6)).unwrap();
+    let policy = GuardPolicy {
+        dir: dir.clone(),
+        checkpoint_every: 2,
+        keep_last: 2,
+        max_retries: 3,
+        lr_backoff: 0.5,
+    };
+    let ppl = tr.train_guarded(&policy).unwrap();
+    fault::clear();
+    assert_eq!(tr.lr_scale(), 0.5, "one rollback must apply the backoff exactly once");
+    assert!(ppl.is_finite());
+    assert_eq!(tr.step, 6, "the run must still reach the full step count");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Genuine divergence (absurd LR) re-diverges on every replay: the
+/// guard must stop after its retry budget and surface the typed error.
+#[test]
+fn guard_divergence_retries_are_bounded() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("bounded");
+
+    let mut o = opts(&sz, 6);
+    o.base_lr = 1e12;
+    let mut tr = Trainer::new(&eng, o).unwrap();
+    let policy = GuardPolicy {
+        dir: dir.clone(),
+        checkpoint_every: 2,
+        keep_last: 2,
+        max_retries: 2,
+        lr_backoff: 1.0, // no backoff: the replay diverges identically
+    };
+    let err = tr.train_guarded(&policy).unwrap_err();
+    assert!(matches!(err, TrainError::Divergence { .. }), "want Divergence, got {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Plain (unguarded) runs abort on divergence with the typed error
+/// instead of training NaNs to completion.
+#[test]
+fn plain_train_aborts_on_divergence() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let mut o = opts(&sz, 5);
+    o.base_lr = 1e12;
+    let mut tr = Trainer::new(&eng, o).unwrap();
+    let err = tr.train().unwrap_err();
+    assert!(matches!(err, TrainError::Divergence { .. }), "want Divergence, got {err}");
+}
+
+fn assert_points_bit_identical(got: &[SweepPoint], want: &[SweepPoint], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: trial count");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.optimizer, w.optimizer, "{what}: trial {i} optimizer");
+        assert_eq!(g.lr.to_bits(), w.lr.to_bits(), "{what}: trial {i} lr");
+        assert_eq!(g.seed, w.seed, "{what}: trial {i} seed");
+        assert_eq!(g.ppl.to_bits(), w.ppl.to_bits(), "{what}: trial {i} ppl");
+        assert_eq!(
+            g.final_loss_ema.to_bits(),
+            w.final_loss_ema.to_bits(),
+            "{what}: trial {i} final_loss_ema"
+        );
+        assert_eq!(g.diverged, w.diverged, "{what}: trial {i} diverged");
+    }
+}
+
+/// A sweep whose trial 1 panics once and is retried must report
+/// bit-identical numbers to a fault-free sweep — for a zero-worker
+/// (inline) pool and for 2- and 7-worker pools. The scoped fault spec
+/// targets the *grid index*, so the same trial is hit regardless of
+/// which worker runs it.
+#[test]
+fn retried_sweep_bit_identical_to_fault_free_for_every_pool() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+
+    let mut spec = SweepSpec::lr_grid(opts(&sz, 2), &[1e-3, 1e-2]);
+    spec.seeds = vec![0, 1];
+    spec.retries = 1;
+    let want = spec.run_serial(&eng).expect("fault-free reference");
+    assert_eq!(want.len(), 4);
+    assert!(want.iter().all(|p| p.outcome == scale_llm::coordinator::TrialOutcome::Ok));
+
+    for pool in [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)] {
+        // fresh spec per run: hit counters are consumed
+        fault::configure("trial1/trial_panic@1").unwrap();
+        let got = spec.run_on(&eng, &pool).expect("faulted sweep must still complete");
+        fault::clear();
+        let what = format!("{} workers", pool.workers());
+        assert_points_bit_identical(&got, &want, &what);
+        for (i, p) in got.iter().enumerate() {
+            let (o, a) = if i == 1 {
+                (scale_llm::coordinator::TrialOutcome::Retried, 2)
+            } else {
+                (scale_llm::coordinator::TrialOutcome::Ok, 1)
+            };
+            assert_eq!(p.outcome, o, "{what}: trial {i} outcome");
+            assert_eq!(p.attempts, a, "{what}: trial {i} attempts");
+        }
+    }
+}
+
+/// A trial that panics past its retry budget slots as `faulted` with
+/// `ppl = inf` — the rest of the sweep completes and reports.
+#[test]
+fn faulted_trial_slots_inf_and_sweep_completes() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+
+    let mut spec = SweepSpec::lr_grid(opts(&sz, 2), &[1e-3, 1e-2]);
+    spec.retries = 1;
+    fault::configure("trial0/trial_panic@1..").unwrap();
+    let pts = spec.run(&eng).expect("sweep must absorb the faulted trial");
+    fault::clear();
+
+    use scale_llm::coordinator::TrialOutcome;
+    assert_eq!(pts.len(), 2);
+    assert_eq!(pts[0].outcome, TrialOutcome::Faulted);
+    assert_eq!(pts[0].attempts, 2, "retry budget of 1 means two attempts");
+    assert_eq!(pts[0].ppl, f64::INFINITY);
+    assert!(!pts[0].diverged, "faulted is not diverged: the math never got to run");
+    assert_eq!(pts[1].outcome, TrialOutcome::Ok);
+    assert!(pts[1].ppl.is_finite());
+}
+
+/// The `pool_job` failpoint panics inside a pool job; the pool must
+/// re-raise the payload on the dispatcher and stay fully usable.
+#[test]
+fn pool_job_panic_is_captured_and_pool_survives() {
+    let _g = guard();
+    for workers in [0usize, 3] {
+        fault::configure("pool_job@2").unwrap();
+        let pool = WorkerPool::new(workers);
+        let tasks: Vec<_> = (0..4u64).map(|i| move || i * i).collect();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| pool.run(tasks)));
+        let payload = caught.expect_err("the injected job panic must propagate to run()");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("?");
+        assert!(msg.contains("failpoint pool_job"), "payload: {msg}");
+        fault::clear();
+        let ok: Vec<u64> = pool.run((0..4u64).map(|i| move || i + 1).collect());
+        assert_eq!(ok, vec![1, 2, 3, 4], "pool must survive an injected job panic");
+    }
+}
+
+/// `load_io` faults make the newest snapshot unreadable: `latest()`
+/// quarantines it and falls back to the older good one.
+#[test]
+fn load_fault_quarantines_and_falls_back() {
+    let _g = guard();
+    let dir = tmp_dir("loadq");
+    let store = CheckpointStore::open(&dir, 3).unwrap();
+    for step in [1u64, 2] {
+        let ck = Checkpoint {
+            size: "tiny".into(),
+            optimizer: "scale".into(),
+            step,
+            tensors: vec![(
+                "w".into(),
+                scale_llm::runtime::Tensor::from_f32(&[2], vec![step as f32, 0.5]),
+            )],
+        };
+        store.save(&ck).unwrap();
+    }
+    // the first load attempt (the newest snapshot, step 2) fails
+    fault::configure("load_io@1").unwrap();
+    let (step, ck) = store.latest().unwrap().expect("fallback snapshot");
+    fault::clear();
+    assert_eq!((step, ck.step), (1, 1), "must fall back past the unreadable snapshot");
+    assert!(
+        dir.join("step_00000002.ckpt.corrupt").exists(),
+        "the unreadable snapshot must be quarantined for post-mortem"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// `--resume auto` semantics end to end: guard a run to completion,
+/// then a fresh trainer resuming from the same store trains zero
+/// additional steps and evaluates to the same result.
+#[test]
+fn guarded_store_resumes_a_fresh_trainer() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let dir = tmp_dir("resume");
+
+    let mut tr = Trainer::new(&eng, opts(&sz, 6)).unwrap();
+    let policy = GuardPolicy {
+        dir: dir.clone(),
+        checkpoint_every: 3,
+        keep_last: 2,
+        max_retries: 0,
+        lr_backoff: 1.0,
+    };
+    let ppl = tr.train_guarded(&policy).unwrap();
+
+    let store = CheckpointStore::open(&dir, 2).unwrap();
+    let (step, ck) = store.latest().unwrap().expect("final snapshot");
+    assert_eq!(step, 6, "checkpoint_every = 3 must have landed the step-6 snapshot");
+    let mut resumed = Trainer::new(&eng, opts(&sz, 6)).unwrap();
+    resumed.restore(&ck).unwrap();
+    let resumed_ppl = resumed.train().unwrap();
+    assert_eq!(
+        resumed_ppl.to_bits(),
+        ppl.to_bits(),
+        "a fully-trained store resume must replay only the final eval"
+    );
+    assert_eq!(tensor_bits(&resumed.params), tensor_bits(&tr.params));
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -64,6 +64,8 @@ fn assert_points_bit_identical(got: &[SweepPoint], want: &[SweepPoint], what: &s
             "{what}: trial {i} final_loss_ema"
         );
         assert_eq!(g.diverged, w.diverged, "{what}: trial {i} diverged");
+        assert_eq!(g.outcome, w.outcome, "{what}: trial {i} outcome");
+        assert_eq!(g.attempts, w.attempts, "{what}: trial {i} attempts");
     }
 }
 
