@@ -25,11 +25,12 @@
 
 use std::time::{Duration, Instant};
 
-use scale_llm::coordinator::{TrainOptions, Trainer};
+use scale_llm::coordinator::{ddp, TrainOptions, Trainer};
 use scale_llm::exec;
+use scale_llm::mesh;
 use scale_llm::parallel;
 use scale_llm::runtime::{Engine, Tensor};
-use scale_llm::util::json::Json;
+use scale_llm::util::json::{self, Json};
 
 #[path = "support/alloc_counter.rs"]
 mod alloc_counter;
@@ -210,6 +211,74 @@ fn failpoint_disabled_audit() -> (u64, f64) {
     (violations, ns_per_call)
 }
 
+/// Mesh all-reduce latency: `mesh::reduce_ranks_into` over N synthetic
+/// rank outputs on the shared pool. The template is restored by memcpy
+/// *outside* the timed window each iteration (the reduction consumes
+/// its inputs), and a one-off sanity check pins the delegation against
+/// the sequential reference before anything is timed.
+fn mesh_reduce_row(ranks: usize) -> Json {
+    let pool = parallel::shared();
+    let shapes: [&[usize]; 4] = [&[256, 256], &[256, 256], &[64, 256], &[256]];
+    let template: Vec<Vec<Tensor>> = (0..ranks)
+        .map(|r| {
+            shapes
+                .iter()
+                .enumerate()
+                .map(|(p, s)| {
+                    let mut t = Tensor::zeros(s);
+                    for (i, x) in t.f32s_mut().iter_mut().enumerate() {
+                        *x = ((r * 37 + p * 11 + i) as f32).sin();
+                    }
+                    t
+                })
+                .collect()
+        })
+        .collect();
+
+    let want = ddp::tree_all_reduce_sequential(template.clone());
+    let mut outs = template.clone();
+    mesh::reduce_ranks_into(pool, &mut outs, 0);
+    for (p, w) in want.iter().enumerate() {
+        assert_eq!(outs[0][p].f32s(), w.f32s(), "mesh reduce drifted from the reference");
+    }
+
+    let mut scratch = template.clone();
+    let iters = 30u32;
+    let mut total = Duration::ZERO;
+    for _ in 0..iters {
+        for (s, t) in scratch.iter_mut().flatten().zip(template.iter().flatten()) {
+            s.f32s_mut().copy_from_slice(t.f32s());
+        }
+        let t0 = Instant::now();
+        mesh::reduce_ranks_into(pool, &mut scratch, 0);
+        total += t0.elapsed();
+    }
+    let ms = total.as_secs_f64() * 1e3 / iters as f64;
+    println!("mesh_reduce x{ranks}: {ms:.4} ms/all-reduce");
+    Json::obj(vec![("ranks", Json::num(ranks as f64)), ("reduce_ms", Json::num(ms))])
+}
+
+/// Append this run's headline numbers to the committed
+/// `BENCH_history.json` trajectory (an array; unreadable or non-array
+/// content is reported and replaced rather than crashing the bench).
+fn append_history(entry: Json) -> anyhow::Result<()> {
+    let path = "BENCH_history.json";
+    let mut hist = match std::fs::read_to_string(path) {
+        Ok(text) => match json::parse(&text) {
+            Ok(Json::Arr(v)) => v,
+            Ok(_) | Err(_) => {
+                println!("note: {path} was not a JSON array; starting a fresh history");
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+    hist.push(entry);
+    std::fs::write(path, Json::Arr(hist).to_string())?;
+    println!("history -> {path}");
+    Ok(())
+}
+
 struct TrainRow {
     size: String,
     shards: usize,
@@ -276,6 +345,13 @@ fn train_row(engine: &Engine, size: &str, shards: usize, steps: usize) -> anyhow
     Ok(row)
 }
 
+fn unix_time() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
 fn main() -> anyhow::Result<()> {
     // touch the shared pool (and its calibration) up front so one-time
     // thread spawns and the probe are outside every measured region
@@ -306,6 +382,9 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== attention pair dispatch A/B (calibrated thresholds) ==");
     let attn_rows = vec![attn_ab_row(&engine, "tiny")?, attn_ab_row(&engine, "s60m")?];
+
+    println!("\n== mesh all-reduce latency ==");
+    let mesh_rows = vec![mesh_reduce_row(2), mesh_reduce_row(4)];
 
     println!("\n== trainer throughput (zero-spawn gate) ==");
     let rows = vec![
@@ -341,10 +420,19 @@ fn main() -> anyhow::Result<()> {
         ("failpoint_disabled_allocs", Json::num(fp_violations as f64)),
         ("train_spawns", Json::num(total_spawns as f64)),
         ("attention_ab", Json::Arr(attn_rows)),
+        ("mesh_reduce", Json::Arr(mesh_rows.clone())),
         ("rows", Json::Arr(row_json)),
     ]);
     std::fs::write("BENCH_throughput.json", doc.to_string())?;
     println!("\nbench json -> BENCH_throughput.json");
+    append_history(Json::obj(vec![
+        ("bench", Json::str("throughput")),
+        ("platform", Json::str(&engine.platform())),
+        ("unix_time", Json::num(unix_time())),
+        ("exec_fwd_ms", Json::num(fwd_ms)),
+        ("exec_update_ms", Json::num(upd_ms)),
+        ("mesh_reduce", Json::Arr(mesh_rows)),
+    ]))?;
 
     println!("\n== acceptance gates ==");
     println!(

@@ -603,6 +603,40 @@ mod tests {
         std::fs::remove_file(p).ok();
     }
 
+    /// Golden-bytes pin of the v1 layout: these literal bytes are the
+    /// on-disk contract for checkpoints written before the v2 CRC
+    /// format, so this test failing means old snapshots stopped
+    /// loading — a regression, not a refactor.
+    #[test]
+    fn v1_golden_bytes_load_exactly() {
+        let mut golden = v1_prefix(1); // "tiny" / "scale" / step 7
+        golden.extend_from_slice(&1u32.to_le_bytes()); // name len
+        golden.extend_from_slice(b"w");
+        golden.extend_from_slice(&1u32.to_le_bytes()); // ndims
+        golden.extend_from_slice(&2u64.to_le_bytes()); // dim 0
+        golden.extend_from_slice(&1.5f32.to_le_bytes());
+        golden.extend_from_slice(&(-2.0f32).to_le_bytes());
+
+        let p = tmp("golden");
+        std::fs::write(&p, &golden).unwrap();
+        let ck = Checkpoint::load(&p).unwrap();
+        assert_eq!(ck.size, "tiny");
+        assert_eq!(ck.optimizer, "scale");
+        assert_eq!(ck.step, 7);
+        assert_eq!(ck.tensors.len(), 1);
+        assert_eq!(ck.tensors[0].0, "w");
+        assert_eq!(ck.tensors[0].1.shape(), &[2]);
+        assert_eq!(
+            ck.tensors[0].1.f32s().iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            [1.5f32.to_bits(), (-2.0f32).to_bits()]
+        );
+
+        // and the v1 writer still emits exactly these bytes
+        ck.save_v1(&p).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), golden, "save_v1 drifted from the golden layout");
+        std::fs::remove_file(p).ok();
+    }
+
     #[test]
     fn store_retention_latest_and_quarantine() {
         let dir = tmp_dir("ret");

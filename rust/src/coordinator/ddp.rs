@@ -17,6 +17,13 @@
 //! sequential order — results are bit-identical to the single-threaded
 //! reduction regardless of pool size or scheduling, which the
 //! determinism tests below pin down.
+//!
+//! The multi-process mesh reuses this exact reduction —
+//! [`crate::mesh::reduce_ranks_into`] is a named delegation to
+//! [`tree_all_reduce_into`] — so gradients gathered from worker
+//! *processes* combine with the same pairwise order as in-process
+//! shards, and cross-process training inherits the bit-determinism
+//! pinned here by construction.
 
 use crate::parallel::{self, WorkerPool};
 use crate::runtime::Tensor;

@@ -31,6 +31,13 @@
 //! on the same shared pool ([`SweepSpec`]: optimizer × LR × seed grids),
 //! slotted by trial index so the concurrent result vector is
 //! bit-identical to the serial loop for every pool size.
+//!
+//! The same step anatomy also runs *across processes*: [`crate::mesh`]
+//! splits `train_step` at the trainer's `begin_step` /
+//! `finish_step` seams, farming the per-shard forward/backward out to
+//! worker ranks over a CRC-framed wire while this module's reduction
+//! and update tail stay on the coordinator — which is why mesh runs are
+//! bit-identical to single-process ones, rank failures included.
 
 pub mod checkpoint;
 pub mod ddp;

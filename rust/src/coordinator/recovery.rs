@@ -2,9 +2,10 @@
 //!
 //! [`TrainError`] splits "the run is mathematically doomed"
 //! (`Divergence`) from "the disk let us down" (`Io`) from "the executor
-//! itself failed" (`Engine`), so recovery code — `Trainer::train_guarded`
-//! rollback, `sweep` trial retry — classifies failures by variant
-//! instead of string-matching `anyhow` messages. Divergence is
+//! itself failed" (`Engine`) from "the worker mesh is unrecoverable"
+//! (`Mesh`), so recovery code — `Trainer::train_guarded` rollback,
+//! `sweep` trial retry, the `mesh` supervisor — classifies failures by
+//! variant instead of string-matching `anyhow` messages. Divergence is
 //! deterministic (same seed, same step, same non-finite value) and is
 //! therefore never blindly re-run: the guard rolls back *with LR
 //! backoff*, and a sweep trial slots it as a diverged point immediately.
@@ -31,6 +32,10 @@ pub enum TrainError {
     Io(anyhow::Error),
     /// The executor or configuration failed: fail fast.
     Engine(anyhow::Error),
+    /// The worker mesh failed beyond its recovery budget (rank
+    /// respawns or frame retries exhausted, workers unreachable): the
+    /// distributed run aborts cleanly instead of hanging.
+    Mesh(anyhow::Error),
 }
 
 impl TrainError {
@@ -46,6 +51,10 @@ impl TrainError {
         TrainError::Engine(e)
     }
 
+    pub fn mesh(e: anyhow::Error) -> TrainError {
+        TrainError::Mesh(e)
+    }
+
     pub fn is_divergence(&self) -> bool {
         matches!(self, TrainError::Divergence { .. })
     }
@@ -59,6 +68,7 @@ impl fmt::Display for TrainError {
             }
             TrainError::Io(e) => write!(f, "checkpoint io: {e}"),
             TrainError::Engine(e) => write!(f, "engine: {e}"),
+            TrainError::Mesh(e) => write!(f, "mesh: {e}"),
         }
     }
 }
@@ -131,6 +141,9 @@ mod tests {
         assert!(io.to_string().contains("checkpoint io"));
         let eng: TrainError = anyhow::anyhow!("no such artifact").into();
         assert!(matches!(eng, TrainError::Engine(_)));
+        let mesh = TrainError::mesh(anyhow::anyhow!("rank 1 respawn budget exhausted"));
+        assert!(!mesh.is_divergence());
+        assert_eq!(mesh.to_string(), "mesh: rank 1 respawn budget exhausted");
     }
 
     #[test]

@@ -296,12 +296,32 @@ impl<'e> Trainer<'e> {
     /// what makes rollback bit-exact. Engine failures surface as
     /// [`TrainError::Engine`].
     pub fn train_step(&mut self) -> Result<f64, TrainError> {
+        self.begin_step();
+        self.local_shard_outputs()?;
+        self.finish_step()
+    }
+
+    /// Advance the step counter (and sanity-check the shard layout) —
+    /// the head of [`Trainer::train_step`]. The mesh supervisor calls it
+    /// before broadcasting the new step to remote ranks.
+    pub(crate) fn begin_step(&mut self) {
         self.step += 1;
         // shard count is fixed at construction (rings + stream positions
         // are sized then); opts.shards is pub, so don't silently trust a
         // post-construction mutation
+        debug_assert_eq!(
+            self.rings.len(),
+            self.opts.shards.max(1),
+            "opts.shards changed after new()"
+        );
+    }
+
+    /// Sections 1+2 of the step: per-shard microbatches and concurrent
+    /// fwd/bwd into the persistent `fwd_outs` buffers. In a mesh run
+    /// each remote rank computes its shard via [`Trainer::shard_forward`]
+    /// and the supervisor installs the gathered results instead.
+    fn local_shard_outputs(&mut self) -> Result<(), TrainError> {
         let shards = self.rings.len();
-        debug_assert_eq!(shards, self.opts.shards.max(1), "opts.shards changed after new()");
         let pool = self.pool;
 
         // 1) per-shard microbatches into the persistent batch tensors.
@@ -343,7 +363,6 @@ impl<'e> Trainer<'e> {
         // 2) concurrent fwd/bwd per shard on the pool; `run` returns
         //    results in shard order so the downstream reduction is
         //    bit-stable across runs. Outputs land in persistent buffers.
-        let mut loss_sum = 0.0;
         {
             let engine = self.engine;
             let fwd = &self.fwd;
@@ -374,9 +393,24 @@ impl<'e> Trainer<'e> {
             for r in results {
                 r?;
             }
-            for out in outs.iter() {
-                loss_sum += out[0].item_f32() as f64;
-            }
+        }
+        Ok(())
+    }
+
+    /// The shard-independent tail of the step: mean loss, tree
+    /// all-reduce, divergence guard, optimizer update, metrics record.
+    /// Requires every `fwd_outs[s]` to hold a fresh `[loss, grads..]` —
+    /// produced locally by [`Trainer::train_step`] or gathered from
+    /// remote ranks by the mesh supervisor. The loss sum reads each
+    /// shard's slot 0 *before* the reduce in shard order, exactly the
+    /// sequence the fused path used (the reduce skips index 0, so the
+    /// summed values are identical).
+    pub(crate) fn finish_step(&mut self) -> Result<f64, TrainError> {
+        let shards = self.rings.len();
+        let pool = self.pool;
+        let mut loss_sum = 0.0;
+        for out in self.fwd_outs.iter() {
+            loss_sum += out[0].item_f32() as f64;
         }
 
         // 3) in-place parallel tree all-reduce across the shard outputs
@@ -493,9 +527,51 @@ impl<'e> Trainer<'e> {
         Tensor::from_i32(&[b, w], ids)
     }
 
-    /// Per-step logging + periodic-eval cadence shared by `train` and
-    /// `train_guarded`.
-    fn after_step(&mut self, loss: f64) -> Result<(), TrainError> {
+    /// Compute one shard's `[loss, grads..]` for an explicit stream
+    /// position into `fwd_outs[shard]` — the mesh worker's unit of work
+    /// (rank r computes shard r at stream position `step - 1`). Does not
+    /// advance the trainer's own stream positions: in a mesh run the
+    /// position is dictated by the coordinator's step counter, which is
+    /// what lets a respawned worker resume bit-exactly mid-run.
+    pub(crate) fn shard_forward(
+        &mut self,
+        shard: usize,
+        stream_pos: usize,
+    ) -> anyhow::Result<&[Tensor]> {
+        anyhow::ensure!(shard < self.rings.len(), "shard {shard} out of range");
+        let (b, w) = (self.microbatch, self.seq_len + 1);
+        {
+            let ring = &mut self.rings[shard];
+            let out = &mut self.batches[shard];
+            ring.batch_into(&self.corpus, &self.tokenizer, shard, stream_pos, b, w, out);
+        }
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(self.n_params + 1);
+        inputs.extend(self.params.iter());
+        inputs.push(&self.batches[shard]);
+        self.engine
+            .run_exe_refs_into(&self.fwd, &inputs, &mut self.fwd_outs[shard])?;
+        Ok(&self.fwd_outs[shard])
+    }
+
+    /// A shard's most recent `[loss, grads..]` output buffer.
+    pub(crate) fn shard_out(&self, shard: usize) -> &[Tensor] {
+        &self.fwd_outs[shard]
+    }
+
+    /// Mutable access to a shard's output slot — the mesh supervisor
+    /// installs gathered remote results here before `finish_step`.
+    pub(crate) fn shard_out_mut(&mut self, shard: usize) -> &mut Vec<Tensor> {
+        &mut self.fwd_outs[shard]
+    }
+
+    /// Number of parameter tensors (a fwd/bwd output is 1 + this).
+    pub(crate) fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Per-step logging + periodic-eval cadence shared by `train`,
+    /// `train_guarded`, and the mesh supervisor.
+    pub(crate) fn after_step(&mut self, loss: f64) -> Result<(), TrainError> {
         if !self.opts.quiet
             && self.opts.log_every > 0
             && self.step % self.opts.log_every == 0

@@ -39,20 +39,48 @@
 //!
 //! ## Sites
 //!
-//! | site          | lives in                  | effect when fired            |
-//! |---------------|---------------------------|------------------------------|
-//! | `save_io`     | `Checkpoint::save`        | IO error before writing      |
-//! | `save_partial`| `Checkpoint::save`        | error mid-write (torn .tmp)  |
-//! | `load_io`     | `Checkpoint::load`        | IO error before reading      |
-//! | `grad_nan`    | `Trainer::train_step`     | NaN written into gradients   |
-//! | `trial_panic` | `sweep::run_trial`        | panic inside the trial job   |
-//! | `pool_job`    | `parallel::WorkerPool`    | panic inside a pool job      |
+//! | site           | lives in                  | effect when fired            |
+//! |----------------|---------------------------|------------------------------|
+//! | `save_io`      | `Checkpoint::save`        | IO error before writing      |
+//! | `save_partial` | `Checkpoint::save`        | error mid-write (torn .tmp)  |
+//! | `load_io`      | `Checkpoint::load`        | IO error before reading      |
+//! | `grad_nan`     | `Trainer::train_step`     | NaN written into gradients   |
+//! | `trial_panic`  | `sweep::run_trial`        | panic inside the trial job   |
+//! | `pool_job`     | `parallel::WorkerPool`    | panic inside a pool job      |
+//! | `conn_drop`    | `mesh::wire` send path    | socket shut down, send fails |
+//! | `frame_corrupt`| `mesh::wire` send path    | payload byte flipped (CRC)   |
+//! | `frame_delay`  | `mesh::wire` send path    | sleep past the read timeout  |
+//! | `rank_exit`    | `mesh::worker` step loop  | worker process exits         |
+//!
+//! Specs naming a site outside this table are rejected by [`configure`]
+//! — a typo'd site fails loudly instead of silently never firing.
+//!
+//! ## Arming sources
+//!
+//! `--faults SPEC` on any CLI subcommand, or the `SCALE_FAULTS`
+//! environment variable. When both are given the CLI flag wins
+//! ([`configure_from_sources`] applies the env first, then lets the
+//! flag replace it).
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
 
+use crate::util::lock::StableMutex;
 use anyhow::{bail, ensure, Result};
+
+/// Every site name compiled into the codebase, in registration order.
+pub const KNOWN_SITES: &[&str] = &[
+    "save_io",
+    "save_partial",
+    "load_io",
+    "grad_nan",
+    "trial_panic",
+    "pool_job",
+    "conn_drop",
+    "frame_corrupt",
+    "frame_delay",
+    "rank_exit",
+];
 
 #[derive(Debug, Clone)]
 struct Entry {
@@ -67,16 +95,16 @@ struct Entry {
 /// after one relaxed load, touching neither the registry mutex nor the
 /// thread-local scope.
 static ARMED: AtomicBool = AtomicBool::new(false);
-static ENTRIES: Mutex<Vec<Entry>> = Mutex::new(Vec::new());
+// StableMutex: a panicking holder (chaos tests panic on purpose) must
+// not poison the registry and cascade into unrelated failures.
+static ENTRIES: StableMutex<Vec<Entry>> = StableMutex::new(Vec::new());
 
 thread_local! {
     static SCOPE: RefCell<Option<String>> = const { RefCell::new(None) };
 }
 
 fn lock() -> std::sync::MutexGuard<'static, Vec<Entry>> {
-    // a panic while holding the lock is impossible below, but a
-    // poisoned registry should keep injecting, not cascade
-    ENTRIES.lock().unwrap_or_else(|p| p.into_inner())
+    ENTRIES.lock()
 }
 
 fn parse_range(range: &str) -> Result<(u64, u64)> {
@@ -123,6 +151,11 @@ pub fn configure(spec: &str) -> Result<()> {
         if let Some(sc) = &scope {
             ensure!(!sc.is_empty(), "fault spec: empty scope in {raw:?}");
         }
+        ensure!(
+            KNOWN_SITES.contains(&site),
+            "fault spec: unknown site {site:?} in {raw:?} (known: {})",
+            KNOWN_SITES.join(", ")
+        );
         let (from, to) = parse_range(range.trim())?;
         entries.push(Entry { scope, site: site.to_string(), from, to, hits: 0 });
     }
@@ -138,6 +171,17 @@ pub fn configure_from_env() -> Result<()> {
     match std::env::var("SCALE_FAULTS") {
         Ok(s) if !s.trim().is_empty() => configure(&s),
         _ => Ok(()),
+    }
+}
+
+/// Install failpoints from both arming sources with CLI precedence:
+/// `SCALE_FAULTS` is applied first, then a `--faults` spec (when given)
+/// *replaces* whatever the environment installed — the flag wins.
+pub fn configure_from_sources(cli: Option<&str>) -> Result<()> {
+    configure_from_env()?;
+    match cli {
+        Some(spec) => configure(spec),
+        None => Ok(()),
     }
 }
 
@@ -213,11 +257,12 @@ mod tests {
     use super::*;
 
     /// The registry is process-global, so tests serialize on one lock
-    /// and always leave it disarmed.
-    static TEST_LOCK: Mutex<()> = Mutex::new(());
+    /// and always leave it disarmed. StableMutex: a failing assertion
+    /// under the lock must not cascade into every later test.
+    static TEST_LOCK: StableMutex<()> = StableMutex::new(());
 
     fn guard() -> std::sync::MutexGuard<'static, ()> {
-        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+        TEST_LOCK.lock()
     }
 
     #[test]
@@ -242,12 +287,12 @@ mod tests {
     #[test]
     fn ranges_and_star() {
         let _g = guard();
-        configure("a@2..3, b@2.., c@*").unwrap();
-        let a: Vec<bool> = (0..4).map(|_| fires("a")).collect();
+        configure("save_io@2..3, load_io@2.., grad_nan@*").unwrap();
+        let a: Vec<bool> = (0..4).map(|_| fires("save_io")).collect();
         assert_eq!(a, [false, true, true, false]);
-        let b: Vec<bool> = (0..4).map(|_| fires("b")).collect();
+        let b: Vec<bool> = (0..4).map(|_| fires("load_io")).collect();
         assert_eq!(b, [false, true, true, true]);
-        let c: Vec<bool> = (0..3).map(|_| fires("c")).collect();
+        let c: Vec<bool> = (0..3).map(|_| fires("grad_nan")).collect();
         assert_eq!(c, [true, true, true]);
         clear();
     }
@@ -255,41 +300,41 @@ mod tests {
     #[test]
     fn sites_count_independently() {
         let _g = guard();
-        configure("x@1").unwrap();
-        assert!(!fires("y"));
-        assert!(fires("x"), "y hits must not consume x's counter");
+        configure("save_io@1").unwrap();
+        assert!(!fires("load_io"));
+        assert!(fires("save_io"), "load_io hits must not consume save_io's counter");
         clear();
     }
 
     #[test]
     fn scoped_entries_match_only_inside_scope() {
         let _g = guard();
-        configure("trial1/p@1").unwrap();
-        assert!(!fires("p"), "unscoped call must not match");
-        assert!(!scoped("trial0", || fires("p")), "wrong scope");
-        assert!(scoped("trial1", || fires("p")), "right scope, first hit");
-        assert!(!scoped("trial1", || fires("p")), "consumed");
+        configure("trial1/trial_panic@1").unwrap();
+        assert!(!fires("trial_panic"), "unscoped call must not match");
+        assert!(!scoped("trial0", || fires("trial_panic")), "wrong scope");
+        assert!(scoped("trial1", || fires("trial_panic")), "right scope, first hit");
+        assert!(!scoped("trial1", || fires("trial_panic")), "consumed");
         clear();
     }
 
     #[test]
     fn scope_restored_after_panic() {
         let _g = guard();
-        configure("trial9/p@*").unwrap();
+        configure("trial9/trial_panic@*").unwrap();
         let r = std::panic::catch_unwind(|| scoped("trial9", || panic!("boom")));
         assert!(r.is_err());
-        assert!(!fires("p"), "scope must not leak out of the unwound region");
+        assert!(!fires("trial_panic"), "scope must not leak out of the unwound region");
         clear();
     }
 
     #[test]
     fn nested_scopes_restore_outer() {
         let _g = guard();
-        configure("outer/p@*").unwrap();
+        configure("outer/trial_panic@*").unwrap();
         scoped("outer", || {
-            assert!(fires("p"));
-            scoped("inner", || assert!(!fires("p")));
-            assert!(fires("p"), "outer scope restored after nested region");
+            assert!(fires("trial_panic"));
+            scoped("inner", || assert!(!fires("trial_panic")));
+            assert!(fires("trial_panic"), "outer scope restored after nested region");
         });
         clear();
     }
@@ -298,19 +343,68 @@ mod tests {
     fn malformed_specs_rejected() {
         let _g = guard();
         clear();
-        for bad in ["", "nosigil", "x@", "x@0", "x@0..2", "x@3..2", "x@z", "/x@1", "s/@1"] {
+        let bad_specs = [
+            "",                    // no entries
+            "nosigil",             // missing '@'
+            "grad_nan@",           // site without range
+            "@3",                  // range without site
+            "grad_nan@0",          // hit counts are 1-based
+            "grad_nan@0..2",       // 0-based range start
+            "grad_nan@3..2",       // reversed range
+            "grad_nan@z",          // non-numeric range
+            "/grad_nan@1",         // empty scope
+            "trial1/@1",           // empty site under a scope
+            "typo_site@1",         // unknown site
+            "trial1/typo_site@1",  // unknown site under a scope
+            "grad_nan@1, typo@2",  // one bad entry rejects the whole spec
+        ];
+        for bad in bad_specs {
             assert!(configure(bad).is_err(), "spec {bad:?} must be rejected");
         }
         assert!(!armed(), "failed configure must not arm the registry");
     }
 
     #[test]
+    fn every_known_site_configures() {
+        let _g = guard();
+        for site in KNOWN_SITES {
+            configure(&format!("{site}@1")).unwrap();
+        }
+        clear();
+    }
+
+    #[test]
     fn reconfigure_replaces_counters() {
         let _g = guard();
-        configure("x@1").unwrap();
-        assert!(fires("x"));
-        configure("x@1").unwrap();
-        assert!(fires("x"), "fresh spec restarts the hit counter");
+        configure("save_io@1").unwrap();
+        assert!(fires("save_io"));
+        configure("save_io@1").unwrap();
+        assert!(fires("save_io"), "fresh spec restarts the hit counter");
+        clear();
+    }
+
+    #[test]
+    fn cli_spec_overrides_env() {
+        let _g = guard();
+        clear();
+        std::env::set_var("SCALE_FAULTS", "grad_nan@1");
+        let r = configure_from_sources(Some("save_io@1"));
+        std::env::remove_var("SCALE_FAULTS");
+        r.unwrap();
+        assert!(!fires("grad_nan"), "--faults must replace the env spec entirely");
+        assert!(fires("save_io"), "--faults wins when both sources are set");
+        clear();
+    }
+
+    #[test]
+    fn env_applies_when_no_cli_spec() {
+        let _g = guard();
+        clear();
+        std::env::set_var("SCALE_FAULTS", "load_io@1");
+        let r = configure_from_sources(None);
+        std::env::remove_var("SCALE_FAULTS");
+        r.unwrap();
+        assert!(fires("load_io"), "SCALE_FAULTS applies when --faults is absent");
         clear();
     }
 }

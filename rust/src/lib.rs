@@ -24,6 +24,7 @@ pub mod exec;
 pub mod fault;
 pub mod harness;
 pub mod memory;
+pub mod mesh;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;

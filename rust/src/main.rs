@@ -9,6 +9,8 @@
 //!   variance         Fig.-4 style per-layer variance probe
 //!   sweep            concurrent multi-axis grid (optimizer x lr x seed)
 //!   sweep-lr         LR sweep for one optimizer
+//!   launch           fault-tolerant multi-process mesh training
+//!   worker           internal: one mesh rank (spawned by launch)
 //!   ablate-momentum  Theorem 2.1 noisy-quadratic placement study
 //!   list             show available sizes/optimizers/artifacts
 //!
@@ -38,11 +40,10 @@ fn artifact_dir(args: &mut Args) -> String {
 fn run() -> anyhow::Result<()> {
     let mut args = Args::from_env()?;
     // deterministic fault injection (chaos testing): --faults on any
-    // subcommand, or the SCALE_FAULTS environment variable
-    scale_llm::fault::configure_from_env()?;
-    if let Some(spec) = args.get("faults") {
-        scale_llm::fault::configure(spec)?;
-    }
+    // subcommand, or the SCALE_FAULTS environment variable; when both
+    // are set, --faults wins (the CLI is the more deliberate act)
+    let fault_spec = args.get("faults").map(str::to_string);
+    scale_llm::fault::configure_from_sources(fault_spec.as_deref())?;
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "train" => cmd_train(&mut args),
@@ -53,6 +54,8 @@ fn run() -> anyhow::Result<()> {
         "variance" => cmd_variance(&mut args),
         "sweep" => cmd_sweep_grid(&mut args),
         "sweep-lr" => cmd_sweep(&mut args),
+        "launch" => cmd_launch(&mut args),
+        "worker" => cmd_worker(&mut args),
         "ablate-momentum" => cmd_ablate(&mut args),
         "list" => cmd_list(&mut args),
         "help" | "--help" => {
@@ -87,12 +90,20 @@ usage: scale <subcommand> [options]
                   report on stdout; --retries re-runs trials that hit
                   transient faults before slotting them as faulted
   sweep-lr        --optimizer scale --size s130m --steps 100
+  launch          --ranks 2 --size s60m --optimizer scale --steps 100
+                  fault-tolerant multi-process mesh training: forks one
+                  `scale worker` per rank, localhost TCP with CRC-framed
+                  wire, heartbeats, and respawn + checkpoint-rollback
+                  recovery  [--max-respawns N] [--checkpoint-every N]
+                  [--ckpt-dir DIR] [--keep-last N] [--heartbeat-every N]
+  worker          internal: one mesh rank (spawned by launch)
   ablate-momentum Theorem 2.1 noisy-quadratic placement study
   list            artifacts / sizes / optimizers available
 
 common: --artifacts DIR (default ./artifacts), --quiet,
         --faults SPEC (deterministic failpoint injection, e.g.
-        grad_nan@5 or trial1/trial_panic@1; also via SCALE_FAULTS)";
+        grad_nan@5 or trial1/trial_panic@1; also via SCALE_FAULTS —
+        when both are set, --faults wins)";
 
 fn cmd_train(args: &mut Args) -> anyhow::Result<()> {
     let dir = artifact_dir(args);
@@ -446,6 +457,59 @@ fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
     }
     println!("{}", t.render());
     Ok(())
+}
+
+/// `scale launch --ranks N`: fault-tolerant multi-process mesh
+/// training. The supervisor runs in this process; workers are forked
+/// `scale worker` instances of the same binary.
+fn cmd_launch(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::mesh::{self, MeshOptions};
+    let dir = artifact_dir(args);
+    let ranks = args.get_usize("ranks", 2)?;
+    let base = config::apply_cli(TrainOptions::default(), args)?;
+    let mut mopts = MeshOptions::new(base, ranks);
+    mopts.artifacts = dir.clone();
+    mopts.ckpt_dir = args.get_or("ckpt-dir", "mesh_ckpts").into();
+    mopts.checkpoint_every = args.get_usize("checkpoint-every", 50)?;
+    mopts.keep_last = args.get_usize("keep-last", 3)?;
+    mopts.max_respawns = args.get_usize("max-respawns", 3)?;
+    mopts.heartbeat_every = args.get_usize("heartbeat-every", 16)?;
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    if !mopts.train.quiet {
+        println!(
+            "mesh: {ranks} ranks | size {} | optimizer {} | {} steps",
+            mopts.train.size, mopts.train.optimizer, mopts.train.steps
+        );
+    }
+    let (tr, report) = mesh::train(&engine, &mopts)?;
+    println!(
+        "mesh final eval ppl {:.3} | {} respawns | {} frame retries | optimizer state {} KiB",
+        report.ppl,
+        report.respawns,
+        report.frame_retries,
+        tr.state_bytes() / 1024
+    );
+    Ok(())
+}
+
+/// `scale worker`: one rank of a mesh run. Spawned by `launch`; not
+/// meant to be invoked by hand.
+fn cmd_worker(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::mesh::{self, WorkerOptions};
+    let dir = artifact_dir(args);
+    let rank = args.get_usize("rank", 0)?;
+    let ranks = args.get_usize("ranks", 1)?;
+    let connect = args
+        .get("connect")
+        .map(str::to_string)
+        .ok_or_else(|| anyhow::anyhow!("worker requires --connect <addr>"))?;
+    let mut train = config::apply_cli(TrainOptions::default(), args)?;
+    train.shards = ranks;
+    train.quiet = true;
+    args.finish()?;
+    let engine = Engine::new(&dir)?;
+    mesh::run_worker(&engine, &WorkerOptions { rank, ranks, connect, train })
 }
 
 fn cmd_ablate(args: &mut Args) -> anyhow::Result<()> {

@@ -1,0 +1,136 @@
+//! Fault-tolerant multi-process mesh training.
+//!
+//! `scale launch --ranks N` forks N worker processes of the same binary
+//! (`scale worker`), connects them to a coordinator-side supervisor
+//! over localhost TCP, and trains with the exact step semantics of the
+//! single-process [`Trainer`] — while surviving rank crashes, hangs,
+//! and corrupt frames. The three submodules split cleanly:
+//!
+//! * [`wire`] — the framing + codec layer. Every frame is
+//!   `u32 payload_len | payload | u32 crc32(payload)` (little-endian,
+//!   CRC from [`crate::util::crc::crc32`]), so torn or bit-flipped
+//!   frames are *detected* (and re-requested) rather than silently
+//!   folded into the gradient mean. Hosts the deterministic wire
+//!   failpoints (`conn_drop`, `frame_corrupt`, `frame_delay`).
+//! * [`worker`] — the rank body: stateless request-driven loop that
+//!   answers `Step{params}` with `Grads{[loss, grads..]}` for its shard.
+//! * [`supervisor`] — process lifecycle, heartbeats, bounded-backoff
+//!   respawn, checkpoint rollback, and the typed
+//!   [`TrainError::Mesh`](crate::coordinator::TrainError) abort when
+//!   the recovery budget runs out.
+//!
+//! ## Bit-determinism argument (three legs)
+//!
+//! The acceptance bar is that an N-rank mesh run — even one that lost
+//! and respawned ranks mid-flight — produces **bit-identical** params,
+//! optimizer state, and perplexity to a single-process run with
+//! `shards = N`. That holds because:
+//!
+//! 1. **Workers compute what the shards loop computes.** Rank r runs
+//!    [`Trainer::shard_forward`] for shard r at stream position
+//!    `step - 1` — the same executable, seed-keyed token rings, and
+//!    position arithmetic as the in-process shard loop. Params arrive
+//!    with every `Step` frame, so worker floats are a pure function of
+//!    the coordinator's broadcast.
+//! 2. **The wire is bit-transparent.** f32 payloads travel as raw
+//!    little-endian bytes ([`Tensor::f32s`] → `to_le_bytes` →
+//!    `from_le_bytes`), which round-trips every bit pattern including
+//!    NaN payloads — no text formatting, no re-rounding.
+//! 3. **The reduction is the single-process reduction.** Gathered
+//!    outputs are installed *in rank order* into the same slots the
+//!    shards loop fills, and [`reduce_ranks_into`] is literally
+//!    [`ddp::tree_all_reduce_into`] — already pinned bit-identical for
+//!    every pool size. The loss mean reads slot 0 of each rank in rank
+//!    order, matching the fused path's f64 accumulation order.
+//!
+//! Recovery preserves all three: a respawned worker is stateless
+//! (leg 1), and the supervisor rolls its trainer back to a checksummed
+//! snapshot whose round-trip is bit-exact, then replays. The
+//! `mesh_chaos` suite pins the whole story against never-failed
+//! single-process runs.
+//!
+//! [`Trainer`]: crate::coordinator::Trainer
+//! [`Trainer::shard_forward`]: crate::coordinator::Trainer
+//! [`Tensor::f32s`]: crate::runtime::Tensor::f32s
+//! [`ddp::tree_all_reduce_into`]: crate::coordinator::ddp::tree_all_reduce_into
+
+pub mod supervisor;
+pub mod wire;
+pub mod worker;
+
+pub use supervisor::{train, MeshOptions, MeshReport};
+pub use worker::{run as run_worker, WorkerOptions, RANK_EXIT_CODE};
+
+use crate::coordinator::ddp;
+use crate::parallel::WorkerPool;
+use crate::runtime::Tensor;
+
+/// Cross-process tree reduction: mean-reduce `rank_outs[r][p]` over
+/// ranks r for every `p >= skip`, leaving the mean in `rank_outs[0][p]`.
+///
+/// This is a thin, named delegation to [`ddp::tree_all_reduce_into`] —
+/// deliberately *not* a reimplementation, so the mesh inherits the
+/// in-process reduction's pinned bit-determinism (same pairwise tree
+/// order for every rank count and pool size) by construction.
+pub fn reduce_ranks_into(pool: &WorkerPool, rank_outs: &mut [Vec<Tensor>], skip: usize) {
+    ddp::tree_all_reduce_into(pool, rank_outs, skip);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ddp::tree_all_reduce_sequential;
+    use crate::parallel;
+
+    fn rank_outs(ranks: usize, params: usize) -> Vec<Vec<Tensor>> {
+        (0..ranks)
+            .map(|r| {
+                (0..params)
+                    .map(|p| {
+                        let data: Vec<f32> = (0..24)
+                            .map(|i| ((r * 131 + p * 17 + i) as f32).sin() * 3.0 + 0.125)
+                            .collect();
+                        let mut t = Tensor::zeros(&[4, 6]);
+                        t.f32s_mut().copy_from_slice(&data);
+                        t
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_sequential_reference_for_every_rank_count_and_pool() {
+        for ranks in [1usize, 2, 3, 4, 5, 8] {
+            let want = tree_all_reduce_sequential(rank_outs(ranks, 3));
+            for pool_threads in [0usize, 2, 7] {
+                let pool = WorkerPool::new(pool_threads);
+                let mut outs = rank_outs(ranks, 3);
+                // force the parallel path even on tiny tensors
+                parallel::set_min_ops_override(Some(1));
+                reduce_ranks_into(&pool, &mut outs, 0);
+                parallel::set_min_ops_override(None);
+                for (p, w) in want.iter().enumerate() {
+                    assert_eq!(
+                        outs[0][p].f32s(),
+                        w.f32s(),
+                        "ranks={ranks} pool={pool_threads} param={p}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_leaves_leading_slots_untouched() {
+        let pool = WorkerPool::new(2);
+        let mut outs = rank_outs(3, 2);
+        let keep: Vec<Vec<f32>> = outs.iter().map(|o| o[0].f32s().to_vec()).collect();
+        reduce_ranks_into(&pool, &mut outs, 1);
+        for (r, k) in keep.iter().enumerate() {
+            assert_eq!(outs[r][0].f32s(), &k[..], "skip slot of rank {r} was clobbered");
+        }
+        let want = tree_all_reduce_sequential(rank_outs(3, 2));
+        assert_eq!(outs[0][1].f32s(), want[1].f32s());
+    }
+}

@@ -1,0 +1,585 @@
+//! Coordinator-side mesh supervisor: spawns worker ranks, drives the
+//! step exchange, and owns every recovery decision.
+//!
+//! ## Step exchange
+//!
+//! The supervisor holds the canonical [`Trainer`] (params, optimizer
+//! state, schedule, metrics). Each step it broadcasts
+//! `Step { step, params }` to every rank, gathers
+//! `Grads { step, [loss, grads..] }` *in rank order* into the trainer's
+//! per-shard output slots, and runs the exact single-process step tail
+//! ([`Trainer::finish_step`]: loss mean, tree all-reduce, divergence
+//! guard, optimizer update). Workers never talk to each other — the
+//! star topology keeps every float-ordering decision in one process,
+//! which is leg one of the bit-determinism argument (see
+//! [`crate::mesh`]).
+//!
+//! ## Recovery state machine
+//!
+//! ```text
+//! EXCHANGE ──all ranks answer──────────────► FINISH (update, metrics,
+//!    │                                         checkpoint cadence)
+//!    │ CRC mismatch on a frame
+//!    ├──────► RE-REQUEST (Resend, bounded by max_frame_retries;
+//!    │          exhausted => the rank counts as failed)
+//!    │ send error / read timeout / EOF / protocol violation
+//!    ▼
+//! RECOVER: drain survivors (they park on their next blocking read),
+//!    kill + respawn each failed rank (bounded exponential backoff,
+//!    budget max_respawns), restore the newest CheckpointStore
+//!    snapshot, truncate metrics, replay from the restored step.
+//!    Budget exhausted => TrainError::Mesh (clean typed abort — the
+//!    fleet is shut down, nothing hangs).
+//! ```
+//!
+//! Heartbeats (`Ping`/`Pong` every `heartbeat_every` steps, before the
+//! step broadcast) catch ranks that died *between* steps, so a crash
+//! never waits for the next multi-megabyte broadcast to surface.
+//! Divergence is deliberately **not** a mesh event: a non-finite loss
+//! propagates as [`TrainError::Divergence`] exactly like single-process
+//! `train()` — respawning a worker cannot fix math.
+//!
+//! ## Why respawn + rollback is bit-exact
+//!
+//! Workers are stateless between steps (params arrive with every
+//! `Step`; microbatches are pure functions of `(shard, stream_pos)`),
+//! so the only state that matters lives in the supervisor's trainer —
+//! and that is restored from a checksummed snapshot whose round-trip is
+//! bit-exact. A replayed step therefore reproduces the failed step's
+//! floats exactly, which `mesh_chaos.rs` pins against a never-failed
+//! single-process run.
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::checkpoint::CheckpointStore;
+use crate::coordinator::recovery::TrainError;
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::mesh::wire::{self, Frame, WireError};
+use crate::runtime::{Engine, Tensor};
+use anyhow::{bail, ensure};
+
+/// Configuration for a mesh run. Defaults mirror [`GuardPolicy`]'s
+/// cadence where the concepts overlap.
+///
+/// [`GuardPolicy`]: crate::coordinator::recovery::GuardPolicy
+#[derive(Debug, Clone)]
+pub struct MeshOptions {
+    /// Base training options; `shards` is overridden to `ranks`.
+    pub train: TrainOptions,
+    /// Worker process count; rank r computes DDP shard r.
+    pub ranks: usize,
+    /// Artifacts dir handed to spawned workers (`--artifacts`).
+    pub artifacts: String,
+    /// Run directory for the rollback [`CheckpointStore`].
+    pub ckpt_dir: PathBuf,
+    /// Auto-checkpoint cadence (>= 1); a step-0 baseline is always
+    /// saved so recovery has a target.
+    pub checkpoint_every: usize,
+    /// Keep-last-k retention in the store.
+    pub keep_last: usize,
+    /// Total rank respawns allowed across the run; exhausted =>
+    /// [`TrainError::Mesh`].
+    pub max_respawns: usize,
+    /// Resend requests allowed per gather before a corrupt-framing rank
+    /// counts as failed.
+    pub max_frame_retries: usize,
+    /// Deadline for a (re)spawned worker to connect and say Hello.
+    pub connect_timeout_ms: u64,
+    /// Socket read/write timeout — how long a hung rank can stall the
+    /// mesh before it is declared failed.
+    pub read_timeout_ms: u64,
+    /// Ping/Pong round every N steps, before the step broadcast
+    /// (0 = off).
+    pub heartbeat_every: usize,
+    /// Respawn backoff: `base << consecutive_failures`, capped.
+    pub backoff_base_ms: u64,
+    pub backoff_max_ms: u64,
+    /// Failpoint specs armed on specific ranks' *initial* spawn only
+    /// (chaos tests). Respawned workers always come up clean — the same
+    /// spec would re-arm with reset hit counters and kill the fresh
+    /// process forever.
+    pub worker_faults: Vec<(usize, String)>,
+    /// Worker executable; `None` = `std::env::current_exe()`. Tests
+    /// pass `env!("CARGO_BIN_EXE_scale")` (the test binary is not the
+    /// CLI).
+    pub worker_bin: Option<PathBuf>,
+}
+
+impl MeshOptions {
+    pub fn new(train: TrainOptions, ranks: usize) -> MeshOptions {
+        MeshOptions {
+            train,
+            ranks,
+            artifacts: "./artifacts".into(),
+            ckpt_dir: PathBuf::from("mesh_ckpts"),
+            checkpoint_every: 50,
+            keep_last: 3,
+            max_respawns: 3,
+            max_frame_retries: 3,
+            connect_timeout_ms: 30_000,
+            read_timeout_ms: 30_000,
+            heartbeat_every: 16,
+            backoff_base_ms: 50,
+            backoff_max_ms: 2_000,
+            worker_faults: Vec::new(),
+            worker_bin: None,
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        ensure!(self.ranks >= 1, "mesh: ranks must be >= 1");
+        ensure!(self.checkpoint_every >= 1, "mesh: checkpoint_every must be >= 1");
+        ensure!(self.read_timeout_ms >= 1, "mesh: read_timeout_ms must be >= 1");
+        for (r, _) in &self.worker_faults {
+            ensure!(*r < self.ranks, "mesh: worker_faults names rank {r} of {}", self.ranks);
+        }
+        Ok(())
+    }
+}
+
+/// What a completed mesh run did, beyond the trainer's own metrics.
+#[derive(Debug, Clone)]
+pub struct MeshReport {
+    /// Final eval perplexity (same eval the single-process loop runs).
+    pub ppl: f64,
+    /// Worker processes respawned after a crash/hang.
+    pub respawns: usize,
+    /// Corrupt frames rejected by CRC and re-requested.
+    pub frame_retries: usize,
+}
+
+/// Run a full mesh training: spawn `ranks` workers, train to
+/// `opts.train.steps`, eval, shut the fleet down. Returns the trainer
+/// (params/state/metrics all populated, bit-identical to a
+/// single-process run with `shards = ranks`) plus the recovery report.
+pub fn train<'e>(
+    engine: &'e Engine,
+    opts: &MeshOptions,
+) -> Result<(Trainer<'e>, MeshReport), TrainError> {
+    opts.validate().map_err(TrainError::mesh)?;
+    let mut topts = opts.train.clone();
+    topts.shards = opts.ranks;
+    let mut tr = Trainer::new(engine, topts).map_err(TrainError::engine)?;
+    let store = CheckpointStore::open(&opts.ckpt_dir, opts.keep_last).map_err(TrainError::io)?;
+    // step-0 baseline so recovery always has a rollback target
+    let ck = tr.checkpoint().map_err(TrainError::engine)?;
+    store.save(&ck).map_err(TrainError::io)?;
+
+    let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| TrainError::mesh(e.into()))?;
+    listener.set_nonblocking(true).map_err(|e| TrainError::mesh(e.into()))?;
+    let addr = listener.local_addr().map_err(|e| TrainError::mesh(e.into()))?;
+
+    let mut fleet = Fleet::new(opts, addr);
+    for r in 0..opts.ranks {
+        fleet.spawn(r, true).map_err(TrainError::mesh)?;
+    }
+    for _ in 0..opts.ranks {
+        fleet.accept_hello(&listener).map_err(TrainError::mesh)?;
+    }
+
+    let mut report = MeshReport { ppl: f64::NAN, respawns: 0, frame_retries: 0 };
+    let mut respawns_left = opts.max_respawns;
+    let mut consec_failures: u32 = 0;
+
+    while tr.step < tr.opts.steps {
+        let mut failed = if opts.heartbeat_every > 0 && tr.step % opts.heartbeat_every == 0 {
+            fleet.heartbeat_round()
+        } else {
+            Vec::new()
+        };
+        if failed.is_empty() {
+            tr.begin_step();
+            failed = exchange(&mut tr, &mut fleet, opts, &mut report);
+        }
+        if failed.is_empty() {
+            consec_failures = 0;
+            // Divergence and Engine errors propagate typed, exactly like
+            // single-process train(): respawning cannot fix math
+            let loss = tr.finish_step()?;
+            tr.after_step(loss)?;
+            if tr.step % opts.checkpoint_every == 0 {
+                let ck = tr.checkpoint().map_err(TrainError::engine)?;
+                store.save(&ck).map_err(TrainError::io)?;
+            }
+        } else {
+            recover(
+                &mut tr,
+                &mut fleet,
+                &listener,
+                &store,
+                opts,
+                &mut report,
+                &mut respawns_left,
+                &mut consec_failures,
+                &failed,
+            )?;
+        }
+    }
+    report.ppl = tr.eval().map_err(TrainError::engine)?.exp();
+    fleet.shutdown_all();
+    Ok((tr, report))
+}
+
+/// One broadcast + gather round. Returns the ranks that failed
+/// (empty = every shard's `[loss, grads..]` is installed in the
+/// trainer). Survivors are always drained — even after a failure — so
+/// they end up parked on their next blocking read with no stale frames
+/// in flight.
+fn exchange(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+) -> Vec<usize> {
+    let step = tr.step as u64;
+    let ranks = fleet.conns.len();
+    let mut reached = vec![false; ranks];
+    let mut failed = Vec::new();
+    for r in 0..ranks {
+        let sent = match fleet.conns[r].as_mut() {
+            Some(stream) => wire::write_step(stream, step, &tr.params).is_ok(),
+            None => false,
+        };
+        if sent {
+            reached[r] = true;
+        } else {
+            failed.push(r);
+        }
+    }
+    for r in 0..ranks {
+        if !reached[r] {
+            continue;
+        }
+        if let Err(e) = gather_rank(tr, fleet, r, step, opts, report) {
+            if !opts.train.quiet {
+                eprintln!("mesh: rank {r} failed at step {step}: {e}");
+            }
+            failed.push(r);
+        }
+    }
+    failed
+}
+
+/// Read one rank's `Grads` for `step`, with bounded CRC re-requests.
+fn gather_rank(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    r: usize,
+    step: u64,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+) -> anyhow::Result<()> {
+    let mut retries = 0usize;
+    loop {
+        let stream = match fleet.conns[r].as_mut() {
+            Some(s) => s,
+            None => bail!("no connection"),
+        };
+        match wire::read_frame(stream) {
+            Ok(Frame::Grads { step: s, tensors }) => {
+                ensure!(s == step, "stale grads for step {s} (want {step})");
+                validate_grads(tr, &tensors)?;
+                *tr.shard_out_mut(r) = tensors;
+                return Ok(());
+            }
+            Ok(other) => bail!("unexpected {} frame (want Grads)", other.name()),
+            Err(WireError::Crc { .. }) => {
+                ensure!(
+                    retries < opts.max_frame_retries,
+                    "frame retries ({}) exhausted",
+                    opts.max_frame_retries
+                );
+                retries += 1;
+                report.frame_retries += 1;
+                wire::write_resend(stream)?;
+            }
+            Err(WireError::Fatal(e)) => return Err(e),
+        }
+    }
+}
+
+/// The gathered tensors come off the network: validate against the
+/// trainer's own layout before installing them.
+fn validate_grads(tr: &Trainer<'_>, tensors: &[Tensor]) -> anyhow::Result<()> {
+    ensure!(
+        tensors.len() == tr.n_params() + 1,
+        "got {} tensors, want loss + {} grads",
+        tensors.len(),
+        tr.n_params()
+    );
+    ensure!(tensors[0].numel() == 1, "slot 0 must be the loss scalar");
+    for (g, p) in tensors[1..].iter().zip(tr.params.iter()) {
+        ensure!(
+            g.shape() == p.shape(),
+            "grad shape {:?} does not match param shape {:?}",
+            g.shape(),
+            p.shape()
+        );
+    }
+    Ok(())
+}
+
+/// Kill + respawn each failed rank (bounded budget, exponential
+/// backoff), then roll the trainer back to the newest snapshot so the
+/// whole mesh replays from a clean point.
+#[allow(clippy::too_many_arguments)]
+fn recover(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    listener: &TcpListener,
+    store: &CheckpointStore,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+    respawns_left: &mut usize,
+    consec_failures: &mut u32,
+    failed: &[usize],
+) -> Result<(), TrainError> {
+    for &r in failed {
+        if *respawns_left == 0 {
+            fleet.shutdown_all();
+            return Err(TrainError::mesh(anyhow::anyhow!(
+                "rank {r} failed and the respawn budget ({}) is exhausted",
+                opts.max_respawns
+            )));
+        }
+        *respawns_left -= 1;
+        report.respawns += 1;
+        fleet.kill(r);
+        let backoff = backoff_ms(opts, *consec_failures);
+        std::thread::sleep(Duration::from_millis(backoff));
+        // respawned clean: no --faults, no SCALE_FAULTS — the original
+        // spec would re-arm with reset hit counters in the fresh process
+        // and kill it again forever
+        fleet.spawn(r, false).map_err(TrainError::mesh)?;
+        fleet.accept_hello(listener).map_err(TrainError::mesh)?;
+    }
+    *consec_failures += 1;
+    let (_, ck) = store
+        .latest()
+        .map_err(TrainError::io)?
+        .ok_or_else(|| TrainError::io(anyhow::anyhow!("no snapshot to roll back to")))?;
+    tr.restore(&ck).map_err(TrainError::engine)?;
+    tr.metrics.truncate_to_step(tr.step);
+    if !opts.train.quiet {
+        println!("  mesh: respawned rank(s) {failed:?}, rolled back to step {}", tr.step);
+    }
+    Ok(())
+}
+
+fn backoff_ms(opts: &MeshOptions, consec: u32) -> u64 {
+    opts.backoff_base_ms.saturating_mul(1u64 << consec.min(6)).min(opts.backoff_max_ms)
+}
+
+/// The worker processes and their connections, slotted by rank.
+/// Dropping the fleet kills any children still alive, so an early
+/// error return never leaks processes.
+struct Fleet<'a> {
+    opts: &'a MeshOptions,
+    addr: SocketAddr,
+    children: Vec<Option<Child>>,
+    conns: Vec<Option<TcpStream>>,
+}
+
+impl<'a> Fleet<'a> {
+    fn new(opts: &'a MeshOptions, addr: SocketAddr) -> Fleet<'a> {
+        Fleet {
+            opts,
+            addr,
+            children: (0..opts.ranks).map(|_| None).collect(),
+            conns: (0..opts.ranks).map(|_| None).collect(),
+        }
+    }
+
+    /// Fork/exec one worker rank of the same binary. `initial` arms the
+    /// rank's `worker_faults` spec; respawns never do.
+    fn spawn(&mut self, rank: usize, initial: bool) -> anyhow::Result<()> {
+        let bin = match &self.opts.worker_bin {
+            Some(p) => p.clone(),
+            None => std::env::current_exe()?,
+        };
+        let t = &self.opts.train;
+        let mut cmd = Command::new(bin);
+        cmd.arg("worker");
+        cmd.arg("--rank").arg(rank.to_string());
+        cmd.arg("--ranks").arg(self.opts.ranks.to_string());
+        cmd.arg("--connect").arg(self.addr.to_string());
+        cmd.arg("--artifacts").arg(&self.opts.artifacts);
+        cmd.arg("--size").arg(&t.size);
+        cmd.arg("--optimizer").arg(&t.optimizer);
+        cmd.arg("--steps").arg(t.steps.to_string());
+        // f64 Display is shortest-round-trip, so the worker parses the
+        // identical float (it never uses it for bits; rings key on seed)
+        cmd.arg("--lr").arg(format!("{}", t.base_lr));
+        cmd.arg("--seed").arg(t.seed.to_string());
+        cmd.arg("--quiet");
+        cmd.stdout(Stdio::null());
+        // supervisor-side env faults must not leak into workers
+        cmd.env_remove("SCALE_FAULTS");
+        if initial {
+            if let Some((_, spec)) = self.opts.worker_faults.iter().find(|(fr, _)| *fr == rank) {
+                cmd.arg("--faults").arg(spec);
+            }
+        }
+        let child = cmd.spawn().map_err(|e| anyhow::anyhow!("spawn worker rank {rank}: {e}"))?;
+        self.children[rank] = Some(child);
+        Ok(())
+    }
+
+    /// Accept one worker connection (the nonblocking listener is polled
+    /// against `connect_timeout_ms`) and slot it by its Hello rank.
+    fn accept_hello(&mut self, listener: &TcpListener) -> anyhow::Result<()> {
+        let deadline = Instant::now() + Duration::from_millis(self.opts.connect_timeout_ms);
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    stream.set_nonblocking(false)?;
+                    stream.set_nodelay(true)?;
+                    let t = Duration::from_millis(self.opts.read_timeout_ms);
+                    stream.set_read_timeout(Some(t))?;
+                    stream.set_write_timeout(Some(t))?;
+                    let mut stream = stream;
+                    let rank = match wire::read_frame(&mut stream) {
+                        Ok(Frame::Hello { rank }) => rank,
+                        Ok(f) => bail!("mesh: expected Hello, got {}", f.name()),
+                        Err(e) => bail!("mesh: bad Hello handshake: {e}"),
+                    };
+                    ensure!(rank < self.conns.len(), "mesh: Hello from unknown rank {rank}");
+                    ensure!(
+                        self.conns[rank].is_none(),
+                        "mesh: duplicate connection for rank {rank}"
+                    );
+                    self.conns[rank] = Some(stream);
+                    return Ok(());
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    ensure!(
+                        Instant::now() < deadline,
+                        "mesh: timed out waiting for a worker to connect ({} ms)",
+                        self.opts.connect_timeout_ms
+                    );
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// Ping every rank, then collect Pongs. Returns the unresponsive
+    /// ranks (empty = fleet healthy).
+    fn heartbeat_round(&mut self) -> Vec<usize> {
+        let ranks = self.conns.len();
+        let mut reached = vec![false; ranks];
+        let mut failed = Vec::new();
+        for r in 0..ranks {
+            let sent = match self.conns[r].as_mut() {
+                Some(s) => wire::write_ping(s).is_ok(),
+                None => false,
+            };
+            if sent {
+                reached[r] = true;
+            } else {
+                failed.push(r);
+            }
+        }
+        for r in 0..ranks {
+            if !reached[r] {
+                continue;
+            }
+            let alive = match self.conns[r].as_mut() {
+                Some(s) => matches!(wire::read_frame(s), Ok(Frame::Pong)),
+                None => false,
+            };
+            if !alive {
+                failed.push(r);
+            }
+        }
+        failed
+    }
+
+    /// Drop the rank's connection and kill + reap its process.
+    fn kill(&mut self, rank: usize) {
+        self.conns[rank] = None;
+        if let Some(mut child) = self.children[rank].take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+
+    /// Best-effort Shutdown frames, then a bounded grace period before
+    /// killing stragglers. Never errors, never hangs.
+    fn shutdown_all(&mut self) {
+        for conn in self.conns.iter_mut() {
+            if let Some(s) = conn.as_mut() {
+                let _ = wire::write_shutdown(s);
+            }
+        }
+        let deadline = Instant::now() + Duration::from_millis(2_000);
+        for child in self.children.iter_mut() {
+            if let Some(c) = child.as_mut() {
+                loop {
+                    match c.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        _ => {
+                            let _ = c.kill();
+                            let _ = c.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+            *child = None;
+        }
+        for conn in self.conns.iter_mut() {
+            *conn = None;
+        }
+    }
+}
+
+impl Drop for Fleet<'_> {
+    fn drop(&mut self) {
+        for child in self.children.iter_mut() {
+            if let Some(mut c) = child.take() {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_bounded_and_exponential() {
+        let mut o = MeshOptions::new(TrainOptions::default(), 2);
+        o.backoff_base_ms = 50;
+        o.backoff_max_ms = 2_000;
+        assert_eq!(backoff_ms(&o, 0), 50);
+        assert_eq!(backoff_ms(&o, 1), 100);
+        assert_eq!(backoff_ms(&o, 2), 200);
+        assert_eq!(backoff_ms(&o, 10), 2_000, "capped");
+        assert_eq!(backoff_ms(&o, 63), 2_000, "shift never overflows");
+    }
+
+    #[test]
+    fn options_validate() {
+        let mut o = MeshOptions::new(TrainOptions::default(), 2);
+        o.validate().unwrap();
+        o.ranks = 0;
+        assert!(o.validate().is_err());
+        o.ranks = 2;
+        o.checkpoint_every = 0;
+        assert!(o.validate().is_err());
+        o.checkpoint_every = 1;
+        o.worker_faults = vec![(5, "rank_exit@1".into())];
+        assert!(o.validate().is_err());
+    }
+}

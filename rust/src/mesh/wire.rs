@@ -1,0 +1,484 @@
+//! Length-prefixed, CRC32-framed wire protocol between the mesh
+//! supervisor and its worker ranks.
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! ```text
+//! u32 payload_len | payload bytes | u32 crc32(payload)
+//! payload := u8 tag | body
+//! ```
+//!
+//! The CRC ([`crate::util::crc::crc32`], the same polynomial checkpoint
+//! v2 uses) covers the payload only, so a damaged payload is detected
+//! while the length framing stays intact — the reader consumes exactly
+//! one frame and can ask for a resend instead of tearing the
+//! connection down. That split is the whole point of
+//! [`WireError::Crc`] vs [`WireError::Fatal`]: a CRC mismatch is
+//! *recoverable* (bounded re-request), everything else (EOF, timeout,
+//! oversized frame, unknown tag) means the connection is gone or
+//! desynced and the rank must be treated as failed.
+//!
+//! ## Frames
+//!
+//! | tag | frame      | body                                  | direction |
+//! |-----|------------|---------------------------------------|-----------|
+//! | 1   | `Hello`    | `u32 rank`                            | w -> s    |
+//! | 2   | `Step`     | `u64 step`, tensors (params)          | s -> w    |
+//! | 3   | `Grads`    | `u64 step`, tensors (`[loss, grads]`) | w -> s    |
+//! | 4   | `Resend`   | —                                     | s -> w    |
+//! | 5   | `Ping`     | —                                     | s -> w    |
+//! | 6   | `Pong`     | —                                     | w -> s    |
+//! | 7   | `Shutdown` | —                                     | s -> w    |
+//!
+//! Tensors travel as `u32 count`, then per tensor `u32 ndims`,
+//! `u64 dims..`, raw little-endian f32 data. Only f32 tensors travel
+//! (params and gradients); f32 bits round-trip exactly through
+//! `to_le_bytes`/`from_le_bytes`, which is one of the three legs of the
+//! mesh bit-determinism argument (see the [`crate::mesh`] module docs).
+//! The decoder treats the peer as untrusted: counts, dims, and data
+//! lengths are validated against the remaining payload *before* any
+//! allocation.
+//!
+//! ## Failpoints
+//!
+//! Every frame write funnels through [`send`], which hosts the wire
+//! failpoints (`conn_drop`, `frame_delay`, `frame_corrupt` — see
+//! [`crate::fault`]). `frame_corrupt` flips one payload byte while
+//! writing the CRC of the *clean* payload, producing exactly the torn
+//! frame the CRC leg must catch. Disarmed, each is one relaxed atomic
+//! load.
+
+use std::io::{self, Read, Write};
+
+use crate::fault;
+use crate::runtime::Tensor;
+use crate::util::crc::crc32;
+use anyhow::{bail, ensure};
+
+/// Upper bound on a frame payload; a declared length beyond this is a
+/// protocol violation, not an allocation request.
+pub const MAX_FRAME: usize = 1 << 30;
+/// Tensor-codec bounds, mirrored from the checkpoint loader's hostile-
+/// input posture.
+const MAX_WIRE_TENSORS: usize = 1 << 16;
+const MAX_WIRE_DIMS: usize = 8;
+const MAX_WIRE_DIM: u64 = 1 << 31;
+/// How long a `frame_delay` failpoint stalls the write — comfortably
+/// past the chaos suite's read timeout, comfortably under its overall
+/// test budget.
+const FRAME_DELAY_MS: u64 = 1500;
+
+const TAG_HELLO: u8 = 1;
+const TAG_STEP: u8 = 2;
+const TAG_GRADS: u8 = 3;
+const TAG_RESEND: u8 = 4;
+const TAG_PING: u8 = 5;
+const TAG_PONG: u8 = 6;
+const TAG_SHUTDOWN: u8 = 7;
+
+/// A decoded frame. `Step`/`Grads` own their tensors; the write side
+/// never builds this enum (the `write_*` helpers serialize straight
+/// from borrowed `&[Tensor]`, so params are never cloned per step).
+pub enum Frame {
+    Hello { rank: usize },
+    Step { step: u64, tensors: Vec<Tensor> },
+    Grads { step: u64, tensors: Vec<Tensor> },
+    Resend,
+    Ping,
+    Pong,
+    Shutdown,
+}
+
+impl Frame {
+    /// Frame name for error messages (avoids Debug-printing tensors).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Frame::Hello { .. } => "Hello",
+            Frame::Step { .. } => "Step",
+            Frame::Grads { .. } => "Grads",
+            Frame::Resend => "Resend",
+            Frame::Ping => "Ping",
+            Frame::Pong => "Pong",
+            Frame::Shutdown => "Shutdown",
+        }
+    }
+}
+
+/// Read-side failure, split by recoverability.
+#[derive(Debug)]
+pub enum WireError {
+    /// The frame arrived intact *as a frame* but its payload checksum
+    /// failed — ask the peer to resend.
+    Crc { expect: u32, got: u32 },
+    /// EOF, timeout, oversized or malformed frame: the connection is
+    /// unusable and the peer must be treated as failed.
+    Fatal(anyhow::Error),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Crc { expect, got } => {
+                write!(f, "frame CRC mismatch (expect {expect:#010x}, got {got:#010x})")
+            }
+            WireError::Fatal(e) => write!(f, "wire failure: {e}"),
+        }
+    }
+}
+
+// ---- write side ------------------------------------------------------------
+
+/// Write one frame: length prefix, payload, payload CRC. All wire
+/// failpoints live here, in a fixed order:
+///
+/// 1. `conn_drop` — bail before writing anything; the caller abandons
+///    the connection and its teardown (process exit or rank kill) is
+///    what the peer observes as EOF.
+/// 2. `frame_delay` — sleep [`FRAME_DELAY_MS`] before writing, so a
+///    peer with a read timeout sees a hung rank.
+/// 3. `frame_corrupt` — flip one payload byte on the wire while keeping
+///    the clean payload's CRC, so the peer's checksum rejects it.
+pub fn send<S: Write>(stream: &mut S, payload: &[u8]) -> anyhow::Result<()> {
+    if fault::fires("conn_drop") {
+        bail!("conn_drop failpoint: connection dropped");
+    }
+    if fault::fires("frame_delay") {
+        std::thread::sleep(std::time::Duration::from_millis(FRAME_DELAY_MS));
+    }
+    ensure!(payload.len() <= MAX_FRAME, "wire: frame too large ({} bytes)", payload.len());
+    let crc = crc32(payload);
+    stream.write_all(&(payload.len() as u32).to_le_bytes())?;
+    if fault::fires("frame_corrupt") {
+        let mut bad = payload.to_vec();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x20;
+        stream.write_all(&bad)?;
+    } else {
+        stream.write_all(payload)?;
+    }
+    stream.write_all(&crc.to_le_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_tensors(buf: &mut Vec<u8>, tensors: &[Tensor]) -> anyhow::Result<()> {
+    ensure!(tensors.len() <= MAX_WIRE_TENSORS, "wire: too many tensors");
+    put_u32(buf, tensors.len() as u32);
+    for t in tensors {
+        let Tensor::F32 { shape, data } = t else {
+            bail!("wire: only f32 tensors travel between ranks");
+        };
+        ensure!(shape.len() <= MAX_WIRE_DIMS, "wire: tensor rank {} too deep", shape.len());
+        put_u32(buf, shape.len() as u32);
+        for &d in shape {
+            put_u64(buf, d as u64);
+        }
+        for &x in data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    Ok(())
+}
+
+pub fn write_hello<S: Write>(stream: &mut S, rank: usize) -> anyhow::Result<()> {
+    let mut p = Vec::with_capacity(5);
+    p.push(TAG_HELLO);
+    put_u32(&mut p, rank as u32);
+    send(stream, &p)
+}
+
+pub fn write_step<S: Write>(stream: &mut S, step: u64, tensors: &[Tensor]) -> anyhow::Result<()> {
+    write_tensor_frame(stream, TAG_STEP, step, tensors)
+}
+
+pub fn write_grads<S: Write>(stream: &mut S, step: u64, tensors: &[Tensor]) -> anyhow::Result<()> {
+    write_tensor_frame(stream, TAG_GRADS, step, tensors)
+}
+
+fn write_tensor_frame<S: Write>(
+    stream: &mut S,
+    tag: u8,
+    step: u64,
+    tensors: &[Tensor],
+) -> anyhow::Result<()> {
+    let bytes: usize = tensors.iter().map(|t| 4 + 8 * t.shape().len() + 4 * t.numel()).sum();
+    let mut p = Vec::with_capacity(13 + bytes);
+    p.push(tag);
+    put_u64(&mut p, step);
+    encode_tensors(&mut p, tensors)?;
+    send(stream, &p)
+}
+
+pub fn write_resend<S: Write>(stream: &mut S) -> anyhow::Result<()> {
+    send(stream, &[TAG_RESEND])
+}
+
+pub fn write_ping<S: Write>(stream: &mut S) -> anyhow::Result<()> {
+    send(stream, &[TAG_PING])
+}
+
+pub fn write_pong<S: Write>(stream: &mut S) -> anyhow::Result<()> {
+    send(stream, &[TAG_PONG])
+}
+
+pub fn write_shutdown<S: Write>(stream: &mut S) -> anyhow::Result<()> {
+    send(stream, &[TAG_SHUTDOWN])
+}
+
+// ---- read side -------------------------------------------------------------
+
+fn read_bytes<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), WireError> {
+    r.read_exact(buf).map_err(|e| {
+        WireError::Fatal(match e.kind() {
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                anyhow::anyhow!("read timed out (peer hung or stalled)")
+            }
+            io::ErrorKind::UnexpectedEof => anyhow::anyhow!("connection closed by peer"),
+            _ => anyhow::anyhow!("read failed: {e}"),
+        })
+    })
+}
+
+/// Read and decode exactly one frame. On [`WireError::Crc`] the whole
+/// frame (length, payload, CRC) has been consumed, so the stream is
+/// still framed and the caller may request a resend.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut hdr = [0u8; 4];
+    read_bytes(r, &mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(WireError::Fatal(anyhow::anyhow!("bad frame length {len}")));
+    }
+    let mut payload = vec![0u8; len];
+    read_bytes(r, &mut payload)?;
+    let mut crc_b = [0u8; 4];
+    read_bytes(r, &mut crc_b)?;
+    let expect = u32::from_le_bytes(crc_b);
+    let got = crc32(&payload);
+    if got != expect {
+        return Err(WireError::Crc { expect, got });
+    }
+    decode_payload(&payload).map_err(WireError::Fatal)
+}
+
+struct Cur<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
+    }
+
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        ensure!(self.remaining() >= n, "wire: truncated payload");
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn decode_tensors(c: &mut Cur<'_>) -> anyhow::Result<Vec<Tensor>> {
+    let count = c.u32()? as usize;
+    ensure!(count <= MAX_WIRE_TENSORS, "wire: tensor count {count} too large");
+    // every tensor needs at least its ndims word: a hostile count can't
+    // reserve more than the payload could possibly hold
+    ensure!(count * 4 <= c.remaining(), "wire: tensor count {count} exceeds payload");
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let ndims = c.u32()? as usize;
+        ensure!(ndims <= MAX_WIRE_DIMS, "wire: tensor rank {ndims} too deep");
+        let mut shape = Vec::with_capacity(ndims);
+        let mut numel: usize = 1;
+        for _ in 0..ndims {
+            let d = c.u64()?;
+            ensure!(d <= MAX_WIRE_DIM, "wire: dim {d} too large");
+            shape.push(d as usize);
+            numel = numel
+                .checked_mul(d as usize)
+                .ok_or_else(|| anyhow::anyhow!("wire: tensor size overflow"))?;
+        }
+        let raw = c.take(numel * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+            .collect();
+        out.push(Tensor::from_f32(&shape, data));
+    }
+    Ok(out)
+}
+
+fn decode_payload(payload: &[u8]) -> anyhow::Result<Frame> {
+    let mut c = Cur { b: payload, off: 0 };
+    let tag = c.take(1)?[0];
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello { rank: c.u32()? as usize },
+        TAG_STEP => Frame::Step { step: c.u64()?, tensors: decode_tensors(&mut c)? },
+        TAG_GRADS => Frame::Grads { step: c.u64()?, tensors: decode_tensors(&mut c)? },
+        TAG_RESEND => Frame::Resend,
+        TAG_PING => Frame::Ping,
+        TAG_PONG => Frame::Pong,
+        TAG_SHUTDOWN => Frame::Shutdown,
+        other => bail!("wire: unknown frame tag {other}"),
+    };
+    ensure!(c.remaining() == 0, "wire: {} bytes of trailing garbage", c.remaining());
+    Ok(frame)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn tensors() -> Vec<Tensor> {
+        vec![
+            Tensor::scalar_f32(1.25),
+            Tensor::from_f32(&[2, 3], vec![1.0, -2.0, 3.5, f32::MIN_POSITIVE, 0.0, -0.0]),
+            Tensor::from_f32(&[4], vec![9.0, 8.0, 7.0, 6.0]),
+        ]
+    }
+
+    fn read_all(bytes: &[u8]) -> Vec<Frame> {
+        let mut cur = Cursor::new(bytes);
+        let mut out = Vec::new();
+        while (cur.position() as usize) < bytes.len() {
+            out.push(read_frame(&mut cur).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn roundtrip_every_frame_kind() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_hello(&mut buf, 3).unwrap();
+        write_step(&mut buf, 42, &tensors()).unwrap();
+        write_grads(&mut buf, 42, &tensors()).unwrap();
+        write_resend(&mut buf).unwrap();
+        write_ping(&mut buf).unwrap();
+        write_pong(&mut buf).unwrap();
+        write_shutdown(&mut buf).unwrap();
+        let frames = read_all(&buf);
+        assert_eq!(frames.len(), 7);
+        assert!(matches!(frames[0], Frame::Hello { rank: 3 }));
+        match &frames[1] {
+            Frame::Step { step, tensors: ts } => {
+                assert_eq!(*step, 42);
+                // bit-exact f32 round-trip, shapes included
+                assert_eq!(ts, &tensors());
+            }
+            f => panic!("expected Step, got {}", f.name()),
+        }
+        match &frames[2] {
+            Frame::Grads { step, tensors: ts } => {
+                assert_eq!(*step, 42);
+                assert_eq!(ts, &tensors());
+            }
+            f => panic!("expected Grads, got {}", f.name()),
+        }
+        assert!(matches!(frames[3], Frame::Resend));
+        assert!(matches!(frames[4], Frame::Ping));
+        assert!(matches!(frames[5], Frame::Pong));
+        assert!(matches!(frames[6], Frame::Shutdown));
+    }
+
+    #[test]
+    fn nan_and_inf_round_trip_bitwise() {
+        let t = vec![Tensor::from_f32(&[3], vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY])];
+        let mut buf: Vec<u8> = Vec::new();
+        write_grads(&mut buf, 1, &t).unwrap();
+        match read_frame(&mut Cursor::new(&buf)).unwrap() {
+            Frame::Grads { tensors: ts, .. } => {
+                let bits: Vec<u32> = ts[0].f32s().iter().map(|x| x.to_bits()).collect();
+                let want: Vec<u32> = t[0].f32s().iter().map(|x| x.to_bits()).collect();
+                assert_eq!(bits, want);
+            }
+            f => panic!("expected Grads, got {}", f.name()),
+        }
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_a_crc_error_and_stream_stays_framed() {
+        let mut buf: Vec<u8> = Vec::new();
+        write_step(&mut buf, 7, &tensors()).unwrap();
+        let first_len = buf.len();
+        write_ping(&mut buf).unwrap();
+        // flip one byte inside the first frame's payload
+        buf[4 + first_len / 2] ^= 0x01;
+        let mut cur = Cursor::new(&buf[..]);
+        match read_frame(&mut cur) {
+            Err(WireError::Crc { expect, got }) => assert_ne!(expect, got),
+            Err(WireError::Fatal(e)) => panic!("want Crc, got Fatal: {e}"),
+            Ok(f) => panic!("corrupt frame decoded as {}", f.name()),
+        }
+        // the length prefix was honest, so the next frame still parses
+        assert!(matches!(read_frame(&mut cur).unwrap(), Frame::Ping));
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_fatal_not_panics() {
+        let mut good: Vec<u8> = Vec::new();
+        write_step(&mut good, 7, &tensors()).unwrap();
+        // every strict prefix either times out (io::Cursor: UnexpectedEof)
+        // or fails validation — never panics, never allocates wildly
+        for cut in [0, 1, 3, 4, 5, 12, good.len() - 1] {
+            let mut cur = Cursor::new(&good[..cut]);
+            match read_frame(&mut cur) {
+                Err(WireError::Fatal(_)) => {}
+                Err(WireError::Crc { .. }) => panic!("prefix {cut}: want Fatal, got Crc"),
+                Ok(f) => panic!("prefix {cut} decoded as {}", f.name()),
+            }
+        }
+        // a zero/oversized declared length is rejected before allocating
+        for bad_len in [0u32, (MAX_FRAME as u32) + 1] {
+            let mut cur = Cursor::new(bad_len.to_le_bytes().to_vec());
+            assert!(matches!(read_frame(&mut cur), Err(WireError::Fatal(_))));
+        }
+        // unknown tag, valid CRC
+        let payload = [99u8];
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&payload);
+        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        assert!(matches!(read_frame(&mut Cursor::new(buf)), Err(WireError::Fatal(_))));
+    }
+
+    #[test]
+    fn hostile_tensor_counts_rejected_before_allocation() {
+        // Grads frame claiming u32::MAX tensors in a tiny payload
+        let mut payload = vec![TAG_GRADS];
+        payload.extend_from_slice(&7u64.to_le_bytes());
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&payload);
+        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        match read_frame(&mut Cursor::new(buf)) {
+            Err(WireError::Fatal(e)) => {
+                assert!(e.to_string().contains("tensor count"), "{e}");
+            }
+            _ => panic!("hostile count must be fatal"),
+        }
+    }
+
+    #[test]
+    fn i32_tensors_refuse_to_travel() {
+        let t = vec![Tensor::from_i32(&[2], vec![1, 2])];
+        let mut buf: Vec<u8> = Vec::new();
+        assert!(write_step(&mut buf, 1, &t).is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! The `scale worker` body: one rank of a mesh run.
+//!
+//! A worker is *stateless between steps by construction*: every `Step`
+//! frame carries the full parameter set, and the microbatch a worker
+//! feeds its shard is a pure function of `(shard, stream_pos)` via the
+//! trainer's token rings — so a freshly respawned worker at step `k`
+//! computes bit-identical gradients to one that has been alive since
+//! step 1. That property is what makes the supervisor's
+//! kill-and-respawn recovery bit-exact, and `mesh_chaos.rs` pins it.
+//!
+//! The loop is request-driven: block on [`wire::read_frame`] (no read
+//! timeout — a parked worker waiting out another rank's recovery simply
+//! stays blocked here), answer `Step` with `Grads`, `Resend` with a
+//! re-encode of the last outputs, `Ping` with `Pong`, and exit on
+//! `Shutdown` or when the supervisor's death surfaces as EOF. Any
+//! protocol or engine failure exits the process — the supervisor owns
+//! recovery, the worker just dies loudly.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{TrainOptions, Trainer};
+use crate::fault;
+use crate::mesh::wire::{self, Frame, WireError};
+use crate::runtime::Engine;
+use anyhow::{bail, ensure};
+
+/// Exit code a `rank_exit` failpoint dies with — distinguishable from
+/// a panic (101) or a clean exit in the chaos suite's post-mortems.
+pub const RANK_EXIT_CODE: i32 = 17;
+
+/// Per-attempt connect budget; total connect time is bounded by the
+/// supervisor's accept deadline, not by the worker.
+const CONNECT_TIMEOUT_MS: u64 = 10_000;
+
+pub struct WorkerOptions {
+    /// This worker's rank — the DDP shard it computes.
+    pub rank: usize,
+    /// Total ranks in the mesh (the trainer's shard count).
+    pub ranks: usize,
+    /// Supervisor address, e.g. `127.0.0.1:41234`.
+    pub connect: String,
+    /// Must match the supervisor's `TrainOptions` where it matters for
+    /// bits: `size`, `optimizer`, `seed` (corpus + rings), `shards`
+    /// (= `ranks`). The supervisor's spawner guarantees this.
+    pub train: TrainOptions,
+}
+
+/// Dial the supervisor with bounded exponential backoff — the listener
+/// may not be accepting yet when a (re)spawned worker comes up.
+fn connect_with_backoff(addr: &str) -> anyhow::Result<TcpStream> {
+    let deadline = Instant::now() + Duration::from_millis(CONNECT_TIMEOUT_MS);
+    let mut delay = Duration::from_millis(10);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() + delay >= deadline {
+                    bail!("worker: connect to {addr} failed: {e}");
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_millis(500));
+            }
+        }
+    }
+}
+
+/// Run one worker rank to completion. Returns `Ok(())` on a clean
+/// `Shutdown`; errors propagate to the CLI and exit the process, which
+/// the supervisor observes as a rank failure.
+pub fn run(engine: &Engine, opts: &WorkerOptions) -> anyhow::Result<()> {
+    ensure!(opts.ranks >= 1, "worker: ranks must be >= 1");
+    ensure!(opts.rank < opts.ranks, "worker: rank {} out of 0..{}", opts.rank, opts.ranks);
+    ensure!(
+        opts.train.shards == opts.ranks,
+        "worker: trainer shards ({}) must equal mesh ranks ({})",
+        opts.train.shards,
+        opts.ranks
+    );
+    let mut tr = Trainer::new(engine, opts.train.clone())
+        .map_err(|e| e.context(format!("worker rank {}: trainer init", opts.rank)))?;
+    let mut stream = connect_with_backoff(&opts.connect)?;
+    stream.set_nodelay(true)?;
+    wire::write_hello(&mut stream, opts.rank)?;
+
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok(Frame::Step { step, tensors }) => {
+                // deterministic crash injection: die exactly where a real
+                // worker fault would land — after accepting the step,
+                // before computing or answering
+                if fault::fires("rank_exit") {
+                    std::process::exit(RANK_EXIT_CODE);
+                }
+                ensure!(step >= 1, "worker: step 0 on the wire");
+                ensure!(
+                    tensors.len() == tr.n_params(),
+                    "worker: got {} param tensors, expected {}",
+                    tensors.len(),
+                    tr.n_params()
+                );
+                for (p, t) in tr.params.iter_mut().zip(&tensors) {
+                    ensure!(
+                        p.shape() == t.shape(),
+                        "worker: param shape mismatch ({:?} vs {:?})",
+                        p.shape(),
+                        t.shape()
+                    );
+                    p.f32s_mut().copy_from_slice(t.f32s());
+                }
+                tr.step = step as usize;
+                // rank r computes shard r; the stream position is dictated
+                // by the coordinator's step counter (step k reads position
+                // k-1), which is the whole respawn-resume story
+                tr.shard_forward(opts.rank, (step - 1) as usize)?;
+                wire::write_grads(&mut stream, step, tr.shard_out(opts.rank))?;
+            }
+            Ok(Frame::Resend) => {
+                // the supervisor rejected our last frame (CRC); re-encode
+                // from the intact output buffers
+                wire::write_grads(&mut stream, tr.step as u64, tr.shard_out(opts.rank))?;
+            }
+            Ok(Frame::Ping) => wire::write_pong(&mut stream)?,
+            Ok(Frame::Shutdown) => return Ok(()),
+            Ok(other) => bail!("worker: unexpected {} frame", other.name()),
+            // a corrupt supervisor->worker frame can't be re-requested
+            // from this side (the supervisor is mid-broadcast); die and
+            // let the supervisor's recovery path respawn us
+            Err(WireError::Crc { expect, got }) => {
+                bail!("worker: corrupt frame from supervisor (crc {expect:#010x}/{got:#010x})")
+            }
+            Err(WireError::Fatal(e)) => {
+                return Err(e.context(format!("worker rank {}", opts.rank)));
+            }
+        }
+    }
+}

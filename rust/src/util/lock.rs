@@ -1,0 +1,69 @@
+//! Poison-tolerant mutex.
+//!
+//! [`std::sync::Mutex`] poisons itself when a holder panics, and every
+//! later `lock()` returns `Err(PoisonError)`. For locks that guard
+//! *serialization* rather than invariants — the global failpoint
+//! registry, test-suite locks that exist only to keep process-global
+//! state from interleaving — poisoning converts one failing test into a
+//! cascade of unrelated failures. [`StableMutex`] recovers the guard via
+//! [`PoisonError::into_inner`](std::sync::PoisonError::into_inner): a
+//! panic under the lock never makes the lock itself unusable.
+//!
+//! Use it only where the protected data stays valid across a panic
+//! (registries that are cleared/replaced wholesale, unit `()` test
+//! locks). Data with tearable multi-step invariants should keep the
+//! poisoning behavior.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// A [`Mutex`] whose `lock()` shrugs off poisoning.
+#[derive(Debug, Default)]
+pub struct StableMutex<T> {
+    inner: Mutex<T>,
+}
+
+impl<T> StableMutex<T> {
+    /// Creates a new lock. `const` so it can back `static` registries.
+    pub const fn new(value: T) -> Self {
+        Self { inner: Mutex::new(value) }
+    }
+
+    /// Acquires the lock, recovering the guard if a previous holder
+    /// panicked.
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.inner.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    /// Consumes the lock, returning the inner value (poison ignored).
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_survives_panic_while_held() {
+        static M: StableMutex<u32> = StableMutex::new(0);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = M.lock();
+            *g = 7;
+            panic!("poison the lock");
+        });
+        assert!(result.is_err());
+        // A plain Mutex would return Err(PoisonError) here forever; the
+        // stable lock hands back the guard and the last written value.
+        assert_eq!(*M.lock(), 7);
+        *M.lock() = 9;
+        assert_eq!(*M.lock(), 9);
+    }
+
+    #[test]
+    fn into_inner_recovers_value() {
+        let m = StableMutex::new(3usize);
+        *m.lock() += 1;
+        assert_eq!(m.into_inner(), 4);
+    }
+}

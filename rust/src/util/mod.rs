@@ -7,5 +7,6 @@ pub mod bench;
 pub mod cli;
 pub mod crc;
 pub mod json;
+pub mod lock;
 pub mod prop;
 pub mod rng;

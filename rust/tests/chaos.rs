@@ -18,8 +18,6 @@
 //! on parallel threads, so every test serializes on `LOCK` and leaves
 //! the registry cleared.
 
-use std::sync::Mutex;
-
 use scale_llm::coordinator::{
     Checkpoint, CheckpointStore, GuardPolicy, SweepPoint, SweepSpec, TrainError, TrainOptions,
     Trainer,
@@ -27,8 +25,12 @@ use scale_llm::coordinator::{
 use scale_llm::fault;
 use scale_llm::parallel::WorkerPool;
 use scale_llm::runtime::Engine;
+use scale_llm::util::lock::StableMutex;
 
-static LOCK: Mutex<()> = Mutex::new(());
+/// Poison-tolerant by construction: a panicking test must not turn
+/// every later test into a `PoisonError` unwrap — see
+/// [`StableMutex`] for why that is sound for a serialization lock.
+static LOCK: StableMutex<()> = StableMutex::new(());
 
 /// Serialize on the registry and guarantee it ends up cleared even if
 /// the test panics (the next test must start disarmed).
@@ -41,9 +43,26 @@ impl Drop for FaultGuard<'_> {
 }
 
 fn guard() -> FaultGuard<'static> {
-    let g = LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let g = LOCK.lock();
     fault::clear();
     FaultGuard(g)
+}
+
+/// The combination the whole suite relies on: a test that panics while
+/// holding the guard leaves (a) the lock takeable and (b) the registry
+/// cleared for whoever comes next.
+#[test]
+fn fault_guard_clears_registry_even_after_panic() {
+    let caught = std::panic::catch_unwind(|| {
+        let _g = guard();
+        fault::configure("grad_nan@1..").unwrap();
+        panic!("test body blew up mid-fault");
+    });
+    assert!(caught.is_err());
+    // relock *without* guard()'s own clear, so the assertion below
+    // observes the unwind-time Drop and not a fresh clear
+    let _g = LOCK.lock();
+    assert!(!fault::fires("grad_nan"), "clear-on-drop must have run during the unwind");
 }
 
 /// Engine plus the smallest trainable size its manifest offers.

@@ -1,0 +1,241 @@
+//! Mesh chaos suite: multi-process rank-failure drills for the
+//! `mesh` supervisor/worker stack. The properties pinned here are the
+//! PR's acceptance bar:
+//!
+//! - a 2- and 4-rank mesh run is **bit-identical** (params, optimizer
+//!   state, final ppl) to a single-process run with `shards = ranks`,
+//!   for inline and threaded reduction pools;
+//! - a rank killed at step k (`rank_exit` failpoint) is respawned and
+//!   the run, replayed from the newest snapshot, finishes bit-exact;
+//! - a CRC-corrupted gradient frame (`frame_corrupt`) is rejected and
+//!   re-requested without changing any result;
+//! - a stalled rank (`frame_delay` past the read timeout) is detected
+//!   as a hang, respawned, and the run still finishes bit-exact;
+//! - an exhausted respawn budget surfaces as typed
+//!   [`TrainError::Mesh`] — never a hang.
+//!
+//! Workers are real forked processes of the `scale` binary
+//! (`CARGO_BIN_EXE_scale`); their failpoints arrive via `--faults` on
+//! the *initial* spawn only, so a respawned worker never re-arms its
+//! own killer. Supervisor-side faults (`conn_drop`) are armed in this
+//! process through the global registry, hence the serialization lock.
+
+use scale_llm::coordinator::{TrainError, TrainOptions, Trainer};
+use scale_llm::fault;
+use scale_llm::mesh::{self, MeshOptions};
+use scale_llm::parallel;
+use scale_llm::runtime::Engine;
+use scale_llm::util::lock::StableMutex;
+
+static LOCK: StableMutex<()> = StableMutex::new(());
+
+struct FaultGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn guard() -> FaultGuard<'static> {
+    let g = LOCK.lock();
+    fault::clear();
+    FaultGuard(g)
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Engine plus the smallest trainable size its manifest offers.
+fn engine() -> Option<(Engine, String)> {
+    let eng = match Engine::new(artifacts_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping mesh chaos test (run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    for s in ["tiny", "s60m"] {
+        if eng.manifest.sizes.contains_key(s) {
+            return Some((eng, s.to_string()));
+        }
+    }
+    eprintln!("skipping mesh chaos test (no smoke-able size in manifest)");
+    None
+}
+
+fn opts(size: &str, steps: usize, shards: usize) -> TrainOptions {
+    TrainOptions {
+        size: size.into(),
+        optimizer: "scale".into(),
+        steps,
+        base_lr: 1e-2,
+        schedule: None,
+        shards,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        quiet: true,
+    }
+}
+
+/// Mesh options aimed at the test binary's own artifacts, with the
+/// worker binary resolved by Cargo (the test executable is not `scale`).
+fn mesh_opts(size: &str, steps: usize, ranks: usize, name: &str) -> MeshOptions {
+    let mut o = MeshOptions::new(opts(size, steps, ranks), ranks);
+    o.artifacts = artifacts_dir().to_string_lossy().into_owned();
+    o.worker_bin = Some(env!("CARGO_BIN_EXE_scale").into());
+    o.ckpt_dir = std::env::temp_dir().join(format!("scale_mesh_{name}_{}", std::process::id()));
+    std::fs::remove_dir_all(&o.ckpt_dir).ok();
+    o
+}
+
+fn tensor_bits(ts: &[scale_llm::runtime::Tensor]) -> Vec<u32> {
+    ts.iter().flat_map(|t| t.f32s().iter().map(|x| x.to_bits())).collect()
+}
+
+/// Single-process reference with the same shard count; returns
+/// (trainer, final ppl).
+fn reference(eng: &Engine, size: &str, steps: usize, shards: usize) -> (Trainer<'_>, f64) {
+    let mut tr = Trainer::new(eng, opts(size, steps, shards)).unwrap();
+    let ppl = tr.train().unwrap();
+    (tr, ppl)
+}
+
+fn assert_mesh_matches(
+    tr: &Trainer<'_>,
+    ppl: f64,
+    want: &Trainer<'_>,
+    want_ppl: f64,
+    what: &str,
+) {
+    assert_eq!(tensor_bits(&tr.params), tensor_bits(&want.params), "{what}: params");
+    assert_eq!(tensor_bits(&tr.state), tensor_bits(&want.state), "{what}: optimizer state");
+    assert_eq!(ppl.to_bits(), want_ppl.to_bits(), "{what}: final ppl");
+}
+
+/// Leg one of the tentpole: an N-rank mesh over real processes and a
+/// CRC-framed TCP wire lands on the same bits as the in-process shards
+/// loop — for 2 and 4 ranks, and (2 ranks) with the reduction forced
+/// onto the threaded pool path.
+#[test]
+fn mesh_matches_single_process_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    for ranks in [2usize, 4] {
+        let (want, want_ppl) = reference(&eng, &sz, 6, ranks);
+        let mo = mesh_opts(&sz, 6, ranks, &format!("ident{ranks}"));
+        let (tr, report) = mesh::train(&eng, &mo).unwrap();
+        assert_mesh_matches(&tr, report.ppl, &want, want_ppl, &format!("{ranks} ranks"));
+        assert_eq!(report.respawns, 0);
+        assert_eq!(report.frame_retries, 0);
+        std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+    }
+    // pool-threshold independence: force even tiny tensors onto the
+    // threaded reduction path — bits must not move
+    let (want, want_ppl) = reference(&eng, &sz, 6, 2);
+    let mo = mesh_opts(&sz, 6, 2, "identpool");
+    parallel::set_min_ops_override(Some(1));
+    let got = mesh::train(&eng, &mo);
+    parallel::set_min_ops_override(None);
+    let (tr, report) = got.unwrap();
+    assert_mesh_matches(&tr, report.ppl, &want, want_ppl, "2 ranks, forced pool");
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
+
+/// Kill rank 1 the moment it receives its 5th Step: the supervisor
+/// respawns it (clean — the spec must not re-arm) and replays from the
+/// step-4 snapshot, finishing bit-identical to a run that never died.
+#[test]
+fn kill_rank_at_step_k_resumes_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let (want, want_ppl) = reference(&eng, &sz, 8, 2);
+    let mut mo = mesh_opts(&sz, 8, 2, "kill");
+    mo.checkpoint_every = 2;
+    mo.heartbeat_every = 0;
+    mo.worker_faults = vec![(1, "rank_exit@5".into())];
+    let (tr, report) = mesh::train(&eng, &mo).unwrap();
+    assert_mesh_matches(&tr, report.ppl, &want, want_ppl, "killed rank");
+    assert_eq!(report.respawns, 1, "exactly one respawn");
+    assert_eq!(report.frame_retries, 0);
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
+
+/// Rank 0's 3rd wire send (= its step-2 Grads; Hello was send #1) goes
+/// out with a flipped payload byte. The CRC check must reject it, the
+/// supervisor must re-request, and the re-encoded frame must leave
+/// every result bit-identical — no respawn, no rollback.
+#[test]
+fn corrupt_frame_is_rejected_and_rerequested_without_changing_results() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let (want, want_ppl) = reference(&eng, &sz, 5, 2);
+    let mut mo = mesh_opts(&sz, 5, 2, "crc");
+    mo.heartbeat_every = 0;
+    mo.worker_faults = vec![(0, "frame_corrupt@3".into())];
+    let (tr, report) = mesh::train(&eng, &mo).unwrap();
+    assert_mesh_matches(&tr, report.ppl, &want, want_ppl, "corrupt frame");
+    assert_eq!(report.frame_retries, 1, "exactly one CRC reject + resend");
+    assert_eq!(report.respawns, 0, "a recoverable frame error must not burn a respawn");
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
+
+/// Rank 1 stalls 1500 ms before its step-2 Grads while the supervisor
+/// reads with an 800 ms timeout: the hang is detected, the rank is
+/// respawned, and the replayed run finishes bit-exact.
+#[test]
+fn slow_rank_times_out_and_recovery_is_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let (want, want_ppl) = reference(&eng, &sz, 5, 2);
+    let mut mo = mesh_opts(&sz, 5, 2, "slow");
+    mo.heartbeat_every = 0;
+    mo.checkpoint_every = 2;
+    mo.read_timeout_ms = 800; // frame_delay sleeps 1500 ms
+    mo.worker_faults = vec![(1, "frame_delay@3".into())];
+    let (tr, report) = mesh::train(&eng, &mo).unwrap();
+    assert_mesh_matches(&tr, report.ppl, &want, want_ppl, "slow rank");
+    assert_eq!(report.respawns, 1, "a hang is a rank failure, not a retryable frame");
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
+
+/// With a zero respawn budget, a dying rank must surface as the typed
+/// `TrainError::Mesh` — promptly, with the fleet torn down, never as a
+/// hang (the step exchange is strict request-response, so EOF is
+/// observed on the next read).
+#[test]
+fn exhausted_respawn_budget_is_a_typed_mesh_error() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let mut mo = mesh_opts(&sz, 4, 2, "budget");
+    mo.heartbeat_every = 0;
+    mo.max_respawns = 0;
+    mo.worker_faults = vec![(1, "rank_exit@2".into())];
+    let err = mesh::train(&eng, &mo).unwrap_err();
+    assert!(matches!(err, TrainError::Mesh(_)), "want Mesh, got {err}");
+    assert!(err.to_string().contains("respawn budget"), "{err}");
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
+
+/// Supervisor-side chaos: from its 3rd wire send onward, every frame
+/// the supervisor tries to write is dropped (`conn_drop` armed in this
+/// process). Both ranks fail their step-2 broadcast; the budget covers
+/// one respawn, the second failure must exhaust it into a typed Mesh
+/// error instead of a respawn storm.
+#[test]
+fn supervisor_side_conn_drop_degrades_to_typed_error() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let mut mo = mesh_opts(&sz, 4, 2, "conndrop");
+    mo.heartbeat_every = 0;
+    mo.max_respawns = 1;
+    mo.backoff_base_ms = 1; // keep the single respawn quick
+    fault::configure("conn_drop@3..").unwrap();
+    let err = mesh::train(&eng, &mo).unwrap_err();
+    fault::clear();
+    assert!(matches!(err, TrainError::Mesh(_)), "want Mesh, got {err}");
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
