@@ -259,24 +259,63 @@ fn mesh_reduce_row(ranks: usize) -> Json {
 }
 
 /// Append this run's headline numbers to the committed
-/// `BENCH_history.json` trajectory (an array; unreadable or non-array
-/// content is reported and replaced rather than crashing the bench).
+/// `BENCH_history.json` trajectory. The file is a JSON array of entry
+/// objects; a missing file starts a fresh history, but existing content
+/// that fails to parse — or parses to anything other than an array of
+/// objects — is a hard error. Clobbering a corrupted trajectory would
+/// silently erase every past data point; a bench run must never do that.
 fn append_history(entry: Json) -> anyhow::Result<()> {
     let path = "BENCH_history.json";
     let mut hist = match std::fs::read_to_string(path) {
-        Ok(text) => match json::parse(&text) {
-            Ok(Json::Arr(v)) => v,
-            Ok(_) | Err(_) => {
-                println!("note: {path} was not a JSON array; starting a fresh history");
-                Vec::new()
+        Ok(text) => {
+            let doc = json::parse(&text).map_err(|e| {
+                anyhow::anyhow!("{path} is not valid JSON ({e}); refusing to clobber it")
+            })?;
+            let Json::Arr(v) = doc else {
+                anyhow::bail!("{path} is not a JSON array; refusing to clobber it");
+            };
+            for (i, item) in v.iter().enumerate() {
+                anyhow::ensure!(
+                    item.as_obj().is_some(),
+                    "{path}[{i}] is not an entry object; refusing to clobber it"
+                );
             }
-        },
+            v
+        }
         Err(_) => Vec::new(),
     };
     hist.push(entry);
     std::fs::write(path, Json::Arr(hist).to_string())?;
     println!("history -> {path}");
     Ok(())
+}
+
+/// Measured per-rank optimizer-state bytes under `--shard-state`, for
+/// the history trajectory: the exact contiguous shard partition the
+/// mesh uses, SCALE next to Adam at each rank count.
+fn sharded_state_rows(engine: &Engine) -> Vec<Json> {
+    let mut rows = Vec::new();
+    for optimizer in ["scale", "adam"] {
+        for ranks in [1usize, 2, 4] {
+            let Ok(bytes) = scale_llm::memory::estimator::sharded_state_bytes(
+                &engine.manifest,
+                optimizer,
+                "tiny",
+                ranks,
+            ) else {
+                continue; // an xla manifest may not carry this optimizer
+            };
+            let peak = bytes.iter().copied().max().unwrap_or(0);
+            rows.push(Json::obj(vec![
+                ("size", Json::str("tiny")),
+                ("optimizer", Json::str(optimizer)),
+                ("ranks", Json::num(ranks as f64)),
+                ("peak_rank_bytes", Json::num(peak as f64)),
+                ("per_rank_bytes", Json::Arr(bytes.iter().map(|&b| Json::num(b as f64)).collect())),
+            ]));
+        }
+    }
+    rows
 }
 
 struct TrainRow {
@@ -432,6 +471,7 @@ fn main() -> anyhow::Result<()> {
         ("exec_fwd_ms", Json::num(fwd_ms)),
         ("exec_update_ms", Json::num(upd_ms)),
         ("mesh_reduce", Json::Arr(mesh_rows)),
+        ("sharded_state_bytes", Json::Arr(sharded_state_rows(&engine))),
     ]))?;
 
     println!("\n== acceptance gates ==");

@@ -70,41 +70,9 @@ impl Checkpoint {
     }
 
     fn write_v2(&self, tmp: &Path) -> anyhow::Result<()> {
-        let file = std::fs::File::create(tmp)?;
-        let mut w = std::io::BufWriter::new(&file);
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        {
-            let mut cw = CrcWriter::new(&mut w);
-            write_str(&mut cw, &self.size)?;
-            write_str(&mut cw, &self.optimizer)?;
-            cw.write_all(&self.step.to_le_bytes())?;
-            cw.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
-            let crc = cw.value();
-            w.write_all(&crc.to_le_bytes())?;
-        }
-        let torn_at = self.tensors.len() / 2;
-        for (i, (name, t)) in self.tensors.iter().enumerate() {
-            if i == torn_at && crate::fault::fires("save_partial") {
-                w.flush()?;
-                return Err(io_fault("failpoint save_partial: simulated crash mid-save"));
-            }
-            let mut cw = CrcWriter::new(&mut w);
-            write_str(&mut cw, name)?;
-            let shape = t.shape();
-            cw.write_all(&(shape.len() as u32).to_le_bytes())?;
-            for &d in shape {
-                cw.write_all(&(d as u64).to_le_bytes())?;
-            }
-            for &x in t.f32s() {
-                cw.write_all(&x.to_le_bytes())?;
-            }
-            let crc = cw.value();
-            w.write_all(&crc.to_le_bytes())?;
-        }
-        w.flush()?;
-        file.sync_all()?;
-        Ok(())
+        let refs: Vec<(&str, &Tensor)> =
+            self.tensors.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        write_v2_file(tmp, &self.size, &self.optimizer, self.step, &refs)
     }
 
     /// Legacy v1 writer — direct, no CRCs, no atomic rename. Kept only
@@ -149,6 +117,53 @@ impl Checkpoint {
             v => anyhow::bail!("unsupported checkpoint version {v}"),
         }
     }
+}
+
+/// The v2 byte emitter behind both [`Checkpoint::save`] and the sharded
+/// writer — borrowed tensors, so shard files are written straight from
+/// the full checkpoint's slices without cloning.
+fn write_v2_file(
+    tmp: &Path,
+    size: &str,
+    optimizer: &str,
+    step: u64,
+    tensors: &[(&str, &Tensor)],
+) -> anyhow::Result<()> {
+    let file = std::fs::File::create(tmp)?;
+    let mut w = std::io::BufWriter::new(&file);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    {
+        let mut cw = CrcWriter::new(&mut w);
+        write_str(&mut cw, size)?;
+        write_str(&mut cw, optimizer)?;
+        cw.write_all(&step.to_le_bytes())?;
+        cw.write_all(&(tensors.len() as u32).to_le_bytes())?;
+        let crc = cw.value();
+        w.write_all(&crc.to_le_bytes())?;
+    }
+    let torn_at = tensors.len() / 2;
+    for (i, (name, t)) in tensors.iter().enumerate() {
+        if i == torn_at && crate::fault::fires("save_partial") {
+            w.flush()?;
+            return Err(io_fault("failpoint save_partial: simulated crash mid-save"));
+        }
+        let mut cw = CrcWriter::new(&mut w);
+        write_str(&mut cw, name)?;
+        let shape = t.shape();
+        cw.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
+            cw.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &x in t.f32s() {
+            cw.write_all(&x.to_le_bytes())?;
+        }
+        let crc = cw.value();
+        w.write_all(&crc.to_le_bytes())?;
+    }
+    w.flush()?;
+    file.sync_all()?;
+    Ok(())
 }
 
 fn load_body_v2<R: Read>(r: &mut Counted<R>, file_len: u64) -> anyhow::Result<Checkpoint> {
@@ -327,11 +342,275 @@ impl CheckpointStore {
     fn clean_tmp(&self) {
         let Ok(rd) = std::fs::read_dir(&self.dir) else { return };
         for entry in rd.flatten() {
-            if entry.file_name().to_string_lossy().ends_with(".ckpt.tmp") {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".ckpt.tmp") {
                 std::fs::remove_file(entry.path()).ok();
+            } else if name.ends_with(".d.tmp") {
+                // a torn sharded save from a crashed process
+                std::fs::remove_dir_all(entry.path()).ok();
             }
         }
     }
+
+    // ---- sharded snapshots -------------------------------------------------
+
+    /// Directory path of the sharded snapshot for `step`.
+    pub fn shard_dir_for(&self, step: u64) -> PathBuf {
+        self.dir.join(format!("step_{:08}.d", step))
+    }
+
+    /// Atomically persist a *sharded* snapshot: `step_NNNNNNNN.d/` holding
+    /// one v2 checkpoint file per rank (`shard_NNN.ckpt`, rank r's
+    /// parameter range + state range per `ranges[r]`) plus a CRC'd
+    /// `manifest.bin`. The whole set is staged in `step_NNNNNNNN.d.tmp/`,
+    /// every file fsynced, then published by a single directory rename +
+    /// parent fsync — a crash mid-save tears only the `.d.tmp`, which
+    /// [`CheckpointStore::open`] sweeps. Prunes to the newest `keep`
+    /// sharded snapshots.
+    ///
+    /// `ckpt.tensors` must be the full params-then-state list (as built
+    /// by the trainer); `n_params` splits it, and each of `ranges[r]` is
+    /// `(param index range, state slot range)` from the shard plan.
+    pub fn save_sharded(
+        &self,
+        ckpt: &Checkpoint,
+        n_params: usize,
+        ranges: &[(std::ops::Range<usize>, std::ops::Range<usize>)],
+    ) -> anyhow::Result<PathBuf> {
+        if crate::fault::fires("save_io") {
+            return Err(io_fault("failpoint save_io"));
+        }
+        anyhow::ensure!(!ranges.is_empty() && ranges.len() <= MAX_SHARDS, "shard count");
+        anyhow::ensure!(n_params <= ckpt.tensors.len(), "param split out of range");
+        let path = self.shard_dir_for(ckpt.step);
+        let tmp = tmp_path(&path);
+        std::fs::remove_dir_all(&tmp).ok();
+        std::fs::create_dir_all(&tmp)?;
+        for (r, (pr, sr)) in ranges.iter().enumerate() {
+            let mut refs: Vec<(&str, &Tensor)> = Vec::with_capacity(pr.len() + sr.len());
+            for (n, t) in &ckpt.tensors[pr.start..pr.end] {
+                refs.push((n.as_str(), t));
+            }
+            for (n, t) in &ckpt.tensors[n_params + sr.start..n_params + sr.end] {
+                refs.push((n.as_str(), t));
+            }
+            let shard_path = tmp.join(shard_file_name(r));
+            write_v2_file(&shard_path, &ckpt.size, &ckpt.optimizer, ckpt.step, &refs)?;
+        }
+        write_shard_manifest(&tmp.join(MANIFEST_NAME), ckpt, ranges.len() as u32)?;
+        // fsync the staged directory so its entries are durable before
+        // the rename publishes them
+        if let Ok(d) = std::fs::File::open(&tmp) {
+            let _ = d.sync_all();
+        }
+        std::fs::remove_dir_all(&path).ok();
+        std::fs::rename(&tmp, &path)?;
+        sync_dir(&path);
+        self.clean_tmp();
+        let mut steps = self.list_sharded()?;
+        while steps.len() > self.keep {
+            let (_, old) = steps.remove(0);
+            std::fs::remove_dir_all(old).ok();
+        }
+        Ok(path)
+    }
+
+    /// All sharded snapshots by ascending step (strict
+    /// `step_<digits>.d` naming; `.d.tmp` and `.corrupt` are ignored).
+    pub fn list_sharded(&self) -> anyhow::Result<Vec<(u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(step) = parse_shard_step(name) {
+                if entry.path().is_dir() {
+                    out.push((step, entry.path()));
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Load the newest *complete* sharded snapshot for `ranks` ranks,
+    /// reassembled into the full params-then-state [`Checkpoint`].
+    /// Individually corrupt shard files (torn write, bit rot) are
+    /// quarantined as `<name>.corrupt`; a snapshot with a missing or
+    /// quarantined shard, a bad manifest, or the wrong rank count is
+    /// incomplete and the scan falls back to the next-newest. `None`
+    /// means no complete sharded snapshot exists.
+    pub fn latest_sharded(&self, ranks: usize) -> anyhow::Result<Option<(u64, Checkpoint)>> {
+        let mut steps = self.list_sharded()?;
+        steps.reverse();
+        'snap: for (step, dir) in steps {
+            let mpath = dir.join(MANIFEST_NAME);
+            let meta = match read_shard_manifest(&mpath) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("sharded snapshot {}: manifest: {e}; skipped", dir.display());
+                    quarantine(&mpath);
+                    continue;
+                }
+            };
+            if meta.ranks as usize != ranks || meta.step != step {
+                eprintln!(
+                    "sharded snapshot {}: written for {} ranks at step {} (want {ranks}); skipped",
+                    dir.display(),
+                    meta.ranks,
+                    meta.step
+                );
+                continue;
+            }
+            let mut shards = Vec::with_capacity(ranks);
+            for r in 0..ranks {
+                let spath = dir.join(shard_file_name(r));
+                if !spath.exists() {
+                    eprintln!(
+                        "sharded snapshot {}: shard {r} missing; incomplete, skipped",
+                        dir.display()
+                    );
+                    continue 'snap;
+                }
+                match Checkpoint::load(&spath) {
+                    Ok(ck)
+                        if ck.step == meta.step
+                            && ck.size == meta.size
+                            && ck.optimizer == meta.optimizer =>
+                    {
+                        shards.push(ck)
+                    }
+                    Ok(_) => {
+                        eprintln!(
+                            "sharded snapshot {}: shard {r} disagrees with the manifest; skipped",
+                            dir.display()
+                        );
+                        quarantine(&spath);
+                        continue 'snap;
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "sharded snapshot {}: shard {r}: {e}; quarantined",
+                            dir.display()
+                        );
+                        quarantine(&spath);
+                        continue 'snap;
+                    }
+                }
+            }
+            return Ok(Some((step, assemble_shards(&shards)?)));
+        }
+        Ok(None)
+    }
+}
+
+/// Reassemble per-rank shard checkpoints (each `[params of range, state
+/// of range]`, ranges contiguous and ascending in rank order) into the
+/// full params-then-state checkpoint the trainer restores from. State
+/// tensors are recognized by the `state:` name prefix the trainer's
+/// checkpoint builder stamps.
+pub fn assemble_shards(shards: &[Checkpoint]) -> anyhow::Result<Checkpoint> {
+    anyhow::ensure!(!shards.is_empty(), "no shards to assemble");
+    let first = &shards[0];
+    let mut params = Vec::new();
+    let mut state = Vec::new();
+    for ck in shards {
+        anyhow::ensure!(
+            ck.size == first.size && ck.optimizer == first.optimizer && ck.step == first.step,
+            "shard checkpoints disagree on size/optimizer/step"
+        );
+        for (name, t) in &ck.tensors {
+            if name.starts_with("state:") {
+                state.push((name.clone(), t.clone()));
+            } else {
+                params.push((name.clone(), t.clone()));
+            }
+        }
+    }
+    let mut tensors = params;
+    tensors.extend(state);
+    Ok(Checkpoint {
+        size: first.size.clone(),
+        optimizer: first.optimizer.clone(),
+        step: first.step,
+        tensors,
+    })
+}
+
+/// Shard-count sanity bound for sharded snapshots (mirrors the wire and
+/// loader hostile-input posture).
+const MAX_SHARDS: usize = 1 << 12;
+const MANIFEST_NAME: &str = "manifest.bin";
+const SHARD_MAGIC: &[u8; 4] = b"SCLS";
+const SHARD_MANIFEST_VERSION: u32 = 1;
+
+struct ShardManifest {
+    ranks: u32,
+    step: u64,
+    size: String,
+    optimizer: String,
+}
+
+/// `manifest.bin`: magic "SCLS" | u32 version | CRC'd region
+/// [ u32 ranks | u64 step | str size | str optimizer ] | u32 crc —
+/// the same region-checksum discipline as format v2.
+fn write_shard_manifest(path: &Path, ckpt: &Checkpoint, ranks: u32) -> anyhow::Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(&file);
+    w.write_all(SHARD_MAGIC)?;
+    w.write_all(&SHARD_MANIFEST_VERSION.to_le_bytes())?;
+    {
+        let mut cw = CrcWriter::new(&mut w);
+        cw.write_all(&ranks.to_le_bytes())?;
+        cw.write_all(&ckpt.step.to_le_bytes())?;
+        write_str(&mut cw, &ckpt.size)?;
+        write_str(&mut cw, &ckpt.optimizer)?;
+        let crc = cw.value();
+        w.write_all(&crc.to_le_bytes())?;
+    }
+    w.flush()?;
+    file.sync_all()?;
+    Ok(())
+}
+
+fn read_shard_manifest(path: &Path) -> anyhow::Result<ShardManifest> {
+    let file = std::fs::File::open(path)?;
+    let mut r = Counted::new(std::io::BufReader::new(file));
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == SHARD_MAGIC, "not a shard manifest");
+    let version = read_u32(&mut r)?;
+    anyhow::ensure!(version == SHARD_MANIFEST_VERSION, "unsupported manifest version {version}");
+    r.reset_crc();
+    let ranks = read_u32(&mut r)?;
+    let step = read_u64(&mut r)?;
+    let size = read_str(&mut r)?;
+    let optimizer = read_str(&mut r)?;
+    let computed = r.crc();
+    let stored = read_u32(&mut r)?;
+    anyhow::ensure!(computed == stored, "shard manifest corrupt (crc mismatch)");
+    anyhow::ensure!(ranks as usize <= MAX_SHARDS && ranks > 0, "absurd rank count {ranks}");
+    Ok(ShardManifest { ranks, step, size, optimizer })
+}
+
+fn shard_file_name(rank: usize) -> String {
+    format!("shard_{:03}.ckpt", rank)
+}
+
+fn parse_shard_step(name: &str) -> Option<u64> {
+    let digits = name.strip_prefix("step_")?.strip_suffix(".d")?;
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+/// Rename a bad snapshot component to `<name>.corrupt` (best effort).
+fn quarantine(path: &Path) {
+    let mut q = path.file_name().unwrap_or_default().to_os_string();
+    q.push(".corrupt");
+    std::fs::rename(path, path.with_file_name(q)).ok();
 }
 
 fn parse_step(name: &str) -> Option<u64> {
@@ -361,7 +640,7 @@ fn sync_dir(path: &Path) {
 }
 
 fn io_fault(msg: &str) -> anyhow::Error {
-    std::io::Error::new(std::io::ErrorKind::Other, msg.to_string()).into()
+    std::io::Error::other(msg.to_string()).into()
 }
 
 /// Tee writer: forwards to the inner writer while accumulating the
@@ -684,6 +963,139 @@ mod tests {
         // re-opening the directory sweeps it
         CheckpointStore::open(&dir, 3).unwrap();
         assert!(!stale.exists(), "stale .tmp must be cleaned on open");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn latest_survives_two_corrupt_snapshots() {
+        // both of the two newest snapshots corrupt -> both quarantined
+        // as .corrupt, the third-newest loads
+        let dir = tmp_dir("twocorrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        for step in [3u64, 6, 9] {
+            let mut c = sample();
+            c.step = step;
+            store.save(&c).unwrap();
+        }
+        for step in [6u64, 9] {
+            let p = store.path_for(step);
+            let mut bytes = std::fs::read(&p).unwrap();
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0xFF;
+            std::fs::write(&p, &bytes).unwrap();
+        }
+        let (step, ck) = store.latest().unwrap().expect("third-newest must load");
+        assert_eq!((step, ck.step), (3, 3));
+        for step in [6u64, 9] {
+            assert!(!store.path_for(step).exists(), "step {step} must be moved aside");
+            let q = dir.join(format!("step_{:08}.ckpt.corrupt", step));
+            assert!(q.exists(), "step {step} must be quarantined, not deleted");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Full params-then-state checkpoint + the shard split the sharded
+    /// tests use: 3 params (slots 1, 0, 1) across 2 ranks.
+    fn sharded_sample(step: u64) -> SplitSample {
+        let ck = Checkpoint {
+            size: "s60m".into(),
+            optimizer: "scale".into(),
+            step,
+            tensors: vec![
+                ("a".into(), Tensor::from_f32(&[2, 2], vec![1., 2., 3., 4.])),
+                ("b".into(), Tensor::from_f32(&[3], vec![5., 6., 7.])),
+                ("c".into(), Tensor::from_f32(&[4], vec![8., 9., 10., 11.])),
+                ("state:a.m".into(), Tensor::from_f32(&[2, 2], vec![0.1, 0.2, 0.3, 0.4])),
+                ("state:c.m".into(), Tensor::from_f32(&[4], vec![0.5, 0.6, 0.7, 0.8])),
+            ],
+        };
+        (ck, 3, vec![(0..2, 0..1), (2..3, 1..2)])
+    }
+
+    type SplitSample =
+        (Checkpoint, usize, Vec<(std::ops::Range<usize>, std::ops::Range<usize>)>);
+
+    #[test]
+    fn sharded_snapshot_roundtrips_and_is_atomic() {
+        let dir = tmp_dir("shardrt");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        let (ck, np, ranges) = sharded_sample(12);
+        let snap = store.save_sharded(&ck, np, &ranges).unwrap();
+        assert!(snap.join("manifest.bin").exists());
+        assert!(snap.join("shard_000.ckpt").exists());
+        assert!(snap.join("shard_001.ckpt").exists());
+        assert!(!tmp_path(&snap).exists(), "publish must rename the .d.tmp away");
+        let (step, back) = store.latest_sharded(2).unwrap().expect("latest");
+        assert_eq!(step, 12);
+        assert_same(&ck, &back);
+        // the wrong rank count never matches
+        assert!(store.latest_sharded(3).unwrap().is_none());
+        // a stale .d.tmp from a crashed save is swept on open
+        let stale = dir.join("step_00000099.d.tmp");
+        std::fs::create_dir_all(&stale).unwrap();
+        CheckpointStore::open(&dir, 3).unwrap();
+        assert!(!stale.exists(), "stale .d.tmp must be cleaned on open");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_missing_shard_is_incomplete_and_skipped() {
+        let dir = tmp_dir("shardmiss");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        for step in [4u64, 8] {
+            let (ck, np, ranges) = sharded_sample(step);
+            store.save_sharded(&ck, np, &ranges).unwrap();
+        }
+        // newest snapshot loses one shard file -> incomplete -> fallback
+        std::fs::remove_file(store.shard_dir_for(8).join("shard_001.ckpt")).unwrap();
+        let (step, back) = store.latest_sharded(2).unwrap().expect("fallback");
+        assert_eq!(step, 4);
+        assert_same(&sharded_sample(4).0, &back);
+        // if the older one is incomplete too there is no latest at all
+        std::fs::remove_file(store.shard_dir_for(4).join("shard_000.ckpt")).unwrap();
+        assert!(store.latest_sharded(2).unwrap().is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_corrupt_shard_is_quarantined_individually() {
+        let dir = tmp_dir("shardcorrupt");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 3).unwrap();
+        for step in [4u64, 8] {
+            let (ck, np, ranges) = sharded_sample(step);
+            store.save_sharded(&ck, np, &ranges).unwrap();
+        }
+        let bad = store.shard_dir_for(8).join("shard_001.ckpt");
+        let mut bytes = std::fs::read(&bad).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&bad, &bytes).unwrap();
+        let (step, back) = store.latest_sharded(2).unwrap().expect("fallback");
+        assert_eq!(step, 4);
+        assert_same(&sharded_sample(4).0, &back);
+        assert!(!bad.exists(), "corrupt shard must be moved aside");
+        assert!(
+            bad.with_file_name("shard_001.ckpt.corrupt").exists(),
+            "corrupt shard must be quarantined individually, not deleted"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_retention_prunes_old_snapshot_dirs() {
+        let dir = tmp_dir("shardret");
+        std::fs::remove_dir_all(&dir).ok();
+        let store = CheckpointStore::open(&dir, 2).unwrap();
+        for step in [3u64, 6, 9] {
+            let (ck, np, ranges) = sharded_sample(step);
+            store.save_sharded(&ck, np, &ranges).unwrap();
+        }
+        let steps: Vec<u64> = store.list_sharded().unwrap().iter().map(|(s, _)| *s).collect();
+        assert_eq!(steps, [6, 9], "keep-last-2 must prune the step-3 dir");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -406,6 +406,19 @@ impl<'e> Trainer<'e> {
     /// sequence the fused path used (the reduce skips index 0, so the
     /// summed values are identical).
     pub(crate) fn finish_step(&mut self) -> Result<f64, TrainError> {
+        let loss = self.reduce_and_guard()?;
+        self.apply_update()?;
+        self.record_step(loss);
+        Ok(loss)
+    }
+
+    /// Sections 3a of the step: mean loss, tree all-reduce, divergence
+    /// guard — everything `finish_step` does *before* the optimizer
+    /// update. After it returns the reduced mean gradients sit in
+    /// [`Trainer::reduced_grads`]. The sharded mesh mode calls this,
+    /// ships each rank its gradient slice, and installs the returned
+    /// param shards in place of [`Trainer::apply_update`].
+    pub(crate) fn reduce_and_guard(&mut self) -> Result<f64, TrainError> {
         let shards = self.rings.len();
         let pool = self.pool;
         let mut loss_sum = 0.0;
@@ -441,9 +454,13 @@ impl<'e> Trainer<'e> {
                 return Err(TrainError::divergence(self.step, "non-finite gradient"));
             }
         }
+        Ok(loss)
+    }
 
-        // 4) optimizer update with borrowed inputs into the persistent
-        //    update buffers; outputs become the new params/state by swap
+    /// Section 4 of the step: optimizer update with borrowed inputs into
+    /// the persistent update buffers; outputs become the new params/state
+    /// by swap.
+    fn apply_update(&mut self) -> Result<(), TrainError> {
         let lr = self.schedule.lr(self.step) * self.lr_scale;
         self.lr_t.f32s_mut()[0] = lr as f32;
         self.step_t.f32s_mut()[0] = self.step as f32;
@@ -468,10 +485,30 @@ impl<'e> Trainer<'e> {
         for j in 0..self.state.len() {
             std::mem::swap(&mut self.state[j], &mut self.upd_out[self.n_params + j]);
         }
+        Ok(())
+    }
 
+    /// The metrics tail of the step, shared by `finish_step` and the
+    /// sharded mesh path. The recorded lr recomputes the exact value
+    /// `apply_update` used (`schedule.lr` is a pure function).
+    pub(crate) fn record_step(&mut self, loss: f64) {
+        let shards = self.rings.len();
+        let lr = self.schedule.lr(self.step) * self.lr_scale;
         let tokens = (self.step * shards * self.microbatch * self.seq_len) as u64;
         self.metrics.record_step(self.step, loss, lr, tokens);
-        Ok(loss)
+    }
+
+    /// The f32 learning-rate bits the update kernels receive this step —
+    /// the sharded mesh ships exactly these bits to the shard-owning
+    /// ranks so their kernels see what a single-process step would.
+    pub(crate) fn step_lr_f32(&self) -> f32 {
+        (self.schedule.lr(self.step) * self.lr_scale) as f32
+    }
+
+    /// The reduced mean gradients (valid after
+    /// [`Trainer::reduce_and_guard`]).
+    pub(crate) fn reduced_grads(&self) -> &[Tensor] {
+        &self.fwd_outs[0][1..]
     }
 
     /// Evaluate mean loss over `n` held-out batches; records perplexity.

@@ -214,6 +214,12 @@ impl UpdateWs {
     }
 }
 
+impl Default for UpdateWs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// One compiled update plan: rules + slot counts aligned with the
 /// parameter list.
 pub(crate) struct UpdateProgram {
@@ -222,6 +228,18 @@ pub(crate) struct UpdateProgram {
     slot_counts: Vec<usize>,
     n_params: usize,
     n_state: usize,
+}
+
+/// A contiguous partition of the update plan across mesh ranks:
+/// `params[r]` is rank r's parameter-index range, `state[r]` the
+/// matching range over the flat state-slot list. Produced by
+/// [`UpdateProgram::shard_plan`], which is a pure function of
+/// `(optimizer, size, ranks)` — the supervisor and every worker compute
+/// the identical plan independently, so no plan ever travels the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct ShardPlan {
+    pub params: Vec<std::ops::Range<usize>>,
+    pub state: Vec<std::ops::Range<usize>>,
 }
 
 impl UpdateProgram {
@@ -254,6 +272,45 @@ impl UpdateProgram {
         self.n_state
     }
 
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// Partition the plan into `ranks` contiguous shards, balanced by
+    /// parameter numel. Greedy against cumulative targets
+    /// `total * (r+1) / ranks`; every rank gets at least one parameter
+    /// while parameters remain (ranks beyond `n_params` get empty
+    /// ranges). Deterministic: same `(optimizer, size, ranks)` → same
+    /// plan, on every process.
+    pub fn shard_plan(&self, ranks: usize) -> ShardPlan {
+        let ranks = ranks.max(1);
+        let numels: Vec<usize> = self.shapes.iter().map(|s| s.iter().product()).collect();
+        let total: usize = numels.iter().sum();
+        let mut params = Vec::with_capacity(ranks);
+        let mut state = Vec::with_capacity(ranks);
+        let mut start = 0usize;
+        let mut slot_lo = 0usize;
+        let mut acc = 0usize;
+        for r in 0..ranks {
+            let target = total * (r + 1) / ranks;
+            // leave at least one parameter for each rank after this one
+            let avail = self.n_params.saturating_sub(ranks - 1 - r);
+            let mut end = start;
+            while end < avail && (end == start || acc < target) {
+                acc += numels[end];
+                end += 1;
+            }
+            let slot_hi = slot_lo + self.slot_counts[start..end].iter().sum::<usize>();
+            params.push(start..end);
+            state.push(slot_lo..slot_hi);
+            start = end;
+            slot_lo = slot_hi;
+        }
+        debug_assert_eq!(start, self.n_params);
+        debug_assert_eq!(slot_lo, self.n_state);
+        ShardPlan { params, state }
+    }
+
     /// Apply one optimizer step. `inputs` = `[params.., state.., grads..,
     /// lr, step]`, `out` = `[params'.., state'..]` (pre-shaped by the
     /// caller). Inputs are never mutated: outputs are copied first, then
@@ -272,18 +329,51 @@ impl UpdateProgram {
         let lr = inputs[2 * np + nst].item_f32();
         let step_f = inputs[2 * np + nst + 1].item_f32();
         let step = (step_f as u32).max(1);
-        let hp = AdamHp::default();
 
         for i in 0..np + nst {
             out[i].f32s_mut().copy_from_slice(inputs[i].f32s());
         }
         let (params_out, state_out) = out.split_at_mut(np);
+        let grads = &inputs[np + nst..2 * np + nst];
+        self.execute_range(0, np, params_out, state_out, grads, lr, step, ws, pool, min_ops)
+    }
+
+    /// Apply the update for the contiguous parameter range `lo..hi` in
+    /// place: `params`/`state`/`grads` hold only that range's tensors
+    /// (state sliced per [`ShardPlan::state`]), while rules, shapes, and
+    /// the projector sketch streams are addressed by *absolute*
+    /// parameter index — so a rank applying its shard computes bit for
+    /// bit what the full [`UpdateProgram::execute`] computes for the
+    /// same indices. The per-parameter loop has no cross-parameter data
+    /// flow, which is what makes the sharded step exact by construction.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        params: &mut [Tensor],
+        state: &mut [Tensor],
+        grads: &[&Tensor],
+        lr: f32,
+        step: u32,
+        ws: &mut UpdateWs,
+        pool: &WorkerPool,
+        min_ops: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(lo <= hi && hi <= self.n_params, "update shard range");
+        anyhow::ensure!(params.len() == hi - lo, "update shard param arity");
+        anyhow::ensure!(grads.len() == hi - lo, "update shard grad arity");
+        let slots: usize = self.slot_counts[lo..hi].iter().sum();
+        anyhow::ensure!(state.len() == slots, "update shard state arity");
+        let step = step.max(1);
+        let hp = AdamHp::default();
+        let (params_out, state_out) = (params, state);
         let UpdateWs { norm, ns, dir, dir2, omega, g_lo, d_lo, sk, pack } = ws;
 
         let mut cursor = 0usize;
-        for i in 0..np {
-            let p = params_out[i].f32s_mut();
-            let g = inputs[np + nst + i].f32s();
+        for i in lo..hi {
+            let p = params_out[i - lo].f32s_mut();
+            let g = grads[i - lo].f32s();
             let shape = &self.shapes[i];
             let (di, dn) = if shape.len() == 2 {
                 (shape[0], shape[1])

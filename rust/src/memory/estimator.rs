@@ -140,6 +140,37 @@ pub fn measured_param_bytes(manifest: &Manifest, size: &str) -> anyhow::Result<u
     Ok(DType::F32.bytes() * manifest.size(size)?.param_count)
 }
 
+/// Measured per-rank optimizer-state bytes under `scale launch
+/// --shard-state`: the manifest's state layout sliced by the update
+/// plan's contiguous shard partition — the exact partition the mesh
+/// uses, so these are the bytes each rank holds persistently, not a
+/// model. `out[r]` is rank r's share; the shares sum to
+/// [`measured_state_bytes`].
+pub fn sharded_state_bytes(
+    manifest: &Manifest,
+    optimizer: &str,
+    size: &str,
+    ranks: usize,
+) -> anyhow::Result<Vec<usize>> {
+    let per = DType::F32.bytes();
+    let slots = manifest.state_spec(optimizer, size)?;
+    let prog = crate::exec::update::UpdateProgram::new(optimizer, manifest.size(size)?)?;
+    anyhow::ensure!(
+        slots.len() == prog.n_state(),
+        "state spec ({} slots) disagrees with the update plan ({} slots)",
+        slots.len(),
+        prog.n_state()
+    );
+    let plan = prog.shard_plan(ranks);
+    Ok(plan
+        .state
+        .iter()
+        .map(|sr| {
+            slots[sr.clone()].iter().map(|s| per * s.shape.iter().product::<usize>()).sum()
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +256,34 @@ mod tests {
         ];
         for w in order.windows(2) {
             assert!(w[0] < w[1], "{order:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_state_partitions_exactly_and_keeps_the_paper_ratio() {
+        let m = crate::exec::native_manifest(std::path::PathBuf::from("unused"));
+        for size in ["tiny", "s60m", "s130m", "s350m", "e2e"] {
+            let full_scale = measured_state_bytes(&m, "scale", size).unwrap();
+            let full_adam = measured_state_bytes(&m, "adam", size).unwrap();
+            for ranks in [1usize, 2, 4] {
+                let scale = sharded_state_bytes(&m, "scale", size, ranks).unwrap();
+                let adam = sharded_state_bytes(&m, "adam", size, ranks).unwrap();
+                assert_eq!(scale.len(), ranks);
+                assert_eq!(adam.len(), ranks);
+                // the shards tile the full state exactly — nothing double
+                // counted, nothing dropped
+                assert_eq!(scale.iter().sum::<usize>(), full_scale, "{size} at {ranks} ranks");
+                assert_eq!(adam.iter().sum::<usize>(), full_adam, "{size} at {ranks} ranks");
+                // the paper's memory claim, peak rank vs peak rank: the
+                // heaviest SCALE rank stays within 45% of the heaviest
+                // Adam rank at every rank count
+                let peak_scale = *scale.iter().max().unwrap() as f64;
+                let peak_adam = *adam.iter().max().unwrap() as f64;
+                assert!(
+                    peak_scale <= 0.45 * peak_adam,
+                    "{size} at {ranks} ranks: {peak_scale} vs {peak_adam}"
+                );
+            }
         }
     }
 

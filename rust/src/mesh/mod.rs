@@ -12,8 +12,10 @@
 //!   frames are *detected* (and re-requested) rather than silently
 //!   folded into the gradient mean. Hosts the deterministic wire
 //!   failpoints (`conn_drop`, `frame_corrupt`, `frame_delay`).
-//! * [`worker`] — the rank body: stateless request-driven loop that
-//!   answers `Step{params}` with `Grads{[loss, grads..]}` for its shard.
+//! * [`worker`] — the rank body: request-driven loop that answers
+//!   `Step{params}` with `Grads{[loss, grads..]}` for its shard —
+//!   stateless by default; under `--shard-state` it additionally owns
+//!   and applies its optimizer-state shard (`ShardGrads`/`ShardParams`).
 //! * [`supervisor`] — process lifecycle, heartbeats, bounded-backoff
 //!   respawn, checkpoint rollback, and the typed
 //!   [`TrainError::Mesh`](crate::coordinator::TrainError) abort when
@@ -48,6 +50,17 @@
 //! snapshot whose round-trip is bit-exact, then replays. The
 //! `mesh_chaos` suite pins the whole story against never-failed
 //! single-process runs.
+//!
+//! Sharded optimizer state (`--shard-state`) adds one deliberate
+//! exception to leg 1: each rank persistently owns the optimizer-state
+//! shard for its contiguous slice of the update plan and applies that
+//! slice of the update itself. The exception stays bit-exact because
+//! (a) the plan is a pure function of `(optimizer, size, ranks)`
+//! computed identically on every process, (b) per-parameter updates
+//! have no cross-parameter data flow, so a contiguous partition
+//! reproduces the full update bit for bit, and (c) recovery re-seeds
+//! *every* rank's shard from the newest complete sharded snapshot,
+//! restoring the stateless-replay invariant at the rollback point.
 //!
 //! [`Trainer`]: crate::coordinator::Trainer
 //! [`Trainer::shard_forward`]: crate::coordinator::Trainer

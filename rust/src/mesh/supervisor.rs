@@ -14,6 +14,28 @@
 //! which is leg one of the bit-determinism argument (see
 //! [`crate::mesh`]).
 //!
+//! ## Sharded optimizer state (`--shard-state`)
+//!
+//! With [`MeshOptions::shard_state`] the optimizer update itself is
+//! distributed, ZeRO-style: the update plan's parameters are
+//! partitioned into contiguous rank-owned shards
+//! ([`UpdateProgram::shard_plan`] — a pure function of
+//! `(optimizer, size, ranks)`, so supervisor and workers compute the
+//! identical partition independently). After the gradient gather and
+//! reduce, the supervisor ships rank r `ShardGrads { lr, grads[r] }`
+//! (the exact f32 lr bits the single-process kernels would see), rank r
+//! applies its slice against its *persistently owned* optimizer-state
+//! shard and returns the updated param shard, which the supervisor
+//! installs in place. Per-parameter updates are independent, so the
+//! partition is bit-exact by construction. Checkpoints in this mode are
+//! sharded snapshots ([`CheckpointStore::save_sharded`]); state shards
+//! are fetched home (`FetchState`/`ShardState`) only at checkpoint
+//! cadence and at end of run, and recovery re-seeds *every* rank's
+//! shard from the restored snapshot — replacements came up with zeros
+//! and survivors are ahead of the rollback point.
+//!
+//! [`UpdateProgram::shard_plan`]: crate::exec::update::UpdateProgram::shard_plan
+//!
 //! ## Recovery state machine
 //!
 //! ```text
@@ -47,10 +69,14 @@
 //! and that is restored from a checksummed snapshot whose round-trip is
 //! bit-exact. A replayed step therefore reproduces the failed step's
 //! floats exactly, which `mesh_chaos.rs` pins against a never-failed
-//! single-process run.
+//! single-process run. Sharded mode keeps the argument by closing its
+//! one exception: the worker-owned state shards are themselves restored
+//! from the sharded snapshot (every rank re-seeded, not just the
+//! replacements), so the whole mesh replays from one consistent point.
 
 use std::io;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
@@ -58,9 +84,14 @@ use std::time::{Duration, Instant};
 use crate::coordinator::checkpoint::CheckpointStore;
 use crate::coordinator::recovery::TrainError;
 use crate::coordinator::{TrainOptions, Trainer};
+use crate::exec::update::UpdateProgram;
 use crate::mesh::wire::{self, Frame, WireError};
 use crate::runtime::{Engine, Tensor};
 use anyhow::{bail, ensure};
+
+/// `(param index range, state slot range)` per rank — the supervisor's
+/// view of the shard plan.
+type ShardRanges = Vec<(Range<usize>, Range<usize>)>;
 
 /// Configuration for a mesh run. Defaults mirror [`GuardPolicy`]'s
 /// cadence where the concepts overlap.
@@ -72,6 +103,11 @@ pub struct MeshOptions {
     pub train: TrainOptions,
     /// Worker process count; rank r computes DDP shard r.
     pub ranks: usize,
+    /// Shard the optimizer state over the ranks: each worker owns the
+    /// state for its contiguous slice of the update plan and applies
+    /// that slice of the update; checkpoints become sharded snapshot
+    /// dirs. Bit-identical to the default mode for every rank count.
+    pub shard_state: bool,
     /// Artifacts dir handed to spawned workers (`--artifacts`).
     pub artifacts: String,
     /// Run directory for the rollback [`CheckpointStore`].
@@ -114,6 +150,7 @@ impl MeshOptions {
         MeshOptions {
             train,
             ranks,
+            shard_state: false,
             artifacts: "./artifacts".into(),
             ckpt_dir: PathBuf::from("mesh_ckpts"),
             checkpoint_every: 50,
@@ -164,10 +201,29 @@ pub fn train<'e>(
     let mut topts = opts.train.clone();
     topts.shards = opts.ranks;
     let mut tr = Trainer::new(engine, topts).map_err(TrainError::engine)?;
+    // the shard plan is a pure function of (optimizer, size, ranks) —
+    // every worker derives the identical partition on its own
+    let shard_ranges: Option<ShardRanges> = if opts.shard_state {
+        let size = engine.manifest.size(&opts.train.size).map_err(TrainError::engine)?;
+        let prog = UpdateProgram::new(&opts.train.optimizer, size).map_err(TrainError::engine)?;
+        let plan = prog.shard_plan(opts.ranks);
+        Some(plan.params.into_iter().zip(plan.state).collect())
+    } else {
+        None
+    };
     let store = CheckpointStore::open(&opts.ckpt_dir, opts.keep_last).map_err(TrainError::io)?;
-    // step-0 baseline so recovery always has a rollback target
+    // step-0 baseline so recovery always has a rollback target (in
+    // sharded mode the state is still all-zeros here, matching the
+    // freshly spawned workers — no fetch round needed)
     let ck = tr.checkpoint().map_err(TrainError::engine)?;
-    store.save(&ck).map_err(TrainError::io)?;
+    match &shard_ranges {
+        Some(ranges) => {
+            store.save_sharded(&ck, tr.n_params(), ranges).map_err(TrainError::io)?;
+        }
+        None => {
+            store.save(&ck).map_err(TrainError::io)?;
+        }
+    }
 
     let listener = TcpListener::bind("127.0.0.1:0").map_err(|e| TrainError::mesh(e.into()))?;
     listener.set_nonblocking(true).map_err(|e| TrainError::mesh(e.into()))?;
@@ -185,39 +241,90 @@ pub fn train<'e>(
     let mut respawns_left = opts.max_respawns;
     let mut consec_failures: u32 = 0;
 
-    while tr.step < tr.opts.steps {
-        let mut failed = if opts.heartbeat_every > 0 && tr.step % opts.heartbeat_every == 0 {
-            fleet.heartbeat_round()
-        } else {
-            Vec::new()
-        };
-        if failed.is_empty() {
-            tr.begin_step();
-            failed = exchange(&mut tr, &mut fleet, opts, &mut report);
-        }
-        if failed.is_empty() {
-            consec_failures = 0;
-            // Divergence and Engine errors propagate typed, exactly like
-            // single-process train(): respawning cannot fix math
-            let loss = tr.finish_step()?;
-            tr.after_step(loss)?;
-            if tr.step % opts.checkpoint_every == 0 {
-                let ck = tr.checkpoint().map_err(TrainError::engine)?;
-                store.save(&ck).map_err(TrainError::io)?;
+    loop {
+        while tr.step < tr.opts.steps {
+            let mut failed = if opts.heartbeat_every > 0 && tr.step % opts.heartbeat_every == 0 {
+                fleet.heartbeat_round()
+            } else {
+                Vec::new()
+            };
+            if failed.is_empty() {
+                tr.begin_step();
+                failed = exchange(&mut tr, &mut fleet, opts, &mut report);
             }
-        } else {
-            recover(
-                &mut tr,
-                &mut fleet,
-                &listener,
-                &store,
-                opts,
-                &mut report,
-                &mut respawns_left,
-                &mut consec_failures,
-                &failed,
-            )?;
+            if failed.is_empty() {
+                match &shard_ranges {
+                    Some(ranges) => {
+                        // Divergence and Engine errors propagate typed
+                        // *before* the remote apply, exactly where the
+                        // single-process step would fail
+                        let loss = tr.reduce_and_guard()?;
+                        failed = shard_apply(&mut tr, &mut fleet, opts, &mut report, ranges);
+                        if failed.is_empty() {
+                            consec_failures = 0;
+                            tr.record_step(loss);
+                            tr.after_step(loss)?;
+                            if tr.step % opts.checkpoint_every == 0 {
+                                failed =
+                                    fetch_state_all(&mut tr, &mut fleet, opts, &mut report, ranges);
+                                if failed.is_empty() {
+                                    let ck = tr.checkpoint().map_err(TrainError::engine)?;
+                                    store
+                                        .save_sharded(&ck, tr.n_params(), ranges)
+                                        .map_err(TrainError::io)?;
+                                }
+                            }
+                        }
+                    }
+                    None => {
+                        consec_failures = 0;
+                        // Divergence and Engine errors propagate typed,
+                        // exactly like single-process train(): respawning
+                        // cannot fix math
+                        let loss = tr.finish_step()?;
+                        tr.after_step(loss)?;
+                        if tr.step % opts.checkpoint_every == 0 {
+                            let ck = tr.checkpoint().map_err(TrainError::engine)?;
+                            store.save(&ck).map_err(TrainError::io)?;
+                        }
+                    }
+                }
+            }
+            if !failed.is_empty() {
+                recover(
+                    &mut tr,
+                    &mut fleet,
+                    &listener,
+                    &store,
+                    opts,
+                    &mut report,
+                    &mut respawns_left,
+                    &mut consec_failures,
+                    &failed,
+                    shard_ranges.as_deref(),
+                )?;
+            }
         }
+        // sharded mode: pull every rank's final state shard home so the
+        // returned trainer is bit-identical to a single-process run; a
+        // failure here re-enters the training loop via rollback
+        let Some(ranges) = &shard_ranges else { break };
+        let failed = fetch_state_all(&mut tr, &mut fleet, opts, &mut report, ranges);
+        if failed.is_empty() {
+            break;
+        }
+        recover(
+            &mut tr,
+            &mut fleet,
+            &listener,
+            &store,
+            opts,
+            &mut report,
+            &mut respawns_left,
+            &mut consec_failures,
+            &failed,
+            shard_ranges.as_deref(),
+        )?;
     }
     report.ppl = tr.eval().map_err(TrainError::engine)?.exp();
     fleet.shutdown_all();
@@ -323,9 +430,225 @@ fn validate_grads(tr: &Trainer<'_>, tensors: &[Tensor]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sharded-mode apply: ship each rank its slice of the reduced
+/// gradients (plus the exact lr bits the single-process kernels would
+/// see) and gather the updated param shards back, installing them in
+/// place. Returns the failed ranks (empty = `tr.params` is fully
+/// updated). Like [`exchange`], every reached rank is drained even
+/// after an earlier failure, so survivors park cleanly.
+fn shard_apply(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+    ranges: &[(Range<usize>, Range<usize>)],
+) -> Vec<usize> {
+    let step = tr.step as u64;
+    let lr = Tensor::scalar_f32(tr.step_lr_f32());
+    let mut reached = vec![false; ranges.len()];
+    let mut failed = Vec::new();
+    for (r, (pr, _)) in ranges.iter().enumerate() {
+        let sent = match fleet.conns[r].as_mut() {
+            Some(stream) => {
+                wire::write_shard_grads(stream, step, &lr, &tr.reduced_grads()[pr.clone()]).is_ok()
+            }
+            None => false,
+        };
+        if sent {
+            reached[r] = true;
+        } else {
+            failed.push(r);
+        }
+    }
+    for (r, (pr, _)) in ranges.iter().enumerate() {
+        if !reached[r] {
+            continue;
+        }
+        if let Err(e) = gather_shard_params(tr, fleet, r, step, pr, opts, report) {
+            if !opts.train.quiet {
+                eprintln!("mesh: rank {r} failed applying step {step}: {e}");
+            }
+            failed.push(r);
+        }
+    }
+    failed
+}
+
+/// Read one rank's `ShardParams` for `step`, with bounded CRC
+/// re-requests, and install the shard into `tr.params`.
+fn gather_shard_params(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    r: usize,
+    step: u64,
+    pr: &Range<usize>,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+) -> anyhow::Result<()> {
+    let mut retries = 0usize;
+    loop {
+        let stream = match fleet.conns[r].as_mut() {
+            Some(s) => s,
+            None => bail!("no connection"),
+        };
+        match wire::read_frame(stream) {
+            Ok(Frame::ShardParams { step: s, tensors }) => {
+                ensure!(s == step, "stale param shard for step {s} (want {step})");
+                ensure!(
+                    tensors.len() == pr.len(),
+                    "got {} param tensors, want {}",
+                    tensors.len(),
+                    pr.len()
+                );
+                for (t, p) in tensors.iter().zip(&tr.params[pr.clone()]) {
+                    ensure!(
+                        t.shape() == p.shape(),
+                        "param shard shape {:?} does not match {:?}",
+                        t.shape(),
+                        p.shape()
+                    );
+                }
+                for (p, t) in tr.params[pr.clone()].iter_mut().zip(tensors) {
+                    *p = t;
+                }
+                return Ok(());
+            }
+            Ok(other) => bail!("unexpected {} frame (want ShardParams)", other.name()),
+            Err(WireError::Crc { .. }) => {
+                ensure!(
+                    retries < opts.max_frame_retries,
+                    "frame retries ({}) exhausted",
+                    opts.max_frame_retries
+                );
+                retries += 1;
+                report.frame_retries += 1;
+                wire::write_resend(stream)?;
+            }
+            Err(WireError::Fatal(e)) => return Err(e),
+        }
+    }
+}
+
+/// Pull every rank's optimizer-state shard into `tr.state` (checkpoint
+/// cadence and end of run). Returns the failed ranks.
+fn fetch_state_all(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+    ranges: &[(Range<usize>, Range<usize>)],
+) -> Vec<usize> {
+    let step = tr.step as u64;
+    let mut reached = vec![false; ranges.len()];
+    let mut failed = Vec::new();
+    for r in 0..ranges.len() {
+        let sent = match fleet.conns[r].as_mut() {
+            Some(s) => wire::write_fetch_state(s, step).is_ok(),
+            None => false,
+        };
+        if sent {
+            reached[r] = true;
+        } else {
+            failed.push(r);
+        }
+    }
+    for (r, (_, sr)) in ranges.iter().enumerate() {
+        if !reached[r] {
+            continue;
+        }
+        if let Err(e) = gather_shard_state(tr, fleet, r, step, sr, opts, report) {
+            if !opts.train.quiet {
+                eprintln!("mesh: rank {r} failed returning state at step {step}: {e}");
+            }
+            failed.push(r);
+        }
+    }
+    failed
+}
+
+/// Read one rank's `ShardState` for `step`, with bounded CRC
+/// re-requests, and install the shard into `tr.state`.
+fn gather_shard_state(
+    tr: &mut Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    r: usize,
+    step: u64,
+    sr: &Range<usize>,
+    opts: &MeshOptions,
+    report: &mut MeshReport,
+) -> anyhow::Result<()> {
+    let mut retries = 0usize;
+    loop {
+        let stream = match fleet.conns[r].as_mut() {
+            Some(s) => s,
+            None => bail!("no connection"),
+        };
+        match wire::read_frame(stream) {
+            Ok(Frame::ShardState { step: s, tensors }) => {
+                ensure!(s == step, "stale state shard for step {s} (want {step})");
+                ensure!(
+                    tensors.len() == sr.len(),
+                    "got {} state tensors, want {}",
+                    tensors.len(),
+                    sr.len()
+                );
+                for (t, slot) in tensors.iter().zip(&tr.state[sr.clone()]) {
+                    ensure!(
+                        t.shape() == slot.shape(),
+                        "state shard shape {:?} does not match {:?}",
+                        t.shape(),
+                        slot.shape()
+                    );
+                }
+                for (slot, t) in tr.state[sr.clone()].iter_mut().zip(tensors) {
+                    *slot = t;
+                }
+                return Ok(());
+            }
+            Ok(other) => bail!("unexpected {} frame (want ShardState)", other.name()),
+            Err(WireError::Crc { .. }) => {
+                ensure!(
+                    retries < opts.max_frame_retries,
+                    "frame retries ({}) exhausted",
+                    opts.max_frame_retries
+                );
+                retries += 1;
+                report.frame_retries += 1;
+                wire::write_resend(stream)?;
+            }
+            Err(WireError::Fatal(e)) => return Err(e),
+        }
+    }
+}
+
+/// Re-seed every rank's owned state shard from the trainer's (just
+/// restored) state. Returns the ranks whose re-seed write failed.
+fn reseed_state(
+    tr: &Trainer<'_>,
+    fleet: &mut Fleet<'_>,
+    ranges: &[(Range<usize>, Range<usize>)],
+) -> Vec<usize> {
+    let step = tr.step as u64;
+    let mut failed = Vec::new();
+    for (r, (_, sr)) in ranges.iter().enumerate() {
+        let ok = match fleet.conns[r].as_mut() {
+            Some(s) => wire::write_shard_state(s, step, &tr.state[sr.clone()]).is_ok(),
+            None => false,
+        };
+        if !ok {
+            failed.push(r);
+        }
+    }
+    failed
+}
+
 /// Kill + respawn each failed rank (bounded budget, exponential
 /// backoff), then roll the trainer back to the newest snapshot so the
-/// whole mesh replays from a clean point.
+/// whole mesh replays from a clean point. In sharded mode the rollback
+/// source is the newest *complete* sharded snapshot and every rank —
+/// survivor or replacement — gets its state shard re-seeded from it; a
+/// rank that fails during re-seeding joins the failed set and the loop
+/// repeats under the same respawn budget.
 #[allow(clippy::too_many_arguments)]
 fn recover(
     tr: &mut Trainer<'_>,
@@ -337,35 +660,45 @@ fn recover(
     respawns_left: &mut usize,
     consec_failures: &mut u32,
     failed: &[usize],
+    shard_ranges: Option<&[(Range<usize>, Range<usize>)]>,
 ) -> Result<(), TrainError> {
-    for &r in failed {
-        if *respawns_left == 0 {
-            fleet.shutdown_all();
-            return Err(TrainError::mesh(anyhow::anyhow!(
-                "rank {r} failed and the respawn budget ({}) is exhausted",
-                opts.max_respawns
-            )));
+    let mut pending: Vec<usize> = failed.to_vec();
+    while !pending.is_empty() {
+        for &r in &pending {
+            if *respawns_left == 0 {
+                fleet.shutdown_all();
+                return Err(TrainError::mesh(anyhow::anyhow!(
+                    "rank {r} failed and the respawn budget ({}) is exhausted",
+                    opts.max_respawns
+                )));
+            }
+            *respawns_left -= 1;
+            report.respawns += 1;
+            fleet.kill(r);
+            let backoff = backoff_ms(opts, *consec_failures);
+            std::thread::sleep(Duration::from_millis(backoff));
+            // respawned clean: no --faults, no SCALE_FAULTS — the original
+            // spec would re-arm with reset hit counters in the fresh process
+            // and kill it again forever
+            fleet.spawn(r, false).map_err(TrainError::mesh)?;
+            fleet.accept_hello(listener).map_err(TrainError::mesh)?;
         }
-        *respawns_left -= 1;
-        report.respawns += 1;
-        fleet.kill(r);
-        let backoff = backoff_ms(opts, *consec_failures);
-        std::thread::sleep(Duration::from_millis(backoff));
-        // respawned clean: no --faults, no SCALE_FAULTS — the original
-        // spec would re-arm with reset hit counters in the fresh process
-        // and kill it again forever
-        fleet.spawn(r, false).map_err(TrainError::mesh)?;
-        fleet.accept_hello(listener).map_err(TrainError::mesh)?;
-    }
-    *consec_failures += 1;
-    let (_, ck) = store
-        .latest()
-        .map_err(TrainError::io)?
-        .ok_or_else(|| TrainError::io(anyhow::anyhow!("no snapshot to roll back to")))?;
-    tr.restore(&ck).map_err(TrainError::engine)?;
-    tr.metrics.truncate_to_step(tr.step);
-    if !opts.train.quiet {
-        println!("  mesh: respawned rank(s) {failed:?}, rolled back to step {}", tr.step);
+        *consec_failures += 1;
+        let restored = match shard_ranges {
+            Some(ranges) => store.latest_sharded(ranges.len()).map_err(TrainError::io)?,
+            None => store.latest().map_err(TrainError::io)?,
+        };
+        let (_, ck) = restored
+            .ok_or_else(|| TrainError::io(anyhow::anyhow!("no snapshot to roll back to")))?;
+        tr.restore(&ck).map_err(TrainError::engine)?;
+        tr.metrics.truncate_to_step(tr.step);
+        pending = match shard_ranges {
+            Some(ranges) => reseed_state(tr, fleet, ranges),
+            None => Vec::new(),
+        };
+        if !opts.train.quiet && pending.is_empty() {
+            println!("  mesh: respawned rank(s) {failed:?}, rolled back to step {}", tr.step);
+        }
     }
     Ok(())
 }
@@ -415,6 +748,9 @@ impl<'a> Fleet<'a> {
         // identical float (it never uses it for bits; rings key on seed)
         cmd.arg("--lr").arg(format!("{}", t.base_lr));
         cmd.arg("--seed").arg(t.seed.to_string());
+        if self.opts.shard_state {
+            cmd.arg("--shard-state");
+        }
         cmd.arg("--quiet");
         cmd.stdout(Stdio::null());
         // supervisor-side env faults must not leak into workers
@@ -442,9 +778,12 @@ impl<'a> Fleet<'a> {
                     stream.set_read_timeout(Some(t))?;
                     stream.set_write_timeout(Some(t))?;
                     let mut stream = stream;
+                    // version-checked handshake: a worker from another
+                    // build is refused here with a typed error instead
+                    // of misdecoding its frames mid-run
                     let rank = match wire::read_frame(&mut stream) {
-                        Ok(Frame::Hello { rank }) => rank,
-                        Ok(f) => bail!("mesh: expected Hello, got {}", f.name()),
+                        Ok(frame) => wire::hello_rank(&frame)
+                            .map_err(|e| anyhow::anyhow!("mesh: handshake rejected: {e}"))?,
                         Err(e) => bail!("mesh: bad Hello handshake: {e}"),
                     };
                     ensure!(rank < self.conns.len(), "mesh: Hello from unknown rank {rank}");

@@ -20,15 +20,28 @@
 //!
 //! ## Frames
 //!
-//! | tag | frame      | body                                  | direction |
-//! |-----|------------|---------------------------------------|-----------|
-//! | 1   | `Hello`    | `u32 rank`                            | w -> s    |
-//! | 2   | `Step`     | `u64 step`, tensors (params)          | s -> w    |
-//! | 3   | `Grads`    | `u64 step`, tensors (`[loss, grads]`) | w -> s    |
-//! | 4   | `Resend`   | —                                     | s -> w    |
-//! | 5   | `Ping`     | —                                     | s -> w    |
-//! | 6   | `Pong`     | —                                     | w -> s    |
-//! | 7   | `Shutdown` | —                                     | s -> w    |
+//! | tag | frame         | body                                     | direction |
+//! |-----|---------------|------------------------------------------|-----------|
+//! | 1   | `Hello`       | `u32 version`, `u32 rank`                | w -> s    |
+//! | 2   | `Step`        | `u64 step`, tensors (params)             | s -> w    |
+//! | 3   | `Grads`       | `u64 step`, tensors (`[loss, grads]`)    | w -> s    |
+//! | 4   | `Resend`      | —                                        | s -> w    |
+//! | 5   | `Ping`        | —                                        | s -> w    |
+//! | 6   | `Pong`        | —                                        | w -> s    |
+//! | 7   | `Shutdown`    | —                                        | s -> w    |
+//! | 8   | `ShardGrads`  | `u64 step`, tensors (`[lr, grad shard]`) | s -> w    |
+//! | 9   | `ShardParams` | `u64 step`, tensors (param shard)        | w -> s    |
+//! | 10  | `ShardState`  | `u64 step`, tensors (state shard)        | both      |
+//! | 11  | `FetchState`  | `u64 step`                               | s -> w    |
+//!
+//! `Hello` carries [`WIRE_VERSION`]; the supervisor rejects a
+//! mismatched worker with a typed fatal error at the handshake
+//! ([`hello_rank`]) instead of misdecoding its frames later. The
+//! `Shard*` frames are the sharded-optimizer-state mode: the supervisor
+//! ships each rank its slice of the reduced gradients (plus the exact
+//! lr bits), the rank applies its owned slice of the update plan and
+//! returns the updated param shard, and `ShardState`/`FetchState` move
+//! optimizer-state shards for checkpoints and recovery re-seeding.
 //!
 //! Tensors travel as `u32 count`, then per tensor `u32 ndims`,
 //! `u64 dims..`, raw little-endian f32 data. Only f32 tensors travel
@@ -68,6 +81,11 @@ const MAX_WIRE_DIM: u64 = 1 << 31;
 /// test budget.
 const FRAME_DELAY_MS: u64 = 1500;
 
+/// Protocol version carried by every `Hello`. Bumped whenever the frame
+/// grammar changes incompatibly (v2 added the version field itself plus
+/// the `Shard*` frames); a supervisor only accepts its own version.
+pub const WIRE_VERSION: u32 = 2;
+
 const TAG_HELLO: u8 = 1;
 const TAG_STEP: u8 = 2;
 const TAG_GRADS: u8 = 3;
@@ -75,18 +93,26 @@ const TAG_RESEND: u8 = 4;
 const TAG_PING: u8 = 5;
 const TAG_PONG: u8 = 6;
 const TAG_SHUTDOWN: u8 = 7;
+const TAG_SHARD_GRADS: u8 = 8;
+const TAG_SHARD_PARAMS: u8 = 9;
+const TAG_SHARD_STATE: u8 = 10;
+const TAG_FETCH_STATE: u8 = 11;
 
-/// A decoded frame. `Step`/`Grads` own their tensors; the write side
-/// never builds this enum (the `write_*` helpers serialize straight
+/// A decoded frame. Tensor-bearing frames own their tensors; the write
+/// side never builds this enum (the `write_*` helpers serialize straight
 /// from borrowed `&[Tensor]`, so params are never cloned per step).
 pub enum Frame {
-    Hello { rank: usize },
+    Hello { version: u32, rank: usize },
     Step { step: u64, tensors: Vec<Tensor> },
     Grads { step: u64, tensors: Vec<Tensor> },
     Resend,
     Ping,
     Pong,
     Shutdown,
+    ShardGrads { step: u64, tensors: Vec<Tensor> },
+    ShardParams { step: u64, tensors: Vec<Tensor> },
+    ShardState { step: u64, tensors: Vec<Tensor> },
+    FetchState { step: u64 },
 }
 
 impl Frame {
@@ -100,7 +126,25 @@ impl Frame {
             Frame::Ping => "Ping",
             Frame::Pong => "Pong",
             Frame::Shutdown => "Shutdown",
+            Frame::ShardGrads { .. } => "ShardGrads",
+            Frame::ShardParams { .. } => "ShardParams",
+            Frame::ShardState { .. } => "ShardState",
+            Frame::FetchState { .. } => "FetchState",
         }
+    }
+}
+
+/// Validate a handshake frame: a `Hello` speaking [`WIRE_VERSION`]
+/// yields the rank; anything else is a typed fatal error (the peer is
+/// from a different build or not a worker at all — misdecoding its
+/// later frames would be worse than refusing it here).
+pub fn hello_rank(frame: &Frame) -> Result<usize, WireError> {
+    match frame {
+        Frame::Hello { version, rank } if *version == WIRE_VERSION => Ok(*rank),
+        Frame::Hello { version, .. } => Err(WireError::Fatal(anyhow::anyhow!(
+            "peer speaks protocol version {version}, this supervisor requires {WIRE_VERSION}"
+        ))),
+        f => Err(WireError::Fatal(anyhow::anyhow!("expected Hello handshake, got {}", f.name()))),
     }
 }
 
@@ -173,24 +217,30 @@ fn encode_tensors(buf: &mut Vec<u8>, tensors: &[Tensor]) -> anyhow::Result<()> {
     ensure!(tensors.len() <= MAX_WIRE_TENSORS, "wire: too many tensors");
     put_u32(buf, tensors.len() as u32);
     for t in tensors {
-        let Tensor::F32 { shape, data } = t else {
-            bail!("wire: only f32 tensors travel between ranks");
-        };
-        ensure!(shape.len() <= MAX_WIRE_DIMS, "wire: tensor rank {} too deep", shape.len());
-        put_u32(buf, shape.len() as u32);
-        for &d in shape {
-            put_u64(buf, d as u64);
-        }
-        for &x in data {
-            buf.extend_from_slice(&x.to_le_bytes());
-        }
+        encode_one(buf, t)?;
+    }
+    Ok(())
+}
+
+fn encode_one(buf: &mut Vec<u8>, t: &Tensor) -> anyhow::Result<()> {
+    let Tensor::F32 { shape, data } = t else {
+        bail!("wire: only f32 tensors travel between ranks");
+    };
+    ensure!(shape.len() <= MAX_WIRE_DIMS, "wire: tensor rank {} too deep", shape.len());
+    put_u32(buf, shape.len() as u32);
+    for &d in shape {
+        put_u64(buf, d as u64);
+    }
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
     }
     Ok(())
 }
 
 pub fn write_hello<S: Write>(stream: &mut S, rank: usize) -> anyhow::Result<()> {
-    let mut p = Vec::with_capacity(5);
+    let mut p = Vec::with_capacity(9);
     p.push(TAG_HELLO);
+    put_u32(&mut p, WIRE_VERSION);
     put_u32(&mut p, rank as u32);
     send(stream, &p)
 }
@@ -214,6 +264,52 @@ fn write_tensor_frame<S: Write>(
     p.push(tag);
     put_u64(&mut p, step);
     encode_tensors(&mut p, tensors)?;
+    send(stream, &p)
+}
+
+/// `ShardGrads` is `[lr, grad shard..]` on the wire; taking the lr
+/// scalar and the grad slice separately lets the supervisor serialize
+/// straight out of the trainer's reduced-grad buffer — no per-step
+/// clone of a gradient shard just to prepend one scalar.
+pub fn write_shard_grads<S: Write>(
+    stream: &mut S,
+    step: u64,
+    lr: &Tensor,
+    grads: &[Tensor],
+) -> anyhow::Result<()> {
+    ensure!(grads.len() < MAX_WIRE_TENSORS, "wire: too many tensors");
+    let bytes: usize = grads.iter().map(|t| 4 + 8 * t.shape().len() + 4 * t.numel()).sum();
+    let mut p = Vec::with_capacity(13 + 16 + bytes);
+    p.push(TAG_SHARD_GRADS);
+    put_u64(&mut p, step);
+    put_u32(&mut p, (grads.len() + 1) as u32);
+    encode_one(&mut p, lr)?;
+    for g in grads {
+        encode_one(&mut p, g)?;
+    }
+    send(stream, &p)
+}
+
+pub fn write_shard_params<S: Write>(
+    stream: &mut S,
+    step: u64,
+    tensors: &[Tensor],
+) -> anyhow::Result<()> {
+    write_tensor_frame(stream, TAG_SHARD_PARAMS, step, tensors)
+}
+
+pub fn write_shard_state<S: Write>(
+    stream: &mut S,
+    step: u64,
+    tensors: &[Tensor],
+) -> anyhow::Result<()> {
+    write_tensor_frame(stream, TAG_SHARD_STATE, step, tensors)
+}
+
+pub fn write_fetch_state<S: Write>(stream: &mut S, step: u64) -> anyhow::Result<()> {
+    let mut p = Vec::with_capacity(9);
+    p.push(TAG_FETCH_STATE);
+    put_u64(&mut p, step);
     send(stream, &p)
 }
 
@@ -329,13 +425,17 @@ fn decode_payload(payload: &[u8]) -> anyhow::Result<Frame> {
     let mut c = Cur { b: payload, off: 0 };
     let tag = c.take(1)?[0];
     let frame = match tag {
-        TAG_HELLO => Frame::Hello { rank: c.u32()? as usize },
+        TAG_HELLO => Frame::Hello { version: c.u32()?, rank: c.u32()? as usize },
         TAG_STEP => Frame::Step { step: c.u64()?, tensors: decode_tensors(&mut c)? },
         TAG_GRADS => Frame::Grads { step: c.u64()?, tensors: decode_tensors(&mut c)? },
         TAG_RESEND => Frame::Resend,
         TAG_PING => Frame::Ping,
         TAG_PONG => Frame::Pong,
         TAG_SHUTDOWN => Frame::Shutdown,
+        TAG_SHARD_GRADS => Frame::ShardGrads { step: c.u64()?, tensors: decode_tensors(&mut c)? },
+        TAG_SHARD_PARAMS => Frame::ShardParams { step: c.u64()?, tensors: decode_tensors(&mut c)? },
+        TAG_SHARD_STATE => Frame::ShardState { step: c.u64()?, tensors: decode_tensors(&mut c)? },
+        TAG_FETCH_STATE => Frame::FetchState { step: c.u64()? },
         other => bail!("wire: unknown frame tag {other}"),
     };
     ensure!(c.remaining() == 0, "wire: {} bytes of trailing garbage", c.remaining());
@@ -374,9 +474,14 @@ mod tests {
         write_ping(&mut buf).unwrap();
         write_pong(&mut buf).unwrap();
         write_shutdown(&mut buf).unwrap();
+        write_shard_grads(&mut buf, 42, &tensors()[0], &tensors()[1..]).unwrap();
+        write_shard_params(&mut buf, 42, &tensors()).unwrap();
+        write_shard_state(&mut buf, 42, &tensors()).unwrap();
+        write_fetch_state(&mut buf, 42).unwrap();
         let frames = read_all(&buf);
-        assert_eq!(frames.len(), 7);
-        assert!(matches!(frames[0], Frame::Hello { rank: 3 }));
+        assert_eq!(frames.len(), 11);
+        assert!(matches!(frames[0], Frame::Hello { version: WIRE_VERSION, rank: 3 }));
+        assert_eq!(hello_rank(&frames[0]).unwrap(), 3);
         match &frames[1] {
             Frame::Step { step, tensors: ts } => {
                 assert_eq!(*step, 42);
@@ -396,6 +501,43 @@ mod tests {
         assert!(matches!(frames[4], Frame::Ping));
         assert!(matches!(frames[5], Frame::Pong));
         assert!(matches!(frames[6], Frame::Shutdown));
+        for (i, want) in [(7usize, "ShardGrads"), (8, "ShardParams"), (9, "ShardState")] {
+            assert_eq!(frames[i].name(), want);
+            match &frames[i] {
+                Frame::ShardGrads { step, tensors: ts }
+                | Frame::ShardParams { step, tensors: ts }
+                | Frame::ShardState { step, tensors: ts } => {
+                    assert_eq!(*step, 42);
+                    assert_eq!(ts, &tensors());
+                }
+                f => panic!("expected {want}, got {}", f.name()),
+            }
+        }
+        assert!(matches!(frames[10], Frame::FetchState { step: 42 }));
+    }
+
+    #[test]
+    fn old_version_hello_is_a_clean_typed_rejection() {
+        // hand-craft a v1-style Hello: the version word says 1
+        let mut payload = vec![1u8]; // TAG_HELLO
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&3u32.to_le_bytes());
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&payload);
+        buf.extend_from_slice(&crc32(&payload).to_le_bytes());
+        let frame = read_frame(&mut Cursor::new(buf)).unwrap();
+        match hello_rank(&frame) {
+            Err(WireError::Fatal(e)) => {
+                assert!(e.to_string().contains("protocol version"), "{e}");
+            }
+            Err(e) => panic!("want Fatal, got {e}"),
+            Ok(r) => panic!("old-version Hello accepted as rank {r}"),
+        }
+        // a non-Hello frame is rejected the same way
+        let mut ping = Vec::new();
+        write_ping(&mut ping).unwrap();
+        let frame = read_frame(&mut Cursor::new(ping)).unwrap();
+        assert!(matches!(hello_rank(&frame), Err(WireError::Fatal(_))));
     }
 
     #[test]

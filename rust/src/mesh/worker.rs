@@ -1,17 +1,33 @@
 //! The `scale worker` body: one rank of a mesh run.
 //!
-//! A worker is *stateless between steps by construction*: every `Step`
-//! frame carries the full parameter set, and the microbatch a worker
-//! feeds its shard is a pure function of `(shard, stream_pos)` via the
-//! trainer's token rings — so a freshly respawned worker at step `k`
-//! computes bit-identical gradients to one that has been alive since
-//! step 1. That property is what makes the supervisor's
-//! kill-and-respawn recovery bit-exact, and `mesh_chaos.rs` pins it.
+//! In the default mode a worker is *stateless between steps by
+//! construction*: every `Step` frame carries the full parameter set,
+//! and the microbatch a worker feeds its shard is a pure function of
+//! `(shard, stream_pos)` via the trainer's token rings — so a freshly
+//! respawned worker at step `k` computes bit-identical gradients to one
+//! that has been alive since step 1. That property is what makes the
+//! supervisor's kill-and-respawn recovery bit-exact, and
+//! `mesh_chaos.rs` pins it.
+//!
+//! `--shard-state` mode adds exactly one piece of owned state: the
+//! optimizer-state shard for this rank's contiguous slice of the update
+//! plan ([`UpdateProgram::shard_plan`] — a pure function of
+//! `(optimizer, size, ranks)`, computed here and by the supervisor
+//! independently). Per step the worker still answers `Step` with
+//! `Grads`, then receives `ShardGrads` (the exact lr bits + its slice
+//! of the *reduced* gradients), applies its slice of the update via
+//! [`UpdateProgram::execute_range`] — mutating its param slice and its
+//! persistent state shard in place — and returns the updated param
+//! shard. Because the state shard starts at zero (like a fresh
+//! single-process trainer) and is re-seeded by the supervisor from the
+//! newest complete sharded snapshot after any rollback (`ShardState`),
+//! the respawn-resume story stays bit-exact even though state now lives
+//! out here.
 //!
 //! The loop is request-driven: block on [`wire::read_frame`] (no read
 //! timeout — a parked worker waiting out another rank's recovery simply
 //! stays blocked here), answer `Step` with `Grads`, `Resend` with a
-//! re-encode of the last outputs, `Ping` with `Pong`, and exit on
+//! re-encode of the last reply, `Ping` with `Pong`, and exit on
 //! `Shutdown` or when the supervisor's death surfaces as EOF. Any
 //! protocol or engine failure exits the process — the supervisor owns
 //! recovery, the worker just dies loudly.
@@ -20,9 +36,11 @@ use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{TrainOptions, Trainer};
+use crate::exec::update::{UpdateProgram, UpdateWs};
 use crate::fault;
 use crate::mesh::wire::{self, Frame, WireError};
-use crate::runtime::Engine;
+use crate::parallel;
+use crate::runtime::{Engine, Tensor};
 use anyhow::{bail, ensure};
 
 /// Exit code a `rank_exit` failpoint dies with — distinguishable from
@@ -40,10 +58,32 @@ pub struct WorkerOptions {
     pub ranks: usize,
     /// Supervisor address, e.g. `127.0.0.1:41234`.
     pub connect: String,
+    /// Own the optimizer state for this rank's shard of the update plan
+    /// and apply that slice of the update (`scale launch --shard-state`).
+    /// Must match the supervisor's mode; frames from the other mode are
+    /// protocol errors.
+    pub shard_state: bool,
     /// Must match the supervisor's `TrainOptions` where it matters for
     /// bits: `size`, `optimizer`, `seed` (corpus + rings), `shards`
     /// (= `ranks`). The supervisor's spawner guarantees this.
     pub train: TrainOptions,
+}
+
+/// What the worker sent last — what a `Resend` must re-encode.
+#[derive(Clone, Copy)]
+enum Reply {
+    Grads,
+    Params,
+    State,
+}
+
+/// The sharded-mode context: this rank's slice of the update plan plus
+/// the reusable kernel workspace.
+struct ShardCtx {
+    prog: UpdateProgram,
+    ws: UpdateWs,
+    params: std::ops::Range<usize>,
+    state: std::ops::Range<usize>,
 }
 
 /// Dial the supervisor with bounded exponential backoff — the listener
@@ -79,9 +119,23 @@ pub fn run(engine: &Engine, opts: &WorkerOptions) -> anyhow::Result<()> {
     );
     let mut tr = Trainer::new(engine, opts.train.clone())
         .map_err(|e| e.context(format!("worker rank {}: trainer init", opts.rank)))?;
+    let mut shard: Option<ShardCtx> = if opts.shard_state {
+        let size = engine.manifest.size(&opts.train.size)?;
+        let prog = UpdateProgram::new(&opts.train.optimizer, size)?;
+        let plan = prog.shard_plan(opts.ranks);
+        Some(ShardCtx {
+            params: plan.params[opts.rank].clone(),
+            state: plan.state[opts.rank].clone(),
+            prog,
+            ws: UpdateWs::new(),
+        })
+    } else {
+        None
+    };
     let mut stream = connect_with_backoff(&opts.connect)?;
     stream.set_nodelay(true)?;
     wire::write_hello(&mut stream, opts.rank)?;
+    let mut last = Reply::Grads;
 
     loop {
         match wire::read_frame(&mut stream) {
@@ -114,11 +168,102 @@ pub fn run(engine: &Engine, opts: &WorkerOptions) -> anyhow::Result<()> {
                 // k-1), which is the whole respawn-resume story
                 tr.shard_forward(opts.rank, (step - 1) as usize)?;
                 wire::write_grads(&mut stream, step, tr.shard_out(opts.rank))?;
+                last = Reply::Grads;
+            }
+            Ok(Frame::ShardGrads { step, tensors }) => {
+                let Some(ctx) = shard.as_mut() else {
+                    bail!("worker: ShardGrads frame without --shard-state");
+                };
+                ensure!(
+                    step as usize == tr.step,
+                    "worker: ShardGrads for step {step}, current step is {}",
+                    tr.step
+                );
+                ensure!(
+                    tensors.len() == ctx.params.len() + 1,
+                    "worker: got {} shard-grad tensors, expected {}",
+                    tensors.len(),
+                    ctx.params.len() + 1
+                );
+                ensure!(tensors[0].numel() == 1, "worker: lr slot must be a scalar");
+                let lr = tensors[0].f32s()[0];
+                let grads: Vec<&Tensor> = tensors[1..].iter().collect();
+                for (g, p) in grads.iter().zip(&tr.params[ctx.params.clone()]) {
+                    ensure!(
+                        g.shape() == p.shape(),
+                        "worker: shard-grad shape mismatch ({:?} vs {:?})",
+                        g.shape(),
+                        p.shape()
+                    );
+                }
+                // apply this rank's slice of the update in place: the
+                // param slice and the persistently owned state shard
+                let pslice = &mut tr.params[ctx.params.clone()];
+                let sslice = &mut tr.state[ctx.state.clone()];
+                ctx.prog.execute_range(
+                    ctx.params.start,
+                    ctx.params.end,
+                    pslice,
+                    sslice,
+                    &grads,
+                    lr,
+                    step as u32,
+                    &mut ctx.ws,
+                    parallel::shared(),
+                    parallel::tuned_min_ops(),
+                )?;
+                wire::write_shard_params(&mut stream, step, &tr.params[ctx.params.clone()])?;
+                last = Reply::Params;
+            }
+            Ok(Frame::FetchState { .. }) => {
+                let Some(ctx) = shard.as_ref() else {
+                    bail!("worker: FetchState frame without --shard-state");
+                };
+                wire::write_shard_state(&mut stream, tr.step as u64, &tr.state[ctx.state.clone()])?;
+                last = Reply::State;
+            }
+            Ok(Frame::ShardState { step, tensors }) => {
+                // recovery re-seed: install the snapshot's state shard
+                // (and step) over whatever this rank had
+                let Some(ctx) = shard.as_ref() else {
+                    bail!("worker: ShardState frame without --shard-state");
+                };
+                ensure!(
+                    tensors.len() == ctx.state.len(),
+                    "worker: got {} state tensors, expected {}",
+                    tensors.len(),
+                    ctx.state.len()
+                );
+                for (slot, t) in tr.state[ctx.state.clone()].iter_mut().zip(&tensors) {
+                    ensure!(
+                        slot.shape() == t.shape(),
+                        "worker: state shape mismatch ({:?} vs {:?})",
+                        slot.shape(),
+                        t.shape()
+                    );
+                    slot.f32s_mut().copy_from_slice(t.f32s());
+                }
+                tr.step = step as usize;
             }
             Ok(Frame::Resend) => {
                 // the supervisor rejected our last frame (CRC); re-encode
-                // from the intact output buffers
-                wire::write_grads(&mut stream, tr.step as u64, tr.shard_out(opts.rank))?;
+                // it from the intact buffers
+                match (last, shard.as_ref()) {
+                    (Reply::Grads, _) => {
+                        wire::write_grads(&mut stream, tr.step as u64, tr.shard_out(opts.rank))?
+                    }
+                    (Reply::Params, Some(ctx)) => wire::write_shard_params(
+                        &mut stream,
+                        tr.step as u64,
+                        &tr.params[ctx.params.clone()],
+                    )?,
+                    (Reply::State, Some(ctx)) => wire::write_shard_state(
+                        &mut stream,
+                        tr.step as u64,
+                        &tr.state[ctx.state.clone()],
+                    )?,
+                    _ => bail!("worker: Resend for a sharded reply without --shard-state"),
+                }
             }
             Ok(Frame::Ping) => wire::write_pong(&mut stream)?,
             Ok(Frame::Shutdown) => return Ok(()),

@@ -113,12 +113,6 @@ impl Json {
 
     // ---- serialization ---------------------------------------------------
 
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -154,6 +148,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact single-line serialization; `Json::to_string()` (via the
+/// blanket `ToString`) is the usual entry point.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -164,6 +164,61 @@ fn kill_rank_at_step_k_resumes_bit_exact() {
     std::fs::remove_dir_all(&mo.ckpt_dir).ok();
 }
 
+/// Deterministic view of the per-step metrics log: everything except
+/// the wall-clock column, with the floats as raw bits.
+fn metric_bits(tr: &Trainer<'_>) -> Vec<(usize, u64, u64, u64)> {
+    tr.metrics
+        .steps
+        .iter()
+        .map(|s| (s.step, s.loss.to_bits(), s.lr.to_bits(), s.tokens))
+        .collect()
+}
+
+/// Tentpole leg: `--shard-state` moves optimizer-state ownership and
+/// the update itself out to the ranks, yet a 2- and 4-rank sharded
+/// mesh must land on the same bits as the single-process shards loop
+/// — params, optimizer state (gathered at end of run), and final ppl.
+#[test]
+fn sharded_mesh_matches_single_process_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    for ranks in [2usize, 4] {
+        let (want, want_ppl) = reference(&eng, &sz, 6, ranks);
+        let mut mo = mesh_opts(&sz, 6, ranks, &format!("shard{ranks}"));
+        mo.shard_state = true;
+        let (tr, report) = mesh::train(&eng, &mo).unwrap();
+        assert_mesh_matches(&tr, report.ppl, &want, want_ppl, &format!("{ranks} sharded ranks"));
+        assert_eq!(metric_bits(&tr), metric_bits(&want), "{ranks} sharded ranks: metrics");
+        assert_eq!(report.respawns, 0);
+        assert_eq!(report.frame_retries, 0);
+        std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+    }
+}
+
+/// Kill a shard-owning rank mid-run: rank 1 dies on its 5th Step, its
+/// replacement starts with zeroed state, and recovery must re-seed
+/// every rank's shard from the newest complete sharded snapshot
+/// (`step_*.d/`) before replaying. Params, optimizer state, final ppl
+/// AND the per-step metrics log finish bit-identical to a run that
+/// never died — the replayed steps overwrite their truncated records
+/// with the same bits.
+#[test]
+fn sharded_kill_rank_restores_shard_state_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    let (want, want_ppl) = reference(&eng, &sz, 8, 2);
+    let mut mo = mesh_opts(&sz, 8, 2, "shardkill");
+    mo.shard_state = true;
+    mo.checkpoint_every = 2;
+    mo.heartbeat_every = 0;
+    mo.worker_faults = vec![(1, "rank_exit@5".into())];
+    let (tr, report) = mesh::train(&eng, &mo).unwrap();
+    assert_mesh_matches(&tr, report.ppl, &want, want_ppl, "killed sharded rank");
+    assert_eq!(metric_bits(&tr), metric_bits(&want), "killed sharded rank: metrics");
+    assert_eq!(report.respawns, 1, "exactly one respawn");
+    std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+}
+
 /// Rank 0's 3rd wire send (= its step-2 Grads; Hello was send #1) goes
 /// out with a flipped payload byte. The CRC check must reject it, the
 /// supervisor must re-request, and the re-encoded frame must leave
