@@ -17,6 +17,10 @@
 //!   3. Trainer throughput: tokens/sec and step-latency p50/p99 for
 //!      1 vs N shards on the tiny and s60m configs — the measured loops
 //!      must spawn ZERO threads (the persistent-pool contract).
+//!   4. Serve decode (gated): steady-state KV-cache decode rounds
+//!      through `serve::ServeEngine`, single-stream and batched, with
+//!      non-greedy sampling so the sampler scratch is part of the
+//!      audit — the measured rounds must allocate and spawn NOTHING.
 //!
 //! The gates are deterministic and enforced via the exit code (CI runs
 //! this bench); the timing numbers are recorded in
@@ -30,6 +34,7 @@ use scale_llm::exec;
 use scale_llm::mesh;
 use scale_llm::parallel;
 use scale_llm::runtime::{Engine, Tensor};
+use scale_llm::serve::{Request, ServeEngine, ServeModel};
 use scale_llm::util::json::{self, Json};
 
 #[path = "support/alloc_counter.rs"]
@@ -384,6 +389,89 @@ fn train_row(engine: &Engine, size: &str, shards: usize, steps: usize) -> anyhow
     Ok(row)
 }
 
+struct DecodeRow {
+    streams: usize,
+    tokens_per_sec: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    allocs: u64,
+    spawns: usize,
+}
+
+/// Section 4: the serve decode loop. As in section 1, the parallel
+/// threshold is pinned to the sequential path for the audit window —
+/// pool dispatch boxes its task closures by design, so the allocation
+/// gate measures the KV-slab/workspace contract, not dispatch
+/// bookkeeping (spawns are gated separately). Sampling runs non-greedy
+/// (temperature + top-k + top-p) so the sampler's reused scratch is
+/// inside the audit.
+fn decode_row(model: &ServeModel, streams: usize) -> anyhow::Result<DecodeRow> {
+    parallel::set_min_ops_override(Some(usize::MAX));
+    let result = decode_row_pinned(model, streams);
+    parallel::set_min_ops_override(None); // restore even on error
+    result
+}
+
+fn decode_row_pinned(model: &ServeModel, streams: usize) -> anyhow::Result<DecodeRow> {
+    let mut engine = ServeEngine::new(model, streams);
+    // budget sized so no stream retires inside the measured window
+    let budget = model.max_seq() - 3;
+    for i in 0..streams {
+        let req = Request {
+            id: format!("s{i}"),
+            prompt: vec![1, 2, 3],
+            max_new: budget,
+            temperature: 0.7,
+            top_k: 8,
+            top_p: 0.9,
+            seed: i as u64,
+            deadline_ms: 0,
+        };
+        engine.submit(req).map_err(|e| anyhow::anyhow!("bench submit: {e}"))?;
+    }
+    engine.step(); // admission: prefill + first sampled token
+    engine.step(); // one warm decode round
+    let measured = 8usize.min(budget.saturating_sub(3));
+    anyhow::ensure!(measured > 0, "context too short for a measured decode window");
+    let mut samples: Vec<Duration> = Vec::with_capacity(measured);
+    let spawned0 = parallel::threads_spawned();
+    let a0 = allocs();
+    let t0 = Instant::now();
+    for _ in 0..measured {
+        let s0 = Instant::now();
+        let produced = engine.step();
+        anyhow::ensure!(produced == streams, "stream retired mid-measurement");
+        samples.push(s0.elapsed());
+    }
+    let elapsed = t0.elapsed().as_secs_f64().max(1e-9);
+    let decode_allocs = allocs() - a0;
+    let spawns = parallel::threads_spawned() - spawned0;
+    while !engine.idle() {
+        engine.step();
+    }
+    anyhow::ensure!(
+        engine.take_finished().len() == streams,
+        "decode bench streams failed to finish"
+    );
+    samples.sort();
+    let p50 = samples[measured / 2].as_secs_f64() * 1e3;
+    let p99 = samples[(measured * 99 / 100).min(measured - 1)].as_secs_f64() * 1e3;
+    let row = DecodeRow {
+        streams,
+        tokens_per_sec: (measured * streams) as f64 / elapsed,
+        p50_ms: p50,
+        p99_ms: p99,
+        allocs: decode_allocs,
+        spawns,
+    };
+    println!(
+        "decode x{streams}: {:.0} tok/s, token p50 {:.3} ms, p99 {:.3} ms, \
+         {} allocs, {} spawns",
+        row.tokens_per_sec, row.p50_ms, row.p99_ms, row.allocs, row.spawns
+    );
+    Ok(row)
+}
+
 fn unix_time() -> f64 {
     std::time::SystemTime::now()
         .duration_since(std::time::UNIX_EPOCH)
@@ -434,6 +522,24 @@ fn main() -> anyhow::Result<()> {
     ];
     let total_spawns: usize = rows.iter().map(|r| r.spawns).sum();
 
+    println!("\n== serve decode (zero-alloc + zero-spawn gate) ==");
+    let smodel = ServeModel::init("tiny", 0)?;
+    let decode_rows = vec![decode_row(&smodel, 1)?, decode_row(&smodel, 4)?];
+    let decode_violations: u64 = decode_rows.iter().map(|r| r.allocs + r.spawns as u64).sum();
+    let decode_json: Vec<Json> = decode_rows
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("streams", Json::num(r.streams as f64)),
+                ("tokens_per_sec", Json::num(r.tokens_per_sec)),
+                ("token_p50_ms", Json::num(r.p50_ms)),
+                ("token_p99_ms", Json::num(r.p99_ms)),
+                ("allocs", Json::num(r.allocs as f64)),
+                ("spawns", Json::num(r.spawns as f64)),
+            ])
+        })
+        .collect();
+
     let row_json: Vec<Json> = rows
         .iter()
         .map(|r| {
@@ -460,6 +566,7 @@ fn main() -> anyhow::Result<()> {
         ("train_spawns", Json::num(total_spawns as f64)),
         ("attention_ab", Json::Arr(attn_rows)),
         ("mesh_reduce", Json::Arr(mesh_rows.clone())),
+        ("serve_decode", Json::Arr(decode_json.clone())),
         ("rows", Json::Arr(row_json)),
     ]);
     std::fs::write("BENCH_throughput.json", doc.to_string())?;
@@ -471,6 +578,7 @@ fn main() -> anyhow::Result<()> {
         ("exec_fwd_ms", Json::num(fwd_ms)),
         ("exec_update_ms", Json::num(upd_ms)),
         ("mesh_reduce", Json::Arr(mesh_rows)),
+        ("serve_decode", Json::Arr(decode_json)),
         ("sharded_state_bytes", Json::Arr(sharded_state_rows(&engine))),
     ]))?;
 
@@ -487,6 +595,10 @@ fn main() -> anyhow::Result<()> {
         "  disarmed failpoints allocation- and spawn-free: {} ({fp_violations})",
         if fp_violations == 0 { "PASS" } else { "FAIL" }
     );
+    println!(
+        "  serve decode loop allocation- and spawn-free: {} ({decode_violations})",
+        if decode_violations == 0 { "PASS" } else { "FAIL" }
+    );
     anyhow::ensure!(
         exec_allocs == 0,
         "steady-state executor performed {exec_allocs} heap allocations (expected 0)"
@@ -498,6 +610,10 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         fp_violations == 0,
         "disarmed failpoint checks performed {fp_violations} allocations/spawns (expected 0)"
+    );
+    anyhow::ensure!(
+        decode_violations == 0,
+        "serve decode rounds performed {decode_violations} allocations/spawns (expected 0)"
     );
     Ok(())
 }

@@ -47,14 +47,17 @@
 //! zero times when the caller reuses its output tensors
 //! (`Engine::run_exe_refs_into`) — the gate asserted by
 //! `benches/bench_throughput.rs`, extending the `bench_hot_path`
-//! discipline from the optimizer kernels to the whole step.
+//! discipline from the optimizer kernels to the whole step. The serve
+//! layer (`crate::serve`) reuses the same free-list type
+//! (`program::WsPool`) for its per-request KV-cache + decode slabs, and
+//! the same bench file gates the decode loop.
 
 pub mod gemm;
 pub mod kernels;
 pub mod manifest;
 pub(crate) mod model;
 pub(crate) mod ns;
-mod program;
+pub(crate) mod program;
 pub(crate) mod update;
 
 pub use manifest::native_manifest;

@@ -34,6 +34,7 @@ use crate::optim::colnorm::tile_width;
 use crate::parallel::WorkerPool;
 use crate::runtime::artifact::SizeInfo;
 use crate::runtime::Tensor;
+use crate::util::rng::Pcg;
 
 const NORM_EPS: f32 = 1e-6;
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
@@ -240,17 +241,7 @@ impl ModelWs {
         let bsd = max_b * s * d;
         let bsf = max_b * s * f;
         let bhss = max_b * spec.n_heads * s * s;
-        let half = spec.head_dim / 2;
-        let mut rope_cos = vec![0.0f32; s * half];
-        let mut rope_sin = vec![0.0f32; s * half];
-        for t in 0..s {
-            for i in 0..half {
-                let freq = 10000f32.powf(-(i as f32) / half as f32);
-                let ang = t as f32 * freq;
-                rope_cos[t * half + i] = ang.cos();
-                rope_sin[t * half + i] = ang.sin();
-            }
-        }
+        let (rope_cos, rope_sin) = rope_tables(s, spec.head_dim / 2);
         ModelWs {
             hs: (0..spec.n_layers + 1).map(|_| vec![0.0; bsd]).collect(),
             layers: (0..spec.n_layers).map(|_| LayerWs::new(bsd, bhss, bsf)).collect(),
@@ -352,19 +343,43 @@ fn merge_heads(src: &[f32], dst: &mut [f32], b: usize, s: usize, nh: usize, dh: 
     }
 }
 
+/// RoPE cos/sin tables for positions `0..s` (the `model.py` frequency
+/// schedule). Shared by the training arena and the decode workspace so
+/// both rotate with exactly the same table bits.
+fn rope_tables(s: usize, half: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    for t in 0..s {
+        for i in 0..half {
+            let freq = 10000f32.powf(-(i as f32) / half as f32);
+            let ang = t as f32 * freq;
+            cos[t * half + i] = ang.cos();
+            sin[t * half + i] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate one head row in place by RoPE table row `t` (its absolute
+/// position). The per-row body of [`rope_fwd`], shared with the decode
+/// path, which rotates rows at positions the training loop never
+/// enumerates (`pos0 + i` for a mid-sequence append).
+fn rope_row(row: &mut [f32], cos: &[f32], sin: &[f32], t: usize, half: usize) {
+    for i in 0..half {
+        let (c, sn) = (cos[t * half + i], sin[t * half + i]);
+        let (x1, x2) = (row[i], row[i + half]);
+        row[i] = x1 * c - x2 * sn;
+        row[i + half] = x1 * sn + x2 * c;
+    }
+}
+
 /// Rotate `x` (head layout, `groups = b*nh`) by the RoPE tables.
 fn rope_fwd(x: &mut [f32], cos: &[f32], sin: &[f32], groups: usize, s: usize, dh: usize) {
     let half = dh / 2;
     for g in 0..groups {
         for t in 0..s {
             let off = (g * s + t) * dh;
-            let row = &mut x[off..off + dh];
-            for i in 0..half {
-                let (c, sn) = (cos[t * half + i], sin[t * half + i]);
-                let (x1, x2) = (row[i], row[i + half]);
-                row[i] = x1 * c - x2 * sn;
-                row[i + half] = x1 * sn + x2 * c;
-            }
+            rope_row(&mut x[off..off + dh], cos, sin, t, half);
         }
     }
 }
@@ -395,9 +410,68 @@ fn rope_bwd(x: &mut [f32], cos: &[f32], sin: &[f32], groups: usize, s: usize, dh
 // sequence is the sequential code verbatim — the parallel and inline
 // paths are bit-identical for every pool size (property-tested below).
 
+/// Generalized attention forward for one (batch, head) pair over an
+/// `s_q × s_kv` shape: query row `i` sits at absolute position
+/// `pos0 + i` and attends keys `0..=pos0 + i` of the `s_kv`-row K/V
+/// block; `p_bh` is `[s_q, s_kv]` with the invisible tail zeroed. The
+/// training shape is the special case `s_q == s_kv, pos0 == 0`
+/// ([`attn_pair_fwd`]). Each query row's float sequence is a function
+/// of its absolute position and the K/V prefix alone — never of `s_q`
+/// — which is what makes incremental decode bit-identical to the full
+/// forward (see [`extend`]).
+#[allow(clippy::too_many_arguments)]
+fn attn_pair_fwd_ext(
+    q_bh: &[f32],
+    k_bh: &[f32],
+    v_bh: &[f32],
+    p_bh: &mut [f32],
+    a_bh: &mut [f32],
+    s_q: usize,
+    s_kv: usize,
+    pos0: usize,
+    dh: usize,
+    inv: f32,
+) {
+    for i in 0..s_q {
+        let lim = pos0 + i; // last visible key index for this query row
+        let qi = &q_bh[i * dh..(i + 1) * dh];
+        let row = &mut p_bh[i * s_kv..(i + 1) * s_kv];
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=lim {
+            let sc = dot(qi, &k_bh[j * dh..(j + 1) * dh]) * inv;
+            row[j] = sc;
+            if sc > mx {
+                mx = sc;
+            }
+        }
+        let mut sum = 0.0f32;
+        for rj in row.iter_mut().take(lim + 1) {
+            let e = (*rj - mx).exp();
+            *rj = e;
+            sum += e;
+        }
+        let isum = 1.0 / sum;
+        for rj in row.iter_mut().take(lim + 1) {
+            *rj *= isum;
+        }
+        for rj in row.iter_mut().take(s_kv).skip(lim + 1) {
+            *rj = 0.0;
+        }
+    }
+    for i in 0..s_q {
+        let lim = pos0 + i;
+        let orow = &mut a_bh[i * dh..(i + 1) * dh];
+        orow.fill(0.0);
+        for j in 0..=lim {
+            axpy(orow, p_bh[i * s_kv + j], &v_bh[j * dh..(j + 1) * dh]);
+        }
+    }
+}
+
 /// Forward for one (batch, head) pair: causal `softmax(q·kᵀ/√dh)` into
 /// `p_bh` (`[s, s]`, upper triangle zeroed) and the context `probs · v`
-/// into `a_bh` (`[s, dh]`, head layout).
+/// into `a_bh` (`[s, dh]`, head layout). The training-shape instance of
+/// [`attn_pair_fwd_ext`] — same loops, same bits.
 fn attn_pair_fwd(
     q_bh: &[f32],
     k_bh: &[f32],
@@ -408,38 +482,7 @@ fn attn_pair_fwd(
     dh: usize,
     inv: f32,
 ) {
-    for i in 0..s {
-        let qi = &q_bh[i * dh..(i + 1) * dh];
-        let row = &mut p_bh[i * s..(i + 1) * s];
-        let mut mx = f32::NEG_INFINITY;
-        for j in 0..=i {
-            let sc = dot(qi, &k_bh[j * dh..(j + 1) * dh]) * inv;
-            row[j] = sc;
-            if sc > mx {
-                mx = sc;
-            }
-        }
-        let mut sum = 0.0f32;
-        for rj in row.iter_mut().take(i + 1) {
-            let e = (*rj - mx).exp();
-            *rj = e;
-            sum += e;
-        }
-        let isum = 1.0 / sum;
-        for rj in row.iter_mut().take(i + 1) {
-            *rj *= isum;
-        }
-        for rj in row.iter_mut().take(s).skip(i + 1) {
-            *rj = 0.0;
-        }
-    }
-    for i in 0..s {
-        let orow = &mut a_bh[i * dh..(i + 1) * dh];
-        orow.fill(0.0);
-        for j in 0..=i {
-            axpy(orow, p_bh[i * s + j], &v_bh[j * dh..(j + 1) * dh]);
-        }
-    }
+    attn_pair_fwd_ext(q_bh, k_bh, v_bh, p_bh, a_bh, s, s, 0, dh, inv);
 }
 
 /// Backward for one (batch, head) pair: rewrites `dp` from d(probs) to
@@ -806,6 +849,377 @@ fn layer_forward(
     }
 }
 
+// ---- incremental decode ----------------------------------------------------
+//
+// Serving reuses the training kernels unchanged. The gemm module's
+// per-element reduction rule (each output element's dot over k is a
+// fixed 8-lane sequence, independent of m, tiling, or pool size) means
+// an m=1 decode GEMM row is bit-identical to the same row of a full
+// `[s, d]` forward; rmsnorm/silu/gelu/rope are per-row; and
+// `attn_pair_fwd_ext` makes each query row's float sequence a function
+// of its absolute position and the K/V prefix alone. Stacking those
+// invariants layer by layer gives the decode contract
+// `rust/tests/serve_differential.rs` enforces: logits at position t
+// computed from the KV cache == logits row t of the training forward
+// over the full prefix, bit for bit, for every pool size and
+// threshold.
+
+/// Per-sequence KV cache: one pool-owned slab holding every layer's
+/// keys and values in head-major rows, `offset(l, h, t) =
+/// ((l*nh + h)*max_seq + t)*dh`, so the visible prefix for one
+/// (layer, head) is a single contiguous slice. Sized once for the
+/// model's context length and reused across requests via
+/// [`KvCache::reset`].
+pub(crate) struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    max_seq: usize,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(spec: &ModelSpec) -> KvCache {
+        let n = spec.n_layers * spec.n_heads * spec.seq * spec.head_dim;
+        KvCache { k: vec![0.0; n], v: vec![0.0; n], max_seq: spec.seq, len: 0 }
+    }
+
+    /// Tokens currently cached (== the next token's absolute position).
+    pub fn pos(&self) -> usize {
+        self.len
+    }
+
+    /// Forget the cached sequence; the slab is reused as-is (stale rows
+    /// past `len` are never read).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Scatter `[n, d]` projection rows into per-(layer, head) cache
+    /// rows `pos0..pos0+n` (keys when `dst_k`, else values).
+    fn store(&mut self, dst_k: bool, l: usize, pos0: usize, rows: &[f32], nh: usize, dh: usize) {
+        let d = nh * dh;
+        let n = rows.len() / d;
+        let dst = if dst_k { &mut self.k } else { &mut self.v };
+        for h in 0..nh {
+            for i in 0..n {
+                let o = ((l * nh + h) * self.max_seq + pos0 + i) * dh;
+                dst[o..o + dh].copy_from_slice(&rows[i * d + h * dh..][..dh]);
+            }
+        }
+    }
+
+    /// Rotate the newly stored key rows at their absolute positions.
+    fn rope_keys(
+        &mut self,
+        l: usize,
+        pos0: usize,
+        n: usize,
+        cos: &[f32],
+        sin: &[f32],
+        nh: usize,
+        dh: usize,
+    ) {
+        let half = dh / 2;
+        for h in 0..nh {
+            for i in 0..n {
+                let o = ((l * nh + h) * self.max_seq + pos0 + i) * dh;
+                rope_row(&mut self.k[o..o + dh], cos, sin, pos0 + i, half);
+            }
+        }
+    }
+
+    /// The visible `[s_kv, dh]` prefix for one (layer, head).
+    fn head(&self, of_k: bool, l: usize, h: usize, nh: usize, s_kv: usize, dh: usize) -> &[f32] {
+        let o = (l * nh + h) * self.max_seq * dh;
+        let src = if of_k { &self.k } else { &self.v };
+        &src[o..o + s_kv * dh]
+    }
+}
+
+/// Decode workspace: every intermediate for one [`extend`] call, sized
+/// once for the model's full context (so a whole-prompt prefill fits)
+/// and reused for the slab's life — steady-state decode performs zero
+/// heap allocations (gated in `benches/bench_throughput.rs`).
+pub(crate) struct DecodeWs {
+    h: Vec<f32>,          // residual stream                  [s*d]
+    xn: Vec<f32>,         // rmsnorm scratch                  [s*d]
+    tmp: Vec<f32>,        // flat GEMM scratch                [s*d]
+    qh: Vec<f32>,         // queries, head layout             [nh*s*dh]
+    att: Vec<f32>,        // attention context, head layout   [nh*s*dh]
+    probs: Vec<f32>,      // attention probabilities          [nh*s*s]
+    merged: Vec<f32>,     // merged context, pre-Wo           [s*d]
+    h_mid: Vec<f32>,      // post-attention residual          [s*d]
+    xn2: Vec<f32>,        // MLP rmsnorm scratch              [s*d]
+    gate: Vec<f32>,       // gate pre-activation (gpt2: up)   [s*f]
+    up: Vec<f32>,         // up projection (llama only)       [s*f]
+    act: Vec<f32>,        // MLP activation                   [s*f]
+    hf: Vec<f32>,         // final rmsnorm of the last row    [d]
+    pub logits: Vec<f32>, // last-position logits             [v]
+    rope_cos: Vec<f32>,   // [s * dh/2]
+    rope_sin: Vec<f32>,
+    pack: Vec<f32>,       // GEMM panel buffer
+    pub order: Vec<u32>,  // sampler scratch: sorted vocab ids
+    pub cdf: Vec<f64>,    // sampler scratch: cumulative weights
+}
+
+impl DecodeWs {
+    pub fn new(spec: &ModelSpec) -> DecodeWs {
+        let (s, d, f, v) = (spec.seq, spec.d, spec.d_ff, spec.vocab);
+        let (sd, sf) = (s * d, s * f);
+        let (rope_cos, rope_sin) = rope_tables(s, spec.head_dim / 2);
+        DecodeWs {
+            h: vec![0.0; sd],
+            xn: vec![0.0; sd],
+            tmp: vec![0.0; sd],
+            qh: vec![0.0; sd],
+            att: vec![0.0; sd],
+            probs: vec![0.0; spec.n_heads * s * s],
+            merged: vec![0.0; sd],
+            h_mid: vec![0.0; sd],
+            xn2: vec![0.0; sd],
+            gate: vec![0.0; sf],
+            up: vec![0.0; sf],
+            act: vec![0.0; sf],
+            hf: vec![0.0; d],
+            logits: vec![0.0; v],
+            rope_cos,
+            rope_sin,
+            pack: Vec::with_capacity(d * v.max(f).max(d)),
+            order: Vec::with_capacity(v),
+            cdf: Vec::with_capacity(v),
+        }
+    }
+}
+
+/// Append `toks` to the cached sequence and leave the logits for the
+/// last appended position in `ws.logits`. Prefill is `extend` over the
+/// whole prompt; decode is `extend` over one token — both produce, at
+/// every position, the exact logits bits of the training forward over
+/// the same prefix (see the section comment above).
+pub(crate) fn extend(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    toks: &[i32],
+    cache: &mut KvCache,
+    ws: &mut DecodeWs,
+    pool: &WorkerPool,
+    min_ops: usize,
+) {
+    let n = toks.len();
+    let pos0 = cache.len;
+    assert!(n >= 1, "extend needs at least one token");
+    assert!(pos0 + n <= cache.max_seq, "kv cache overflow: {pos0}+{n} > {}", cache.max_seq);
+    let (d, f, v) = (spec.d, spec.d_ff, spec.vocab);
+    let (nh, dh) = (spec.n_heads, spec.head_dim);
+    let s_kv = pos0 + n;
+    let nd = n * d;
+    let nf = n * f;
+
+    let DecodeWs {
+        h,
+        xn,
+        tmp,
+        qh,
+        att,
+        probs,
+        merged,
+        h_mid,
+        xn2,
+        gate,
+        up,
+        act,
+        hf,
+        logits,
+        rope_cos,
+        rope_sin,
+        pack,
+        ..
+    } = ws;
+
+    // token embedding (+ learned positions for gpt2) at absolute positions
+    {
+        let embed = params[0].f32s();
+        for (i, &tk) in toks.iter().enumerate() {
+            let id = tk as usize;
+            h[i * d..(i + 1) * d].copy_from_slice(&embed[id * d..(id + 1) * d]);
+        }
+        if spec.gpt2 {
+            let pos = params[1].f32s();
+            for i in 0..n {
+                let row = &mut h[i * d..(i + 1) * d];
+                let pr = &pos[(pos0 + i) * d..(pos0 + i + 1) * d];
+                for (hv, pv) in row.iter_mut().zip(pr) {
+                    *hv += pv;
+                }
+            }
+        }
+    }
+
+    let inv = 1.0 / (dh as f32).sqrt();
+    let half = dh / 2;
+    for l in 0..spec.n_layers {
+        // attention branch: queries stay local, keys/values land in the cache
+        rmsnorm_fwd(&h[..nd], params[spec.p_attn_norm(l)].f32s(), &mut xn[..nd], d);
+        let wq = params[spec.p_wq(l)].f32s();
+        matmul_nn(pool, min_ops, &xn[..nd], wq, &mut tmp[..nd], n, d, d, pack);
+        split_heads(&tmp[..nd], &mut qh[..nd], 1, n, nh, dh);
+        let wk = params[spec.p_wk(l)].f32s();
+        matmul_nn(pool, min_ops, &xn[..nd], wk, &mut tmp[..nd], n, d, d, pack);
+        cache.store(true, l, pos0, &tmp[..nd], nh, dh);
+        let wv = params[spec.p_wv(l)].f32s();
+        matmul_nn(pool, min_ops, &xn[..nd], wv, &mut tmp[..nd], n, d, d, pack);
+        cache.store(false, l, pos0, &tmp[..nd], nh, dh);
+        if !spec.gpt2 {
+            for g in 0..nh {
+                for i in 0..n {
+                    let off = (g * n + i) * dh;
+                    rope_row(&mut qh[off..off + dh], rope_cos, rope_sin, pos0 + i, half);
+                }
+            }
+            cache.rope_keys(l, pos0, n, rope_cos, rope_sin, nh, dh);
+        }
+        for hd in 0..nh {
+            let k_bh = cache.head(true, l, hd, nh, s_kv, dh);
+            let v_bh = cache.head(false, l, hd, nh, s_kv, dh);
+            let q_bh = &qh[hd * n * dh..(hd + 1) * n * dh];
+            let p_bh = &mut probs[hd * n * s_kv..(hd + 1) * n * s_kv];
+            let a_bh = &mut att[hd * n * dh..(hd + 1) * n * dh];
+            attn_pair_fwd_ext(q_bh, k_bh, v_bh, p_bh, a_bh, n, s_kv, pos0, dh, inv);
+        }
+        merge_heads(&att[..nd], &mut merged[..nd], 1, n, nh, dh);
+        let wo = params[spec.p_wo(l)].f32s();
+        matmul_nn(pool, min_ops, &merged[..nd], wo, &mut tmp[..nd], n, d, d, pack);
+        for i in 0..nd {
+            h_mid[i] = h[i] + tmp[i];
+        }
+
+        // MLP branch
+        rmsnorm_fwd(&h_mid[..nd], params[spec.p_mlp_norm(l)].f32s(), &mut xn2[..nd], d);
+        if spec.gpt2 {
+            let wu = params[spec.p_wup(l)].f32s();
+            matmul_nn(pool, min_ops, &xn2[..nd], wu, &mut gate[..nf], n, d, f, pack);
+            for i in 0..nf {
+                act[i] = gelu(gate[i]);
+            }
+        } else {
+            let wg = params[spec.p_wgate(l)].f32s();
+            let wu = params[spec.p_wup(l)].f32s();
+            matmul_nn(pool, min_ops, &xn2[..nd], wg, &mut gate[..nf], n, d, f, pack);
+            matmul_nn(pool, min_ops, &xn2[..nd], wu, &mut up[..nf], n, d, f, pack);
+            for i in 0..nf {
+                let a = gate[i];
+                let sg = a / (1.0 + (-a).exp()); // silu
+                act[i] = sg * up[i];
+            }
+        }
+        let wd = params[spec.p_wdown(l)].f32s();
+        matmul_nn(pool, min_ops, &act[..nf], wd, &mut tmp[..nd], n, f, d, pack);
+        for i in 0..nd {
+            h[i] = h_mid[i] + tmp[i];
+        }
+    }
+
+    // final norm + LM head over the last appended row only
+    rmsnorm_fwd(&h[(n - 1) * d..nd], params[spec.idx_final_norm()].f32s(), &mut hf[..d], d);
+    let w_head = params[spec.idx_head()].f32s();
+    matmul_nn(pool, min_ops, &hf[..d], w_head, &mut logits[..v], 1, d, v, pack);
+    cache.len = s_kv;
+}
+
+/// Full-forward logits oracle: run the *training* forward over one
+/// `[1, len]` prefix and return all `len * vocab` logits rows. The
+/// reference side of the decode differential; it allocates its own
+/// arena, so it is never a steady-state path.
+pub(crate) fn forward_logits(
+    spec: &ModelSpec,
+    params: &[Tensor],
+    prefix: &[i32],
+    pool: &WorkerPool,
+    min_ops: usize,
+) -> Vec<f32> {
+    assert!(!prefix.is_empty() && prefix.len() <= spec.seq, "oracle prefix out of range");
+    let mut sp = spec.clone();
+    sp.seq = prefix.len();
+    let mut toks = prefix.to_vec();
+    toks.push(0); // target slot: forward embeds rows 0..len only
+    let refs: Vec<&Tensor> = params.iter().collect();
+    let mut ws = ModelWs::new(&sp, 1);
+    forward(&sp, &refs, &toks, 1, &mut ws, pool, min_ops);
+    ws.logits[..prefix.len() * spec.vocab].to_vec()
+}
+
+/// Sampling controls for one sequence: `temperature == 0` selects
+/// greedy (exact argmax, lowest index on ties); `top_k == 0` and
+/// `top_p >= 1` disable those filters.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct SampleCfg {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f64,
+}
+
+/// Draw one token from a logits row. All arithmetic is sequential f64
+/// over an index-tie-broken descending sort, so the result is a pure
+/// function of (logits bits, cfg, rng state): pool sizes and batch-slot
+/// position cannot perturb it. `order`/`cdf` are caller-owned scratch
+/// (capacity `vocab`, cleared and refilled, never regrown) so
+/// steady-state decode stays allocation-free — `sort_unstable_by`
+/// sorts in place without a heap buffer.
+pub(crate) fn sample_logits(
+    logits: &[f32],
+    cfg: &SampleCfg,
+    rng: &mut Pcg,
+    order: &mut Vec<u32>,
+    cdf: &mut Vec<f64>,
+) -> usize {
+    if cfg.temperature == 0.0 {
+        let mut best = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    order.clear();
+    order.extend(0..logits.len() as u32);
+    order.sort_unstable_by(|&a, &b| {
+        let (la, lb) = (logits[a as usize], logits[b as usize]);
+        lb.partial_cmp(&la).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+    });
+    let mut keep = order.len();
+    if cfg.top_k > 0 {
+        keep = keep.min(cfg.top_k);
+    }
+    let t = cfg.temperature as f64;
+    let mx = logits[order[0] as usize] as f64;
+    cdf.clear();
+    let mut total = 0.0f64;
+    for &id in order[..keep].iter() {
+        total += ((logits[id as usize] as f64 - mx) / t).exp();
+        cdf.push(total);
+    }
+    if cfg.top_p < 1.0 {
+        // nucleus: smallest sorted prefix with mass >= top_p (always >= 1 token)
+        let cut = total * cfg.top_p;
+        let mut kp = 1;
+        while kp < keep && cdf[kp - 1] < cut {
+            kp += 1;
+        }
+        keep = kp;
+        total = cdf[keep - 1];
+    }
+    let u = rng.next_f64() * total;
+    let mut pick = keep - 1;
+    for (j, &c) in cdf[..keep].iter().enumerate() {
+        if c > u {
+            pick = j;
+            break;
+        }
+    }
+    order[pick] as usize
+}
+
 // ---- entry points ----------------------------------------------------------
 
 /// Forward-only loss (the `eval_<size>` artifact semantics).
@@ -1055,7 +1469,6 @@ fn layer_backward(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Pcg;
 
     fn tiny_spec(gpt2: bool) -> ModelSpec {
         ModelSpec {
@@ -1413,5 +1826,64 @@ mod tests {
         let lhs = ip(&rx, &y);
         let rhs = ip(&x, &ry);
         assert!((lhs - rhs).abs() < 1e-3, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn decode_matches_full_forward_bitwise() {
+        // the unit-level decode differential (the integration suite in
+        // rust/tests/serve_differential.rs sweeps pools and batches):
+        // token-by-token KV-cache decode and a one-shot prefill must
+        // both reproduce the training forward's logits exactly
+        for gpt2 in [false, true] {
+            let spec = tiny_spec(gpt2);
+            let v = spec.vocab;
+            let params = random_params(&spec, 51);
+            let prefix: Vec<i32> = random_toks(&spec, 1, 52)[..spec.seq].to_vec();
+            let pool = WorkerPool::new(2);
+            let oracle = forward_logits(&spec, &params, &prefix, &pool, 0);
+            let mut cache = KvCache::new(&spec);
+            let mut ws = DecodeWs::new(&spec);
+            for t in 0..prefix.len() {
+                extend(&spec, &params, &prefix[t..t + 1], &mut cache, &mut ws, &pool, 0);
+                assert_eq!(
+                    &ws.logits[..v],
+                    &oracle[t * v..(t + 1) * v],
+                    "gpt2={gpt2} position {t}"
+                );
+            }
+            cache.reset();
+            extend(&spec, &params, &prefix, &mut cache, &mut ws, &pool, 0);
+            assert_eq!(&ws.logits[..v], &oracle[(prefix.len() - 1) * v..], "gpt2={gpt2} prefill");
+        }
+    }
+
+    #[test]
+    fn sampler_greedy_is_argmax_and_seeded_draws_reproduce() {
+        let logits: Vec<f32> = (0..16).map(|i| ((i * 7919) % 23) as f32 * 0.13 - 1.0).collect();
+        let mut order = Vec::new();
+        let mut cdf = Vec::new();
+        let greedy = SampleCfg { temperature: 0.0, top_k: 0, top_p: 1.0 };
+        let mut want = 0usize;
+        for (i, &x) in logits.iter().enumerate() {
+            if x > logits[want] {
+                want = i;
+            }
+        }
+        let mut rng = Pcg::new(1);
+        assert_eq!(sample_logits(&logits, &greedy, &mut rng, &mut order, &mut cdf), want);
+        // top_k = 1 collapses any temperature to the argmax
+        let k1 = SampleCfg { temperature: 0.7, top_k: 1, top_p: 1.0 };
+        assert_eq!(sample_logits(&logits, &k1, &mut rng, &mut order, &mut cdf), want);
+        // a seeded stream of draws reproduces exactly and stays in-filter
+        let cfg = SampleCfg { temperature: 0.8, top_k: 5, top_p: 0.9 };
+        let draws = |seed: u64| -> Vec<usize> {
+            let mut rng = Pcg::new(seed);
+            let mut order = Vec::new();
+            let mut cdf = Vec::new();
+            (0..32).map(|_| sample_logits(&logits, &cfg, &mut rng, &mut order, &mut cdf)).collect()
+        };
+        let a = draws(9);
+        assert_eq!(a, draws(9));
+        assert_ne!(a, draws(10), "different seeds should diverge somewhere in 32 draws");
     }
 }

@@ -21,6 +21,43 @@ use crate::runtime::artifact::{ArtifactSpec, DType, Manifest, SizeInfo};
 use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
+/// A mutexed free-list of boxed workspaces: popped per call (so
+/// concurrent executors each get their own scratch), pushed back after
+/// use, and created lazily on first take — steady-state calls allocate
+/// nothing. Shared by the model/update programs here and by the serve
+/// engine, whose per-request KV/decode slabs (`crate::serve`) are a
+/// *bounded* instance: preloaded at construction and drawn with
+/// [`WsPool::try_take`], so "no free slab" is an admission decision
+/// rather than an allocation.
+pub(crate) struct WsPool<T>(Mutex<Vec<Box<T>>>);
+
+impl<T> WsPool<T> {
+    pub fn new() -> WsPool<T> {
+        WsPool(Mutex::new(Vec::new()))
+    }
+
+    /// Pop a cached workspace, or build one with `init`.
+    pub fn take(&self, init: impl FnOnce() -> T) -> Box<T> {
+        let cached = self.0.lock().unwrap().pop();
+        cached.unwrap_or_else(|| Box::new(init()))
+    }
+
+    /// Pop a cached workspace only, never allocating one.
+    pub fn try_take(&self) -> Option<Box<T>> {
+        self.0.lock().unwrap().pop()
+    }
+
+    pub fn put(&self, ws: Box<T>) {
+        self.0.lock().unwrap().push(ws);
+    }
+}
+
+impl<T> Default for WsPool<T> {
+    fn default() -> WsPool<T> {
+        WsPool::new()
+    }
+}
+
 pub struct NativeProgram(Kind);
 
 enum Kind {
@@ -43,7 +80,7 @@ struct ModelProg {
     max_b: usize,
     /// Arena pool: one [`ModelWs`] per concurrent executor, created on
     /// first use and recycled forever after (no steady-state allocs).
-    ws: Mutex<Vec<Box<ModelWs>>>,
+    ws: WsPool<ModelWs>,
 }
 
 impl ModelProg {
@@ -53,17 +90,16 @@ impl ModelProg {
             n_params: info.params.len(),
             mb,
             max_b,
-            ws: Mutex::new(Vec::new()),
+            ws: WsPool::new(),
         }
     }
 
     fn take_ws(&self) -> Box<ModelWs> {
-        let cached = self.ws.lock().unwrap().pop();
-        cached.unwrap_or_else(|| Box::new(ModelWs::new(&self.mspec, self.max_b)))
+        self.ws.take(|| ModelWs::new(&self.mspec, self.max_b))
     }
 
     fn put_ws(&self, ws: Box<ModelWs>) {
-        self.ws.lock().unwrap().push(ws);
+        self.ws.put(ws);
     }
 }
 
@@ -74,7 +110,7 @@ struct UpdateProg {
     /// program, and holding a single workspace mutex across the whole
     /// update would serialize them (blocking a pool worker, which
     /// cannot drain queued jobs while parked on a lock).
-    ws: Mutex<Vec<Box<UpdateWs>>>,
+    ws: WsPool<UpdateWs>,
 }
 
 #[derive(Clone, Copy)]
@@ -131,7 +167,7 @@ impl NativeProgram {
                 );
                 Kind::Update(UpdateProg {
                     prog,
-                    ws: Mutex::new(Vec::new()),
+                    ws: WsPool::new(),
                 })
             }
             "init" => Kind::Init(size_of(manifest, spec)?.clone()),
@@ -220,10 +256,9 @@ impl NativeProgram {
                 }
             }
             Kind::Update(up) => {
-                let cached = up.ws.lock().unwrap().pop();
-                let mut ws = cached.unwrap_or_else(|| Box::new(UpdateWs::new()));
+                let mut ws = up.ws.take(UpdateWs::new);
                 let result = up.prog.execute(inputs, out, &mut ws, pool, min_ops);
-                up.ws.lock().unwrap().push(ws);
+                up.ws.put(ws);
                 result?;
             }
             Kind::Init(info) => {

@@ -51,6 +51,11 @@
 //! | `frame_corrupt`| `mesh::wire` send path    | payload byte flipped (CRC)   |
 //! | `frame_delay`  | `mesh::wire` send path    | sleep past the read timeout  |
 //! | `rank_exit`    | `mesh::worker` step loop  | worker process exits         |
+//! | `req_malformed`| `serve::parse_request`    | request line rejected typed  |
+//! | `client_drop`  | `ServeEngine::step` sweep | active slot evicted, slab    |
+//! |                |                           | reclaimed (client vanished)  |
+//! | `deadline`     | `ServeEngine::step` sweep | slot evicted as expired with |
+//! |                |                           | its partial tokens           |
 //!
 //! Specs naming a site outside this table are rejected by [`configure`]
 //! — a typo'd site fails loudly instead of silently never firing.
@@ -80,6 +85,9 @@ pub const KNOWN_SITES: &[&str] = &[
     "frame_corrupt",
     "frame_delay",
     "rank_exit",
+    "req_malformed",
+    "client_drop",
+    "deadline",
 ];
 
 #[derive(Debug, Clone)]

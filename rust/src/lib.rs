@@ -35,4 +35,5 @@ pub mod mesh;
 pub mod optim;
 pub mod parallel;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train            train one configuration (preset file + overrides)
 //!   eval             evaluate a checkpoint's perplexity
+//!   serve            KV-cache inference server (newline-JSON, stdio/TCP)
 //!   table `<n>`      regenerate paper table n (1-13)
 //!   figure `<n>`     regenerate paper figure n (1-10)
 //!   memory-report    Appendix-B memory accounting (exact)
@@ -48,6 +49,7 @@ fn run() -> anyhow::Result<()> {
     match sub.as_str() {
         "train" => cmd_train(&mut args),
         "eval" => cmd_eval(&mut args),
+        "serve" => cmd_serve(&mut args),
         "table" => cmd_table(&mut args),
         "figure" => cmd_figure(&mut args),
         "memory-report" => cmd_memory(&mut args),
@@ -78,6 +80,12 @@ usage: scale <subcommand> [options]
                   --lr-backoff (0.5) up to --retries (3) times, keep the
                   newest --keep-last (3) snapshots
   eval            --load ckpt.bin [--eval-batches 16]
+  serve           [--load ckpt.bin | --size tiny --seed 0] [--max-batch 4]
+                  [--tcp 127.0.0.1:7878] [--quiet]   continuous-batching
+                  KV-cache decode server; newline-JSON requests like
+                  {\"id\":\"r1\",\"prompt\":[1,2,3],\"max_new\":8,\"seed\":7}
+                  on stdin (or per TCP connection), one completion /
+                  error line back per request; banner on stderr
   table <1..13>   regenerate a paper table  [--steps N] [--sizes s60m,s130m]
   figure <1..10>  regenerate a paper figure [--steps N] [--size s130m]
   memory-report   Appendix-B accounting (exact paper numbers)
@@ -208,6 +216,30 @@ fn cmd_eval(args: &mut Args) -> anyhow::Result<()> {
         loss.exp()
     );
     Ok(())
+}
+
+/// `scale serve`: KV-cache incremental decode behind the
+/// continuous-batching scheduler, speaking newline-JSON over
+/// stdin/stdout (default) or a TCP accept loop. Weights come from
+/// `--load ckpt.bin` (trained) or a seeded init of `--size`.
+fn cmd_serve(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::serve::{server::ServeOptions, ServeModel};
+    let size = args.get_or("size", "tiny");
+    let seed = args.get_usize("seed", 0)? as u64;
+    let load = args.get("load").map(str::to_string);
+    let max_batch = args.get_usize("max-batch", 4)?;
+    let tcp = args.get("tcp").map(str::to_string);
+    let quiet = args.flag("quiet");
+    args.finish()?;
+    let model = match &load {
+        Some(p) => ServeModel::from_checkpoint(std::path::Path::new(p))?,
+        None => ServeModel::init(&size, seed)?,
+    };
+    let opts = ServeOptions { max_batch, quiet };
+    match tcp {
+        Some(addr) => scale_llm::serve::server::run_tcp(&model, &addr, &opts),
+        None => scale_llm::serve::server::run_stdio(&model, &opts),
+    }
 }
 
 fn sizes_arg(args: &mut Args, default: &str) -> Vec<String> {

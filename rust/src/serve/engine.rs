@@ -1,0 +1,407 @@
+//! The serving engine: model weights, per-request decode slabs, and the
+//! continuous-batching scheduler.
+//!
+//! Slab ownership mirrors the training arena contract: a
+//! [`ServeEngine`] preallocates `max_batch` [`Decoder`] slabs (KV cache
+//! + decode workspace, fully sized for the model's context) into a
+//! bounded `WsPool` free list. Admission *is* slab acquisition — a
+//! request leaves the FIFO queue the moment a slab is free, joining the
+//! running decode batch between rounds (continuous batching); eviction
+//! (completion, deadline, client drop) resets the slab and returns it
+//! for immediate reuse. Steady-state decode rounds therefore allocate
+//! nothing (the gate in `benches/bench_throughput.rs`; the parallel
+//! fan-out path allocates only its per-round task list, exactly like
+//! the training fan-outs, and is bypassed below the `min_ops` gate).
+//!
+//! Determinism: each slot's floats, sampler scratch, and RNG live in
+//! its own slab, and slots only ever fan out as whole-sequence tasks —
+//! no cross-slot reduction exists, so a request's tokens are
+//! bit-identical whatever the pool size, the batch composition, or the
+//! slot it landed in (`rust/tests/serve_differential.rs`).
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Checkpoint;
+use crate::exec::model::{self, DecodeWs, KvCache, ModelSpec, SampleCfg};
+use crate::exec::program::WsPool;
+use crate::exec::{native_init, native_manifest};
+use crate::parallel::{self, WorkerPool};
+use crate::runtime::artifact::SizeInfo;
+use crate::runtime::Tensor;
+use crate::util::rng::Pcg;
+
+use super::{Completion, Outcome, Request, RequestError};
+
+/// Weights + dimensions for serving: either a fresh seeded init of a
+/// manifest size or the parameter prefix of a training checkpoint.
+pub struct ServeModel {
+    info: SizeInfo,
+    spec: ModelSpec,
+    params: Vec<Tensor>,
+}
+
+impl ServeModel {
+    /// Fresh seeded weights for a manifest size (same init scheme as
+    /// training).
+    pub fn init(size: &str, seed: u64) -> anyhow::Result<ServeModel> {
+        let m = native_manifest(PathBuf::from("unused"));
+        let info = m.size(size)?.clone();
+        let params = native_init(&info, seed);
+        Ok(ServeModel::from_parts(info, params))
+    }
+
+    /// Load trained weights from a checkpoint. Parameters are the
+    /// leading tensors (optimizer state is not needed to serve); names
+    /// and shapes are checked against the manifest before use.
+    pub fn from_checkpoint(path: &Path) -> anyhow::Result<ServeModel> {
+        let ckpt = Checkpoint::load(path)?;
+        let m = native_manifest(PathBuf::from("unused"));
+        let info = m.size(&ckpt.size)?.clone();
+        let n = info.params.len();
+        anyhow::ensure!(
+            ckpt.tensors.len() >= n,
+            "checkpoint holds {} tensors, size {:?} needs {} params",
+            ckpt.tensors.len(),
+            info.name,
+            n
+        );
+        let mut params = Vec::with_capacity(n);
+        for (ps, (name, t)) in info.params.iter().zip(&ckpt.tensors[..n]) {
+            anyhow::ensure!(
+                *name == ps.name && t.shape() == ps.shape.as_slice(),
+                "checkpoint tensor {name:?} {:?} does not match manifest param {:?} {:?}",
+                t.shape(),
+                ps.name,
+                ps.shape
+            );
+            params.push(t.clone());
+        }
+        Ok(ServeModel::from_parts(info, params))
+    }
+
+    fn from_parts(info: SizeInfo, params: Vec<Tensor>) -> ServeModel {
+        let spec = ModelSpec::from_size(&info);
+        ServeModel { info, spec, params }
+    }
+
+    pub fn size_name(&self) -> &str {
+        &self.info.name
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.spec.vocab
+    }
+
+    /// KV capacity per sequence (the trained context length).
+    pub fn max_seq(&self) -> usize {
+        self.spec.seq
+    }
+
+    /// Training-kernel forward over one prefix (b = 1), returning the
+    /// full `[len, vocab]` logits block: the oracle side of the decode
+    /// differential. Allocates its own arena — never a serving path.
+    pub fn full_forward_logits(
+        &self,
+        prefix: &[i32],
+        pool: &WorkerPool,
+        min_ops: usize,
+    ) -> Vec<f32> {
+        model::forward_logits(&self.spec, &self.params, prefix, pool, min_ops)
+    }
+}
+
+/// One sequence's decode state: the pool-owned KV slab plus the decode
+/// workspace and sampler scratch. Usable directly for single-stream
+/// generation; [`ServeEngine`] owns a bounded set of these.
+pub struct Decoder {
+    cache: KvCache,
+    ws: Box<DecodeWs>,
+}
+
+impl Decoder {
+    pub fn new(model: &ServeModel) -> Decoder {
+        Decoder { cache: KvCache::new(&model.spec), ws: Box::new(DecodeWs::new(&model.spec)) }
+    }
+
+    /// Forget the sequence; buffers are reused as-is.
+    pub fn reset(&mut self) {
+        self.cache.reset();
+    }
+
+    /// Tokens cached so far (== the next token's position).
+    pub fn pos(&self) -> usize {
+        self.cache.pos()
+    }
+
+    /// Append `toks` (prefill when several, decode when one) and return
+    /// the logits for the last appended position — bit-identical to row
+    /// `pos` of the training forward over the same prefix.
+    pub fn extend(
+        &mut self,
+        model: &ServeModel,
+        toks: &[i32],
+        pool: &WorkerPool,
+        min_ops: usize,
+    ) -> &[f32] {
+        model::extend(
+            &model.spec,
+            &model.params,
+            toks,
+            &mut self.cache,
+            &mut self.ws,
+            pool,
+            min_ops,
+        );
+        &self.ws.logits
+    }
+
+    /// Draw the next token from the logits left by [`Decoder::extend`],
+    /// using this slab's scratch (no allocation). `temperature == 0` is
+    /// exact argmax; the draw is a pure function of (logits, knobs, rng
+    /// state).
+    pub fn sample(&mut self, temperature: f32, top_k: usize, top_p: f64, rng: &mut Pcg) -> i32 {
+        let cfg = SampleCfg { temperature, top_k, top_p };
+        let DecodeWs { logits, order, cdf, .. } = &mut *self.ws;
+        model::sample_logits(logits, &cfg, rng, order, cdf) as i32
+    }
+}
+
+/// One admitted request mid-generation.
+struct Active {
+    slab: Box<Decoder>,
+    id: String,
+    cfg: SampleCfg,
+    rng: Pcg,
+    max_new: usize,
+    tokens: Vec<i32>,
+    last: i32,
+    deadline: Option<Instant>,
+}
+
+impl Active {
+    /// Feed the last sampled token, sample the next. Every float and
+    /// the RNG are private to this slot, so slots fan out to the pool
+    /// as whole tasks without cross-talk.
+    fn step_token(&mut self, model: &ServeModel, pool: &WorkerPool, min_ops: usize) {
+        let fed = [self.last];
+        self.slab.extend(model, &fed, pool, min_ops);
+        let next =
+            self.slab.sample(self.cfg.temperature, self.cfg.top_k, self.cfg.top_p, &mut self.rng);
+        self.tokens.push(next);
+        self.last = next;
+    }
+}
+
+/// Continuous-batching scheduler over a bounded set of KV slabs. Drive
+/// it with [`submit`](ServeEngine::submit) and
+/// [`step`](ServeEngine::step); collect results with
+/// [`take_finished`](ServeEngine::take_finished).
+pub struct ServeEngine<'m> {
+    model: &'m ServeModel,
+    slabs: WsPool<Decoder>,
+    active: Vec<Active>,
+    queue: VecDeque<Request>,
+    finished: Vec<Completion>,
+    /// Test/bench hook: route kernels through an explicit pool +
+    /// threshold instead of the shared pool and calibrated gate.
+    exec: Option<(WorkerPool, usize)>,
+    /// Per-token multiply-add estimate, for the slot fan-out gate.
+    cost: usize,
+}
+
+impl<'m> ServeEngine<'m> {
+    pub fn new(model: &'m ServeModel, max_batch: usize) -> ServeEngine<'m> {
+        let slabs = WsPool::new();
+        for _ in 0..max_batch.max(1) {
+            slabs.put(Box::new(Decoder::new(model)));
+        }
+        let sp = &model.spec;
+        let cost = sp.n_layers * (4 * sp.d * sp.d + 3 * sp.d * sp.d_ff) + sp.d * sp.vocab;
+        ServeEngine {
+            model,
+            slabs,
+            active: Vec::new(),
+            queue: VecDeque::new(),
+            finished: Vec::new(),
+            exec: None,
+            cost,
+        }
+    }
+
+    /// Route all decode kernels through `pool` with a fixed `min_ops`
+    /// threshold (tests sweep pool sizes; the default is the shared
+    /// pool + calibrated threshold).
+    pub fn set_exec(&mut self, pool: WorkerPool, min_ops: usize) {
+        self.exec = Some((pool, min_ops));
+    }
+
+    /// Validate and enqueue one request. Admission into the running
+    /// batch happens in [`step`](ServeEngine::step) as slabs free up.
+    pub fn submit(&mut self, req: Request) -> Result<(), RequestError> {
+        if req.prompt.is_empty() {
+            return Err(RequestError::Invalid("empty prompt".into()));
+        }
+        if req.max_new == 0 {
+            return Err(RequestError::Invalid("max_new must be >= 1".into()));
+        }
+        let cap = self.model.max_seq();
+        if req.prompt.len() + req.max_new > cap {
+            return Err(RequestError::Invalid(format!(
+                "prompt ({}) + max_new ({}) exceeds the {cap}-token context",
+                req.prompt.len(),
+                req.max_new
+            )));
+        }
+        let v = self.model.vocab() as i32;
+        if let Some(&t) = req.prompt.iter().find(|&&t| t < 0 || t >= v) {
+            return Err(RequestError::Invalid(format!("prompt token {t} outside vocab 0..{v}")));
+        }
+        if !req.temperature.is_finite() || req.temperature < 0.0 {
+            return Err(RequestError::Invalid("temperature must be finite and >= 0".into()));
+        }
+        if !(req.top_p > 0.0 && req.top_p <= 1.0) {
+            return Err(RequestError::Invalid("top_p must be in (0, 1]".into()));
+        }
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    pub fn idle(&self) -> bool {
+        self.active.is_empty() && self.queue.is_empty()
+    }
+
+    /// Requests currently holding a slab.
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Requests queued behind the slab pool.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain finished and evicted requests, in the order they retired.
+    pub fn take_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+
+    /// Evict everything (client gone): every active request retires as
+    /// [`Outcome::Disconnected`] with its partial tokens, slabs return
+    /// to the pool, and the queue is dropped.
+    pub fn evict_all(&mut self) {
+        while !self.active.is_empty() {
+            self.finish_at(0, Outcome::Disconnected);
+        }
+        self.queue.clear();
+    }
+
+    /// One scheduler tick: admit queued requests into free slabs
+    /// (prefill + first sampled token), sweep deadlines and dropped
+    /// clients, then run one decode round — one token per surviving
+    /// sequence. Returns the number of tokens produced this tick.
+    pub fn step(&mut self) -> usize {
+        self.admit_ready();
+        let now = Instant::now();
+        // Eviction sweep in slot order: the `client_drop` / `deadline`
+        // failpoints consume one hit per active slot per tick, in this
+        // order, so chaos specs target slots deterministically.
+        let mut i = 0;
+        while i < self.active.len() {
+            let dropped = crate::fault::fires("client_drop");
+            let expired = crate::fault::fires("deadline")
+                || self.active[i].deadline.is_some_and(|d| now >= d);
+            if dropped {
+                self.finish_at(i, Outcome::Disconnected);
+            } else if expired {
+                self.finish_at(i, Outcome::Deadline);
+            } else {
+                i += 1;
+            }
+        }
+        let n = self.active.len();
+        if n == 0 {
+            return 0;
+        }
+        // field-level borrows: `pool` borrows only `self.exec` (or a
+        // 'static pool) so the decode fan-out can borrow `self.active`
+        let (pool, min_ops) = match &self.exec {
+            Some((p, m)) => (p, *m),
+            None => (parallel::shared(), parallel::tuned_min_ops()),
+        };
+        if n > 1 && pool.parallelism() > 1 && n * self.cost >= min_ops.max(1) {
+            let model = self.model;
+            let tasks: Vec<_> = self
+                .active
+                .iter_mut()
+                .map(|a| move || a.step_token(model, pool, min_ops))
+                .collect();
+            pool.run(tasks);
+        } else {
+            for a in self.active.iter_mut() {
+                a.step_token(self.model, pool, min_ops);
+            }
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].tokens.len() >= self.active[i].max_new {
+                self.finish_at(i, Outcome::Ok);
+            } else {
+                i += 1;
+            }
+        }
+        n
+    }
+
+    /// Admit while a queued request and a free slab both exist:
+    /// prefill the prompt and sample the request's first token.
+    fn admit_ready(&mut self) {
+        while !self.queue.is_empty() {
+            let Some(mut slab) = self.slabs.try_take() else { break };
+            let req = self.queue.pop_front().expect("checked non-empty");
+            slab.reset();
+            let (pool, min_ops) = match &self.exec {
+                Some((p, m)) => (p, *m),
+                None => (parallel::shared(), parallel::tuned_min_ops()),
+            };
+            let cfg =
+                SampleCfg { temperature: req.temperature, top_k: req.top_k, top_p: req.top_p };
+            let mut rng = Pcg::new(req.seed);
+            slab.extend(self.model, &req.prompt, pool, min_ops);
+            let first = slab.sample(cfg.temperature, cfg.top_k, cfg.top_p, &mut rng);
+            let mut tokens = Vec::with_capacity(req.max_new);
+            tokens.push(first);
+            let deadline = (req.deadline_ms > 0)
+                .then(|| Instant::now() + Duration::from_millis(req.deadline_ms));
+            self.active.push(Active {
+                slab,
+                id: req.id,
+                cfg,
+                rng,
+                max_new: req.max_new,
+                tokens,
+                last: first,
+                deadline,
+            });
+        }
+        // a 1-token budget is complete straight out of prefill
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].tokens.len() >= self.active[i].max_new {
+                self.finish_at(i, Outcome::Ok);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Retire `active[i]`: slab back to the free list (reset), tokens
+    /// into the finished queue.
+    fn finish_at(&mut self, i: usize, outcome: Outcome) {
+        let mut a = self.active.remove(i);
+        a.slab.reset();
+        self.slabs.put(a.slab);
+        self.finished.push(Completion { id: a.id, tokens: a.tokens, outcome });
+    }
+}

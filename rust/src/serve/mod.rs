@@ -1,0 +1,227 @@
+//! Inference serving: KV-cache incremental decode behind a
+//! continuous-batching scheduler, speaking newline-JSON.
+//!
+//! Three layers:
+//!
+//! * this module — the wire protocol: [`Request`] / [`Completion`] /
+//!   [`RequestError`] and their newline-JSON encodings. A request line
+//!   that cannot be parsed or validated becomes a typed error response,
+//!   never a panic (chaos-drilled via the `req_malformed` failpoint).
+//! * [`engine`] — [`ServeEngine`], the scheduler: a FIFO queue feeding
+//!   a fixed set of pool-owned KV/decode slabs ([`Decoder`]), with new
+//!   sequences admitted into the running decode batch as slots free
+//!   (continuous batching), per-request wall-clock deadlines, and
+//!   eviction that returns the slab for immediate reuse.
+//! * [`server`] — the transports: `scale serve` runs the protocol over
+//!   stdin/stdout or a minimal std-only TCP accept loop.
+//!
+//! Determinism carries over from training: decode logits are
+//! bit-identical to the full training forward at every position
+//! (`rust/tests/serve_differential.rs`), and sampling is a pure
+//! function of (logits, sampling config, per-request seed) — so a
+//! request's output tokens do not depend on pool size, batch
+//! composition, or which slot it landed in.
+
+pub mod engine;
+pub mod server;
+
+pub use engine::{Decoder, ServeEngine, ServeModel};
+
+use crate::util::json::{self, Json};
+
+/// One generation request: the unit the scheduler queues and admits.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: String,
+    /// Prompt token ids (the repo has no tokenizer; clients send ids).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (>= 1).
+    pub max_new: usize,
+    /// 0 = greedy (exact argmax); otherwise softmax temperature.
+    pub temperature: f32,
+    /// 0 disables the top-k filter.
+    pub top_k: usize,
+    /// 1 disables the nucleus filter; otherwise in (0, 1].
+    pub top_p: f64,
+    /// Per-request sampling seed: same seed, same tokens, bit for bit.
+    pub seed: u64,
+    /// Wall-clock budget in ms from admission; 0 = no deadline.
+    pub deadline_ms: u64,
+}
+
+/// Why a request left the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Generated its full `max_new` budget.
+    Ok,
+    /// Deadline expired mid-generation; tokens so far ride along.
+    Deadline,
+    /// Client vanished mid-generation; the slab was reclaimed.
+    Disconnected,
+}
+
+/// A finished (or evicted) request, ready to serialize.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: String,
+    pub tokens: Vec<i32>,
+    pub outcome: Outcome,
+}
+
+/// Typed request-level failures — every way a request can be refused
+/// before it touches a KV slab. These become protocol error lines; a
+/// hostile or truncated request must never panic the server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// Unparseable JSON, or a missing / ill-typed field.
+    Malformed(String),
+    /// Well-formed but unservable: empty prompt, token id outside the
+    /// vocabulary, prompt + budget past the KV capacity, bad sampling
+    /// range.
+    Invalid(String),
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Malformed(m) => write!(f, "malformed request: {m}"),
+            RequestError::Invalid(m) => write!(f, "invalid request: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+fn malformed(msg: &str) -> RequestError {
+    RequestError::Malformed(msg.to_string())
+}
+
+/// Parse one request line. Field defaults: `max_new` 16, greedy
+/// sampling, no deadline. The `req_malformed` failpoint forces the
+/// malformed path so chaos tests drill the typed-error contract
+/// without crafting hostile bytes.
+pub fn parse_request(line: &str) -> Result<Request, RequestError> {
+    if crate::fault::fires("req_malformed") {
+        return Err(malformed("injected by failpoint req_malformed"));
+    }
+    let doc = json::parse(line).map_err(|e| RequestError::Malformed(e.to_string()))?;
+    if doc.as_obj().is_none() {
+        return Err(malformed("request must be a JSON object"));
+    }
+    let id = doc
+        .get("id")
+        .and_then(Json::as_str)
+        .ok_or_else(|| malformed("missing string field \"id\""))?
+        .to_string();
+    let prompt_arr = doc
+        .get("prompt")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("missing array field \"prompt\""))?;
+    let mut prompt = Vec::with_capacity(prompt_arr.len());
+    for el in prompt_arr {
+        let n = el.as_f64().ok_or_else(|| malformed("prompt entries must be numbers"))?;
+        if n.fract() != 0.0 || !(0.0..=i32::MAX as f64).contains(&n) {
+            return Err(malformed("prompt entries must be non-negative integers"));
+        }
+        prompt.push(n as i32);
+    }
+    let num = |key: &str, default: f64| -> Result<f64, RequestError> {
+        match doc.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.as_f64().ok_or_else(|| malformed(&format!("field {key:?} must be a number")))
+            }
+        }
+    };
+    let max_new = num("max_new", 16.0)? as usize;
+    let temperature = num("temperature", 0.0)? as f32;
+    let top_k = num("top_k", 0.0)? as usize;
+    let top_p = num("top_p", 1.0)?;
+    let seed = num("seed", 0.0)? as u64;
+    let deadline_ms = num("deadline_ms", 0.0)? as u64;
+    Ok(Request { id, prompt, max_new, temperature, top_k, top_p, seed, deadline_ms })
+}
+
+/// Serialize one finished request as a response line.
+pub fn completion_line(c: &Completion) -> String {
+    let status = match c.outcome {
+        Outcome::Ok => "ok",
+        Outcome::Deadline => "deadline",
+        Outcome::Disconnected => "disconnected",
+    };
+    Json::obj(vec![
+        ("id", Json::str(&c.id)),
+        ("status", Json::str(status)),
+        ("tokens", Json::Arr(c.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
+    ])
+    .to_string()
+}
+
+/// Serialize a rejected request as an error line.
+pub fn error_line(err: &RequestError) -> String {
+    let (kind, detail) = match err {
+        RequestError::Malformed(m) => ("malformed", m),
+        RequestError::Invalid(m) => ("invalid", m),
+    };
+    Json::obj(vec![
+        ("status", Json::str("error")),
+        ("kind", Json::str(kind)),
+        ("detail", Json::str(detail)),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_minimal_and_full_requests() {
+        let r = parse_request(r#"{"id":"a","prompt":[1,2,3]}"#).unwrap();
+        assert_eq!(r.id, "a");
+        assert_eq!(r.prompt, vec![1, 2, 3]);
+        assert_eq!(r.max_new, 16);
+        assert_eq!(r.temperature, 0.0);
+        assert_eq!((r.top_k, r.top_p, r.seed, r.deadline_ms), (0, 1.0, 0, 0));
+        let full = r#"{"id":"b","prompt":[0],"max_new":4,"temperature":0.8,
+                       "top_k":5,"top_p":0.9,"seed":42,"deadline_ms":250}"#;
+        let r = parse_request(full).unwrap();
+        assert_eq!(r.max_new, 4);
+        assert_eq!(r.temperature, 0.8);
+        assert_eq!((r.top_k, r.top_p, r.seed, r.deadline_ms), (5, 0.9, 42, 250));
+    }
+
+    #[test]
+    fn parse_rejects_bad_lines_with_typed_errors() {
+        for bad in [
+            "not json",
+            "[1,2,3]",
+            r#"{"prompt":[1]}"#,
+            r#"{"id":"x"}"#,
+            r#"{"id":"x","prompt":["y"]}"#,
+            r#"{"id":"x","prompt":[1.5]}"#,
+            r#"{"id":"x","prompt":[-3]}"#,
+            r#"{"id":"x","prompt":[1],"max_new":"lots"}"#,
+        ] {
+            match parse_request(bad) {
+                Err(RequestError::Malformed(_)) => {}
+                other => panic!("{bad:?} -> {other:?}, want Malformed"),
+            }
+        }
+    }
+
+    #[test]
+    fn response_lines_round_trip_through_the_json_parser() {
+        let c = Completion { id: "r1".into(), tokens: vec![5, 0, 63], outcome: Outcome::Ok };
+        let doc = json::parse(&completion_line(&c)).unwrap();
+        assert_eq!(doc.get("id").and_then(Json::as_str), Some("r1"));
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+        let toks = doc.get("tokens").and_then(Json::as_arr).unwrap();
+        let got: Vec<i32> = toks.iter().map(|t| t.as_f64().unwrap() as i32).collect();
+        assert_eq!(got, c.tokens);
+        let e = error_line(&RequestError::Invalid("too long".into()));
+        let doc = json::parse(&e).unwrap();
+        assert_eq!(doc.get("status").and_then(Json::as_str), Some("error"));
+        assert_eq!(doc.get("kind").and_then(Json::as_str), Some("invalid"));
+    }
+}

@@ -1,0 +1,157 @@
+//! Transports for the serving engine: newline-JSON request lines in,
+//! newline-JSON completion / error lines out, over stdin/stdout or a
+//! minimal std-only TCP accept loop.
+//!
+//! A reader thread feeds lines into a channel so the scheduler can keep
+//! decoding while the client types: the serve loop drains whatever
+//! requests have arrived (without blocking), runs one engine tick, and
+//! writes out whatever finished. It only blocks on input when the
+//! engine is idle. EOF stops admission; in-flight sequences run to
+//! completion before the loop exits.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
+use std::sync::mpsc;
+use std::thread;
+
+use super::engine::{ServeEngine, ServeModel};
+use super::{completion_line, error_line, parse_request};
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// KV slabs to preallocate == max concurrent sequences.
+    pub max_batch: usize,
+    /// Suppress the stderr banner (stdout is protocol either way).
+    pub quiet: bool,
+}
+
+/// Serve one connection's line stream until EOF + drained. Returns
+/// `Err` only on a failed response write (client gone); the caller
+/// decides what to do with the engine's in-flight work.
+pub fn serve_conn<R, W>(
+    engine: &mut ServeEngine<'_>,
+    input: R,
+    output: &mut W,
+) -> std::io::Result<()>
+where
+    R: BufRead + Send + 'static,
+    W: Write,
+{
+    let (tx, rx) = mpsc::channel::<String>();
+    // the reader owns `input` and exits on EOF / read error / our drop
+    // of `rx`; an early-error return leaves it parked until the client
+    // side actually closes, which is the cheapest correct behavior here
+    let reader = thread::spawn(move || {
+        for line in input.lines() {
+            let Ok(line) = line else { break };
+            if tx.send(line).is_err() {
+                break;
+            }
+        }
+    });
+    let mut open = true;
+    loop {
+        // ingest everything that has arrived, without blocking decode
+        while open {
+            match rx.try_recv() {
+                Ok(line) => handle_line(engine, &line, output)?,
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if engine.idle() {
+            if !open {
+                break;
+            }
+            // nothing in flight: block for the next request (or EOF)
+            match rx.recv() {
+                Ok(line) => handle_line(engine, &line, output)?,
+                Err(_) => open = false,
+            }
+            continue;
+        }
+        engine.step();
+        flush_finished(engine, output)?;
+    }
+    drop(rx);
+    let _ = reader.join();
+    Ok(())
+}
+
+fn handle_line<W: Write>(
+    engine: &mut ServeEngine<'_>,
+    line: &str,
+    out: &mut W,
+) -> std::io::Result<()> {
+    let line = line.trim();
+    if line.is_empty() {
+        return Ok(());
+    }
+    let rejection = match parse_request(line) {
+        Ok(req) => engine.submit(req).err(),
+        Err(e) => Some(e),
+    };
+    if let Some(e) = rejection {
+        writeln!(out, "{}", error_line(&e))?;
+        out.flush()?;
+    }
+    Ok(())
+}
+
+fn flush_finished<W: Write>(engine: &mut ServeEngine<'_>, out: &mut W) -> std::io::Result<()> {
+    let done = engine.take_finished();
+    if done.is_empty() {
+        return Ok(());
+    }
+    for c in &done {
+        writeln!(out, "{}", completion_line(c))?;
+    }
+    out.flush()
+}
+
+/// `scale serve` default transport: the protocol over stdin/stdout
+/// until EOF. The banner goes to stderr — stdout carries only protocol
+/// lines.
+pub fn run_stdio(model: &ServeModel, opts: &ServeOptions) -> anyhow::Result<()> {
+    let mut engine = ServeEngine::new(model, opts.max_batch);
+    if !opts.quiet {
+        eprintln!(
+            "scale serve: size {}, {} slabs, context {}, stdio",
+            model.size_name(),
+            opts.max_batch.max(1),
+            model.max_seq()
+        );
+    }
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    serve_conn(&mut engine, BufReader::new(std::io::stdin()), &mut out)?;
+    Ok(())
+}
+
+/// `scale serve --tcp ADDR`: a std-only accept loop, one connection at
+/// a time, same line protocol per connection. The engine (and its warm
+/// slabs) is reused across connections; a client that vanishes
+/// mid-write gets its sequences evicted so the next connection starts
+/// with every slab free.
+pub fn run_tcp(model: &ServeModel, addr: &str, opts: &ServeOptions) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    if !opts.quiet {
+        eprintln!(
+            "scale serve: size {}, {} slabs, listening on {}",
+            model.size_name(),
+            opts.max_batch.max(1),
+            listener.local_addr()?
+        );
+    }
+    let mut engine = ServeEngine::new(model, opts.max_batch);
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { continue };
+        let Ok(reader) = stream.try_clone().map(BufReader::new) else { continue };
+        let mut out = stream;
+        if serve_conn(&mut engine, reader, &mut out).is_err() {
+            engine.evict_all();
+            engine.take_finished();
+        }
+    }
+    Ok(())
+}

@@ -45,7 +45,7 @@ fn runtime_available() -> bool {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["help"]);
     assert!(ok);
-    for cmd in ["train", "table", "figure", "memory-report", "sweep", "sweep-lr"] {
+    for cmd in ["train", "serve", "table", "figure", "memory-report", "sweep", "sweep-lr"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -146,6 +146,60 @@ fn sweep_subcommand_emits_parseable_json() {
         assert!(p.get("optimizer").unwrap().as_str().is_some());
         assert!(p.get("lr").unwrap().as_f64().is_some());
         assert!(p.get("diverged").unwrap().as_bool().is_some());
+    }
+}
+
+/// `scale serve` over piped stdio: two valid requests around a hostile
+/// line; the server answers all three (typed error included), drains,
+/// and exits cleanly on EOF. Response order is scheduling-dependent, so
+/// lines are classified by content, not position.
+#[test]
+fn serve_stdio_roundtrip() {
+    if !runtime_available() {
+        return;
+    }
+    use scale_llm::util::json::{self, Json};
+    use std::io::Write;
+    use std::process::Stdio;
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut child = Command::new(scale_bin())
+        .args(["serve", "--size", "tiny", "--max-batch", "2", "--quiet"])
+        .current_dir(&root)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("scale binary missing — build first");
+    let mut stdin = child.stdin.take().unwrap();
+    stdin
+        .write_all(
+            b"{\"id\":\"r1\",\"prompt\":[1,2,3],\"max_new\":4}\n\
+              not json\n\
+  {\"id\":\"r2\",\"prompt\":[5],\"max_new\":2,\"temperature\":0.7,\"top_k\":8,\"seed\":9}\n",
+        )
+        .unwrap();
+    drop(stdin); // EOF: the server drains in-flight work and exits
+    let out = child.wait_with_output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8(out.stdout).unwrap();
+    let lines: Vec<Json> = text
+        .lines()
+        .map(|l| {
+            json::parse(l).unwrap_or_else(|e| panic!("serve printed non-JSON {l:?} ({e}):\n{text}"))
+        })
+        .collect();
+    assert_eq!(lines.len(), 3, "two completions + one error:\n{text}");
+    let status = |d: &Json| d.get("status").unwrap().as_str().unwrap().to_string();
+    let errors: Vec<_> = lines.iter().filter(|d| status(d) == "error").collect();
+    assert_eq!(errors.len(), 1, "{text}");
+    assert_eq!(errors[0].get("kind").unwrap().as_str(), Some("malformed"));
+    for (id, want_tokens) in [("r1", 4), ("r2", 2)] {
+        let line = lines
+            .iter()
+            .find(|d| d.get("id").and_then(|i| i.as_str()) == Some(id))
+            .unwrap_or_else(|| panic!("no completion for {id}:\n{text}"));
+        assert_eq!(status(line), "ok");
+        assert_eq!(line.get("tokens").unwrap().as_arr().unwrap().len(), want_tokens, "{text}");
     }
 }
 

@@ -1,0 +1,228 @@
+//! Serve chaos suite: deterministic fault injection against the
+//! serving engine (PR: serving engine). The drilled contracts:
+//!
+//! - a malformed request line becomes a typed protocol error, never a
+//!   panic (`req_malformed`, plus genuinely hostile bytes);
+//! - a vanished client frees its KV slab for immediate reuse and does
+//!   not perturb co-batched sequences bitwise (`client_drop`);
+//! - an expired deadline evicts with the tokens generated so far and
+//!   the surviving sequences finish bit-identical to their solo runs
+//!   (`deadline` failpoint + a real wall-clock deadline).
+//!
+//! Own test binary (see Cargo.toml): the failpoint registry is
+//! process-global, so these tests serialize on `LOCK` and leave the
+//! registry cleared, exactly like `chaos.rs`.
+
+use std::io::Cursor;
+
+use scale_llm::fault;
+use scale_llm::parallel::WorkerPool;
+use scale_llm::serve::server::serve_conn;
+use scale_llm::serve::{Decoder, Outcome, Request, ServeEngine, ServeModel};
+use scale_llm::util::json;
+use scale_llm::util::lock::StableMutex;
+use scale_llm::util::rng::Pcg;
+
+static LOCK: StableMutex<()> = StableMutex::new(());
+
+struct FaultGuard<'a>(#[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+
+impl Drop for FaultGuard<'_> {
+    fn drop(&mut self) {
+        fault::clear();
+    }
+}
+
+fn guard() -> FaultGuard<'static> {
+    let g = LOCK.lock();
+    fault::clear();
+    FaultGuard(g)
+}
+
+fn greedy_req(id: &str, prompt: &[i32], max_new: usize) -> Request {
+    Request {
+        id: id.into(),
+        prompt: prompt.to_vec(),
+        max_new,
+        temperature: 0.0,
+        top_k: 0,
+        top_p: 1.0,
+        seed: 0,
+        deadline_ms: 0,
+    }
+}
+
+fn solo_chain(model: &ServeModel, req: &Request, pool: &WorkerPool) -> Vec<i32> {
+    let mut dec = Decoder::new(model);
+    let mut rng = Pcg::new(req.seed);
+    dec.extend(model, &req.prompt, pool, 1);
+    let mut out = vec![dec.sample(req.temperature, req.top_k, req.top_p, &mut rng)];
+    while out.len() < req.max_new {
+        let last = *out.last().unwrap();
+        dec.extend(model, &[last], pool, 1);
+        out.push(dec.sample(req.temperature, req.top_k, req.top_p, &mut rng));
+    }
+    out
+}
+
+fn drain(engine: &mut ServeEngine<'_>) {
+    let mut guard = 0;
+    while !engine.idle() {
+        engine.step();
+        guard += 1;
+        assert!(guard < 1000, "scheduler failed to drain");
+    }
+}
+
+/// Run the full serve loop over a canned byte stream and return the
+/// response lines.
+fn serve_lines(model: &ServeModel, input: &str) -> Vec<json::Json> {
+    let mut engine = ServeEngine::new(model, 2);
+    engine.set_exec(WorkerPool::new(2), 1);
+    let mut out = Vec::new();
+    serve_conn(&mut engine, Cursor::new(input.as_bytes().to_vec()), &mut out).unwrap();
+    String::from_utf8(out)
+        .unwrap()
+        .lines()
+        .map(|l| json::parse(l).unwrap_or_else(|e| panic!("unparseable response {l:?}: {e}")))
+        .collect()
+}
+
+/// The `req_malformed` failpoint forces the malformed path on a valid
+/// line: the server answers with a typed error and keeps serving.
+#[test]
+fn req_malformed_failpoint_rejects_typed_and_server_survives() {
+    let _g = guard();
+    let model = ServeModel::init("tiny", 3).unwrap();
+    fault::configure("req_malformed@1").unwrap();
+    let input = "{\"id\":\"a\",\"prompt\":[1,2],\"max_new\":2}\n\
+                 {\"id\":\"b\",\"prompt\":[1,2],\"max_new\":2}\n";
+    let lines = serve_lines(&model, input);
+    assert_eq!(lines.len(), 2, "one error + one completion");
+    assert_eq!(lines[0].get("status").unwrap().as_str(), Some("error"));
+    assert_eq!(lines[0].get("kind").unwrap().as_str(), Some("malformed"));
+    assert_eq!(lines[1].get("id").unwrap().as_str(), Some("b"));
+    assert_eq!(lines[1].get("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(lines[1].get("tokens").unwrap().as_arr().unwrap().len(), 2);
+}
+
+/// Hostile bytes (truncated JSON, wrong types, out-of-vocab ids) all
+/// come back as typed errors; the valid request among them is served.
+#[test]
+fn hostile_request_lines_never_panic() {
+    let _g = guard();
+    let model = ServeModel::init("tiny", 3).unwrap();
+    let input = "not json at all\n\
+                 {\"id\":7,\"prompt\":[1]}\n\
+                 {\"id\":\"big\",\"prompt\":[999999],\"max_new\":1}\n\
+                 \n\
+                 {\"id\":\"good\",\"prompt\":[3],\"max_new\":1}\n";
+    let lines = serve_lines(&model, input);
+    assert_eq!(lines.len(), 4, "three errors + one completion (blank line skipped)");
+    for l in &lines[..3] {
+        assert_eq!(l.get("status").unwrap().as_str(), Some("error"));
+    }
+    assert_eq!(lines[2].get("kind").unwrap().as_str(), Some("invalid"));
+    assert_eq!(lines[3].get("id").unwrap().as_str(), Some("good"));
+    assert_eq!(lines[3].get("status").unwrap().as_str(), Some("ok"));
+}
+
+/// A dropped client is evicted with its partial tokens, its slab is
+/// reused by the next admission, and the co-batched sequence finishes
+/// bit-identical to a solo run.
+#[test]
+fn client_drop_frees_the_slab_and_spares_the_batch() {
+    let _g = guard();
+    let model = ServeModel::init("tiny", 2).unwrap();
+    let pool = WorkerPool::new(2);
+    let a = greedy_req("a", &[1, 2, 3], 6);
+    let b = greedy_req("b", &[4, 5], 7);
+    let c = greedy_req("c", &[6], 3);
+    let solo_a = solo_chain(&model, &a, &pool);
+    let solo_b = solo_chain(&model, &b, &pool);
+    let solo_c = solo_chain(&model, &c, &pool);
+
+    let mut engine = ServeEngine::new(&model, 2);
+    engine.set_exec(WorkerPool::new(2), 1);
+    engine.submit(a).unwrap();
+    engine.submit(b).unwrap();
+    // slot order is admission order, and the sweep consumes one
+    // failpoint hit per slot: @1 targets slot 0 == request "a"
+    fault::configure("client_drop@1").unwrap();
+    engine.step();
+    fault::clear();
+    assert_eq!(engine.active(), 1, "a evicted, b decoding");
+    engine.submit(c).unwrap();
+    engine.step();
+    assert_eq!(engine.active(), 2, "freed slab re-admitted c");
+    drain(&mut engine);
+
+    let mut done = engine.take_finished();
+    done.sort_by(|x, y| x.id.cmp(&y.id));
+    assert_eq!(done.len(), 3);
+    assert_eq!(done[0].outcome, Outcome::Disconnected);
+    assert!(!done[0].tokens.is_empty() && done[0].tokens.len() < 6);
+    assert_eq!(done[0].tokens, solo_a[..done[0].tokens.len()], "partial tokens are a prefix");
+    assert_eq!((done[1].outcome, &done[1].tokens), (Outcome::Ok, &solo_b));
+    assert_eq!((done[2].outcome, &done[2].tokens), (Outcome::Ok, &solo_c));
+}
+
+/// The `deadline` failpoint evicts a slot as expired mid-generation;
+/// its partial tokens ride along and the co-batched sequence is
+/// bit-unaffected.
+#[test]
+fn deadline_failpoint_evicts_with_partial_tokens() {
+    let _g = guard();
+    let model = ServeModel::init("tiny", 8).unwrap();
+    let pool = WorkerPool::new(2);
+    let a = greedy_req("a", &[7, 8], 8);
+    let b = greedy_req("b", &[9], 4);
+    let solo_a = solo_chain(&model, &a, &pool);
+    let solo_b = solo_chain(&model, &b, &pool);
+
+    let mut engine = ServeEngine::new(&model, 2);
+    engine.set_exec(WorkerPool::new(2), 1);
+    engine.submit(a).unwrap();
+    engine.submit(b).unwrap();
+    engine.step(); // both admitted + one decode round, no faults
+    fault::configure("deadline@1").unwrap();
+    engine.step(); // sweep evicts slot 0 ("a") as expired
+    fault::clear();
+    drain(&mut engine);
+
+    let mut done = engine.take_finished();
+    done.sort_by(|x, y| x.id.cmp(&y.id));
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].outcome, Outcome::Deadline);
+    assert_eq!(done[0].tokens.len(), 2, "prefill token + one decode round before eviction");
+    assert_eq!(done[0].tokens, solo_a[..2], "partial tokens are a prefix of the solo run");
+    assert_eq!((done[1].outcome, &done[1].tokens), (Outcome::Ok, &solo_b));
+}
+
+/// A real wall-clock deadline: the expired request is evicted without
+/// stalling the engine, and the co-batched deadline-free request runs
+/// to completion.
+#[test]
+fn wall_clock_deadline_expires_without_stalling_the_batch() {
+    let _g = guard();
+    let model = ServeModel::init("tiny", 1).unwrap();
+    let pool = WorkerPool::new(2);
+    let hurried = Request { deadline_ms: 1, ..greedy_req("hurried", &[1, 2], 12) };
+    let steady = greedy_req("steady", &[3], 4);
+    let solo_steady = solo_chain(&model, &steady, &pool);
+
+    let mut engine = ServeEngine::new(&model, 2);
+    engine.set_exec(WorkerPool::new(2), 1);
+    engine.submit(hurried).unwrap();
+    engine.submit(steady).unwrap();
+    engine.step(); // admission stamps the 1ms deadline
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    drain(&mut engine);
+
+    let mut done = engine.take_finished();
+    done.sort_by(|x, y| x.id.cmp(&y.id));
+    assert_eq!(done.len(), 2);
+    assert_eq!(done[0].outcome, Outcome::Deadline, "1ms budget must expire");
+    assert!(!done[0].tokens.is_empty() && done[0].tokens.len() < 12);
+    assert_eq!((done[1].outcome, &done[1].tokens), (Outcome::Ok, &solo_steady));
+}

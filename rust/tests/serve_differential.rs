@@ -1,0 +1,317 @@
+//! The decode differential: the serving path must be a bit-exact
+//! restatement of the training forward (PR: serving engine).
+//!
+//! Property under test, stated once: for any prefix, pool size,
+//! `min_ops` threshold, arch (llama + gpt2), prefill/decode split, and
+//! batch composition, the logits the KV-cache decoder produces at
+//! position `t` are bit-identical to row `t` of the training-kernel
+//! forward over the same prefix — and therefore a request's sampled
+//! tokens are a pure function of (weights, prompt, sampling config,
+//! seed), not of scheduling.
+//!
+//! Own test binary (see Cargo.toml): it constructs worker pools
+//! freely, which must not race the spawn-counter assertions in
+//! `integration.rs`.
+
+use scale_llm::parallel::WorkerPool;
+use scale_llm::serve::{Decoder, Outcome, Request, ServeEngine, ServeModel};
+use scale_llm::util::rng::Pcg;
+
+/// Pool sizes the whole suite sweeps: inline, small, larger-than-work.
+const POOLS: [usize; 3] = [0, 2, 7];
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: lane {i}: {g:?} vs {w:?}");
+    }
+}
+
+/// A deterministic prompt that touches a spread of token ids.
+fn prompt(len: usize, vocab: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| ((i * 13 + salt * 7 + 3) % vocab) as i32).collect()
+}
+
+fn greedy_req(id: &str, prompt: &[i32], max_new: usize) -> Request {
+    Request {
+        id: id.into(),
+        prompt: prompt.to_vec(),
+        max_new,
+        temperature: 0.0,
+        top_k: 0,
+        top_p: 1.0,
+        seed: 0,
+        deadline_ms: 0,
+    }
+}
+
+/// Single-stream generation against a bare [`Decoder`]: the reference
+/// the engine's batched output must reproduce token for token.
+fn solo_chain(model: &ServeModel, req: &Request, pool: &WorkerPool, min_ops: usize) -> Vec<i32> {
+    let mut dec = Decoder::new(model);
+    let mut rng = Pcg::new(req.seed);
+    dec.extend(model, &req.prompt, pool, min_ops);
+    let mut out = Vec::new();
+    let mut last = dec.sample(req.temperature, req.top_k, req.top_p, &mut rng);
+    out.push(last);
+    while out.len() < req.max_new {
+        dec.extend(model, &[last], pool, min_ops);
+        last = dec.sample(req.temperature, req.top_k, req.top_p, &mut rng);
+        out.push(last);
+    }
+    out
+}
+
+/// The tentpole property: token-by-token decode reproduces every row of
+/// the training forward bitwise, for every pool size and both archs.
+#[test]
+fn decode_matches_training_forward_at_every_position() {
+    for size in ["tiny", "tinyg"] {
+        let model = ServeModel::init(size, 11).unwrap();
+        let (len, v) = (model.max_seq(), model.vocab());
+        let toks = prompt(len, v, 0);
+        let oracle_pool = WorkerPool::new(0);
+        let oracle = model.full_forward_logits(&toks, &oracle_pool, usize::MAX);
+        assert_eq!(oracle.len(), len * v);
+        for workers in POOLS {
+            let pool = WorkerPool::new(workers);
+            for min_ops in [1, usize::MAX] {
+                let mut dec = Decoder::new(&model);
+                for t in 0..len {
+                    let row = dec.extend(&model, &toks[t..t + 1], &pool, min_ops);
+                    assert_bits(
+                        row,
+                        &oracle[t * v..(t + 1) * v],
+                        &format!("{size} pos {t} ({workers} workers, min_ops {min_ops})"),
+                    );
+                }
+                assert_eq!(dec.pos(), len);
+            }
+        }
+    }
+}
+
+/// Prefill-then-decode lands on the same bits as pure token-by-token,
+/// wherever the split falls.
+#[test]
+fn prefill_split_is_invisible_in_the_bits() {
+    for size in ["tiny", "tinyg"] {
+        let model = ServeModel::init(size, 5).unwrap();
+        let (len, v) = (model.max_seq(), model.vocab());
+        let toks = prompt(len, v, 1);
+        let pool = WorkerPool::new(2);
+        let oracle = model.full_forward_logits(&toks, &pool, usize::MAX);
+        for split in [1, 2, len / 2, len - 1, len] {
+            let mut dec = Decoder::new(&model);
+            let row = dec.extend(&model, &toks[..split], &pool, 1);
+            assert_bits(
+                row,
+                &oracle[(split - 1) * v..split * v],
+                &format!("{size} prefill({split}) last row"),
+            );
+            for t in split..len {
+                let row = dec.extend(&model, &toks[t..t + 1], &pool, 1);
+                assert_bits(
+                    row,
+                    &oracle[t * v..(t + 1) * v],
+                    &format!("{size} prefill({split}) then pos {t}"),
+                );
+            }
+        }
+    }
+}
+
+/// The oracle itself is prefix-stable: truncating the prefix does not
+/// change the rows it shares with the longer run (causality check on
+/// the training forward, so the differential above is meaningful).
+#[test]
+fn oracle_rows_are_prefix_stable() {
+    let model = ServeModel::init("tiny", 9).unwrap();
+    let (len, v) = (model.max_seq(), model.vocab());
+    let toks = prompt(len, v, 2);
+    let pool = WorkerPool::new(0);
+    let full = model.full_forward_logits(&toks, &pool, usize::MAX);
+    for k in [1, 3, len / 2, len - 1] {
+        let short = model.full_forward_logits(&toks[..k], &pool, usize::MAX);
+        assert_bits(&short, &full[..k * v], &format!("oracle prefix {k}"));
+    }
+}
+
+/// `Decoder::reset` really forgets: a reused slab replays a different
+/// sequence bit-identically to a fresh one.
+#[test]
+fn reset_slab_replays_like_fresh() {
+    let model = ServeModel::init("tiny", 2).unwrap();
+    let pool = WorkerPool::new(2);
+    let a = greedy_req("a", &prompt(5, model.vocab(), 3), 6);
+    let b = greedy_req("b", &prompt(3, model.vocab(), 4), 6);
+    let fresh = solo_chain(&model, &b, &pool, 1);
+    let mut dec = Decoder::new(&model);
+    let mut rng = Pcg::new(a.seed);
+    dec.extend(&model, &a.prompt, &pool, 1);
+    dec.sample(a.temperature, a.top_k, a.top_p, &mut rng);
+    dec.reset();
+    assert_eq!(dec.pos(), 0);
+    let mut rng = Pcg::new(b.seed);
+    dec.extend(&model, &b.prompt, &pool, 1);
+    let mut got = vec![dec.sample(b.temperature, b.top_k, b.top_p, &mut rng)];
+    while got.len() < b.max_new {
+        let last = *got.last().unwrap();
+        dec.extend(&model, &[last], &pool, 1);
+        got.push(dec.sample(b.temperature, b.top_k, b.top_p, &mut rng));
+    }
+    assert_eq!(got, fresh, "a reset slab must not leak its previous sequence");
+}
+
+/// Continuous batching with ragged lengths and mid-flight admission:
+/// every request's tokens are bit-identical to its solo run, for every
+/// pool size — scheduling is invisible in the output.
+#[test]
+fn ragged_batches_match_solo_runs_bitwise() {
+    let model = ServeModel::init("tiny", 7).unwrap();
+    let v = model.vocab();
+    let reqs = vec![
+        greedy_req("a", &prompt(3, v, 0), 5),
+        greedy_req("b", &prompt(2, v, 1), 7),
+        greedy_req("c", &prompt(1, v, 2), 3),
+        greedy_req("d", &prompt(4, v, 3), 1),
+        greedy_req("e", &prompt(6, v, 4), 4),
+    ];
+    let ref_pool = WorkerPool::new(0);
+    let solo: Vec<(String, Vec<i32>)> = reqs
+        .iter()
+        .map(|r| (r.id.clone(), solo_chain(&model, r, &ref_pool, usize::MAX)))
+        .collect();
+    for workers in POOLS {
+        // max_batch 2 against 5 ragged requests: c/d/e are admitted
+        // mid-flight as a/b/... finish — the continuous-batching path
+        let mut engine = ServeEngine::new(&model, 2);
+        engine.set_exec(WorkerPool::new(workers), 1);
+        for r in &reqs {
+            engine.submit(r.clone()).unwrap();
+        }
+        let mut guard = 0;
+        while !engine.idle() {
+            engine.step();
+            guard += 1;
+            assert!(guard < 1000, "scheduler failed to drain");
+        }
+        let mut done = engine.take_finished();
+        assert_eq!(done.len(), reqs.len());
+        done.sort_by(|x, y| x.id.cmp(&y.id));
+        for (c, (id, want)) in done.iter().zip(&solo) {
+            assert_eq!(&c.id, id);
+            assert_eq!(c.outcome, Outcome::Ok);
+            assert_eq!(&c.tokens, want, "{id} ({workers} workers): batched != solo");
+        }
+    }
+}
+
+/// Seeded top-k/top-p sampling is bit-identical across pool sizes and
+/// invariant to which batch slot the request lands in.
+#[test]
+fn seeded_sampling_is_slot_and_pool_invariant() {
+    let model = ServeModel::init("tiny", 4).unwrap();
+    let v = model.vocab();
+    let sampled = Request {
+        id: "s".into(),
+        prompt: prompt(3, v, 5),
+        max_new: 6,
+        temperature: 0.8,
+        top_k: 8,
+        top_p: 0.9,
+        seed: 42,
+        deadline_ms: 0,
+    };
+    let ref_pool = WorkerPool::new(0);
+    let want = solo_chain(&model, &sampled, &ref_pool, usize::MAX);
+    // same seed, same draws — and a different seed actually diverges
+    assert_eq!(want, solo_chain(&model, &sampled, &ref_pool, usize::MAX));
+    let other = Request { seed: 43, ..sampled.clone() };
+    assert_ne!(want, solo_chain(&model, &other, &ref_pool, usize::MAX));
+    for workers in POOLS {
+        // filler admitted first so the sampled request lands in slot 1
+        let mut engine = ServeEngine::new(&model, 3);
+        engine.set_exec(WorkerPool::new(workers), 1);
+        engine.submit(greedy_req("filler", &prompt(2, v, 6), 8)).unwrap();
+        engine.submit(sampled.clone()).unwrap();
+        engine.submit(greedy_req("tail", &prompt(1, v, 7), 2)).unwrap();
+        while !engine.idle() {
+            engine.step();
+        }
+        let done = engine.take_finished();
+        let got = done.iter().find(|c| c.id == "s").expect("sampled request finished");
+        assert_eq!(got.outcome, Outcome::Ok);
+        assert_eq!(got.tokens, want, "slot/pool changed seeded draws ({workers} workers)");
+    }
+}
+
+/// Greedy decoding is exact argmax over the decode logits (which the
+/// differential above ties to the training forward).
+#[test]
+fn greedy_is_exact_argmax_over_decode_logits() {
+    let model = ServeModel::init("tinyg", 6).unwrap();
+    let v = model.vocab();
+    let toks = prompt(4, v, 8);
+    let pool = WorkerPool::new(2);
+    let mut dec = Decoder::new(&model);
+    let mut rng = Pcg::new(0);
+    let mut last = {
+        let row = dec.extend(&model, &toks, &pool, 1);
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0 as i32;
+        let got = dec.sample(0.0, 0, 1.0, &mut rng);
+        assert_eq!(got, argmax);
+        got
+    };
+    for _ in 0..6 {
+        let row = dec.extend(&model, &[last], &pool, 1);
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap()
+            .0 as i32;
+        last = dec.sample(0.0, 0, 1.0, &mut rng);
+        assert_eq!(last, argmax, "greedy must be exact argmax at every step");
+    }
+}
+
+/// Engine-level validation: unservable requests are refused with the
+/// typed `Invalid` error before touching a slab.
+#[test]
+fn invalid_requests_are_refused_typed() {
+    use scale_llm::serve::RequestError;
+    let model = ServeModel::init("tiny", 0).unwrap();
+    let mut engine = ServeEngine::new(&model, 2);
+    let v = model.vocab() as i32;
+    let cap = model.max_seq();
+    let base = greedy_req("x", &[1, 2], 4);
+    let cases: Vec<Request> = vec![
+        Request { prompt: vec![], ..base.clone() },
+        Request { max_new: 0, ..base.clone() },
+        Request { prompt: vec![v], ..base.clone() },
+        Request { prompt: vec![-1], ..base.clone() },
+        Request { max_new: cap, ..base.clone() },
+        Request { temperature: f32::NAN, ..base.clone() },
+        Request { temperature: -1.0, ..base.clone() },
+        Request { top_p: 0.0, ..base.clone() },
+        Request { top_p: 1.5, ..base.clone() },
+    ];
+    for req in cases {
+        match engine.submit(req.clone()) {
+            Err(RequestError::Invalid(_)) => {}
+            other => panic!("{req:?} -> {other:?}, want Invalid"),
+        }
+    }
+    assert!(engine.idle(), "refused requests must never occupy the engine");
+    engine.submit(base).unwrap();
+    while !engine.idle() {
+        engine.step();
+    }
+    assert_eq!(engine.take_finished().len(), 1, "engine must stay usable after refusals");
+}
