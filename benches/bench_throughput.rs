@@ -25,7 +25,11 @@
 //! The gates are deterministic and enforced via the exit code (CI runs
 //! this bench); the timing numbers are recorded in
 //! `BENCH_throughput.json` for trajectory review, not gated — CI boxes
-//! are too noisy for latency assertions.
+//! are too noisy for latency assertions. Headline rows — including the
+//! per-optimizer `update_rule` latencies for the frontier family — also
+//! append to `BENCH_history.json` via `util::bench::append_history`,
+//! whose silent-empty guard fails the run rather than record a hollow
+//! entry.
 
 use std::time::{Duration, Instant};
 
@@ -35,7 +39,8 @@ use scale_llm::mesh;
 use scale_llm::parallel;
 use scale_llm::runtime::{Engine, Tensor};
 use scale_llm::serve::{Request, ServeEngine, ServeModel};
-use scale_llm::util::json::{self, Json};
+use scale_llm::util::bench::append_history;
+use scale_llm::util::json::Json;
 
 #[path = "support/alloc_counter.rs"]
 mod alloc_counter;
@@ -263,36 +268,78 @@ fn mesh_reduce_row(ranks: usize) -> Json {
     Json::obj(vec![("ranks", Json::num(ranks as f64)), ("reduce_ms", Json::num(ms))])
 }
 
-/// Append this run's headline numbers to the committed
-/// `BENCH_history.json` trajectory. The file is a JSON array of entry
-/// objects; a missing file starts a fresh history, but existing content
-/// that fails to parse — or parses to anything other than an array of
-/// objects — is a hard error. Clobbering a corrupted trajectory would
-/// silently erase every past data point; a bench run must never do that.
-fn append_history(entry: Json) -> anyhow::Result<()> {
-    let path = "BENCH_history.json";
-    let mut hist = match std::fs::read_to_string(path) {
-        Ok(text) => {
-            let doc = json::parse(&text).map_err(|e| {
-                anyhow::anyhow!("{path} is not valid JSON ({e}); refusing to clobber it")
-            })?;
-            let Json::Arr(v) = doc else {
-                anyhow::bail!("{path} is not a JSON array; refusing to clobber it");
-            };
-            for (i, item) in v.iter().enumerate() {
-                anyhow::ensure!(
-                    item.as_obj().is_some(),
-                    "{path}[{i}] is not an entry object; refusing to clobber it"
-                );
-            }
-            v
+/// The row sections every history entry must carry, each non-empty —
+/// `util::bench::append_history`'s silent-empty guard turns a run that
+/// produced zero rows for any of them into a hard bench failure instead
+/// of a hollow data point in the committed trajectory.
+const HISTORY_ROW_KEYS: [&str; 4] =
+    ["mesh_reduce", "serve_decode", "update_rule", "sharded_state_bytes"];
+
+/// Per-optimizer `update_{opt}_tiny` latency rows for the history
+/// trajectory: SCALE and Adam next to the frontier rules (partial
+/// momentum, momentum-as-normalizer), allocation-audited like the mix_*
+/// loop. As in section 1 the parallel threshold is pinned sequential so
+/// the audit measures the workspace-arena contract, not pool dispatch.
+fn update_rule_rows(engine: &Engine) -> anyhow::Result<(Vec<Json>, u64)> {
+    parallel::set_min_ops_override(Some(usize::MAX));
+    let result = update_rule_rows_pinned(engine);
+    parallel::set_min_ops_override(None); // restore even on error
+    result
+}
+
+fn update_rule_rows_pinned(engine: &Engine) -> anyhow::Result<(Vec<Json>, u64)> {
+    let info = engine.manifest.size("tiny")?.clone();
+    let params = exec::native_init(&info, 0);
+    let (mb, w) = (engine.manifest.microbatch, info.seq_len + 1);
+    let toks: Vec<i32> = (0..mb * w).map(|i| (i % info.vocab) as i32).collect();
+    let batch = Tensor::from_i32(&[mb, w], toks);
+    let fwd = engine.load("fwd_bwd_tiny")?;
+    let mut fwd_inputs: Vec<&Tensor> = params.iter().collect();
+    fwd_inputs.push(&batch);
+    let mut fwd_out: Vec<Tensor> = Vec::new();
+    engine.run_exe_refs_into(&fwd, &fwd_inputs, &mut fwd_out)?;
+    let lr_t = Tensor::scalar_f32(1e-2);
+    let step_t = Tensor::scalar_f32(1.0);
+    let mut rows = Vec::new();
+    let mut violations = 0u64;
+    for opt in ["scale", "adam", "adapm_first_last", "adapm_top2", "adams"] {
+        let name = format!("update_{opt}_tiny");
+        if engine.manifest.artifact(&name).is_err() {
+            continue; // an xla manifest may predate the frontier family
         }
-        Err(_) => Vec::new(),
-    };
-    hist.push(entry);
-    std::fs::write(path, Json::Arr(hist).to_string())?;
-    println!("history -> {path}");
-    Ok(())
+        let exe = engine.load(&name)?;
+        let state: Vec<Tensor> = engine
+            .manifest
+            .state_spec(opt, "tiny")?
+            .iter()
+            .map(|s| Tensor::zeros(&s.shape))
+            .collect();
+        let mut inputs: Vec<&Tensor> = params.iter().collect();
+        inputs.extend(state.iter());
+        inputs.extend(fwd_out[1..].iter());
+        inputs.push(&lr_t);
+        inputs.push(&step_t);
+        let mut out: Vec<Tensor> = Vec::new();
+        engine.run_exe_refs_into(&exe, &inputs, &mut out)?;
+        engine.run_exe_refs_into(&exe, &inputs, &mut out)?; // warm workspaces
+        let iters = 15u32;
+        let a = allocs();
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            engine.run_exe_refs_into(&exe, &inputs, &mut out)?;
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3 / iters as f64;
+        violations += allocs() - a;
+        println!("update_rule {opt}: {ms:.3} ms/step");
+        rows.push(Json::obj(vec![
+            ("size", Json::str("tiny")),
+            ("optimizer", Json::str(opt)),
+            ("update_ms", Json::num(ms)),
+            ("state_slots", Json::num(state.len() as f64)),
+        ]));
+    }
+    anyhow::ensure!(!rows.is_empty(), "no update_{{opt}}_tiny artifact was benchable");
+    Ok((rows, violations))
 }
 
 /// Measured per-rank optimizer-state bytes under `--shard-state`, for
@@ -510,6 +557,9 @@ fn main() -> anyhow::Result<()> {
     println!("\n== attention pair dispatch A/B (calibrated thresholds) ==");
     let attn_rows = vec![attn_ab_row(&engine, "tiny")?, attn_ab_row(&engine, "s60m")?];
 
+    println!("\n== update-rule latency (zero-alloc gate) ==");
+    let (upd_rule_rows, upd_rule_allocs) = update_rule_rows(&engine)?;
+
     println!("\n== mesh all-reduce latency ==");
     let mesh_rows = vec![mesh_reduce_row(2), mesh_reduce_row(4)];
 
@@ -565,22 +615,28 @@ fn main() -> anyhow::Result<()> {
         ("failpoint_disabled_allocs", Json::num(fp_violations as f64)),
         ("train_spawns", Json::num(total_spawns as f64)),
         ("attention_ab", Json::Arr(attn_rows)),
+        ("update_rule", Json::Arr(upd_rule_rows.clone())),
         ("mesh_reduce", Json::Arr(mesh_rows.clone())),
         ("serve_decode", Json::Arr(decode_json.clone())),
         ("rows", Json::Arr(row_json)),
     ]);
     std::fs::write("BENCH_throughput.json", doc.to_string())?;
     println!("\nbench json -> BENCH_throughput.json");
-    append_history(Json::obj(vec![
-        ("bench", Json::str("throughput")),
-        ("platform", Json::str(&engine.platform())),
-        ("unix_time", Json::num(unix_time())),
-        ("exec_fwd_ms", Json::num(fwd_ms)),
-        ("exec_update_ms", Json::num(upd_ms)),
-        ("mesh_reduce", Json::Arr(mesh_rows)),
-        ("serve_decode", Json::Arr(decode_json)),
-        ("sharded_state_bytes", Json::Arr(sharded_state_rows(&engine))),
-    ]))?;
+    append_history(
+        "BENCH_history.json",
+        Json::obj(vec![
+            ("bench", Json::str("throughput")),
+            ("platform", Json::str(&engine.platform())),
+            ("unix_time", Json::num(unix_time())),
+            ("exec_fwd_ms", Json::num(fwd_ms)),
+            ("exec_update_ms", Json::num(upd_ms)),
+            ("update_rule", Json::Arr(upd_rule_rows)),
+            ("mesh_reduce", Json::Arr(mesh_rows)),
+            ("serve_decode", Json::Arr(decode_json)),
+            ("sharded_state_bytes", Json::Arr(sharded_state_rows(&engine))),
+        ]),
+        &HISTORY_ROW_KEYS,
+    )?;
 
     println!("\n== acceptance gates ==");
     println!(
@@ -599,6 +655,10 @@ fn main() -> anyhow::Result<()> {
         "  serve decode loop allocation- and spawn-free: {} ({decode_violations})",
         if decode_violations == 0 { "PASS" } else { "FAIL" }
     );
+    println!(
+        "  update-rule rows allocation-free: {} ({upd_rule_allocs} allocs)",
+        if upd_rule_allocs == 0 { "PASS" } else { "FAIL" }
+    );
     anyhow::ensure!(
         exec_allocs == 0,
         "steady-state executor performed {exec_allocs} heap allocations (expected 0)"
@@ -614,6 +674,10 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(
         decode_violations == 0,
         "serve decode rounds performed {decode_violations} allocations/spawns (expected 0)"
+    );
+    anyhow::ensure!(
+        upd_rule_allocs == 0,
+        "update-rule latency loops performed {upd_rule_allocs} heap allocations (expected 0)"
     );
     Ok(())
 }

@@ -50,5 +50,7 @@ pub mod trainer;
 pub use checkpoint::{Checkpoint, CheckpointStore};
 pub use recovery::{GuardPolicy, TrainError};
 pub use schedule::Schedule;
-pub use sweep::{SweepPoint, SweepSpec, TrialOutcome};
+pub use sweep::{
+    CellStats, OptimizerVerdict, SweepPoint, SweepSpec, TrialOutcome, Verdict, VerdictSpec,
+};
 pub use trainer::{TrainOptions, Trainer};

@@ -41,6 +41,22 @@
 //! `trial2/trial_panic@1` targets the same grid point at every pool
 //! size — the chaos suite pins retried-sweep reports bit-identical to
 //! fault-free ones.
+//!
+//! # Statistical verdicts
+//!
+//! The verdict layer ([`VerdictSpec`], [`aggregate_cells`]) turns raw
+//! multi-seed points into conclusions: mean/stddev/95%-CI per
+//! `(optimizer, lr)` cell via Welford's algorithm, accumulated strictly
+//! in grid order over the index-slotted point list — so the report is
+//! bit-stable across pool sizes and `max_concurrent` caps by
+//! construction (scheduling never reorders the accumulation).
+//! Non-finite trials (diverged/faulted) are excluded from the moments
+//! and surfaced as an explicit `n_effective` count; an all-diverged
+//! cell reports `mean_ppl = inf` (JSON `null`). [`VerdictSpec::verdict`]
+//! then ranks optimizers by their best cell under an optional
+//! optimizer-state memory budget (bytes from `memory::estimator`,
+//! injected by the caller) — the `scale compare` answer to
+//! "best ppl at this memory budget".
 
 use crate::coordinator::recovery::TrainError;
 use crate::coordinator::trainer::{TrainOptions, Trainer};
@@ -370,6 +386,230 @@ fn json_seed(seed: u64) -> Json {
     }
 }
 
+/// Aggregated statistics for one `(optimizer, lr)` grid cell across its
+/// seed axis. Non-finite trials (diverged/faulted) are excluded from
+/// the moments; `n_effective` says how many survived. An all-diverged
+/// cell carries `mean_ppl = f64::INFINITY` (emitted as JSON `null`)
+/// with zero stddev/CI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellStats {
+    pub optimizer: String,
+    pub lr: f64,
+    /// Trials in the cell, diverged/faulted included.
+    pub n_trials: usize,
+    /// Trials with finite ppl — the sample size behind the moments.
+    pub n_effective: usize,
+    pub mean_ppl: f64,
+    /// Sample standard deviation (n-1 denominator); 0 when fewer than
+    /// two finite trials.
+    pub stddev_ppl: f64,
+    /// Normal-approximation 95% half-width: `1.96·stddev/√n_effective`.
+    pub ci95_ppl: f64,
+}
+
+/// Welford accumulator — numerically stable single-pass moments with a
+/// fixed accumulation order (push order == grid order).
+struct Welford {
+    n: usize,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    fn new() -> Welford {
+        Welford { n: 0, mean: 0.0, m2: 0.0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+}
+
+/// Collapse index-slotted sweep points into per-`(optimizer, lr)` cell
+/// statistics. Cells appear in first-appearance (grid) order and each
+/// cell's Welford accumulation runs strictly in point order, so the
+/// output is a pure function of the point list — bit-stable across
+/// pool sizes and `max_concurrent` caps because `run`/`run_on` slot
+/// points by trial index before any aggregation happens.
+pub fn aggregate_cells(points: &[SweepPoint]) -> Vec<CellStats> {
+    let mut keys: Vec<(String, u64)> = Vec::new();
+    let mut trials: Vec<usize> = Vec::new();
+    let mut accs: Vec<Welford> = Vec::new();
+    for p in points {
+        let key = (p.optimizer.clone(), p.lr.to_bits());
+        let i = match keys.iter().position(|k| *k == key) {
+            Some(i) => i,
+            None => {
+                keys.push(key);
+                trials.push(0);
+                accs.push(Welford::new());
+                keys.len() - 1
+            }
+        };
+        trials[i] += 1;
+        if p.ppl.is_finite() {
+            accs[i].push(p.ppl);
+        }
+    }
+    keys.into_iter()
+        .zip(trials)
+        .zip(accs)
+        .map(|(((optimizer, lr_bits), n_trials), w)| {
+            let mean_ppl = if w.n == 0 { f64::INFINITY } else { w.mean };
+            let stddev_ppl = if w.n >= 2 { (w.m2 / (w.n - 1) as f64).sqrt() } else { 0.0 };
+            let ci95_ppl =
+                if w.n >= 2 { 1.96 * stddev_ppl / (w.n as f64).sqrt() } else { 0.0 };
+            CellStats {
+                optimizer,
+                lr: f64::from_bits(lr_bits),
+                n_trials,
+                n_effective: w.n,
+                mean_ppl,
+                stddev_ppl,
+                ci95_ppl,
+            }
+        })
+        .collect()
+}
+
+/// How to turn aggregated cells into an optimizer ranking.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VerdictSpec {
+    /// Optimizer-state byte budget; optimizers over it still rank, but
+    /// after every within-budget one. `None` = unbounded.
+    pub memory_budget: Option<usize>,
+}
+
+/// One optimizer's verdict: its best cell plus the memory facts the
+/// ranking used.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OptimizerVerdict {
+    pub optimizer: String,
+    /// The cell with the lowest mean ppl (first such cell in grid order
+    /// on ties — deterministic).
+    pub best: CellStats,
+    /// Measured optimizer-state bytes (`memory::estimator` semantics,
+    /// supplied by the caller).
+    pub state_bytes: usize,
+    pub within_budget: bool,
+}
+
+/// The full verdict: every cell, plus the optimizer ranking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Verdict {
+    pub cells: Vec<CellStats>,
+    /// Sorted: within-budget first, then mean ppl ascending
+    /// (`total_cmp` — all-diverged optimizers sink to the bottom of
+    /// their budget class), then state bytes, then name.
+    pub ranking: Vec<OptimizerVerdict>,
+}
+
+impl VerdictSpec {
+    /// Aggregate `points` and rank the optimizers. `state_bytes_for`
+    /// supplies measured optimizer-state bytes per optimizer name — the
+    /// CLI wires `memory::estimator::measured_state_bytes`, tests wire
+    /// fixtures. Deterministic: the ranking is a pure function of the
+    /// point list, the byte map, and the budget.
+    pub fn verdict(
+        &self,
+        points: &[SweepPoint],
+        state_bytes_for: impl Fn(&str) -> anyhow::Result<usize>,
+    ) -> anyhow::Result<Verdict> {
+        let cells = aggregate_cells(points);
+        let mut ranking: Vec<OptimizerVerdict> = Vec::new();
+        for c in &cells {
+            match ranking.iter_mut().find(|r| r.optimizer == c.optimizer) {
+                Some(r) => {
+                    if c.mean_ppl < r.best.mean_ppl {
+                        r.best = c.clone();
+                    }
+                }
+                None => {
+                    let state_bytes = state_bytes_for(&c.optimizer)?;
+                    ranking.push(OptimizerVerdict {
+                        optimizer: c.optimizer.clone(),
+                        best: c.clone(),
+                        state_bytes,
+                        within_budget: self.memory_budget.is_none_or(|b| state_bytes <= b),
+                    });
+                }
+            }
+        }
+        ranking.sort_by(|a, b| {
+            b.within_budget
+                .cmp(&a.within_budget)
+                .then(a.best.mean_ppl.total_cmp(&b.best.mean_ppl))
+                .then(a.state_bytes.cmp(&b.state_bytes))
+                .then(a.optimizer.cmp(&b.optimizer))
+        });
+        Ok(Verdict { cells, ranking })
+    }
+}
+
+fn cell_json(c: &CellStats) -> Json {
+    Json::obj(vec![
+        ("optimizer", Json::str(&c.optimizer)),
+        ("lr", num_or_null(c.lr)),
+        ("n_trials", Json::num(c.n_trials as f64)),
+        ("n_effective", Json::num(c.n_effective as f64)),
+        ("mean_ppl", num_or_null(c.mean_ppl)),
+        ("stddev_ppl", num_or_null(c.stddev_ppl)),
+        ("ci95_ppl", num_or_null(c.ci95_ppl)),
+    ])
+}
+
+/// Machine-readable compare report (`scale compare --json`).
+pub fn compare_report_json(spec: &SweepSpec, vspec: &VerdictSpec, v: &Verdict) -> Json {
+    let ranking: Vec<Json> = v
+        .ranking
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("optimizer", Json::str(&r.optimizer)),
+                ("state_bytes", Json::num(r.state_bytes as f64)),
+                ("within_budget", Json::Bool(r.within_budget)),
+                ("best", cell_json(&r.best)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("report", Json::str("compare")),
+        ("size", Json::str(&spec.base.size)),
+        ("steps", Json::num(spec.base.steps as f64)),
+        ("budget_bytes", vspec.memory_budget.map_or(Json::Null, |b| Json::num(b as f64))),
+        ("cells", Json::Arr(v.cells.iter().map(cell_json).collect())),
+        ("ranking", Json::Arr(ranking)),
+    ])
+}
+
+/// Machine-readable LR-sensitivity report (`scale lr-curve`): the
+/// paper's Fig. 8 shape — one curve per optimizer, cells in LR grid
+/// order, committed as a regenerable artifact under `docs/artifacts/`.
+pub fn lr_curve_report_json(spec: &SweepSpec, cells: &[CellStats]) -> Json {
+    let mut curves: Vec<(String, Vec<Json>)> = Vec::new();
+    for c in cells {
+        match curves.iter_mut().find(|(o, _)| *o == c.optimizer) {
+            Some((_, pts)) => pts.push(cell_json(c)),
+            None => curves.push((c.optimizer.clone(), vec![cell_json(c)])),
+        }
+    }
+    let curves: Vec<Json> = curves
+        .into_iter()
+        .map(|(opt, pts)| {
+            Json::obj(vec![("optimizer", Json::str(&opt)), ("points", Json::Arr(pts))])
+        })
+        .collect();
+    Json::obj(vec![
+        ("report", Json::str("lr_curve")),
+        ("size", Json::str(&spec.base.size)),
+        ("steps", Json::num(spec.base.steps as f64)),
+        ("curves", Json::Arr(curves)),
+    ])
+}
+
 /// Machine-readable sweep report (`scale sweep --json`).
 pub fn report_json(spec: &SweepSpec, points: &[SweepPoint]) -> Json {
     let pts: Vec<Json> = points
@@ -513,5 +753,190 @@ mod tests {
         assert_eq!(TrialOutcome::Diverged.as_str(), "diverged");
         assert_eq!(TrialOutcome::Faulted.as_str(), "faulted");
         assert_eq!(TrialOutcome::Retried.as_str(), "retried");
+    }
+
+    // ---- verdict layer -----------------------------------------------
+
+    fn pt(opt: &str, lr: f64, seed: u64, ppl: f64) -> SweepPoint {
+        let diverged = !ppl.is_finite();
+        SweepPoint {
+            optimizer: opt.into(),
+            lr,
+            seed,
+            ppl,
+            final_loss_ema: ppl,
+            diverged,
+            outcome: if diverged { TrialOutcome::Diverged } else { TrialOutcome::Ok },
+            attempts: 1,
+        }
+    }
+
+    #[test]
+    fn welford_matches_hand_computed_fixture() {
+        // ppl {2, 4, 9}: mean 5, sample variance (9+1+16)/2 = 13 — all
+        // exactly representable, so the assertions are exact
+        let pts = [pt("scale", 1e-3, 0, 2.0), pt("scale", 1e-3, 1, 4.0), pt("scale", 1e-3, 2, 9.0)];
+        let cells = aggregate_cells(&pts);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!((c.n_trials, c.n_effective), (3, 3));
+        assert_eq!(c.mean_ppl, 5.0);
+        assert_eq!(c.stddev_ppl, 13f64.sqrt());
+        assert_eq!(c.ci95_ppl, 1.96 * 13f64.sqrt() / 3f64.sqrt());
+    }
+
+    #[test]
+    fn nonfinite_trials_are_excluded_with_explicit_n_effective() {
+        // the diverged middle seed must not poison the moments: the cell
+        // aggregates {2, 4} with mean 3, variance (1+1)/1 = 2
+        let pts = [
+            pt("scale", 1e-2, 0, 2.0),
+            pt("scale", 1e-2, 1, f64::INFINITY),
+            pt("scale", 1e-2, 2, 4.0),
+        ];
+        let cells = aggregate_cells(&pts);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!((c.n_trials, c.n_effective), (3, 2));
+        assert_eq!(c.mean_ppl, 3.0);
+        assert_eq!(c.stddev_ppl, 2f64.sqrt());
+        assert_eq!(c.ci95_ppl, 1.96 * 2f64.sqrt() / 2f64.sqrt());
+    }
+
+    #[test]
+    fn all_diverged_cell_is_infinite_mean_and_json_null() {
+        let pts = [pt("scale", 1e12, 0, f64::INFINITY), pt("scale", 1e12, 1, f64::INFINITY)];
+        let cells = aggregate_cells(&pts);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert_eq!((c.n_trials, c.n_effective), (2, 0));
+        assert!(c.mean_ppl.is_infinite());
+        assert_eq!((c.stddev_ppl, c.ci95_ppl), (0.0, 0.0));
+        // and the JSON guard: infinite mean becomes null, counts survive
+        let j = cell_json(c);
+        assert_eq!(j.get("mean_ppl").unwrap(), &Json::Null);
+        assert_eq!(j.get("n_effective").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("n_trials").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn single_and_zero_sample_cells_have_zero_spread() {
+        let pts = [pt("adam", 1e-3, 0, 7.0)];
+        let c = &aggregate_cells(&pts)[0];
+        assert_eq!((c.n_effective, c.mean_ppl), (1, 7.0));
+        assert_eq!((c.stddev_ppl, c.ci95_ppl), (0.0, 0.0));
+    }
+
+    #[test]
+    fn cells_keep_grid_order_and_split_on_lr_bits() {
+        let pts = [
+            pt("scale", 1e-3, 0, 2.0),
+            pt("scale", 1e-3, 1, 2.5),
+            pt("scale", 1e-2, 0, 3.0),
+            pt("adam", 1e-3, 0, 4.0),
+        ];
+        let cells = aggregate_cells(&pts);
+        let keys: Vec<(&str, f64)> = cells.iter().map(|c| (c.optimizer.as_str(), c.lr)).collect();
+        assert_eq!(keys, vec![("scale", 1e-3), ("scale", 1e-2), ("adam", 1e-3)]);
+        assert_eq!(cells[0].n_effective, 2);
+    }
+
+    #[test]
+    fn welford_tracks_two_pass_reference_on_random_cells() {
+        // property check against the naive two-pass mean/stddev
+        use crate::util::prop::{self, ensure};
+        prop::quick("welford-two-pass", |rng| {
+            let n = prop::usize_in(rng, 1, 12);
+            let ppls: Vec<f64> =
+                (0..n).map(|_| prop::f32_in(rng, 1.0, 100.0) as f64).collect();
+            let pts: Vec<SweepPoint> =
+                ppls.iter().enumerate().map(|(i, &p)| pt("scale", 1e-3, i as u64, p)).collect();
+            let c = &aggregate_cells(&pts)[0];
+            let mean = ppls.iter().sum::<f64>() / n as f64;
+            ensure((c.mean_ppl - mean).abs() < 1e-9 * mean.abs().max(1.0), "mean drift")?;
+            if n >= 2 {
+                let var = ppls.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                    / (n - 1) as f64;
+                ensure(
+                    (c.stddev_ppl - var.sqrt()).abs() < 1e-7,
+                    format!("stddev {} vs {}", c.stddev_ppl, var.sqrt()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn verdict_ranks_within_budget_first_then_mean_ppl() {
+        // adam wins on ppl but busts the budget; scale leads the
+        // within-budget class; an all-diverged optimizer sinks last
+        let pts = [
+            pt("adam", 1e-3, 0, 2.0),
+            pt("adam", 1e-3, 1, 2.2),
+            pt("scale", 1e-2, 0, 2.5),
+            pt("scale", 1e-2, 1, 2.7),
+            pt("scale", 1e-1, 0, 9.0),
+            pt("scale", 1e-1, 1, 9.5),
+            pt("sgd", 1e-2, 0, f64::INFINITY),
+            pt("sgd", 1e-2, 1, f64::INFINITY),
+        ];
+        let bytes = |opt: &str| -> anyhow::Result<usize> {
+            Ok(match opt {
+                "adam" => 100,
+                "scale" => 40,
+                _ => 0,
+            })
+        };
+        let spec = VerdictSpec { memory_budget: Some(50) };
+        let v = spec.verdict(&pts, bytes).unwrap();
+        let order: Vec<&str> = v.ranking.iter().map(|r| r.optimizer.as_str()).collect();
+        assert_eq!(order, vec!["scale", "sgd", "adam"]);
+        assert_eq!(v.ranking[0].best.mean_ppl, 2.6);
+        assert_eq!(v.ranking[0].best.lr, 1e-2, "best cell must be the low-LR one");
+        assert!(v.ranking[0].within_budget && v.ranking[1].within_budget);
+        assert!(!v.ranking[2].within_budget);
+        assert_eq!(v.ranking[2].state_bytes, 100);
+        // no budget: pure ppl order, diverged last via total_cmp
+        let v = VerdictSpec::default().verdict(&pts, bytes).unwrap();
+        let order: Vec<&str> = v.ranking.iter().map(|r| r.optimizer.as_str()).collect();
+        assert_eq!(order, vec!["adam", "scale", "sgd"]);
+        assert!(v.ranking.iter().all(|r| r.within_budget));
+        // the report round-trips through the JSON layer
+        let sweep = SweepSpec::new(TrainOptions::default());
+        let text = compare_report_json(&sweep, &VerdictSpec::default(), &v).to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("report").unwrap().as_str(), Some("compare"));
+        assert_eq!(back.get("budget_bytes").unwrap(), &Json::Null);
+        let rank = back.get("ranking").unwrap().as_arr().unwrap();
+        assert_eq!(rank.len(), 3);
+        assert_eq!(rank[0].get("optimizer").unwrap().as_str(), Some("adam"));
+        assert_eq!(rank[0].get("state_bytes").unwrap().as_usize(), Some(100));
+        let best = rank[2].get("best").unwrap();
+        assert_eq!(best.get("mean_ppl").unwrap(), &Json::Null, "diverged best is null");
+        assert_eq!(best.get("n_effective").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn lr_curve_report_groups_cells_per_optimizer_in_lr_order() {
+        let pts = [
+            pt("scale", 1e-3, 0, 2.0),
+            pt("scale", 1e-2, 0, 3.0),
+            pt("adam", 1e-3, 0, 4.0),
+            pt("adam", 1e-2, 0, f64::INFINITY),
+        ];
+        let spec = SweepSpec::new(TrainOptions::default());
+        let cells = aggregate_cells(&pts);
+        let text = lr_curve_report_json(&spec, &cells).to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert_eq!(back.get("report").unwrap().as_str(), Some("lr_curve"));
+        let curves = back.get("curves").unwrap().as_arr().unwrap();
+        assert_eq!(curves.len(), 2);
+        assert_eq!(curves[0].get("optimizer").unwrap().as_str(), Some("scale"));
+        let pts0 = curves[0].get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts0.len(), 2);
+        assert_eq!(pts0[0].get("lr").unwrap().as_f64(), Some(1e-3));
+        assert_eq!(pts0[1].get("mean_ppl").unwrap().as_f64(), Some(3.0));
+        let pts1 = curves[1].get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts1[1].get("mean_ppl").unwrap(), &Json::Null);
     }
 }

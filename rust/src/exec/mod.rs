@@ -58,9 +58,9 @@ pub mod manifest;
 pub(crate) mod model;
 pub(crate) mod ns;
 pub(crate) mod program;
-pub(crate) mod update;
+pub mod update;
 
 pub use manifest::native_manifest;
 pub use model::set_attn_pair_override;
 pub use program::{native_init, NativeProgram};
-pub use update::NATIVE_OPTIMIZERS;
+pub use update::{MomentumPolicy, NATIVE_OPTIMIZERS};

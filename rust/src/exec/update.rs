@@ -1,11 +1,15 @@
 //! Native `update_<opt>_<size>` execution: the per-parameter rule
 //! framework of `python/compile/optimizers.py` in pure Rust.
 //!
-//! Every optimizer is a plan — one [`Rule`] plus state-slot inventory
+//! Every optimizer is a plan — one `Rule` plus state-slot inventory
 //! per model parameter, in canonical order — and `execute` walks the
 //! plan with a cursor over the flat state list, exactly like the Python
 //! layer, so the state layout in checkpoints and the manifest is
-//! identical across executors.
+//! identical across executors. `plan_rules` is the single source of
+//! truth for that plan: [`state_slots`] (hence the manifest's
+//! `state_specs`, checkpoints, and the memory estimator) and
+//! [`UpdateProgram`] (hence the executable and the mesh
+//! [`UpdateProgram::shard_plan`]) both derive from it.
 //!
 //! The SCALE and Adam hot paths route through the `optim::rules`
 //! workspace kernels (`scale_plain_ws_par_with`, `scale_momentum_ws_par_with`,
@@ -14,28 +18,39 @@
 //! Table-13 `mix_*` ablations are pure compositions of the same
 //! col/row/momentum kernels selected per parameter kind (the property
 //! tests below pin each composition bit-for-bit across pool sizes and
-//! thresholds). The projection optimizers (GaLore/Fira/APOLLO) use a
-//! deterministic PCG sketch in place of JAX's `fold_in` key schedule:
-//! same construction, different (but fixed) random bits, refreshed on
-//! the same epoch boundary (`(step-1) / 50`).
+//! thresholds). The frontier family generalizes the paper's rule along
+//! two axes: the AdaPM optimizers (`adapm_*`) turn SCALE's hardcoded
+//! lm_head momentum into a declarative [`MomentumPolicy`] resolved per
+//! parameter at plan-build time, and `adams` (AdamS) replaces the
+//! column-norm denominator with the momentum itself
+//! (`optim::rules::momentum_norm` — no second-moment buffer). The
+//! projection optimizers (GaLore/Fira/APOLLO) use a deterministic PCG
+//! sketch in place of JAX's `fold_in` key schedule: same construction,
+//! different (but fixed) random bits, refreshed on the same epoch
+//! boundary (`(step-1) / 50`).
 
 use crate::exec::gemm::{axpy, matmul_nn, matmul_tn};
 use crate::exec::ns::{buf, ns_orth, NsWs, NS_STEPS};
 use crate::optim::colnorm::{rownorm_into, sign_into, NormWorkspace};
-use crate::optim::rules::{self, scale_momentum_ws_par_with, scale_plain_ws_par_with, AdamHp};
+use crate::optim::rules::{
+    self, momentum_norm_par_with, scale_momentum_ws_par_with, scale_plain_ws_par_with, AdamHp,
+};
 use crate::parallel::WorkerPool;
-use crate::runtime::artifact::{SizeInfo, StateSlot};
+use crate::runtime::artifact::{ParamSpec, SizeInfo, StateSlot};
 use crate::runtime::Tensor;
 use crate::util::rng::Pcg;
 
-pub(crate) const BETA: f32 = 0.9;
+/// EMA coefficient (β₁ = 0.9) shared by every momentum rule.
+pub const BETA: f32 = 0.9;
 const SPAM_RESET: u32 = 500;
 const SPAM_THETA: f32 = 2.0;
 const PROJ_REFRESH: u32 = 50;
 const PROJ_KEY: u64 = 0xA90110;
 
 /// Optimizers the native executor can run — the complete Python
-/// registry, including the Table-13 `mix_*` ablations.
+/// registry (Table-13 `mix_*` ablations included) plus the frontier
+/// family: the AdaPM partial-momentum policies (`adapm_*`, one per
+/// [`MomentumPolicy`]) and AdamS (`adams`, momentum-as-normalizer).
 pub const NATIVE_OPTIMIZERS: &[&str] = &[
     "sgd",
     "sgd_momentum",
@@ -58,7 +73,91 @@ pub const NATIVE_OPTIMIZERS: &[&str] = &[
     "mix_row_first_col_rest",
     "mix_larger_dim",
     "mix_row_last_col_rest",
+    "adapm_last",
+    "adapm_first_last",
+    "adapm_embed_head",
+    "adapm_top2",
+    "adams",
 ];
+
+/// Per-layer momentum placement (AdaPM, arXiv:2510.09103): which
+/// matrices carry an EMA momentum buffer, generalizing SCALE's
+/// hardcoded "momentum on the LM head only" into a policy axis. The
+/// selected matrices run the column-normalized momentum rule, the rest
+/// run the stateless column-norm rule, and vectors always keep Adam —
+/// so `adapm_last` is the paper's SCALE bit for bit and
+/// `adapm_embed_head` is `scale_first_last` bit for bit (the policy
+/// provably generalizes, not forks, the hardcoded tables).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MomentumPolicy {
+    /// Momentum on the last matrix in canonical order (the LM head) —
+    /// exactly the paper's SCALE rule.
+    Last,
+    /// Momentum on the first transformer block's matrices plus the last
+    /// matrix: the "first and last layers" reading of partial momentum.
+    FirstLast,
+    /// Momentum on the embedding and the head (by parameter kind) —
+    /// exactly the paper's `scale_first_last` ablation.
+    EmbedHead,
+    /// Momentum on the K matrices where gradient variance concentrates.
+    /// Fig. 4 shows variance growing toward the output, so the
+    /// deterministic structural proxy is "the last K matrices in
+    /// canonical order" — keeping the state layout a pure function of
+    /// `(optimizer, size)` as every plan consumer requires.
+    TopKVariance(usize),
+}
+
+impl MomentumPolicy {
+    /// The momentum mask over `params` in canonical order. Only 2-D
+    /// parameters are ever selected; vectors keep Adam regardless.
+    pub fn selects(self, params: &[ParamSpec]) -> Vec<bool> {
+        let is_mat: Vec<bool> = params.iter().map(|p| p.shape.len() == 2).collect();
+        let last = is_mat.iter().rposition(|&b| b);
+        let mut sel = vec![false; params.len()];
+        match self {
+            MomentumPolicy::Last => {
+                if let Some(i) = last {
+                    sel[i] = true;
+                }
+            }
+            MomentumPolicy::FirstLast => {
+                for (i, p) in params.iter().enumerate() {
+                    if is_mat[i] && p.layer == "block0" {
+                        sel[i] = true;
+                    }
+                }
+                if let Some(i) = last {
+                    sel[i] = true;
+                }
+            }
+            MomentumPolicy::EmbedHead => {
+                for (i, p) in params.iter().enumerate() {
+                    if is_mat[i] && (p.kind == "embed" || p.kind == "head") {
+                        sel[i] = true;
+                    }
+                }
+            }
+            MomentumPolicy::TopKVariance(k) => {
+                for i in (0..params.len()).rev().filter(|&i| is_mat[i]).take(k) {
+                    sel[i] = true;
+                }
+            }
+        }
+        sel
+    }
+}
+
+/// The [`MomentumPolicy`] behind a named optimizer, when it belongs to
+/// the AdaPM partial-momentum family.
+pub fn partial_momentum_policy(optimizer: &str) -> Option<MomentumPolicy> {
+    Some(match optimizer {
+        "adapm_last" => MomentumPolicy::Last,
+        "adapm_first_last" => MomentumPolicy::FirstLast,
+        "adapm_embed_head" => MomentumPolicy::EmbedHead,
+        "adapm_top2" => MomentumPolicy::TopKVariance(2),
+        _ => return None,
+    })
+}
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Rule {
@@ -81,6 +180,13 @@ enum Rule {
     Swan,
     Galore { residual: bool },
     Apollo { rank1: bool },
+    /// AdaPM: the column-norm rule with the momentum bit resolved from
+    /// the optimizer's [`MomentumPolicy`] at plan-build time — `true`
+    /// is exactly `ScaleMomentum`, `false` exactly `ScalePlain`.
+    PartialMomentum { momentum: bool },
+    /// AdamS: momentum as the normalizer, `p -= lr·m/√(β₂m²+ε)` — one
+    /// state buffer, no second moment.
+    MomentumNorm,
 }
 
 fn rank_for(shape: &[usize]) -> usize {
@@ -97,13 +203,16 @@ impl Rule {
             | Rule::LargerPlain
             | Rule::SignSgd
             | Rule::NsPlain
-            | Rule::Swan => vec![],
+            | Rule::Swan
+            | Rule::PartialMomentum { momentum: false } => vec![],
             Rule::SgdMomentum
             | Rule::ScaleMomentum
             | Rule::RowNormMomentum
             | Rule::LargerMomentum
             | Rule::NsMomentum
-            | Rule::Muon => {
+            | Rule::Muon
+            | Rule::PartialMomentum { momentum: true }
+            | Rule::MomentumNorm => {
                 vec![("m", shape.to_vec())]
             }
             Rule::Adam => vec![("m", shape.to_vec()), ("v", shape.to_vec())],
@@ -168,13 +277,49 @@ fn rule_for(table: &[Rule; 4], kind: &str) -> Rule {
     }
 }
 
-/// The flat state inventory for `(optimizer, size)` — the single source
-/// of truth behind the native manifest's `state_specs`.
-pub(crate) fn state_slots(optimizer: &str, size: &SizeInfo) -> Option<Vec<StateSlot>> {
+/// The per-parameter rule plan for `(optimizer, size)`, in canonical
+/// parameter order — the single source of truth every consumer derives
+/// from: [`state_slots`] (hence the manifest's `state_specs`,
+/// checkpoints, and the memory estimator) and [`UpdateProgram`] (hence
+/// the executable and the mesh shard plan). Policy-driven optimizers
+/// resolve their [`MomentumPolicy`] mask here, so a policy change can
+/// never desynchronize the state layout from the executed rules.
+fn plan_rules(optimizer: &str, size: &SizeInfo) -> Option<Vec<Rule>> {
+    if let Some(policy) = partial_momentum_policy(optimizer) {
+        let sel = policy.selects(&size.params);
+        return Some(
+            size.params
+                .iter()
+                .zip(&sel)
+                .map(|(p, &momentum)| {
+                    if p.kind == "vector" {
+                        Rule::Adam
+                    } else {
+                        Rule::PartialMomentum { momentum }
+                    }
+                })
+                .collect(),
+        );
+    }
+    if optimizer == "adams" {
+        return Some(
+            size.params
+                .iter()
+                .map(|p| if p.kind == "vector" { Rule::Adam } else { Rule::MomentumNorm })
+                .collect(),
+        );
+    }
     let table = rule_table(optimizer)?;
+    Some(size.params.iter().map(|p| rule_for(&table, &p.kind)).collect())
+}
+
+/// The flat state inventory for `(optimizer, size)` — the single source
+/// of truth behind the native manifest's `state_specs`, derived from
+/// the same `plan_rules` plan the executor runs.
+pub fn state_slots(optimizer: &str, size: &SizeInfo) -> Option<Vec<StateSlot>> {
+    let rules = plan_rules(optimizer, size)?;
     let mut out = Vec::new();
-    for p in &size.params {
-        let rule = rule_for(&table, &p.kind);
+    for (p, rule) in size.params.iter().zip(&rules) {
         for (suffix, shape) in rule.slots(&p.shape) {
             out.push(StateSlot {
                 name: format!("{}.{}", p.name, suffix),
@@ -186,7 +331,7 @@ pub(crate) fn state_slots(optimizer: &str, size: &SizeInfo) -> Option<Vec<StateS
 }
 
 /// Reusable scratch for one update program (behind the program's mutex).
-pub(crate) struct UpdateWs {
+pub struct UpdateWs {
     norm: NormWorkspace,
     ns: NsWs,
     dir: Vec<f32>,
@@ -222,7 +367,7 @@ impl Default for UpdateWs {
 
 /// One compiled update plan: rules + slot counts aligned with the
 /// parameter list.
-pub(crate) struct UpdateProgram {
+pub struct UpdateProgram {
     rules: Vec<Rule>,
     shapes: Vec<Vec<usize>>,
     slot_counts: Vec<usize>,
@@ -237,26 +382,25 @@ pub(crate) struct UpdateProgram {
 /// `(optimizer, size, ranks)` — the supervisor and every worker compute
 /// the identical plan independently, so no plan ever travels the wire.
 #[derive(Debug, Clone, PartialEq, Eq)]
-pub(crate) struct ShardPlan {
+pub struct ShardPlan {
     pub params: Vec<std::ops::Range<usize>>,
     pub state: Vec<std::ops::Range<usize>>,
 }
 
 impl UpdateProgram {
+    /// Compile the plan for `(optimizer, size)`. Errors when the
+    /// optimizer has no native implementation.
     pub fn new(optimizer: &str, size: &SizeInfo) -> anyhow::Result<UpdateProgram> {
-        let Some(table) = rule_table(optimizer) else {
+        let Some(rules) = plan_rules(optimizer, size) else {
             anyhow::bail!("optimizer {optimizer:?} has no native implementation");
         };
-        let mut rules = Vec::new();
         let mut shapes = Vec::new();
         let mut slot_counts = Vec::new();
         let mut n_state = 0;
-        for p in &size.params {
-            let rule = rule_for(&table, &p.kind);
+        for (p, rule) in size.params.iter().zip(&rules) {
             let slots = rule.slots(&p.shape);
             slot_counts.push(slots.len());
             n_state += slots.len();
-            rules.push(rule);
             shapes.push(p.shape.clone());
         }
         Ok(UpdateProgram {
@@ -397,9 +541,16 @@ impl UpdateProgram {
                 Rule::ScalePlain => {
                     scale_plain_ws_par_with(pool, p, g, di, dn, lr, norm, min_ops);
                 }
-                Rule::ScaleMomentum => {
+                Rule::ScaleMomentum | Rule::PartialMomentum { momentum: true } => {
                     let m = state_out[cursor].f32s_mut();
                     scale_momentum_ws_par_with(pool, p, m, g, di, dn, lr, BETA, norm, min_ops);
+                }
+                Rule::PartialMomentum { momentum: false } => {
+                    scale_plain_ws_par_with(pool, p, g, di, dn, lr, norm, min_ops);
+                }
+                Rule::MomentumNorm => {
+                    let m = state_out[cursor].f32s_mut();
+                    momentum_norm_par_with(pool, p, m, g, di, dn, lr, hp, min_ops);
                 }
                 Rule::RowNorm => {
                     let d = buf(dir, g.len());
@@ -1025,5 +1176,116 @@ mod tests {
                 "{opt}: mix state must equal SCALE's (vector Adam + head momentum)"
             );
         }
+    }
+
+    // ---- frontier family: AdaPM policies + AdamS ---------------------
+
+    #[test]
+    fn adapm_policies_bit_match_the_hardcoded_scale_plans() {
+        // the ISSUE acceptance property: the policy axis generalizes,
+        // not forks, the paper's tables — `last` IS scale, `embed+head`
+        // IS scale_first_last, output for output, state for state
+        for (policy_opt, table_opt) in
+            [("adapm_last", "scale"), ("adapm_embed_head", "scale_first_last")]
+        {
+            let size = toy_size();
+            assert_eq!(
+                state_slots(policy_opt, &size).unwrap(),
+                state_slots(table_opt, &size).unwrap(),
+                "{policy_opt}: state layout must equal {table_opt}'s"
+            );
+            let (a, _) = run_update(policy_opt, 2e-2, 1.0);
+            let (b, _) = run_update(table_opt, 2e-2, 1.0);
+            assert_eq!(a.len(), b.len());
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.f32s(), y.f32s(), "{policy_opt} vs {table_opt}: output {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn momentum_policy_masks_are_pinned() {
+        // toy order: embed(2-D), attn_norm(vector), wq(block0 2-D),
+        // lm_head(2-D). FirstLast and TopKVariance(2) coincide here
+        // (block0 has a single matrix); they diverge on real sizes,
+        // which frontier_differential pins via the state tables.
+        let size = toy_size();
+        let cases = [
+            (MomentumPolicy::Last, vec![false, false, false, true]),
+            (MomentumPolicy::FirstLast, vec![false, false, true, true]),
+            (MomentumPolicy::EmbedHead, vec![true, false, false, true]),
+            (MomentumPolicy::TopKVariance(2), vec![false, false, true, true]),
+            (MomentumPolicy::TopKVariance(99), vec![true, false, true, true]),
+        ];
+        for (policy, want) in cases {
+            assert_eq!(policy.selects(&size.params), want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn frontier_state_tables_are_pinned() {
+        let size = toy_size();
+        let cases: [(&str, Vec<&str>); 5] = [
+            ("adapm_last", vec!["block0.attn_norm.m", "block0.attn_norm.v", "lm_head.m"]),
+            (
+                "adapm_first_last",
+                vec!["block0.attn_norm.m", "block0.attn_norm.v", "block0.wq.m", "lm_head.m"],
+            ),
+            (
+                "adapm_embed_head",
+                vec!["embed.m", "block0.attn_norm.m", "block0.attn_norm.v", "lm_head.m"],
+            ),
+            (
+                "adapm_top2",
+                vec!["block0.attn_norm.m", "block0.attn_norm.v", "block0.wq.m", "lm_head.m"],
+            ),
+            (
+                "adams",
+                vec![
+                    "embed.m",
+                    "block0.attn_norm.m",
+                    "block0.attn_norm.v",
+                    "block0.wq.m",
+                    "lm_head.m",
+                ],
+            ),
+        ];
+        for (opt, want) in cases {
+            let slots = state_slots(opt, &size).unwrap();
+            let names: Vec<&str> = slots.iter().map(|s| s.name.as_str()).collect();
+            assert_eq!(names, want, "{opt}");
+            let prog = UpdateProgram::new(opt, &size).unwrap();
+            assert_eq!(prog.n_state(), slots.len(), "{opt}: plan/state desync");
+        }
+    }
+
+    #[test]
+    fn adams_rule_routes_through_momentum_norm_kernel() {
+        // executable path vs direct kernel calls, same seed-5 draws
+        let (out, _np) = run_update("adams", 0.02, 1.0);
+        let size = toy_size();
+        let mut rng = crate::util::rng::Pcg::new(5);
+        let mut params: Vec<Vec<f32>> = Vec::new();
+        for p in &size.params {
+            params.push((0..p.numel()).map(|_| rng.normal() as f32).collect());
+        }
+        let mut grads: Vec<Vec<f32>> = Vec::new();
+        for p in &size.params {
+            grads.push((0..p.numel()).map(|_| 0.1 * rng.normal() as f32).collect());
+        }
+        let hp = AdamHp::default();
+        // embed (16x4) and wq (4x4) and lm_head (4x16): momentum_norm
+        for (i, (di, dn)) in [(0usize, (16usize, 4usize)), (2, (4, 4)), (3, (4, 16))] {
+            let mut want = params[i].clone();
+            let mut m = vec![0.0f32; di * dn];
+            rules::momentum_norm(&mut want, &mut m, &grads[i], 0.02, hp);
+            assert_eq!(out[i].f32s(), &want[..], "param {i}");
+        }
+        // vector (attn_norm): Adam
+        let mut want_vec = params[1].clone();
+        let mut vm = vec![0.0f32; 4];
+        let mut vv = vec![0.0f32; 4];
+        rules::adam(&mut want_vec, &mut vm, &mut vv, &grads[1], 0.02, hp, 1);
+        assert_eq!(out[1].f32s(), &want_vec[..]);
     }
 }

@@ -30,8 +30,12 @@ pub fn default_lr(optimizer: &str) -> f64 {
         // parameters at the same rate as the colnorm family
         "sgd_ns" | "ns_mmt_last" => 1e-1,
         "sign_sgd" => 1e-3,
-        // column/row-normalized SGD family, SCALE, and the Table-13
-        // mix_* ablations (all norm-bounded updates of the same scale)
+        // AdamS: m/sqrt(b2*m^2+eps) is sign-like (per-entry magnitude
+        // ~1/sqrt(b2)), so it runs at Adam-family rates
+        "adams" => 1e-3,
+        // column/row-normalized SGD family, SCALE, the adapm_* partial-
+        // momentum policies, and the Table-13 mix_* ablations (all
+        // norm-bounded updates of the same scale)
         _ => 1e-2,
     }
 }

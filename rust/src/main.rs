@@ -10,6 +10,8 @@
 //!   variance         Fig.-4 style per-layer variance probe
 //!   sweep            concurrent multi-axis grid (optimizer x lr x seed)
 //!   sweep-lr         LR sweep for one optimizer
+//!   compare          multi-seed verdict: mean/CI ranking at a memory budget
+//!   lr-curve         Fig.-8 LR-sensitivity curves as a JSON artifact
 //!   launch           fault-tolerant multi-process mesh training
 //!   worker           internal: one mesh rank (spawned by launch)
 //!   ablate-momentum  Theorem 2.1 noisy-quadratic placement study
@@ -56,6 +58,8 @@ fn run() -> anyhow::Result<()> {
         "variance" => cmd_variance(&mut args),
         "sweep" => cmd_sweep_grid(&mut args),
         "sweep-lr" => cmd_sweep(&mut args),
+        "compare" => cmd_compare(&mut args),
+        "lr-curve" => cmd_lr_curve(&mut args),
         "launch" => cmd_launch(&mut args),
         "worker" => cmd_worker(&mut args),
         "ablate-momentum" => cmd_ablate(&mut args),
@@ -100,6 +104,18 @@ usage: scale <subcommand> [options]
                   report on stdout; --retries re-runs trials that hit
                   transient faults before slotting them as faulted
   sweep-lr        --optimizer scale --size s130m --steps 100
+  compare         --optimizers scale,adapm_last,adams,adam --seeds 3
+                  [--size tiny] [--steps N] [--lrs 1e-3,1e-2]
+                  [--budget BYTES] [--json]   multi-seed statistical
+                  verdict: per-(optimizer, lr) mean/stddev/95% CI over
+                  seeds 0..N, ranked by best mean ppl among optimizers
+                  whose measured state bytes fit --budget (0 = none);
+                  without --lrs each optimizer runs its tuned default LR
+  lr-curve        --optimizers scale,adam --seeds 2 [--size tiny]
+                  [--steps N] [--lrs ...] [--out FILE] [--json]
+                  Fig.-8 LR-sensitivity curves (multi-seed mean/CI per
+                  LR on the paper grid); --out writes the JSON artifact
+                  and re-parses it before reporting success
   launch          --ranks 2 --size s60m --optimizer scale --steps 100
                   fault-tolerant multi-process mesh training: forks one
                   `scale worker` per rank, localhost TCP with CRC-framed
@@ -531,6 +547,198 @@ fn cmd_sweep(args: &mut Args) -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Parse `--lrs` / `--seeds N` style axes shared by compare/lr-curve:
+/// `--seeds` here is a *count* (seeds 0..N), not a list — the verdict
+/// layer owns the aggregation across them.
+fn lrs_arg(args: &mut Args) -> anyhow::Result<Vec<f64>> {
+    csv_list(args, "lrs")
+        .iter()
+        .map(|s| {
+            s.parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("--lrs expects numbers, got {s:?}"))
+        })
+        .collect()
+}
+
+/// `scale compare`: the multi-seed statistical verdict. Runs every
+/// (optimizer, lr) cell across seeds 0..N, folds the finite trials into
+/// mean/stddev/95% CI (deterministic accumulation order — bit-stable
+/// across pool sizes), and ranks optimizers by best mean ppl among
+/// those whose measured state bytes fit `--budget`.
+fn cmd_compare(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::coordinator::sweep::{compare_report_json, SweepSpec, VerdictSpec};
+    let dir = artifact_dir(args);
+    let size = args.get_or("size", "tiny");
+    let steps = args.get_usize("steps", 40)?;
+    let shards = args.get_usize("shards", 4)?;
+    let eval_batches = args.get_usize("eval-batches", 8)?;
+    let max_concurrent = args.get_usize("max-concurrent", 0)?;
+    let retries = args.get_usize("retries", 0)?;
+    let n_seeds = args.get_usize("seeds", 3)?;
+    let budget = args.get_usize("budget", 0)?;
+    let mut optimizers = csv_list(args, "optimizers");
+    if optimizers.is_empty() {
+        optimizers = ["scale", "adapm_last", "adams", "adam"].map(String::from).to_vec();
+    }
+    let lrs = lrs_arg(args)?;
+    let json = args.flag("json");
+    args.finish()?;
+    anyhow::ensure!(n_seeds > 0, "--seeds must be at least 1");
+
+    // without --lrs each optimizer trains at its own tuned default LR
+    let lr_for = if lrs.is_empty() {
+        Some(harness::default_lr as fn(&str) -> f64)
+    } else {
+        None
+    };
+    let engine = Engine::new(&dir)?;
+    let base = TrainOptions {
+        size,
+        optimizer: optimizers[0].clone(),
+        steps,
+        shards,
+        eval_batches,
+        quiet: true,
+        ..TrainOptions::default()
+    };
+    let spec = SweepSpec {
+        base,
+        lrs,
+        optimizers,
+        seeds: (0..n_seeds as u64).collect(),
+        lr_for,
+        max_concurrent,
+        retries,
+    };
+    for opt in &spec.optimizers {
+        engine.manifest.artifact(&format!("update_{opt}_{}", spec.base.size))?;
+    }
+    let pts = spec.run(&engine)?;
+    let vspec = VerdictSpec { memory_budget: (budget > 0).then_some(budget) };
+    let verdict =
+        vspec.verdict(&pts, |opt| measured_state_bytes(&engine.manifest, opt, &spec.base.size))?;
+    if json {
+        println!("{}", compare_report_json(&spec, &vspec, &verdict));
+        return Ok(());
+    }
+    let mut t = Table::new(
+        &format!(
+            "compare — {} optimizers x {n_seeds} seeds ({steps} steps, size {})",
+            spec.optimizers.len(),
+            spec.base.size
+        ),
+        &["rank", "optimizer", "best lr", "mean ppl", "ci95", "n_eff", "state bytes", "fits"],
+    );
+    for (i, r) in verdict.ranking.iter().enumerate() {
+        t.row(vec![
+            format!("{}", i + 1),
+            r.optimizer.clone(),
+            format!("{:.0e}", r.best.lr),
+            harness::ppl_cell(r.best.mean_ppl),
+            if r.best.n_effective >= 2 { format!("±{:.3}", r.best.ci95_ppl) } else { "-".into() },
+            format!("{}/{}", r.best.n_effective, r.best.n_trials),
+            format!("{}", r.state_bytes),
+            if r.within_budget { "yes".into() } else { "no".into() },
+        ]);
+    }
+    if budget > 0 {
+        t.footnote(&format!("budget {budget} B: optimizers over budget rank below all that fit"));
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+/// `scale lr-curve`: Fig.-8 LR sensitivity as a committed JSON
+/// artifact. Multi-seed mean/CI per (optimizer, lr) on the paper grid;
+/// `--out` writes the artifact and re-parses the written bytes before
+/// reporting success, refusing to emit an all-diverged curve.
+fn cmd_lr_curve(args: &mut Args) -> anyhow::Result<()> {
+    use scale_llm::coordinator::sweep::{
+        aggregate_cells, lr_curve_report_json, paper_lr_grid, SweepSpec,
+    };
+    use scale_llm::util::json;
+    let dir = artifact_dir(args);
+    let size = args.get_or("size", "tiny");
+    let steps = args.get_usize("steps", 40)?;
+    let shards = args.get_usize("shards", 4)?;
+    let eval_batches = args.get_usize("eval-batches", 8)?;
+    let max_concurrent = args.get_usize("max-concurrent", 0)?;
+    let n_seeds = args.get_usize("seeds", 2)?;
+    let mut optimizers = csv_list(args, "optimizers");
+    if optimizers.is_empty() {
+        optimizers = ["scale", "adam"].map(String::from).to_vec();
+    }
+    let mut lrs = lrs_arg(args)?;
+    if lrs.is_empty() {
+        lrs = paper_lr_grid();
+    }
+    let out = args.get("out").map(str::to_string);
+    let json_flag = args.flag("json");
+    args.finish()?;
+    anyhow::ensure!(n_seeds > 0, "--seeds must be at least 1");
+
+    let engine = Engine::new(&dir)?;
+    let base = TrainOptions {
+        size,
+        optimizer: optimizers[0].clone(),
+        steps,
+        shards,
+        eval_batches,
+        quiet: true,
+        ..TrainOptions::default()
+    };
+    let spec = SweepSpec {
+        base,
+        lrs,
+        optimizers,
+        seeds: (0..n_seeds as u64).collect(),
+        lr_for: None,
+        max_concurrent,
+        retries: 0,
+    };
+    for opt in &spec.optimizers {
+        engine.manifest.artifact(&format!("update_{opt}_{}", spec.base.size))?;
+    }
+    let pts = spec.run(&engine)?;
+    let cells = aggregate_cells(&pts);
+    // an artifact where every cell diverged carries no curve at all —
+    // refuse it the same way the bench refuses an empty history append
+    anyhow::ensure!(
+        cells.iter().any(|c| c.n_effective > 0),
+        "every (optimizer, lr) cell diverged — refusing to emit an all-null LR curve"
+    );
+    let report = lr_curve_report_json(&spec, &cells);
+    if let Some(path) = &out {
+        let mut text = report.to_string();
+        text.push('\n');
+        std::fs::write(path, &text)?;
+        // the committed artifact must round-trip through our own parser
+        let back = json::parse(&std::fs::read_to_string(path)?)
+            .map_err(|e| anyhow::anyhow!("written artifact {path} does not re-parse: {e}"))?;
+        anyhow::ensure!(back == report, "written artifact {path} round-trips to different JSON");
+        println!("wrote {path} ({} curves)", spec.optimizers.len());
+    }
+    if json_flag {
+        println!("{report}");
+    } else if out.is_none() {
+        let mut t = Table::new(
+            &format!("LR curves — {n_seeds} seeds ({steps} steps, size {})", spec.base.size),
+            &["optimizer", "lr", "mean ppl", "ci95", "n_eff"],
+        );
+        for c in &cells {
+            t.row(vec![
+                c.optimizer.clone(),
+                format!("{:.0e}", c.lr),
+                harness::ppl_cell(c.mean_ppl),
+                if c.n_effective >= 2 { format!("±{:.3}", c.ci95_ppl) } else { "-".into() },
+                format!("{}/{}", c.n_effective, c.n_trials),
+            ]);
+        }
+        println!("{}", t.render());
+    }
     Ok(())
 }
 

@@ -96,13 +96,22 @@ impl MemoryModel {
             .iter()
             .map(|&(a, b)| (rank * a.min(b)) as f64)
             .sum();
+        // AdaPM-style partial-momentum policies: one momentum slot per
+        // selected matrix, nothing else. The selections mirror
+        // `MomentumPolicy::selects` over the canonical parameter order
+        // (embed, block0.., lm_head), translated to paper-scale matrices.
+        let first_layer: f64 = self.hidden[..7].iter().map(|&(a, b)| (a * b) as f64).sum();
+        let last_hidden = self.hidden.last().map_or(0.0, |&(a, b)| (a * b) as f64);
         match method {
             "sgd" => 0.0,
             "adam" | "stable_spam" => 2.0 * total,
             "muon" => total,
             "swan" => 2.0 * first_last,
-            "scale" => self.head as f64,
-            "scale_first_last" => first_last,
+            "scale" | "adapm_last" => self.head as f64,
+            "scale_first_last" | "adapm_embed_head" => first_last,
+            "adapm_first_last" => first_layer + self.head as f64,
+            "adapm_top2" => last_hidden + self.head as f64,
+            "adams" => total,
             "sgd_momentum" => total,
             "apollo" | "apollo_mini" => 2.0 * first_last + lowrank_mv,
             "galore" | "fira" => 2.0 * first_last + lowrank_mv + projector,
@@ -285,6 +294,27 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn frontier_memory_arms_match_their_policies() {
+        let m = MemoryModel::new(dims1b());
+        // `adapm_last` selects exactly the lm_head — SCALE's footprint.
+        assert_eq!(m.state_elems("adapm_last", 0), m.state_elems("scale", 0));
+        // `adapm_embed_head` selects embed + head — scale_first_last's.
+        assert_eq!(m.state_elems("adapm_embed_head", 0), m.state_elems("scale_first_last", 0));
+        // AdamS keeps one momentum slot everywhere — SGD-momentum's bill.
+        assert_eq!(m.state_elems("adams", 0), m.state_elems("sgd_momentum", 0));
+        // first_last = block0's seven matrices + head, strictly between
+        // the head-only and the everything policies
+        let fl = m.state_elems("adapm_first_last", 0);
+        let expect: f64 =
+            m.hidden[..7].iter().map(|&(a, b)| (a * b) as f64).sum::<f64>() + m.head as f64;
+        assert_eq!(fl, expect);
+        assert!(m.state_elems("adapm_last", 0) < fl && fl < m.state_elems("adams", 0));
+        // top2 = last hidden matrix + head
+        let (a, b) = *m.hidden.last().unwrap();
+        assert_eq!(m.state_elems("adapm_top2", 0), (a * b + m.head) as f64);
     }
 
     #[test]

@@ -259,6 +259,70 @@ pub fn scale_momentum_ws_par_with(
     pool.run(tasks);
 }
 
+/// AdamS rule (arXiv:2505.16363): momentum itself is the normalizer —
+/// `m = b1*m + (1-b1)*g; p -= lr * m / sqrt(b2*m² + eps)`. Sign-free,
+/// elementwise, and crucially *stateless beyond `m`*: there is no
+/// second-moment buffer, so the memory footprint matches SGD-momentum
+/// while the per-coordinate step size stays Adam-bounded (|update| ≤
+/// lr/√b2). No bias correction — the b2·m² denominator self-scales.
+pub fn momentum_norm(p: &mut [f32], m: &mut [f32], g: &[f32], lr: f32, hp: AdamHp) {
+    for ((pi, mi), gi) in p.iter_mut().zip(m.iter_mut()).zip(g) {
+        *mi = hp.b1 * *mi + (1.0 - hp.b1) * gi;
+        *pi -= lr * *mi / (hp.b2 * *mi * *mi + hp.eps).sqrt();
+    }
+}
+
+/// Parallel form of [`momentum_norm`]: purely elementwise, so the tiling
+/// partitions disjoint row blocks and never reassociates anything —
+/// bit-identical to the sequential rule for every pool size. Matrices
+/// below the calibrated [`crate::parallel::tuned_min_ops`] threshold run
+/// the sequential rule inline.
+pub fn momentum_norm_par(
+    pool: &WorkerPool,
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    hp: AdamHp,
+) {
+    let min_elems = crate::parallel::tuned_min_ops();
+    momentum_norm_par_with(pool, p, m, g, d_in, d_out, lr, hp, min_elems)
+}
+
+/// [`momentum_norm_par`] with an explicit threshold; the threshold
+/// selects a path, never a result.
+#[allow(clippy::too_many_arguments)]
+pub fn momentum_norm_par_with(
+    pool: &WorkerPool,
+    p: &mut [f32],
+    m: &mut [f32],
+    g: &[f32],
+    d_in: usize,
+    d_out: usize,
+    lr: f32,
+    hp: AdamHp,
+    min_elems: usize,
+) {
+    assert_eq!(p.len(), d_in * d_out);
+    assert_eq!(m.len(), d_in * d_out);
+    assert_eq!(g.len(), d_in * d_out);
+    if d_in * d_out < min_elems.max(1) || pool.parallelism() == 1 {
+        return momentum_norm(p, m, g, lr, hp);
+    }
+    let rows = tile_width(d_in, pool.parallelism());
+    let mut tasks = Vec::new();
+    for (ti, (p_chunk, m_chunk)) in
+        p.chunks_mut(rows * d_out).zip(m.chunks_mut(rows * d_out)).enumerate()
+    {
+        let start = ti * rows * d_out;
+        let g_chunk = &g[start..start + p_chunk.len()];
+        tasks.push(move || momentum_norm(p_chunk, m_chunk, g_chunk, lr, hp));
+    }
+    pool.run(tasks);
+}
+
 /// SCALE stateless rule: `p -= lr * C(g)` over a (d_in, d_out) matrix.
 /// Allocating wrapper over [`scale_plain_ws`].
 pub fn scale_plain(p: &mut [f32], g: &[f32], d_in: usize, d_out: usize, lr: f32) {
@@ -468,6 +532,61 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn momentum_norm_par_bit_identical_over_pools_and_thresholds() {
+        // same acceptance property for the AdamS kernel: the tiled form
+        // must reproduce the sequential rule bit for bit across pool
+        // sizes, shapes, and thresholds straddling the numel gate
+        let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(5)];
+        prop::check("momentum-norm-par-bit-identical", 32, |rng| {
+            let (di, dn) = (prop::usize_in(rng, 1, 40), prop::usize_in(rng, 1, 40));
+            let g = prop::matrix(rng, di, dn, prop::f32_in(rng, 0.1, 5.0));
+            let p0 = prop::matrix(rng, di, dn, 1.0);
+            let m0 = prop::matrix(rng, di, dn, 0.3);
+            let lr = prop::f32_in(rng, 1e-4, 0.5);
+            let hp = AdamHp::default();
+            let numel = di * dn;
+
+            let (mut p_want, mut m_want) = (p0.clone(), m0.clone());
+            momentum_norm(&mut p_want, &mut m_want, &g, lr, hp);
+            ensure(p_want.iter().all(|x| x.is_finite()), "non-finite update")?;
+
+            for pool in &pools {
+                for min_elems in [0usize, numel, numel + 1] {
+                    let (mut p, mut m) = (p0.clone(), m0.clone());
+                    momentum_norm_par_with(pool, &mut p, &mut m, &g, di, dn, lr, hp, min_elems);
+                    ensure(
+                        m == m_want,
+                        format!("momentum state differs: {di}x{dn}, min {min_elems}"),
+                    )?;
+                    ensure(
+                        p == p_want,
+                        format!(
+                            "momentum_norm_par differs: {di}x{dn}, {} workers, min {min_elems}",
+                            pool.workers()
+                        ),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn momentum_norm_step_is_adam_bounded() {
+        // the AdamS denominator caps every coordinate: |Δp| ≤ lr/√b2
+        let hp = AdamHp::default();
+        let mut p = vec![0.0f32; 4];
+        let mut m = vec![0.0f32; 4];
+        let g = vec![1e6f32, -1e6, 0.5, -1e-9];
+        momentum_norm(&mut p, &mut m, &g, 0.1, hp);
+        let bound = 0.1 / hp.b2.sqrt() + 1e-6;
+        for (pi, gi) in p.iter().zip(&g) {
+            assert!(pi.abs() <= bound, "{pi} for g={gi}");
+            assert!(pi.signum() == -gi.signum() || *pi == 0.0);
+        }
     }
 
     #[test]

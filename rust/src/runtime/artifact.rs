@@ -101,7 +101,7 @@ pub struct SizeInfo {
     pub params: Vec<ParamSpec>,
 }
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct StateSlot {
     pub name: String,
     pub shape: Vec<usize>,

@@ -170,6 +170,69 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Parse a bench-history file body: a JSON array of entry objects.
+/// Corrupt content — invalid JSON, a non-array document, or any
+/// non-object element — is a hard error naming `path`. Clobbering a
+/// corrupted trajectory would silently erase every past data point; a
+/// bench run must never do that.
+pub fn parse_history(text: &str, path: &str) -> anyhow::Result<Vec<Json>> {
+    let doc = crate::util::json::parse(text)
+        .map_err(|e| anyhow::anyhow!("{path} is not valid JSON ({e}); refusing to clobber it"))?;
+    let Json::Arr(v) = doc else {
+        anyhow::bail!("{path} is not a JSON array; refusing to clobber it");
+    };
+    for (i, item) in v.iter().enumerate() {
+        anyhow::ensure!(
+            item.as_obj().is_some(),
+            "{path}[{i}] is not an entry object; refusing to clobber it"
+        );
+    }
+    Ok(v)
+}
+
+/// The silent-empty guard on a history entry: the entry must be an
+/// object, and every key in `row_keys` must be present and hold a
+/// NON-empty array. A bench run that produced zero rows for a section
+/// (skipped engine, filtered-out artifacts) must fail loudly rather
+/// than append a hollow data point that reads as a measured one.
+pub fn validate_history_entry(entry: &Json, row_keys: &[&str]) -> anyhow::Result<()> {
+    anyhow::ensure!(entry.as_obj().is_some(), "history entry is not a JSON object");
+    for &key in row_keys {
+        let rows = entry
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("history entry is missing the `{key}` row section"))?;
+        let arr = rows
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("history entry `{key}` is not an array of rows"))?;
+        anyhow::ensure!(
+            !arr.is_empty(),
+            "history entry `{key}` has zero rows; refusing to append a silent-empty run"
+        );
+    }
+    Ok(())
+}
+
+/// Append `entry` to the JSON-array history at `path`. A missing file
+/// starts a fresh history; existing content must parse as an array of
+/// objects ([`parse_history`]), and the entry must pass the
+/// [`validate_history_entry`] silent-empty guard for `row_keys`.
+pub fn append_history(
+    path: impl AsRef<std::path::Path>,
+    entry: Json,
+    row_keys: &[&str],
+) -> anyhow::Result<()> {
+    let path = path.as_ref();
+    validate_history_entry(&entry, row_keys)?;
+    let mut hist = match std::fs::read_to_string(path) {
+        Ok(text) => parse_history(&text, &path.display().to_string())?,
+        Err(_) => Vec::new(),
+    };
+    hist.push(entry);
+    std::fs::write(path, Json::Arr(hist).to_string())?;
+    println!("history -> {}", path.display());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +274,77 @@ mod tests {
             back.get("extra").unwrap().get("speedup").unwrap().as_f64(),
             Some(2.0)
         );
+    }
+
+    #[test]
+    fn parse_history_accepts_arrays_of_objects_only() {
+        assert_eq!(parse_history("[]", "h.json").unwrap().len(), 0);
+        let v = parse_history("[{\"bench\": \"t\"}]", "h.json").unwrap();
+        assert_eq!(v.len(), 1);
+        for (text, why) in [
+            ("{not json", "invalid JSON"),
+            ("{\"bench\": \"t\"}", "non-array document"),
+            ("[1, 2]", "non-object element"),
+        ] {
+            let err = parse_history(text, "h.json").unwrap_err().to_string();
+            assert!(err.contains("h.json"), "{why}: error must name the path, got: {err}");
+            assert!(err.contains("refusing to clobber"), "{why}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_history_entry_refuses_silent_empty_rows() {
+        let full = Json::obj(vec![
+            ("bench", Json::str("throughput")),
+            ("rows_a", Json::Arr(vec![Json::obj(vec![("ms", Json::num(1.0))])])),
+            ("rows_b", Json::Arr(vec![Json::obj(vec![("ms", Json::num(2.0))])])),
+        ]);
+        validate_history_entry(&full, &["rows_a", "rows_b"]).unwrap();
+        // an unlisted key is free-form; scalars next to the row sections are fine
+        validate_history_entry(&full, &["rows_a"]).unwrap();
+
+        let empty = Json::obj(vec![("rows_a", Json::Arr(vec![]))]);
+        let err = validate_history_entry(&empty, &["rows_a"]).unwrap_err().to_string();
+        assert!(err.contains("zero rows"), "{err}");
+
+        let missing = Json::obj(vec![("rows_a", Json::Arr(vec![Json::num(1.0)]))]);
+        let err = validate_history_entry(&missing, &["rows_b"]).unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+
+        let scalar = Json::obj(vec![("rows_a", Json::num(3.0))]);
+        let err = validate_history_entry(&scalar, &["rows_a"]).unwrap_err().to_string();
+        assert!(err.contains("not an array"), "{err}");
+
+        let err = validate_history_entry(&Json::Arr(vec![]), &[]).unwrap_err().to_string();
+        assert!(err.contains("not a JSON object"), "{err}");
+    }
+
+    #[test]
+    fn append_history_round_trips_and_guards() {
+        let p = std::env::temp_dir().join(format!("BENCH_hist_{}.json", std::process::id()));
+        std::fs::remove_file(&p).ok();
+        let entry = |ms: f64| {
+            Json::obj(vec![(
+                "rows",
+                Json::Arr(vec![Json::obj(vec![("ms", Json::num(ms))])]),
+            )])
+        };
+        append_history(&p, entry(1.0), &["rows"]).unwrap(); // fresh file
+        append_history(&p, entry(2.0), &["rows"]).unwrap(); // append
+        let hist = parse_history(&std::fs::read_to_string(&p).unwrap(), "h").unwrap();
+        assert_eq!(hist.len(), 2);
+
+        // a zero-row entry must refuse to append AND leave the file alone
+        let empty = Json::obj(vec![("rows", Json::Arr(vec![]))]);
+        assert!(append_history(&p, empty, &["rows"]).is_err());
+        let hist = parse_history(&std::fs::read_to_string(&p).unwrap(), "h").unwrap();
+        assert_eq!(hist.len(), 2, "a refused append must not touch the history");
+
+        // corrupt on-disk history blocks the append entirely
+        std::fs::write(&p, "{broken").unwrap();
+        assert!(append_history(&p, entry(3.0), &["rows"]).is_err());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{broken");
+        std::fs::remove_file(&p).ok();
     }
 
     #[test]

@@ -45,7 +45,11 @@ fn runtime_available() -> bool {
 fn help_lists_subcommands() {
     let (ok, text) = run(&["help"]);
     assert!(ok);
-    for cmd in ["train", "serve", "table", "figure", "memory-report", "sweep", "sweep-lr"] {
+    let cmds = [
+        "train", "serve", "table", "figure", "memory-report", "sweep", "sweep-lr", "compare",
+        "lr-curve",
+    ];
+    for cmd in cmds {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
 }
@@ -147,6 +151,84 @@ fn sweep_subcommand_emits_parseable_json() {
         assert!(p.get("lr").unwrap().as_f64().is_some());
         assert!(p.get("diverged").unwrap().as_bool().is_some());
     }
+}
+
+/// `scale compare --json` twice with the same arguments: the verdict
+/// (multi-seed mean/CI ranking) must be byte-for-byte deterministic,
+/// parse with our own JSON parser, and carry a state-byte column that
+/// matches `memory::estimator::measured_state_bytes` exactly.
+#[test]
+fn compare_subcommand_emits_deterministic_verdict_json() {
+    if !runtime_available() {
+        return;
+    }
+    // a real (xla) manifest predates the frontier family; the native
+    // manifest always carries it
+    let size = if cfg!(feature = "xla") { "s60m" } else { "tiny" };
+    let optimizers = if cfg!(feature = "xla") { "scale,adam" } else { "scale,adams" };
+    let args = [
+        "compare", "--size", size, "--optimizers", optimizers, "--seeds", "2",
+        "--steps", "2", "--shards", "1", "--eval-batches", "2", "--json",
+    ];
+    let (ok, text) = run(&args);
+    assert!(ok, "{text}");
+    let (ok2, text2) = run(&args);
+    assert!(ok2, "{text2}");
+    assert_eq!(text, text2, "compare must be deterministic run to run");
+    let doc = scale_llm::util::json::parse(text.trim())
+        .unwrap_or_else(|e| panic!("compare --json must print valid JSON ({e}):\n{text}"));
+    assert_eq!(doc.get("report").unwrap().as_str(), Some("compare"));
+    let cells = doc.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 2, "one cell per optimizer at its default LR");
+    for c in cells {
+        assert_eq!(c.get("n_trials").unwrap().as_usize(), Some(2));
+        assert!(c.get("n_effective").unwrap().as_usize().is_some());
+    }
+    let ranking = doc.get("ranking").unwrap().as_arr().unwrap();
+    assert_eq!(ranking.len(), 2);
+    if !cfg!(feature = "xla") {
+        let m = scale_llm::exec::native_manifest(std::path::PathBuf::from("unused"));
+        for r in ranking {
+            let opt = r.get("optimizer").unwrap().as_str().unwrap();
+            let want =
+                scale_llm::memory::estimator::measured_state_bytes(&m, opt, size).unwrap();
+            assert_eq!(
+                r.get("state_bytes").unwrap().as_usize(),
+                Some(want),
+                "{opt}: verdict state bytes must match the estimator"
+            );
+        }
+    }
+}
+
+/// `scale lr-curve --out` writes the Fig.-8 artifact, which must
+/// re-parse with our own JSON parser and carry one curve per optimizer
+/// with one point per LR.
+#[test]
+fn lr_curve_subcommand_writes_parseable_artifact() {
+    if !runtime_available() {
+        return;
+    }
+    let size = if cfg!(feature = "xla") { "s60m" } else { "tiny" };
+    let out = std::env::temp_dir().join(format!("scale_lr_curve_{}.json", std::process::id()));
+    let out_s = out.to_str().unwrap().to_string();
+    let (ok, text) = run(&[
+        "lr-curve", "--size", size, "--optimizers", "scale", "--seeds", "1",
+        "--steps", "2", "--shards", "1", "--eval-batches", "2",
+        "--lrs", "1e-3,1e-2", "--out", &out_s,
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("wrote"), "{text}");
+    let written = std::fs::read_to_string(&out).expect("artifact file missing");
+    let doc = scale_llm::util::json::parse(&written)
+        .unwrap_or_else(|e| panic!("lr-curve artifact must be valid JSON ({e}):\n{written}"));
+    assert_eq!(doc.get("report").unwrap().as_str(), Some("lr_curve"));
+    let curves = doc.get("curves").unwrap().as_arr().unwrap();
+    assert_eq!(curves.len(), 1);
+    assert_eq!(curves[0].get("optimizer").unwrap().as_str(), Some("scale"));
+    let points = curves[0].get("points").unwrap().as_arr().unwrap();
+    assert_eq!(points.len(), 2, "one point per LR");
+    std::fs::remove_file(out).ok();
 }
 
 /// `scale serve` over piped stdio: two valid requests around a hostile

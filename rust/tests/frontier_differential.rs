@@ -1,0 +1,448 @@
+//! Frontier differential suite: the AdaPM partial-momentum policies and
+//! AdamS (momentum-as-normalizer) against composed-kernel oracles, and
+//! the multi-seed verdict layer against its sequential reference.
+//!
+//! Four properties are the PR's acceptance bar:
+//!
+//! - every frontier optimizer's executable path is **bit-identical** to
+//!   applying the `optim::rules` kernels sequentially in canonical
+//!   parameter order, for every pool size and sequential-fallback
+//!   threshold (the threshold selects a code path, never a result);
+//! - the policy axis is pinned entry-by-entry on native sizes —
+//!   including `s60m`, where `FirstLast` and `TopKVariance(2)` actually
+//!   diverge (they coincide on one-block sizes);
+//! - measured state bytes equal the memory estimator exactly, and the
+//!   mesh shard partition tiles them with nothing dropped or doubled;
+//! - the multi-seed verdict aggregation is bit-stable across pool sizes
+//!   and `max_concurrent` caps, with the state-byte column read from
+//!   the estimator.
+//!
+//! Like `sweep_differential.rs`, this lives in its own test target so
+//! the explicit `WorkerPool` constructions can never race
+//! `integration.rs`'s process-global spawn-counter assertions.
+
+use scale_llm::coordinator::sweep::{aggregate_cells, CellStats, SweepSpec};
+use scale_llm::coordinator::{TrainOptions, VerdictSpec};
+use scale_llm::exec::update::{partial_momentum_policy, state_slots, UpdateProgram, UpdateWs, BETA};
+use scale_llm::exec::{native_manifest, MomentumPolicy};
+use scale_llm::memory::estimator::{measured_state_bytes, sharded_state_bytes};
+use scale_llm::optim::colnorm::NormWorkspace;
+use scale_llm::optim::rules::{self, AdamHp};
+use scale_llm::parallel::WorkerPool;
+use scale_llm::runtime::artifact::{Manifest, SizeInfo};
+use scale_llm::runtime::{Engine, Tensor};
+use scale_llm::util::rng::Pcg;
+
+const FRONTIER: [&str; 5] =
+    ["adapm_last", "adapm_first_last", "adapm_embed_head", "adapm_top2", "adams"];
+
+fn manifest() -> Manifest {
+    native_manifest(std::path::PathBuf::from("unused"))
+}
+
+/// Seed-5 input draws shared by the native path and the oracle:
+/// params (normal), then grads (0.1 * normal), from one PCG stream;
+/// state starts at zeros.
+fn draw_inputs(size: &SizeInfo) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Pcg::new(5);
+    let params: Vec<Vec<f32>> = size
+        .params
+        .iter()
+        .map(|p| (0..p.numel()).map(|_| rng.normal() as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = size
+        .params
+        .iter()
+        .map(|p| (0..p.numel()).map(|_| 0.1 * rng.normal() as f32).collect())
+        .collect();
+    (params, grads)
+}
+
+/// One step of the native executable path on `pool` with an explicit
+/// sequential-fallback threshold; returns `[params'.., state'..]`.
+fn run_native(
+    opt: &str,
+    size: &SizeInfo,
+    lr: f32,
+    pool: &WorkerPool,
+    min_ops: usize,
+) -> (Vec<Tensor>, usize) {
+    let prog = UpdateProgram::new(opt, size).unwrap();
+    let slots = state_slots(opt, size).unwrap();
+    assert_eq!(slots.len(), prog.n_state(), "{opt}: plan/state desync");
+    let (params, grads) = draw_inputs(size);
+    let mut inputs: Vec<Tensor> = Vec::new();
+    for (p, data) in size.params.iter().zip(&params) {
+        inputs.push(Tensor::from_f32(&p.shape, data.clone()));
+    }
+    for s in &slots {
+        inputs.push(Tensor::zeros(&s.shape));
+    }
+    for (p, data) in size.params.iter().zip(&grads) {
+        inputs.push(Tensor::from_f32(&p.shape, data.clone()));
+    }
+    inputs.push(Tensor::scalar_f32(lr));
+    inputs.push(Tensor::scalar_f32(1.0));
+    let refs: Vec<&Tensor> = inputs.iter().collect();
+    let mut out: Vec<Tensor> = Vec::new();
+    for p in &size.params {
+        out.push(Tensor::zeros(&p.shape));
+    }
+    for s in &slots {
+        out.push(Tensor::zeros(&s.shape));
+    }
+    let mut ws = UpdateWs::new();
+    prog.execute(&refs, &mut out, &mut ws, pool, min_ops).unwrap();
+    (out, size.params.len())
+}
+
+/// The composed-kernel oracle: the frontier plans applied sequentially
+/// with the public `optim::rules` kernels — vectors get Adam, matrices
+/// get the column-norm rule with the policy's momentum bit (AdaPM) or
+/// `momentum_norm` (AdamS). Returns (params', flat state').
+fn run_oracle(opt: &str, size: &SizeInfo, lr: f32) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let (mut params, grads) = draw_inputs(size);
+    let mask = partial_momentum_policy(opt).map(|policy| policy.selects(&size.params));
+    let hp = AdamHp::default();
+    let mut ws = NormWorkspace::new();
+    let mut state: Vec<Vec<f32>> = Vec::new();
+    for (i, spec) in size.params.iter().enumerate() {
+        let (p, g) = (&mut params[i], &grads[i]);
+        if spec.kind == "vector" {
+            let mut m = vec![0.0f32; spec.numel()];
+            let mut v = vec![0.0f32; spec.numel()];
+            rules::adam(p, &mut m, &mut v, g, lr, hp, 1);
+            state.push(m);
+            state.push(v);
+            continue;
+        }
+        let (di, dn) = (spec.shape[0], spec.shape[1]);
+        match &mask {
+            Some(sel) if sel[i] => {
+                let mut m = vec![0.0f32; spec.numel()];
+                rules::scale_momentum_ws(p, &mut m, g, di, dn, lr, BETA, &mut ws);
+                state.push(m);
+            }
+            Some(_) => rules::scale_plain_ws(p, g, di, dn, lr, &mut ws),
+            None => {
+                assert_eq!(opt, "adams");
+                let mut m = vec![0.0f32; spec.numel()];
+                rules::momentum_norm(p, &mut m, g, lr, hp);
+                state.push(m);
+            }
+        }
+    }
+    (params, state)
+}
+
+/// Tentpole leg: for every frontier optimizer, the executable path on
+/// every pool size and threshold lands bit for bit on the sequential
+/// composed-kernel oracle. The thresholds straddle tiny's per-matrix
+/// numel gate (d*d = 1024, embed/head = 2048), so the sequential, the
+/// mixed, and the fully parallel paths are all exercised.
+#[test]
+fn frontier_rules_bit_match_their_composed_kernels_across_pools() {
+    let m = manifest();
+    let size = m.size("tiny").unwrap();
+    let lr = 0.02f32;
+    let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)];
+    for opt in FRONTIER {
+        let (want_params, want_state) = run_oracle(opt, size, lr);
+        for pool in &pools {
+            for min_ops in [0usize, 64, 2048, usize::MAX] {
+                let (out, np) = run_native(opt, size, lr, pool, min_ops);
+                assert_eq!(out.len(), np + want_state.len(), "{opt}: arity");
+                for (i, want) in want_params.iter().enumerate() {
+                    assert_eq!(
+                        out[i].f32s(),
+                        &want[..],
+                        "{opt}: param {i} ({} workers, min_ops {min_ops})",
+                        pool.workers()
+                    );
+                }
+                for (j, want) in want_state.iter().enumerate() {
+                    assert_eq!(
+                        out[np + j].f32s(),
+                        &want[..],
+                        "{opt}: state {j} ({} workers, min_ops {min_ops})",
+                        pool.workers()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The policy-axis state tables on the native `tiny` size, entry by
+/// entry — the exact layout checkpoints and the manifest carry.
+#[test]
+fn frontier_state_tables_are_pinned_on_tiny() {
+    let m = manifest();
+    let size = m.size("tiny").unwrap();
+    let vec_pairs = |tail: &[&str]| -> Vec<String> {
+        let mut v = vec!["block0.attn_norm.m".into(), "block0.attn_norm.v".into()];
+        v.extend(tail.iter().map(|s| s.to_string()));
+        v
+    };
+    let cases: [(&str, Vec<String>); 5] = [
+        (
+            "adapm_last",
+            vec_pairs(&[
+                "block0.mlp_norm.m",
+                "block0.mlp_norm.v",
+                "final_norm.m",
+                "final_norm.v",
+                "lm_head.m",
+            ]),
+        ),
+        (
+            "adapm_first_last",
+            vec_pairs(&[
+                "block0.wq.m",
+                "block0.wk.m",
+                "block0.wv.m",
+                "block0.wo.m",
+                "block0.mlp_norm.m",
+                "block0.mlp_norm.v",
+                "block0.w_gate.m",
+                "block0.w_up.m",
+                "block0.w_down.m",
+                "final_norm.m",
+                "final_norm.v",
+                "lm_head.m",
+            ]),
+        ),
+        (
+            "adapm_embed_head",
+            {
+                let mut v = vec!["embed.m".to_string()];
+                v.extend(vec_pairs(&[
+                    "block0.mlp_norm.m",
+                    "block0.mlp_norm.v",
+                    "final_norm.m",
+                    "final_norm.v",
+                    "lm_head.m",
+                ]));
+                v
+            },
+        ),
+        (
+            "adapm_top2",
+            vec_pairs(&[
+                "block0.mlp_norm.m",
+                "block0.mlp_norm.v",
+                "block0.w_down.m",
+                "final_norm.m",
+                "final_norm.v",
+                "lm_head.m",
+            ]),
+        ),
+        ("adams", {
+            let mut v = vec!["embed.m".to_string()];
+            v.extend(vec_pairs(&[
+                "block0.wq.m",
+                "block0.wk.m",
+                "block0.wv.m",
+                "block0.wo.m",
+                "block0.mlp_norm.m",
+                "block0.mlp_norm.v",
+                "block0.w_gate.m",
+                "block0.w_up.m",
+                "block0.w_down.m",
+                "final_norm.m",
+                "final_norm.v",
+                "lm_head.m",
+            ]));
+            v
+        }),
+    ];
+    for (opt, want) in cases {
+        let got: Vec<String> =
+            m.state_spec(opt, "tiny").unwrap().iter().map(|s| s.name.clone()).collect();
+        assert_eq!(got, want, "{opt}");
+    }
+    // the policies that coincide with the hardcoded tables must produce
+    // byte-identical manifest entries, not merely similar ones
+    assert_eq!(m.state_spec("adapm_last", "tiny").unwrap(), m.state_spec("scale", "tiny").unwrap());
+    assert_eq!(
+        m.state_spec("adapm_embed_head", "tiny").unwrap(),
+        m.state_spec("scale_first_last", "tiny").unwrap()
+    );
+}
+
+/// On the two-block `s60m`, `FirstLast` and `TopKVariance(2)` must
+/// diverge: the former stays on block0's matrices + head, the latter
+/// walks back from the head into block1 only.
+#[test]
+fn first_last_and_top2_diverge_on_multi_block_sizes() {
+    let m = manifest();
+    let size = m.size("s60m").unwrap();
+    let names = |policy: MomentumPolicy| -> Vec<&str> {
+        policy
+            .selects(&size.params)
+            .iter()
+            .zip(&size.params)
+            .filter(|(&s, _)| s)
+            .map(|(_, p)| p.name.as_str())
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(
+        names(MomentumPolicy::FirstLast),
+        vec![
+            "block0.wq",
+            "block0.wk",
+            "block0.wv",
+            "block0.wo",
+            "block0.w_gate",
+            "block0.w_up",
+            "block0.w_down",
+            "lm_head",
+        ]
+    );
+    assert_eq!(names(MomentumPolicy::TopKVariance(2)), vec!["block1.w_down", "lm_head"]);
+    assert_eq!(names(MomentumPolicy::Last), vec!["lm_head"]);
+    assert_eq!(names(MomentumPolicy::EmbedHead), vec!["embed", "lm_head"]);
+}
+
+/// Measured state bytes must equal the estimator exactly for every
+/// frontier optimizer, and the mesh shard partition must tile them —
+/// nothing dropped, nothing doubled — so `launch --shard-state` carries
+/// the new state specs unchanged.
+#[test]
+fn frontier_state_bytes_match_estimator_and_tile_over_shards() {
+    let m = manifest();
+    for size in ["tiny", "s60m"] {
+        for opt in FRONTIER {
+            let measured = measured_state_bytes(&m, opt, size).unwrap();
+            let planned: usize = state_slots(opt, m.size(size).unwrap())
+                .unwrap()
+                .iter()
+                .map(|s| 4 * s.shape.iter().product::<usize>())
+                .sum();
+            assert_eq!(measured, planned, "{opt} {size}: estimator vs plan");
+            for ranks in [1usize, 2, 4] {
+                let shards = sharded_state_bytes(&m, opt, size, ranks).unwrap();
+                assert_eq!(shards.len(), ranks);
+                assert_eq!(
+                    shards.iter().sum::<usize>(),
+                    measured,
+                    "{opt} {size} at {ranks} ranks"
+                );
+            }
+        }
+    }
+    // the family ordering the paper's memory story predicts, measured:
+    // head-only < first+last < everything (= sgd_momentum's bill)
+    let last = measured_state_bytes(&m, "adapm_last", "s60m").unwrap();
+    let fl = measured_state_bytes(&m, "adapm_first_last", "s60m").unwrap();
+    let all = measured_state_bytes(&m, "adams", "s60m").unwrap();
+    assert!(last < fl && fl < all, "{last} {fl} {all}");
+    assert_eq!(all, measured_state_bytes(&m, "sgd_momentum", "s60m").unwrap());
+}
+
+/// Engine plus the smallest trainable size its manifest offers.
+fn engine() -> Option<(Engine, String)> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let eng = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping frontier verdict test (run `make artifacts`): {e}");
+            return None;
+        }
+    };
+    for s in ["tiny", "s60m"] {
+        if eng.manifest.sizes.contains_key(s) {
+            return Some((eng, s.to_string()));
+        }
+    }
+    eprintln!("skipping frontier verdict test (no smoke-able size in manifest)");
+    None
+}
+
+fn assert_cells_bit_identical(got: &[CellStats], want: &[CellStats], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: cell count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.optimizer, w.optimizer, "{what}");
+        assert_eq!(g.lr.to_bits(), w.lr.to_bits(), "{what}: {} lr", g.optimizer);
+        assert_eq!(g.n_trials, w.n_trials, "{what}: {} n_trials", g.optimizer);
+        assert_eq!(g.n_effective, w.n_effective, "{what}: {} n_effective", g.optimizer);
+        assert_eq!(g.mean_ppl.to_bits(), w.mean_ppl.to_bits(), "{what}: {} mean", g.optimizer);
+        assert_eq!(
+            g.stddev_ppl.to_bits(),
+            w.stddev_ppl.to_bits(),
+            "{what}: {} stddev",
+            g.optimizer
+        );
+        assert_eq!(g.ci95_ppl.to_bits(), w.ci95_ppl.to_bits(), "{what}: {} ci95", g.optimizer);
+    }
+}
+
+/// Verdict leg: multi-seed mean/stddev/CI cells computed from a
+/// concurrent sweep are bit-identical to the sequential reference, for
+/// every pool size and `max_concurrent` cap — including cells where
+/// some trials diverge (`n_effective < n_trials`) — and the verdict's
+/// state-byte column reads the estimator exactly.
+#[test]
+fn verdict_aggregation_is_bit_stable_across_pools_and_caps() {
+    let Some((eng, sz)) = engine() else { return };
+    let base = TrainOptions {
+        size: sz.clone(),
+        optimizer: "adams".into(),
+        steps: 2,
+        base_lr: 1e-3,
+        schedule: None,
+        shards: 2,
+        seed: 0,
+        eval_every: 0,
+        eval_batches: 2,
+        log_every: 0,
+        quiet: true,
+    };
+    // the 1e12 cells diverge, so exclusion (n_effective) is aggregated
+    // identically on every path
+    let mut spec = SweepSpec::lr_grid(base, &[1e-3, 1e12]);
+    spec.optimizers = vec!["adams".into(), "adapm_last".into()];
+    spec.seeds = vec![0, 1, 2];
+
+    let want_pts = spec.run_serial(&eng).expect("serial sweep");
+    let want = aggregate_cells(&want_pts);
+    assert_eq!(want.len(), 4, "2 optimizers x 2 LRs");
+    assert!(want.iter().any(|c| c.n_effective == 0), "the 1e12 cells must fully diverge");
+    assert!(
+        want.iter().any(|c| c.n_effective == c.n_trials && c.n_trials == 3),
+        "the sane cells must keep all 3 seeds"
+    );
+
+    let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)];
+    for pool in &pools {
+        let got = aggregate_cells(&spec.run_on(&eng, pool).expect("concurrent sweep"));
+        assert_cells_bit_identical(&got, &want, &format!("{} workers", pool.workers()));
+    }
+    for cap in [1usize, 2] {
+        let mut capped = spec.clone();
+        capped.max_concurrent = cap;
+        let got = aggregate_cells(&capped.run(&eng).expect("capped sweep"));
+        assert_cells_bit_identical(&got, &want, &format!("max_concurrent {cap}"));
+    }
+
+    // the ranking's state-byte column is the estimator, verbatim
+    let vspec = VerdictSpec { memory_budget: None };
+    let verdict = vspec
+        .verdict(&want_pts, |opt| measured_state_bytes(&eng.manifest, opt, &sz))
+        .expect("verdict");
+    assert_eq!(verdict.ranking.len(), 2);
+    for r in &verdict.ranking {
+        assert_eq!(
+            r.state_bytes,
+            measured_state_bytes(&eng.manifest, &r.optimizer, &sz).unwrap(),
+            "{}: state bytes must come from the estimator",
+            r.optimizer
+        );
+        assert!(r.within_budget, "no budget set — everything fits");
+    }
+    // both optimizers have a finite best cell at 1e-3
+    for r in &verdict.ranking {
+        assert_eq!(r.best.lr, 1e-3, "{}", r.optimizer);
+        assert!(r.best.mean_ppl.is_finite(), "{}", r.optimizer);
+    }
+}

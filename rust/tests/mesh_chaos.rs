@@ -195,6 +195,32 @@ fn sharded_mesh_matches_single_process_bit_exact() {
     }
 }
 
+/// Frontier optimizers ride the sharded-mesh contract unchanged: a
+/// 2-rank `--shard-state` run with a partial-momentum plan
+/// (`adapm_first_last`) and a momentum-norm plan (`adams`) is
+/// bit-identical to the single-process shards loop — the shard plan
+/// partitions the new state specs exactly like SCALE's.
+#[test]
+fn frontier_sharded_mesh_matches_single_process_bit_exact() {
+    let _g = guard();
+    let Some((eng, sz)) = engine() else { return };
+    for (opt, lr) in [("adapm_first_last", 1e-2), ("adams", 1e-3)] {
+        let mut o = opts(&sz, 6, 2);
+        o.optimizer = opt.into();
+        o.base_lr = lr;
+        let mut want = Trainer::new(&eng, o.clone()).unwrap();
+        let want_ppl = want.train().unwrap();
+        let mut mo = mesh_opts(&sz, 6, 2, &format!("frontier_{opt}"));
+        mo.train = o;
+        mo.shard_state = true;
+        let (tr, report) = mesh::train(&eng, &mo).unwrap();
+        assert_mesh_matches(&tr, report.ppl, &want, want_ppl, &format!("{opt} sharded"));
+        assert_eq!(report.respawns, 0, "{opt}");
+        assert_eq!(report.frame_retries, 0, "{opt}");
+        std::fs::remove_dir_all(&mo.ckpt_dir).ok();
+    }
+}
+
 /// Kill a shard-owning rank mid-run: rank 1 dies on its 5th Step, its
 /// replacement starts with zeroed state, and recovery must re-seed
 /// every rank's shard from the newest complete sharded snapshot

@@ -125,6 +125,55 @@ fn lr_sweep_entry_point_matches_sequential_reference() {
     assert_eq!(lrs, grid.to_vec());
 }
 
+/// Frontier leg: the partial-momentum and momentum-norm optimizers ride
+/// the same concurrent==serial contract as the rest of the zoo — bit
+/// for bit, for every pool size.
+#[test]
+fn frontier_optimizer_sweep_is_bit_identical_to_serial() {
+    let Some((eng, sz)) = engine() else { return };
+    let mut spec = SweepSpec::lr_grid(base(&sz, "adams", 3), &[1e-3, 1e-2]);
+    spec.optimizers = vec!["adams".into(), "adapm_first_last".into()];
+    spec.seeds = vec![0, 1];
+
+    let want = spec.run_serial(&eng).expect("serial frontier sweep");
+    assert_eq!(want.len(), 8);
+    let pools = [WorkerPool::new(0), WorkerPool::new(2), WorkerPool::new(7)];
+    for pool in &pools {
+        let got = spec.run_on(&eng, pool).expect("concurrent frontier sweep");
+        assert_points_bit_identical(&got, &want, &format!("frontier {} workers", pool.workers()));
+    }
+}
+
+/// The frontier zoo trains finitely end to end at its tuned default
+/// LRs, and `adapm_last` — same LR, same seed, same plan — lands on
+/// exactly SCALE's perplexity bits: the policy axis generalizes the
+/// hardcoded table all the way through a real training run.
+#[test]
+fn frontier_zoo_trains_finite_and_adapm_last_is_scale() {
+    let Some((eng, sz)) = engine() else { return };
+    let frontier =
+        ["adapm_last", "adapm_first_last", "adapm_embed_head", "adapm_top2", "adams"];
+    let mut spec = SweepSpec::optimizer_grid(base(&sz, "scale", 2), &frontier);
+    spec.lr_for = Some(scale_llm::harness::default_lr);
+    let pts = spec.run(&eng).expect("frontier zoo sweep");
+    assert_eq!(pts.len(), 5);
+    for p in &pts {
+        assert!(
+            p.ppl.is_finite() && !p.diverged,
+            "{}: frontier rule diverged at its tuned default LR",
+            p.optimizer
+        );
+    }
+    let scale_spec = SweepSpec::optimizer_grid(base(&sz, "scale", 2), &["scale"]);
+    let scale_pts = scale_spec.run(&eng).expect("scale reference");
+    assert_eq!(pts[0].optimizer, "adapm_last");
+    assert_eq!(
+        pts[0].ppl.to_bits(),
+        scale_pts[0].ppl.to_bits(),
+        "adapm_last must train bit-identically to scale"
+    );
+}
+
 #[test]
 fn optimizer_axis_sweep_runs_the_mix_rules_natively() {
     // the Table-13 acceptance path: SCALE plus all four mix_* ablations
